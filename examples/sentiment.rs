@@ -1,0 +1,38 @@
+//! Sentiment workload (the paper's IMDB motivation): LSTM over sparse
+//! padded token sequences, Top-k vs Block-Sign. On text, embedding
+//! gradients are extremely sparse, so Top-k should converge faster at
+//! equal (or lower) communication — the paper's §5.2 observation.
+//!
+//! Run: `make artifacts && cargo run --release --example sentiment`
+
+use anyhow::Result;
+use comp_ams::config::TrainConfig;
+use comp_ams::coordinator::trainer::train;
+
+fn main() -> Result<()> {
+    let rounds = 40;
+    let mut results = Vec::new();
+    for algo in ["comp-ams-topk:0.01", "comp-ams-blocksign:4096", "dist-ams"] {
+        let mut cfg = TrainConfig::preset("imdb_lstm", algo);
+        cfg.workers = 8;
+        cfg.rounds = rounds;
+        cfg.eval_every = 10;
+        cfg.eval_batches = 4;
+        cfg.log_every = 10;
+        println!("== {algo} ==");
+        results.push((algo, train(&cfg)?));
+    }
+
+    println!("\nsentiment LSTM after {rounds} rounds on 8 workers:");
+    println!("{:<28} {:>10} {:>8} {:>12}", "method", "loss", "acc", "uplink MB");
+    for (algo, run) in &results {
+        println!(
+            "{:<28} {:>10.4} {:>8.4} {:>12.2}",
+            algo,
+            run.final_train_loss(5),
+            run.final_eval.accuracy,
+            run.uplink_bits() as f64 / 8e6
+        );
+    }
+    Ok(())
+}

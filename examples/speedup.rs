@@ -1,0 +1,39 @@
+//! Linear-speedup demo (Corollary 2 / Figure 3): rounds-to-target vs.
+//! number of workers with lr = η₀·√n, on the analytic logistic substrate
+//! so a 5-point sweep finishes in seconds.
+//!
+//! Run: `cargo run --release --example speedup`
+
+use anyhow::Result;
+use comp_ams::config::TrainConfig;
+use comp_ams::coordinator::trainer::train;
+
+fn main() -> Result<()> {
+    let target = 1.0f32;
+    println!("COMP-AMS linear speedup: rounds to reach train loss {target}");
+    println!("{:>8} {:>10} {:>16} {:>14}", "workers", "lr", "rounds_to_loss", "ideal (T1/n)");
+    let mut base: Option<u64> = None;
+    for n in [1usize, 2, 4, 8, 16] {
+        let mut cfg = TrainConfig::preset("logistic", "comp-ams-blocksign:64");
+        cfg.workers = n;
+        cfg.lr = 0.02 * (n as f32).sqrt();
+        cfg.rounds = 4000;
+        cfg.eval_every = 0;
+        cfg.threaded = n > 1; // exercise the threaded leader/worker path
+        let run = train(&cfg)?;
+        let hit = run.rounds_to_loss(target, 10);
+        let ideal = base.map(|b| (b / n as u64).max(1));
+        if n == 1 {
+            base = hit;
+        }
+        println!(
+            "{:>8} {:>10.4} {:>16} {:>14}",
+            n,
+            cfg.lr,
+            hit.map(|r| r.to_string()).unwrap_or_else(|| "-".into()),
+            ideal.map(|r| r.to_string()).unwrap_or_else(|| "-".into()),
+        );
+    }
+    println!("\n(≈halving per doubling of n reproduces the paper's Figure 3.)");
+    Ok(())
+}

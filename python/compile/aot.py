@@ -1,0 +1,117 @@
+"""AOT compiler: lower every model's grad/eval/update closures to HLO text.
+
+Run once at build time (``make artifacts``); the Rust coordinator loads the
+emitted ``artifacts/*.hlo.txt`` through PJRT and never touches Python.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+pinned xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Besides the HLO, this writes:
+  - ``{model}.init.bin``  — the flat f32 initial parameter vector
+    (little-endian), so Rust and Python start from bit-identical weights;
+  - ``manifest.json``     — shapes/dtypes/paths for the Rust loader.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.ref import BETA1, BETA2, EPS
+from .model import DEFAULT_BUILD, REGISTRY
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _write(path, text):
+    with open(path, "w") as f:
+        f.write(text)
+    return hashlib.sha256(text.encode()).hexdigest()[:16]
+
+
+def build_model(spec, out_dir):
+    t0 = time.time()
+    theta0, unravel = spec.flat_init()
+    p = int(theta0.shape[0])
+    x_spec, y_spec, seed_spec = spec.example_args()
+    theta_spec = jax.ShapeDtypeStruct((p,), jnp.float32)
+    vec = theta_spec
+    lr_spec = jax.ShapeDtypeStruct((), jnp.float32)
+
+    files = {}
+    grad_hlo = to_hlo_text(jax.jit(spec.grad_fn(unravel)).lower(
+        theta_spec, x_spec, y_spec, seed_spec))
+    files["grad"] = f"{spec.name}.grad.hlo.txt"
+    _write(os.path.join(out_dir, files["grad"]), grad_hlo)
+
+    eval_hlo = to_hlo_text(jax.jit(spec.eval_fn(unravel)).lower(
+        theta_spec, x_spec, y_spec))
+    files["eval"] = f"{spec.name}.eval.hlo.txt"
+    _write(os.path.join(out_dir, files["eval"]), eval_hlo)
+
+    ams_hlo = to_hlo_text(jax.jit(spec.amsgrad_fn()).lower(
+        vec, vec, vec, vec, vec, lr_spec))
+    files["amsgrad"] = f"{spec.name}.amsgrad.hlo.txt"
+    _write(os.path.join(out_dir, files["amsgrad"]), ams_hlo)
+
+    files["init"] = f"{spec.name}.init.bin"
+    with open(os.path.join(out_dir, files["init"]), "wb") as f:
+        f.write(bytes(memoryview(jnp.asarray(theta0))))
+
+    entry = {
+        "name": spec.name,
+        "p": p,
+        "batch": spec.batch,
+        "x_shape": list(spec.x_shape),
+        "x_dtype": spec.x_dtype,
+        "y_shape": list(spec.y_shape),
+        "classes": spec.classes,
+        "token_level": spec.token_level,
+        "files": files,
+    }
+    print(f"  {spec.name}: P={p} ({time.time()-t0:.1f}s)")
+    return entry
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", nargs="*", default=None,
+                    help="subset of models to build (default: DEFAULT_BUILD)")
+    ap.add_argument("--large", action="store_true",
+                    help="also build lm_large (compile-only config)")
+    args = ap.parse_args()
+
+    names = args.models or list(DEFAULT_BUILD)
+    if args.large and "lm_large" not in names:
+        names.append("lm_large")
+
+    os.makedirs(args.out, exist_ok=True)
+    print(f"AOT-lowering {len(names)} models -> {args.out}")
+    entries = [build_model(REGISTRY[n], args.out) for n in names]
+
+    manifest = {
+        "version": 1,
+        "optimizer": {"beta1": BETA1, "beta2": BETA2, "eps": EPS},
+        "models": entries,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

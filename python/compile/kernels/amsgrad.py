@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: fused AMSGrad server update.
+
+The server update is the per-round numeric hot spot on the leader: one pass
+over the flat parameter vector updating four state vectors. On GPU the
+reference implementation is a fused elementwise CUDA kernel; here we tile
+the flat vector into VMEM-sized blocks with a BlockSpec grid — each grid
+step streams one (BLOCK,) slice of all five inputs HBM->VMEM, does the
+elementwise math, and streams four outputs back. Arithmetic intensity is
+O(1) flops/byte, so the kernel is bandwidth-bound: the roofline target is
+"touch every element exactly once".
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO so the artifact executes
+on the Rust PJRT CPU client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import BETA1, BETA2, EPS
+
+# 65536 f32 = 256 KiB per operand; 5 inputs + 4 outputs = 2.25 MiB of VMEM
+# live per grid step, comfortably inside a ~16 MiB VMEM budget. Chosen
+# large to amortize grid-step overhead: at P=3.25M this is 50 grid steps
+# instead of 398 with the original 8192 block (§Perf L1 iteration 2 —
+# 8x fewer interpret-mode loop iterations, same single-pass HBM traffic
+# on real hardware).
+BLOCK = 65536
+
+
+def _amsgrad_kernel(lr_ref, theta_ref, m_ref, v_ref, vhat_ref, g_ref,
+                    theta_out, m_out, v_out, vhat_out, *, beta1, beta2, eps):
+    g = g_ref[...]
+    m = beta1 * m_ref[...] + (1.0 - beta1) * g
+    v = beta2 * v_ref[...] + (1.0 - beta2) * g * g
+    vhat = jnp.maximum(vhat_ref[...], v)
+    m_out[...] = m
+    v_out[...] = v
+    vhat_out[...] = vhat
+    theta_out[...] = theta_ref[...] - lr_ref[0] * m * jax.lax.rsqrt(vhat + eps)
+
+
+def amsgrad_update(theta, m, v, vhat, g, lr,
+                   beta1=BETA1, beta2=BETA2, eps=EPS, block=BLOCK):
+    """Fused AMSGrad step over flat f32[P] state vectors.
+
+    P need not be a multiple of `block`: inputs are zero-padded, the kernel
+    runs on the padded length, and outputs are sliced back. Padding lanes
+    are exact fixed points of the update when g=0, m=0, v=0, vhat=0 (the
+    padded theta would get -lr*0*rsqrt(eps) = 0 update), so no garbage
+    leaks into real lanes.
+    """
+    p = theta.shape[0]
+    pad = (-p) % block
+    if pad:
+        z = jnp.zeros((pad,), theta.dtype)
+        theta, m, v, vhat, g = (jnp.concatenate([a, z]) for a in (theta, m, v, vhat, g))
+    n_blocks = theta.shape[0] // block
+
+    vec_spec = pl.BlockSpec((block,), lambda i: (i,))
+    lr_spec = pl.BlockSpec((1,), lambda i: (0,))
+    kernel = functools.partial(_amsgrad_kernel, beta1=beta1, beta2=beta2, eps=eps)
+    out_shape = [jax.ShapeDtypeStruct(theta.shape, theta.dtype)] * 4
+    lr_arr = jnp.reshape(lr.astype(jnp.float32) if hasattr(lr, "astype")
+                         else jnp.float32(lr), (1,))
+    theta_n, m_n, v_n, vhat_n = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[lr_spec] + [vec_spec] * 5,
+        out_specs=[vec_spec] * 4,
+        out_shape=out_shape,
+        interpret=True,
+    )(lr_arr, theta, m, v, vhat, g)
+    if pad:
+        theta_n, m_n, v_n, vhat_n = (a[:p] for a in (theta_n, m_n, v_n, vhat_n))
+    return theta_n, m_n, v_n, vhat_n

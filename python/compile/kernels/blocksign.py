@@ -1,0 +1,39 @@
+"""L1 Pallas kernel: uniform-block Block-Sign encoder (paper Definition 2).
+
+Dense form of the Block-Sign compressor: each block of the flat gradient is
+replaced by sign(x_B) * mean(|x_B|). The wire codec (1 bit/coordinate +
+one f32 scale per block) lives in the Rust coordinator; this kernel is the
+decode-side dense reconstruction, shipped as an AOT artifact so the leader
+can offload decompression of very large models to PJRT, and benchmarked
+against the pure-Rust codec in `bench_compress`.
+
+One grid step per block: the block is streamed to VMEM, reduced (L1 mean),
+and rewritten as +/-scale.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 4096
+
+
+def _blocksign_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    scale = jnp.mean(jnp.abs(x))
+    o_ref[...] = jnp.where(x >= 0, scale, -scale)
+
+
+def blocksign(x, block=BLOCK):
+    """f32[P] -> f32[P] block-sign dense reconstruction, P % block == 0."""
+    p = x.shape[0]
+    assert p % block == 0, (p, block)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    return pl.pallas_call(
+        _blocksign_kernel,
+        grid=(p // block,),
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((p,), jnp.float32),
+        interpret=True,
+    )(x)

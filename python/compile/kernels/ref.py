@@ -1,0 +1,44 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These are the correctness ground truth: `python/tests/test_kernels.py`
+sweeps shapes and dtypes (hypothesis) and asserts the Pallas kernels
+(interpret=True) match these to float32 tolerance. The AOT artifacts embed
+the Pallas versions; the oracles never ship.
+"""
+
+import jax.numpy as jnp
+
+# AMSGrad hyper-parameters used across the whole repo (paper defaults).
+BETA1 = 0.9
+BETA2 = 0.999
+EPS = 1e-8
+
+
+def amsgrad_update_ref(theta, m, v, vhat, g, lr, beta1=BETA1, beta2=BETA2, eps=EPS):
+    """One fused AMSGrad step (Reddi et al. 2018, Algorithm 1 lines 5-8).
+
+    theta/m/v/vhat/g: f32[P] flat vectors; lr: scalar.
+    Returns (theta', m', v', vhat').
+    """
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * g * g
+    vhat_new = jnp.maximum(vhat, v_new)
+    theta_new = theta - lr * m_new / (jnp.sqrt(vhat_new + eps))
+    return theta_new, m_new, v_new, vhat_new
+
+
+def matmul_ref(x, w):
+    """Plain f32 matmul oracle for the tiled Pallas kernel."""
+    return jnp.matmul(x, w, preferred_element_type=jnp.float32)
+
+
+def blocksign_ref(x, block_size):
+    """Uniform-block Block-Sign compressor (paper Definition 2).
+
+    x: f32[P] with P % block_size == 0. Each block becomes
+    sign(x_B) * mean(|x_B|); sign(0) := +1 (matches the Rust codec).
+    """
+    xb = x.reshape(-1, block_size)
+    scale = jnp.mean(jnp.abs(xb), axis=1, keepdims=True)
+    sgn = jnp.where(xb >= 0, 1.0, -1.0)
+    return (sgn * scale).reshape(-1)

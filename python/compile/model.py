@@ -1,0 +1,128 @@
+"""L2 model registry: flat-parameter training/eval closures per model.
+
+Every model is exported to the Rust coordinator through three pure
+functions of fixed shapes (AOT-lowered to HLO text by ``aot.py``):
+
+    grad(theta f32[P], x, y, seed i32[])   -> (loss f32[], grad f32[P])
+    eval(theta f32[P], x, y)               -> (loss f32[], correct i32[])
+    amsgrad(theta,m,v,vhat f32[P], g f32[P], lr f32[]) -> 4 x f32[P]
+
+The flat view makes the coordinator uniform over architectures: a model is
+just (P, input spec). `jax.flatten_util.ravel_pytree` provides the
+bijection; the same unravel closure is baked into the lowered HLO.
+"""
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.flatten_util import ravel_pytree
+
+from .kernels import amsgrad as amsgrad_kernel
+from .models import cnn, lenet, lstm, logreg, resnet, transformer
+from .models import common as cm
+
+INIT_SEED = 42
+
+
+@dataclass(frozen=True)
+class ModelSpec:
+    name: str
+    module: Any
+    batch: int
+    x_shape: Tuple[int, ...]        # without batch dim
+    x_dtype: str                    # "f32" | "i32"
+    y_shape: Tuple[int, ...]        # without batch dim ( () or (L,) )
+    classes: int
+    token_level: bool = False       # LM: per-token labels/accuracy
+    apply_kwargs: Dict[str, Any] = field(default_factory=dict)
+
+    def init_params(self):
+        rng = jax.random.PRNGKey(INIT_SEED)
+        if self.apply_kwargs:
+            return self.module.init(rng, **self.apply_kwargs)
+        return self.module.init(rng)
+
+    def flat_init(self):
+        theta, unravel = ravel_pytree(self.init_params())
+        return theta.astype(jnp.float32), unravel
+
+    # ---- closures over the flat parameterization -------------------------
+
+    def _logits(self, unravel, theta, x, train, seed):
+        params = unravel(theta)
+        return self.module.apply(params, x, train=train, seed=seed,
+                                 **self.apply_kwargs)
+
+    def grad_fn(self, unravel) -> Callable:
+        def loss_fn(theta, x, y, seed):
+            logits = self._logits(unravel, theta, x, train=True, seed=seed)
+            loss = cm.softmax_xent(logits, y, self.classes)
+            # Keep `seed` alive for models without dropout: XLA would
+            # otherwise DCE the parameter out of the lowered HLO and the
+            # Rust caller's 4-input calling convention would break.
+            return loss + 0.0 * seed.astype(jnp.float32)
+
+        def grad(theta, x, y, seed):
+            loss, g = jax.value_and_grad(loss_fn)(theta, x, y, seed)
+            return loss, g
+
+        return grad
+
+    def eval_fn(self, unravel) -> Callable:
+        def evaluate(theta, x, y):
+            logits = self._logits(unravel, theta, x, train=False, seed=0)
+            loss = cm.softmax_xent(logits, y, self.classes)
+            return loss, cm.correct_count(logits, y)
+
+        return evaluate
+
+    def amsgrad_fn(self) -> Callable:
+        def update(theta, m, v, vhat, g, lr):
+            return amsgrad_kernel.amsgrad_update(theta, m, v, vhat, g, lr)
+
+        return update
+
+    # ---- example abstract inputs for lowering ----------------------------
+
+    def example_args(self):
+        xd = jnp.float32 if self.x_dtype == "f32" else jnp.int32
+        x = jax.ShapeDtypeStruct((self.batch, *self.x_shape), xd)
+        y = jax.ShapeDtypeStruct((self.batch, *self.y_shape), jnp.int32)
+        seed = jax.ShapeDtypeStruct((), jnp.int32)
+        return x, y, seed
+
+
+def _lm_spec(name, cfg, batch):
+    return ModelSpec(
+        name=name, module=transformer, batch=batch,
+        x_shape=(cfg.seq_len,), x_dtype="i32",
+        y_shape=(cfg.seq_len,), classes=cfg.vocab, token_level=True,
+        apply_kwargs={"cfg": cfg},
+    )
+
+
+REGISTRY: Dict[str, ModelSpec] = {
+    s.name: s
+    for s in [
+        ModelSpec("logreg", logreg, batch=16, x_shape=(logreg.DIM,),
+                  x_dtype="f32", y_shape=(), classes=logreg.NUM_CLASSES),
+        ModelSpec("mnist_cnn", cnn, batch=32, x_shape=cnn.IMG,
+                  x_dtype="f32", y_shape=(), classes=cnn.NUM_CLASSES),
+        ModelSpec("cifar_lenet", lenet, batch=32, x_shape=lenet.IMG,
+                  x_dtype="f32", y_shape=(), classes=lenet.NUM_CLASSES),
+        ModelSpec("cifar_resnet", resnet, batch=32, x_shape=resnet.IMG,
+                  x_dtype="f32", y_shape=(), classes=resnet.NUM_CLASSES),
+        ModelSpec("imdb_lstm", lstm, batch=16, x_shape=(lstm.SEQ_LEN,),
+                  x_dtype="i32", y_shape=(), classes=lstm.NUM_CLASSES),
+        _lm_spec("lm_small", transformer.SMALL, batch=8),
+        _lm_spec("lm_large", transformer.LARGE, batch=4),
+    ]
+}
+
+# Models lowered by default (lm_large is compile-only, opt-in: ~85M params
+# is out of the 1-core training budget — see DESIGN.md §4).
+DEFAULT_BUILD = ["logreg", "mnist_cnn", "cifar_lenet", "cifar_resnet",
+                 "imdb_lstm", "lm_small"]

@@ -1,0 +1,31 @@
+"""MNIST CNN (paper §5.1): two conv layers + two dense layers, ReLU,
+max-pooling, dropout 0.5 after the pooled conv stack."""
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+
+NUM_CLASSES = 10
+IMG = (28, 28, 1)
+
+
+def init(rng):
+    k = jax.random.split(rng, 4)
+    return {
+        "c1": cm.conv_init(k[0], 3, 3, 1, 8),
+        "c2": cm.conv_init(k[1], 3, 3, 8, 16),
+        "d1": cm.dense_init(k[2], 7 * 7 * 16, 64),
+        "d2": cm.dense_init(k[3], 64, NUM_CLASSES),
+    }
+
+
+def apply(params, x, *, train, seed):
+    h = jax.nn.relu(cm.conv2d(params["c1"], x))
+    h = cm.maxpool2(h)
+    h = jax.nn.relu(cm.conv2d(params["c2"], h))
+    h = cm.maxpool2(h)
+    h = h.reshape(h.shape[0], -1)
+    h = cm.dropout(h, 0.5, train, seed, salt=1)
+    h = jax.nn.relu(cm.dense(params["d1"], h))
+    return cm.dense(params["d2"], h)

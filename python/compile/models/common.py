@@ -1,0 +1,98 @@
+"""Shared layer primitives for the L2 JAX models.
+
+Hand-rolled (no flax/haiku in the image): explicit param pytrees, glorot
+init, conv/pool/layernorm/dense helpers. Every model exposes
+
+    init(rng) -> params (pytree of f32 arrays)
+    apply(params, x, *, train, seed) -> logits
+
+and the registry in ``compile.model`` ravels the pytree into the flat
+f32[P] vector the Rust coordinator owns.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def glorot(rng, shape, fan_in, fan_out):
+    scale = jnp.sqrt(2.0 / (fan_in + fan_out))
+    return scale * jax.random.normal(rng, shape, dtype=jnp.float32)
+
+
+def dense_init(rng, d_in, d_out):
+    wk, _ = jax.random.split(rng)
+    return {
+        "w": glorot(wk, (d_in, d_out), d_in, d_out),
+        "b": jnp.zeros((d_out,), jnp.float32),
+    }
+
+
+def dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def conv_init(rng, kh, kw, c_in, c_out):
+    fan_in = kh * kw * c_in
+    fan_out = kh * kw * c_out
+    return {
+        "w": glorot(rng, (kh, kw, c_in, c_out), fan_in, fan_out),
+        "b": jnp.zeros((c_out,), jnp.float32),
+    }
+
+
+def conv2d(p, x, stride=1, padding="SAME"):
+    """x: f32[B,H,W,C]; kernel HWIO."""
+    y = jax.lax.conv_general_dilated(
+        x, p["w"],
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + p["b"]
+
+
+def maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max,
+        window_dimensions=(1, 2, 2, 1),
+        window_strides=(1, 2, 2, 1),
+        padding="VALID",
+    )
+
+
+def avgpool_global(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+def layernorm_init(dim):
+    return {"g": jnp.ones((dim,), jnp.float32), "b": jnp.zeros((dim,), jnp.float32)}
+
+
+def layernorm(p, x, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]
+
+
+def dropout(x, rate, train, seed, salt):
+    """Deterministic-at-eval dropout keyed off an i32 scalar seed input."""
+    if not train:
+        return x
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), salt)
+    keep = 1.0 - rate
+    mask = jax.random.bernoulli(key, keep, x.shape)
+    return jnp.where(mask, x / keep, 0.0)
+
+
+def softmax_xent(logits, labels, num_classes):
+    """Mean cross-entropy. logits f32[B,C] (or [B,L,C]); labels i32 same prefix."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, num_classes, dtype=jnp.float32)
+    ll = jnp.sum(logp * onehot, axis=-1)
+    return -jnp.mean(ll)
+
+
+def correct_count(logits, labels):
+    """Number of argmax-correct predictions (token-level for 3-D logits)."""
+    pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jnp.sum((pred == labels).astype(jnp.int32))

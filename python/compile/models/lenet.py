@@ -1,0 +1,30 @@
+"""LeNet-5 for the CIFAR-10-shaped workload (paper §5.1)."""
+
+import jax
+
+from . import common as cm
+
+NUM_CLASSES = 10
+IMG = (32, 32, 3)
+
+
+def init(rng):
+    k = jax.random.split(rng, 5)
+    return {
+        "c1": cm.conv_init(k[0], 5, 5, 3, 6),
+        "c2": cm.conv_init(k[1], 5, 5, 6, 16),
+        "d1": cm.dense_init(k[2], 16 * 5 * 5, 120),
+        "d2": cm.dense_init(k[3], 120, 84),
+        "d3": cm.dense_init(k[4], 84, NUM_CLASSES),
+    }
+
+
+def apply(params, x, *, train, seed):
+    h = jax.nn.relu(cm.conv2d(params["c1"], x, padding="VALID"))
+    h = cm.maxpool2(h)
+    h = jax.nn.relu(cm.conv2d(params["c2"], h, padding="VALID"))
+    h = cm.maxpool2(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(cm.dense(params["d1"], h))
+    h = jax.nn.relu(cm.dense(params["d2"], h))
+    return cm.dense(params["d3"], h)

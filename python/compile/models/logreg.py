@@ -1,0 +1,20 @@
+"""Tiny logistic-regression model.
+
+Not part of the paper's evaluation: this is the smoke-test workload the
+Rust integration tests and micro-benches use, so that exercising the full
+PJRT round-trip (grad, eval, fused AMSGrad update) takes milliseconds."""
+
+import jax
+
+from . import common as cm
+
+NUM_CLASSES = 4
+DIM = 64
+
+
+def init(rng):
+    return {"d": cm.dense_init(rng, DIM, NUM_CLASSES)}
+
+
+def apply(params, x, *, train, seed):
+    return cm.dense(params["d"], x)

@@ -1,0 +1,55 @@
+"""IMDB-shaped sentiment LSTM (paper §5.1): 32-d embedding, 64 LSTM cells,
+two dense layers before the binary output.
+
+The synthetic text substrate (Rust data::text) feeds padded i32[B,L] token
+sequences over a 2000-word vocabulary; the classifier reads the final
+hidden state of a lax.scan LSTM. Sequence length is fixed at AOT time
+(64 here vs. the paper's 500 — 1-core budget; see DESIGN.md §4)."""
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+
+NUM_CLASSES = 2
+VOCAB = 2000
+EMBED = 32
+HIDDEN = 64
+SEQ_LEN = 64
+
+
+def init(rng):
+    k = jax.random.split(rng, 5)
+    return {
+        "embed": 0.1 * jax.random.normal(k[0], (VOCAB, EMBED), jnp.float32),
+        # Fused LSTM weights: [x, h] -> 4*HIDDEN gates (i, f, g, o).
+        "wx": cm.glorot(k[1], (EMBED, 4 * HIDDEN), EMBED, 4 * HIDDEN),
+        "wh": cm.glorot(k[2], (HIDDEN, 4 * HIDDEN), HIDDEN, 4 * HIDDEN),
+        "bias": jnp.zeros((4 * HIDDEN,), jnp.float32),
+        "d1": cm.dense_init(k[3], HIDDEN, 16),
+        "d2": cm.dense_init(k[4], 16, NUM_CLASSES),
+    }
+
+
+def _cell(params, carry, x_t):
+    h, c = carry
+    gates = x_t @ params["wx"] + h @ params["wh"] + params["bias"]
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return (h, c), None
+
+
+def apply(params, x, *, train, seed):
+    """x: i32[B, L] token ids."""
+    emb = params["embed"][x]                      # [B, L, E]
+    b = emb.shape[0]
+    h0 = jnp.zeros((b, HIDDEN), jnp.float32)
+    c0 = jnp.zeros((b, HIDDEN), jnp.float32)
+    (h, _), _ = jax.lax.scan(
+        lambda carry, xt: _cell(params, carry, xt),
+        (h0, c0),
+        jnp.swapaxes(emb, 0, 1),                  # [L, B, E]
+    )
+    h = jax.nn.relu(cm.dense(params["d1"], h))
+    return cm.dense(params["d2"], h)

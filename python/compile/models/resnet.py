@@ -1,0 +1,60 @@
+"""Mini pre-activation ResNet for the appendix Fig. 4 workload.
+
+The paper uses ResNet-18 (11M params); at 1-CPU-core scale we keep the
+structural ingredients that matter for the compression/optimizer study
+(depth, skip connections, stage-wise widening, stride-2 downsampling) in a
+3-stage residual net (16/32/64 channels, ~80k params). Normalization is a
+stateless channel LayerNorm (no BatchNorm running stats: the AOT artifact
+must be a pure function of (theta, batch))."""
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+
+NUM_CLASSES = 10
+IMG = (32, 32, 3)
+STAGES = (16, 32, 64)
+
+
+def _block_init(rng, c_in, c_out):
+    k = jax.random.split(rng, 3)
+    p = {
+        "ln1": cm.layernorm_init(c_in),
+        "c1": cm.conv_init(k[0], 3, 3, c_in, c_out),
+        "ln2": cm.layernorm_init(c_out),
+        "c2": cm.conv_init(k[1], 3, 3, c_out, c_out),
+    }
+    if c_in != c_out:
+        p["proj"] = cm.conv_init(k[2], 1, 1, c_in, c_out)
+    return p
+
+
+def _block_apply(p, x, stride):
+    h = jax.nn.relu(cm.layernorm(p["ln1"], x))
+    h = cm.conv2d(p["c1"], h, stride=stride)
+    h = jax.nn.relu(cm.layernorm(p["ln2"], h))
+    h = cm.conv2d(p["c2"], h)
+    if "proj" in p:
+        x = cm.conv2d(p["proj"], x, stride=stride)
+    return x + h
+
+
+def init(rng):
+    k = jax.random.split(rng, 2 + len(STAGES))
+    params = {"stem": cm.conv_init(k[0], 3, 3, 3, STAGES[0])}
+    c_in = STAGES[0]
+    for i, c_out in enumerate(STAGES):
+        params[f"s{i}"] = _block_init(k[1 + i], c_in, c_out)
+        c_in = c_out
+    params["head"] = cm.dense_init(k[-1], STAGES[-1], NUM_CLASSES)
+    return params
+
+
+def apply(params, x, *, train, seed):
+    h = cm.conv2d(params["stem"], x)
+    for i in range(len(STAGES)):
+        h = _block_apply(params[f"s{i}"], h, stride=1 if i == 0 else 2)
+    h = jax.nn.relu(h)
+    h = cm.avgpool_global(h)
+    return cm.dense(params["head"], h)

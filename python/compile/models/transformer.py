@@ -1,0 +1,104 @@
+"""Byte-level transformer LM for the end-to-end training driver.
+
+Decoder-only pre-LN transformer. The MLP blocks route their matmuls
+through the L1 Pallas tiled kernel (kernels.matmul) when ``use_pallas`` is
+set, so the AOT grad artifact contains the hand-tiled schedule; attention
+projections use jnp.einsum (XLA fuses those well and their shapes are
+small at this scale).
+
+Two configs: ``lm_small`` (d=256, L=4, ~3.3M params — the one the e2e
+example trains) and ``lm_large`` (d=768, L=12, GPT-2-small class ~85M —
+compile-only on this box; see DESIGN.md §4)."""
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from . import common as cm
+from ..kernels.matmul import matmul as pallas_matmul
+
+
+@dataclass(frozen=True)
+class LmConfig:
+    vocab: int = 256
+    d_model: int = 256
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 1024
+    seq_len: int = 128
+    use_pallas: bool = True
+
+
+SMALL = LmConfig()
+LARGE = LmConfig(d_model=768, n_layers=12, n_heads=12, d_ff=3072, seq_len=256,
+                 use_pallas=False)
+
+
+def init(rng, cfg: LmConfig = SMALL):
+    keys = jax.random.split(rng, 2 + cfg.n_layers)
+    params = {
+        "embed": 0.02 * jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)),
+        "pos": 0.02 * jax.random.normal(keys[1], (cfg.seq_len, cfg.d_model)),
+        "ln_f": cm.layernorm_init(cfg.d_model),
+    }
+    for i in range(cfg.n_layers):
+        k = jax.random.split(keys[2 + i], 6)
+        d, f = cfg.d_model, cfg.d_ff
+        params[f"l{i}"] = {
+            "ln1": cm.layernorm_init(d),
+            "wqkv": cm.glorot(k[0], (d, 3 * d), d, 3 * d),
+            "wo": cm.glorot(k[1], (d, d), d, d),
+            "ln2": cm.layernorm_init(d),
+            "w1": cm.glorot(k[2], (d, f), d, f),
+            "b1": jnp.zeros((f,), jnp.float32),
+            "w2": cm.glorot(k[3], (f, d), f, d),
+            "b2": jnp.zeros((d,), jnp.float32),
+        }
+    return params
+
+
+def _mm(a, w, use_pallas):
+    """[.., K] @ [K, N], optionally through the Pallas tiled kernel."""
+    if not use_pallas:
+        return a @ w
+    lead = a.shape[:-1]
+    flat = a.reshape(-1, a.shape[-1])
+    out = pallas_matmul(flat, w)
+    return out.reshape(*lead, w.shape[-1])
+
+
+def _attn(p, h, cfg):
+    b, l, d = h.shape
+    nh = cfg.n_heads
+    hd = d // nh
+    qkv = h @ p["wqkv"]                              # [B, L, 3D]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, l, nh, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, l, nh, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, l, nh, hd).transpose(0, 2, 1, 3)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    att = jnp.where(mask, att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, l, d)
+    return out @ p["wo"]
+
+
+def _block(p, h, cfg):
+    h = h + _attn(p, cm.layernorm(p["ln1"], h), cfg)
+    x = cm.layernorm(p["ln2"], h)
+    x = jax.nn.gelu(_mm(x, p["w1"], cfg.use_pallas) + p["b1"])
+    x = _mm(x, p["w2"], cfg.use_pallas) + p["b2"]
+    return h + x
+
+
+def apply(params, x, *, train, seed, cfg: LmConfig = SMALL):
+    """x: i32[B, L] byte ids -> logits f32[B, L, vocab]."""
+    h = params["embed"][x] + params["pos"][None, : x.shape[1]]
+    for i in range(cfg.n_layers):
+        h = _block(params[f"l{i}"], h, cfg)
+    h = cm.layernorm(params["ln_f"], h)
+    return h @ params["embed"].T

@@ -1,0 +1,83 @@
+"""Manifest + artifact invariants: the contract between aot.py and the
+Rust loader (runtime::manifest). Skipped when artifacts were not built."""
+
+import json
+import os
+import struct
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import REGISTRY
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="run `make artifacts` first")
+
+
+def _manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_manifest_schema():
+    m = _manifest()
+    assert m["version"] == 1
+    opt = m["optimizer"]
+    assert opt["beta1"] == 0.9 and opt["beta2"] == 0.999
+    for e in m["models"]:
+        for key in ["name", "p", "batch", "x_shape", "x_dtype", "y_shape",
+                    "classes", "token_level", "files"]:
+            assert key in e, (e["name"], key)
+        for f in e["files"].values():
+            assert os.path.exists(os.path.join(ART, f)), f
+
+
+def test_init_bin_matches_registry():
+    m = _manifest()
+    for e in m["models"]:
+        spec = REGISTRY[e["name"]]
+        theta, _ = spec.flat_init()
+        path = os.path.join(ART, e["files"]["init"])
+        raw = np.fromfile(path, dtype="<f4")
+        assert raw.shape[0] == e["p"] == theta.shape[0]
+        np.testing.assert_array_equal(raw, np.asarray(theta))
+
+
+def test_manifest_shapes_match_registry():
+    m = _manifest()
+    for e in m["models"]:
+        spec = REGISTRY[e["name"]]
+        assert e["batch"] == spec.batch
+        assert tuple(e["x_shape"]) == spec.x_shape
+        assert e["x_dtype"] == spec.x_dtype
+        assert e["classes"] == spec.classes
+        assert e["token_level"] == spec.token_level
+
+
+def test_grad_hlo_keeps_all_four_parameters():
+    # Regression: models without dropout don't *use* the seed input, and
+    # XLA DCE'd the parameter out of the lowered HLO, breaking the Rust
+    # caller's fixed (theta, x, y, seed) calling convention. model.py now
+    # keeps the seed alive; every grad artifact must have 4 params.
+    m = _manifest()
+    for e in m["models"]:
+        path = os.path.join(ART, e["files"]["grad"])
+        with open(path) as f:
+            text = f.read()
+        assert "parameter(3)" in text, f"{e['name']}: seed param was DCE'd"
+
+
+def test_hlo_text_parses_as_hlo_module():
+    # Every emitted artifact must start with an HLO module header: the
+    # text (not proto) format is the xla_extension-0.5.1-safe interchange.
+    m = _manifest()
+    for e in m["models"]:
+        for kind in ["grad", "eval", "amsgrad"]:
+            path = os.path.join(ART, e["files"][kind])
+            with open(path) as f:
+                head = f.read(200)
+            assert head.startswith("HloModule"), (e["name"], kind, head[:40])

@@ -1,0 +1,114 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes (and the kernels' block-padding edge cases);
+assert_allclose at float32 tolerance. This is the core correctness signal
+for the compute that ends up inside the AOT artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import amsgrad, blocksign, ref
+from compile.kernels.matmul import matmul
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def _vecs(rng, p):
+    ks = jax.random.split(jax.random.PRNGKey(rng), 5)
+    theta, m, g = (jax.random.normal(k, (p,), jnp.float32) for k in ks[:3])
+    v = jnp.abs(jax.random.normal(ks[3], (p,)))
+    vhat = v + jnp.abs(jax.random.normal(ks[4], (p,)))
+    return theta, m, v, vhat, g
+
+
+class TestAmsGradKernel:
+    @settings(**SETTINGS)
+    @given(p=st.integers(1, 3 * 8192 + 7), seed=st.integers(0, 2**31 - 1),
+           lr=st.floats(1e-5, 1.0))
+    def test_matches_ref(self, p, seed, lr):
+        theta, m, v, vhat, g = _vecs(seed, p)
+        got = amsgrad.amsgrad_update(theta, m, v, vhat, g, jnp.float32(lr))
+        want = ref.amsgrad_update_ref(theta, m, v, vhat, g, lr)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+    def test_vhat_monotone(self):
+        theta, m, v, vhat, g = _vecs(0, 1000)
+        _, _, _, vhat_n = amsgrad.amsgrad_update(theta, m, v, vhat, g, 1e-3)
+        assert bool(jnp.all(vhat_n >= vhat))
+
+    def test_zero_grad_moves_with_momentum_only(self):
+        theta, m, v, vhat, _ = _vecs(1, 64)
+        g = jnp.zeros((64,))
+        theta_n, m_n, _, _ = amsgrad.amsgrad_update(theta, m, v, vhat, g, 1e-3)
+        np.testing.assert_allclose(m_n, ref.BETA1 * m, rtol=1e-6)
+        assert not np.allclose(theta_n, theta)  # momentum still moves
+
+    def test_exact_block_multiple(self):
+        p = 2 * amsgrad.BLOCK
+        theta, m, v, vhat, g = _vecs(2, p)
+        got = amsgrad.amsgrad_update(theta, m, v, vhat, g, 1e-2)
+        want = ref.amsgrad_update_ref(theta, m, v, vhat, g, 1e-2)
+        for a, b in zip(got, want):
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+class TestMatmulKernel:
+    @settings(**SETTINGS)
+    @given(m=st.integers(1, 200), k=st.integers(1, 200), n=st.integers(1, 200),
+           seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, m, k, n, seed):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        x = jax.random.normal(k1, (m, k), jnp.float32)
+        w = jax.random.normal(k2, (k, n), jnp.float32)
+        np.testing.assert_allclose(matmul(x, w), ref.matmul_ref(x, w),
+                                   rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=8, deadline=None)
+    @given(m=st.integers(2, 64), k=st.integers(2, 64), n=st.integers(2, 64),
+           seed=st.integers(0, 2**31 - 1))
+    def test_vjp_matches_xla(self, m, k, n, seed):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        x = jax.random.normal(k1, (m, k), jnp.float32)
+        w = jax.random.normal(k2, (k, n), jnp.float32)
+        f_pl = lambda x, w: jnp.sum(jnp.tanh(matmul(x, w)))
+        f_rf = lambda x, w: jnp.sum(jnp.tanh(x @ w))
+        gx, gw = jax.grad(f_pl, argnums=(0, 1))(x, w)
+        gx2, gw2 = jax.grad(f_rf, argnums=(0, 1))(x, w)
+        np.testing.assert_allclose(gx, gx2, rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(gw, gw2, rtol=1e-3, atol=1e-4)
+
+    def test_multiple_of_tiles(self):
+        x = jnp.ones((256, 256))
+        w = jnp.eye(256)
+        np.testing.assert_allclose(matmul(x, w), x, rtol=1e-6)
+
+
+class TestBlockSignKernel:
+    @settings(**SETTINGS)
+    @given(nblocks=st.integers(1, 6), seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, nblocks, seed):
+        p = nblocks * blocksign.BLOCK
+        x = jax.random.normal(jax.random.PRNGKey(seed), (p,), jnp.float32)
+        np.testing.assert_allclose(
+            blocksign.blocksign(x), ref.blocksign_ref(x, blocksign.BLOCK),
+            rtol=1e-5, atol=1e-7)
+
+    def test_sign_of_zero_is_positive(self):
+        x = jnp.zeros((blocksign.BLOCK,))
+        got = blocksign.blocksign(x)
+        np.testing.assert_array_equal(got, x)  # scale 0 -> all zeros
+
+    def test_q_deviate_bound(self):
+        # ||C(x) - x|| <= q ||x|| with q^2 = 1 - 1/block (paper Remark 1
+        # gives q^2 = 1 - min_i 1/d_i; uniform blocks => 1 - 1/block).
+        x = jax.random.normal(jax.random.PRNGKey(7), (2 * blocksign.BLOCK,))
+        c = blocksign.blocksign(x)
+        q2 = 1.0 - 1.0 / blocksign.BLOCK
+        assert float(jnp.sum((c - x) ** 2)) <= q2 * float(jnp.sum(x**2)) + 1e-4

@@ -1,0 +1,45 @@
+//! Compressor throughput (Fig. 2's cost side): compress a gradient-like
+//! vector at several dimensions, per compressor. Prints MB/s of input
+//! consumed — the §Perf target is ≥100 MB/s Block-Sign, ≥50 MB/s Top-k
+//! on one core.
+
+use comp_ams::compress::{BlockSign, Compressor, RandomK, TopK};
+use comp_ams::testing::bench::bench_main;
+use comp_ams::util::rng::Rng;
+
+fn main() {
+    let mut b = bench_main("bench_compress");
+    let mut rng = Rng::seed(7);
+    for &d in &[10_000usize, 100_000, 1_000_000] {
+        let x = rng.normal_vec(d);
+        let bytes = d * 4;
+
+        let mut topk = TopK::new(0.01);
+        let r = b.bench(&format!("topk(0.01) d={d}"), || {
+            std::hint::black_box(topk.compress(&x));
+        });
+        b.note(&format!("  -> {:.1} MB/s", r.mb_per_sec(bytes)));
+
+        let mut bs = BlockSign::new(4096);
+        let r = b.bench(&format!("blocksign(4096) d={d}"), || {
+            std::hint::black_box(bs.compress(&x));
+        });
+        b.note(&format!("  -> {:.1} MB/s", r.mb_per_sec(bytes)));
+
+        let mut rk = RandomK::new(0.01, 3);
+        let r = b.bench(&format!("randomk(0.01) d={d}"), || {
+            std::hint::black_box(rk.compress(&x));
+        });
+        b.note(&format!("  -> {:.1} MB/s", r.mb_per_sec(bytes)));
+    }
+
+    // Error-feedback overhead on top of compression.
+    let d = 1_000_000;
+    let x = rng.normal_vec(d);
+    let mut ef = comp_ams::compress::ErrorFeedback::new(d, true);
+    let mut topk = TopK::new(0.01);
+    let r = b.bench("ef+topk(0.01) d=1000000", || {
+        std::hint::black_box(ef.compress(&x, &mut topk).unwrap());
+    });
+    b.note(&format!("  -> {:.1} MB/s", r.mb_per_sec(d * 4)));
+}

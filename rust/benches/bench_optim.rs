@@ -1,0 +1,63 @@
+//! Server-optimizer backends: pure-Rust AMSGrad loop vs. the AOT-compiled
+//! L1 Pallas fused-update artifact via PJRT, per model size. Requires
+//! `make artifacts`.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use comp_ams::optim::{AmsGrad, ServerOpt};
+use comp_ams::runtime::{ModelBundle, Runtime};
+use comp_ams::testing::bench::bench_main;
+use comp_ams::util::rng::Rng;
+
+fn main() {
+    let mut b = bench_main("bench_optim");
+    let mut rng = Rng::seed(13);
+
+    // Pure-Rust loop across sizes.
+    for &p in &[52_138usize, 1_000_000] {
+        let mut opt = AmsGrad::default_hp(p);
+        let mut theta = rng.normal_vec(p);
+        let g = rng.normal_vec(p);
+        let r = b.bench(&format!("amsgrad rust P={p}"), || {
+            opt.step(&mut theta, &g, 1e-3);
+        });
+        // 5 reads + 4 writes of f32 per element.
+        b.note(&format!(
+            "  -> {:.2} GB/s state traffic",
+            9.0 * 4.0 * p as f64 / r.mean.as_secs_f64() / 1e9
+        ));
+    }
+
+    // PJRT fused kernel (artifacts required).
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        println!("(skipping PJRT benches: run `make artifacts` first)");
+        return;
+    }
+    // lm_small (P=3.25M) is excluded: interpret-mode Pallas costs ~24 s
+    // per update there (recorded in EXPERIMENTS.md §Perf) and would
+    // dominate the bench wall-clock for no extra signal.
+    let rt = Rc::new(Runtime::cpu().expect("pjrt cpu client"));
+    for model in ["logreg", "mnist_cnn"] {
+        let bundle = match ModelBundle::load(&rt, artifacts, model) {
+            Ok(b) => b,
+            Err(_) => continue,
+        };
+        let p = bundle.entry.p;
+        let theta = rng.normal_vec(p);
+        let m = vec![0.0f32; p];
+        let v = vec![0.0f32; p];
+        let vhat = vec![0.0f32; p];
+        let g = rng.normal_vec(p);
+        let r = b.bench(&format!("amsgrad pallas/pjrt {model} P={p}"), || {
+            std::hint::black_box(
+                bundle.amsgrad.run(&theta, &m, &v, &vhat, &g, 1e-3).unwrap(),
+            );
+        });
+        b.note(&format!(
+            "  -> {:.2} GB/s state traffic",
+            9.0 * 4.0 * p as f64 / r.mean.as_secs_f64() / 1e9
+        ));
+    }
+}

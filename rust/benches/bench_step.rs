@@ -1,0 +1,66 @@
+//! End-to-end round latency per protocol — the paper's per-iteration cost
+//! table, on both the analytic substrate (coordinator-dominated) and the
+//! PJRT smoke model (gradient-dominated). One bench per Fig. 1 method.
+
+use comp_ams::config::TrainConfig;
+use comp_ams::coordinator::trainer::Trainer;
+use comp_ams::testing::bench::bench_main;
+
+fn main() {
+    let mut b = bench_main("bench_step");
+
+    let methods = [
+        "dist-ams",
+        "comp-ams-topk:0.01",
+        "comp-ams-blocksign:4096",
+        "qadam",
+        "1bitadam:5",
+        "dist-sgd",
+    ];
+
+    // Analytic substrate: isolates the coordinator (compress + EF +
+    // aggregate + optimizer) because the quadratic gradient is trivial.
+    for algo in methods {
+        let mut cfg = TrainConfig::preset("quadratic", algo);
+        cfg.workers = 16;
+        cfg.rounds = 1_000_000; // never reached; we drive steps manually
+        cfg.eval_every = 0;
+        let mut t = Trainer::new(&cfg).expect("trainer");
+        let mut round = 0u64;
+        b.bench(&format!("round quadratic n=16 {algo}"), || {
+            t.step(round).unwrap();
+            round += 1;
+        });
+    }
+
+    // PJRT path (artifacts required): full grad + protocol round.
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        for algo in ["dist-ams", "comp-ams-topk:0.01"] {
+            let mut cfg = TrainConfig::preset("logreg", algo);
+            cfg.workers = 4;
+            cfg.rounds = 1_000_000;
+            cfg.eval_every = 0;
+            let mut t = Trainer::new(&cfg).expect("trainer");
+            let mut round = 0u64;
+            b.bench(&format!("round logreg/pjrt n=4 {algo}"), || {
+                t.step(round).unwrap();
+                round += 1;
+            });
+        }
+        for model in ["mnist_cnn", "cifar_lenet"] {
+            let mut cfg = TrainConfig::preset(model, "comp-ams-topk:0.01");
+            cfg.workers = 2;
+            cfg.rounds = 1_000_000;
+            cfg.eval_every = 0;
+            if let Ok(mut t) = Trainer::new(&cfg) {
+                let mut round = 0u64;
+                b.bench(&format!("round {model}/pjrt n=2 comp-ams-topk"), || {
+                    t.step(round).unwrap();
+                    round += 1;
+                });
+            }
+        }
+    } else {
+        println!("(skipping PJRT benches: run `make artifacts` first)");
+    }
+}

@@ -1,0 +1,47 @@
+//! Wire codec micro-benches: encode/decode/add_into throughput for each
+//! payload kind, plus the server-side averaging hot loop.
+
+use comp_ams::compress::{BlockSign, Compressor, Payload, TopK};
+use comp_ams::testing::bench::bench_main;
+use comp_ams::util::rng::Rng;
+
+fn main() {
+    let mut b = bench_main("bench_wire");
+    let mut rng = Rng::seed(11);
+    let d = 500_000usize;
+    let x = rng.normal_vec(d);
+
+    let payloads: Vec<(&str, Payload)> = vec![
+        ("dense", Payload::Dense(x.clone())),
+        ("sparse(topk 1%)", TopK::new(0.01).compress(&x)),
+        ("signs(4096)", BlockSign::new(4096).compress(&x)),
+    ];
+
+    for (name, p) in &payloads {
+        let bytes = p.wire_bits() as usize / 8;
+        let r = b.bench(&format!("encode {name}"), || {
+            std::hint::black_box(p.encode());
+        });
+        b.note(&format!("  -> {:.1} MB/s on-wire", r.mb_per_sec(bytes)));
+
+        let buf = p.encode();
+        let r = b.bench(&format!("decode {name}"), || {
+            std::hint::black_box(Payload::decode(&buf).unwrap());
+        });
+        b.note(&format!("  -> {:.1} MB/s on-wire", r.mb_per_sec(bytes)));
+
+        let mut acc = vec![0.0f32; d];
+        let r = b.bench(&format!("add_into {name}"), || {
+            p.add_into(&mut acc).unwrap();
+        });
+        b.note(&format!("  -> {:.1} M coord/s", d as f64 / r.mean.as_secs_f64() / 1e6));
+    }
+
+    // n-worker averaging (the leader aggregation loop, n=16).
+    let msgs: Vec<Payload> = (0..16).map(|_| TopK::new(0.01).compress(&x)).collect();
+    let mut out = Vec::new();
+    let r = b.bench("average 16x sparse(1%) d=500k", || {
+        comp_ams::algo::average_payloads(&msgs, d, &mut out).unwrap();
+    });
+    b.note(&format!("  -> {:.2} ms/round", r.mean.as_secs_f64() * 1e3));
+}

@@ -1,0 +1,182 @@
+//! COMP-AMS (paper Algorithm 2) — and, with the Identity compressor, the
+//! full-precision Dist-AMS baseline.
+//!
+//! Worker i (lines 5-9):  ĝ_i = C(g_i + e_i);  e_i ← e_i + g_i − ĝ_i.
+//! Server (lines 11-16):  ḡ = mean_i ĝ_i; AMSGrad(θ, ḡ) with m, v, v̂
+//! held **only on the server**.
+//!
+//! The server update has two backends: the pure-Rust [`AmsGrad`] loop and
+//! the AOT-compiled L1 Pallas fused kernel ([`OptimizerExe`]), selected
+//! via [`CompAms::with_fused`]. Both are bit-compared in the integration
+//! tests and raced in `bench_optim`.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::compress::{Compressor, CompressorSpec, ErrorFeedback, Payload};
+use crate::optim::{AmsGrad, ServerOpt};
+use crate::runtime::OptimizerExe;
+
+use super::{average_payloads, Algorithm, RoundCtx};
+
+pub struct CompAms {
+    label: &'static str,
+    compressors: Vec<Box<dyn Compressor>>,
+    efs: Vec<ErrorFeedback>,
+    opt: AmsGrad,
+    fused: Option<Rc<OptimizerExe>>,
+    avg: Vec<f32>,
+}
+
+impl CompAms {
+    pub fn new(
+        dim: usize,
+        n: usize,
+        compressor: CompressorSpec,
+        error_feedback: bool,
+        label: &'static str,
+    ) -> Self {
+        let compressors = (0..n)
+            .map(|w| {
+                // Give stateful compressors distinct streams per worker.
+                match &compressor {
+                    CompressorSpec::RandomK { ratio, seed } => CompressorSpec::RandomK {
+                        ratio: *ratio,
+                        seed: seed ^ (w as u64 + 1),
+                    }
+                    .build(),
+                    CompressorSpec::Qsgd { levels, seed } => CompressorSpec::Qsgd {
+                        levels: *levels,
+                        seed: seed ^ (w as u64 + 1),
+                    }
+                    .build(),
+                    c => c.build(),
+                }
+            })
+            .collect();
+        CompAms {
+            label,
+            compressors,
+            efs: (0..n).map(|_| ErrorFeedback::new(dim, error_feedback)).collect(),
+            opt: AmsGrad::default_hp(dim),
+            fused: None,
+            avg: Vec::new(),
+        }
+    }
+
+    /// Route the server update through the Pallas fused-update artifact.
+    pub fn with_fused(mut self, exe: Rc<OptimizerExe>) -> Self {
+        assert_eq!(exe.p(), self.opt.dim());
+        self.fused = Some(exe);
+        self
+    }
+
+    /// Residual norms (diagnostics / tests).
+    pub fn residual_norms(&self) -> Vec<f64> {
+        self.efs.iter().map(|e| e.residual_norm()).collect()
+    }
+}
+
+impl Algorithm for CompAms {
+    fn name(&self) -> String {
+        if self.label == "dist-ams" {
+            "dist-ams".into()
+        } else {
+            format!("comp-ams[{}]", self.compressors[0].name())
+        }
+    }
+
+    fn worker_msg(&mut self, wid: usize, grad: &[f32], _ctx: &RoundCtx) -> Result<Payload> {
+        self.efs[wid].compress(grad, self.compressors[wid].as_mut())
+    }
+
+    fn server_step(
+        &mut self,
+        theta: &mut [f32],
+        msgs: &[Payload],
+        ctx: &RoundCtx,
+    ) -> Result<()> {
+        let mut avg = std::mem::take(&mut self.avg);
+        average_payloads(msgs, theta.len(), &mut avg)?;
+        match &self.fused {
+            None => self.opt.step(theta, &avg, ctx.lr),
+            Some(exe) => {
+                let (t2, m2, v2, vh2) =
+                    exe.run(theta, &self.opt.m, &self.opt.v, &self.opt.vhat, &avg, ctx.lr)?;
+                theta.copy_from_slice(&t2);
+                self.opt.m = m2;
+                self.opt.v = v2;
+                self.opt.vhat = vh2;
+            }
+        }
+        self.avg = avg;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx(round: u64) -> RoundCtx {
+        RoundCtx { round, lr: 0.01 }
+    }
+
+    #[test]
+    fn identity_variant_equals_sequential_amsgrad() {
+        // Dist-AMS with n workers and identical gradients must match a
+        // single-machine AMSGrad trace exactly.
+        let dim = 16;
+        let mut algo = CompAms::new(dim, 4, CompressorSpec::Identity, false, "dist-ams");
+        let mut reference = AmsGrad::default_hp(dim);
+        let mut theta_a = vec![0.3f32; dim];
+        let mut theta_b = vec![0.3f32; dim];
+        for r in 0..20 {
+            let g: Vec<f32> = (0..dim).map(|i| ((r * i) as f32 * 0.1).sin()).collect();
+            let msgs: Vec<Payload> = (0..4)
+                .map(|w| algo.worker_msg(w, &g, &ctx(r as u64)).unwrap())
+                .collect();
+            algo.server_step(&mut theta_a, &msgs, &ctx(r as u64)).unwrap();
+            reference.step(&mut theta_b, &g, 0.01);
+            assert_eq!(theta_a, theta_b, "round {r}");
+        }
+    }
+
+    #[test]
+    fn compressed_single_worker_tracks_full_gradient_direction() {
+        // With EF, the *sum* of transmitted messages telescopes to the sum
+        // of true gradients minus the final residual (Alg. 2 invariant).
+        let dim = 64;
+        let mut algo =
+            CompAms::new(dim, 1, CompressorSpec::TopK { ratio: 0.1 }, true, "comp-ams");
+        let mut rng = crate::util::rng::Rng::seed(3);
+        let mut sum_g = vec![0.0f32; dim];
+        let mut sum_sent = vec![0.0f32; dim];
+        for r in 0..30 {
+            let g = rng.normal_vec(dim);
+            crate::util::math::axpy(1.0, &g, &mut sum_g);
+            let msg = algo.worker_msg(0, &g, &ctx(r)).unwrap();
+            let dense = msg.to_dense(dim).unwrap();
+            crate::util::math::axpy(1.0, &dense, &mut sum_sent);
+        }
+        let residual = algo.efs[0].residual();
+        for i in 0..dim {
+            assert!(
+                (sum_g[i] - sum_sent[i] - residual[i]).abs() < 1e-3,
+                "telescoping broken at {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn worker_messages_are_actually_compressed() {
+        let dim = 10_000;
+        let mut algo =
+            CompAms::new(dim, 2, CompressorSpec::TopK { ratio: 0.01 }, true, "comp-ams");
+        let g = vec![1.0f32; dim];
+        let msg = algo.worker_msg(0, &g, &ctx(0)).unwrap();
+        let dense_bits = Payload::Dense(g).wire_bits();
+        assert!(msg.wire_bits() < dense_bits / 40);
+    }
+}

@@ -1,0 +1,61 @@
+//! Full-precision distributed (momentum) SGD — the appendix Fig. 4
+//! reference ("converges faster but generalizes slightly worse").
+
+use anyhow::Result;
+
+use crate::compress::Payload;
+use crate::optim::{MomentumSgd, ServerOpt};
+
+use super::{average_payloads, Algorithm, RoundCtx};
+
+pub struct DistSgd {
+    opt: MomentumSgd,
+    avg: Vec<f32>,
+}
+
+impl DistSgd {
+    pub fn new(dim: usize, momentum: f32) -> Self {
+        DistSgd { opt: MomentumSgd::new(dim, momentum), avg: Vec::new() }
+    }
+}
+
+impl Algorithm for DistSgd {
+    fn name(&self) -> String {
+        "dist-sgd".into()
+    }
+
+    fn worker_msg(&mut self, _wid: usize, grad: &[f32], _ctx: &RoundCtx) -> Result<Payload> {
+        Ok(Payload::Dense(grad.to_vec()))
+    }
+
+    fn server_step(
+        &mut self,
+        theta: &mut [f32],
+        msgs: &[Payload],
+        ctx: &RoundCtx,
+    ) -> Result<()> {
+        let mut avg = std::mem::take(&mut self.avg);
+        average_payloads(msgs, theta.len(), &mut avg)?;
+        self.opt.step(theta, &avg, ctx.lr);
+        self.avg = avg;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn averaging_two_workers_matches_mean_gradient_step() {
+        let mut algo = DistSgd::new(3, 0.0);
+        let mut theta = vec![0.0f32; 3];
+        let ctx = RoundCtx { round: 0, lr: 1.0 };
+        let msgs = vec![
+            Payload::Dense(vec![1.0, 0.0, 2.0]),
+            Payload::Dense(vec![3.0, 0.0, 0.0]),
+        ];
+        algo.server_step(&mut theta, &msgs, &ctx).unwrap();
+        assert_eq!(theta, vec![-2.0, 0.0, -1.0]);
+    }
+}

@@ -1,0 +1,206 @@
+//! Distributed optimization protocols — the paper's Algorithm 2 and every
+//! baseline in its evaluation (§5.1):
+//!
+//! | name            | worker uplink                    | server update            |
+//! |-----------------|----------------------------------|--------------------------|
+//! | `dist-ams`      | dense gradient                   | AMSGrad                  |
+//! | `comp-ams-*`    | C(g + e) with error feedback     | AMSGrad (state on server)|
+//! | `qadam`         | C(m/√v) with EF (local m, v)     | lr · avg ratio           |
+//! | `1bitadam`      | dense g (warm-up) then C(m) + EF | Adam, then frozen-v momentum |
+//! | `dist-sgd`      | dense gradient                   | (momentum) SGD           |
+//!
+//! A protocol is a single [`Algorithm`] object: `worker_msg` is the code
+//! that would run on worker i (its per-worker state is indexed by `wid`),
+//! `server_step` is the leader. The coordinator routes payloads between
+//! them and charges the byte ledger.
+
+pub mod comp_ams;
+pub mod dist_sgd;
+pub mod onebit_adam;
+pub mod qadam;
+
+pub use comp_ams::CompAms;
+pub use dist_sgd::DistSgd;
+pub use onebit_adam::OneBitAdam;
+pub use qadam::QAdam;
+
+use anyhow::{bail, Result};
+
+use crate::compress::{CompressorSpec, Payload};
+
+/// Per-round context handed to both sides of the protocol.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundCtx {
+    pub round: u64,
+    pub lr: f32,
+}
+
+pub trait Algorithm {
+    fn name(&self) -> String;
+
+    /// Worker `wid` turns its raw stochastic gradient into the uplink
+    /// message (compression + any worker-local state updates).
+    fn worker_msg(&mut self, wid: usize, grad: &[f32], ctx: &RoundCtx) -> Result<Payload>;
+
+    /// The leader consumes all n uplink messages and updates `theta`.
+    fn server_step(&mut self, theta: &mut [f32], msgs: &[Payload], ctx: &RoundCtx)
+        -> Result<()>;
+
+    /// Extra per-worker memory (bytes) beyond the error accumulator —
+    /// the paper's §3.2 memory-footprint comparison.
+    fn worker_state_bytes(&self) -> usize {
+        0
+    }
+}
+
+/// Parsed protocol spec (from CLI/config strings).
+#[derive(Clone, Debug, PartialEq)]
+pub enum AlgoSpec {
+    DistAms,
+    CompAms { compressor: CompressorSpec, error_feedback: bool },
+    QAdam { compressor: CompressorSpec },
+    OneBitAdam { warmup_rounds: u64, block: usize },
+    DistSgd { momentum: f32 },
+}
+
+impl AlgoSpec {
+    /// Parse e.g. `dist-ams`, `comp-ams-topk:0.01`, `comp-ams-blocksign:4096`,
+    /// `comp-ams-topk:0.01:noef`, `qadam`, `1bitadam:100`, `dist-sgd`.
+    pub fn parse(s: &str) -> Result<AlgoSpec> {
+        if s == "dist-ams" {
+            return Ok(AlgoSpec::DistAms);
+        }
+        if let Some(rest) = s.strip_prefix("comp-ams-") {
+            let (comp_str, noef) = match rest.strip_suffix(":noef") {
+                Some(c) => (c, true),
+                None => (rest, false),
+            };
+            return Ok(AlgoSpec::CompAms {
+                compressor: CompressorSpec::parse(comp_str)?,
+                error_feedback: !noef,
+            });
+        }
+        if s == "qadam" {
+            // QAdam's published variant is 1-bit; blocksign over the ratio.
+            return Ok(AlgoSpec::QAdam {
+                compressor: CompressorSpec::BlockSign { block: 4096 },
+            });
+        }
+        if let Some(rest) = s.strip_prefix("qadam-") {
+            return Ok(AlgoSpec::QAdam { compressor: CompressorSpec::parse(rest)? });
+        }
+        if s == "1bitadam" {
+            return Ok(AlgoSpec::OneBitAdam { warmup_rounds: 0, block: 4096 });
+        }
+        if let Some(rest) = s.strip_prefix("1bitadam:") {
+            return Ok(AlgoSpec::OneBitAdam { warmup_rounds: rest.parse()?, block: 4096 });
+        }
+        if s == "dist-sgd" {
+            return Ok(AlgoSpec::DistSgd { momentum: 0.9 });
+        }
+        bail!(
+            "unknown algorithm '{s}' (dist-ams | comp-ams-<compressor> | qadam | \
+             1bitadam[:warmup] | dist-sgd)"
+        )
+    }
+
+    /// Instantiate for `n` workers over a `dim`-dimensional model.
+    /// `warmup_override` lets the trainer set 1BitAdam's warm-up from the
+    /// schedule (paper: 1/20 of total epochs) when the spec says 0.
+    pub fn build(&self, dim: usize, n: usize, total_rounds: u64) -> Box<dyn Algorithm> {
+        match self {
+            AlgoSpec::DistAms => Box::new(CompAms::new(
+                dim,
+                n,
+                CompressorSpec::Identity,
+                false,
+                "dist-ams",
+            )),
+            AlgoSpec::CompAms { compressor, error_feedback } => Box::new(CompAms::new(
+                dim,
+                n,
+                compressor.clone(),
+                *error_feedback,
+                "comp-ams",
+            )),
+            AlgoSpec::QAdam { compressor } => {
+                Box::new(QAdam::new(dim, n, compressor.clone()))
+            }
+            AlgoSpec::OneBitAdam { warmup_rounds, block } => {
+                let warmup = if *warmup_rounds == 0 {
+                    // Paper §5.1: warm-up = 1/20 of the training budget.
+                    (total_rounds / 20).max(1)
+                } else {
+                    *warmup_rounds
+                };
+                Box::new(OneBitAdam::new(dim, n, warmup, *block))
+            }
+            AlgoSpec::DistSgd { momentum } => Box::new(DistSgd::new(dim, *momentum)),
+        }
+    }
+}
+
+/// Average the decoded payloads into a dense gradient (shared helper).
+pub fn average_payloads(msgs: &[Payload], dim: usize, out: &mut Vec<f32>) -> Result<()> {
+    out.clear();
+    out.resize(dim, 0.0);
+    for m in msgs {
+        m.add_into(out)?;
+    }
+    let inv = 1.0 / msgs.len() as f32;
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_forms() {
+        assert_eq!(AlgoSpec::parse("dist-ams").unwrap(), AlgoSpec::DistAms);
+        assert_eq!(
+            AlgoSpec::parse("comp-ams-topk:0.01").unwrap(),
+            AlgoSpec::CompAms {
+                compressor: CompressorSpec::TopK { ratio: 0.01 },
+                error_feedback: true
+            }
+        );
+        assert_eq!(
+            AlgoSpec::parse("comp-ams-topk:0.01:noef").unwrap(),
+            AlgoSpec::CompAms {
+                compressor: CompressorSpec::TopK { ratio: 0.01 },
+                error_feedback: false
+            }
+        );
+        assert!(matches!(AlgoSpec::parse("qadam").unwrap(), AlgoSpec::QAdam { .. }));
+        assert_eq!(
+            AlgoSpec::parse("1bitadam:50").unwrap(),
+            AlgoSpec::OneBitAdam { warmup_rounds: 50, block: 4096 }
+        );
+        assert!(AlgoSpec::parse("nope").is_err());
+    }
+
+    #[test]
+    fn average_payloads_mixed_kinds() {
+        let msgs = vec![
+            Payload::Dense(vec![2.0, 0.0, 0.0]),
+            Payload::Sparse { dim: 3, idx: vec![1], val: vec![4.0] },
+        ];
+        let mut out = Vec::new();
+        average_payloads(&msgs, 3, &mut out).unwrap();
+        assert_eq!(out, vec![1.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn build_names() {
+        assert_eq!(AlgoSpec::DistAms.build(10, 2, 100).name(), "dist-ams");
+        assert!(AlgoSpec::parse("comp-ams-topk:0.01")
+            .unwrap()
+            .build(10, 2, 100)
+            .name()
+            .contains("topk"));
+    }
+}

@@ -1,0 +1,146 @@
+//! Block-Sign compressor (paper Definition 2): per block B_i, transmit
+//! sign(x_{B_i}) and the scale ||x_{B_i}||_1 / |B_i| (the block's mean
+//! absolute value). 1 bit/coordinate + one f32 per block on the wire.
+//!
+//! Two block layouts:
+//! - uniform `block`-sized blocks (the generic constructor), and
+//! - explicit per-layer blocks ([`BlockSign::with_layout`]) matching the
+//!   paper's "blocks are usually set as the distinct network layers".
+//!
+//! q^2 = 1 - min_i (1/d_i) by Cauchy-Schwarz (paper Remark 1).
+
+use super::wire::{pack_signs, Payload};
+use super::Compressor;
+
+pub struct BlockSign {
+    /// Uniform block size; ignored when `layout` is set.
+    block: usize,
+    /// Optional explicit block sizes (summing to d), e.g. layer sizes.
+    layout: Option<Vec<usize>>,
+}
+
+impl BlockSign {
+    pub fn new(block: usize) -> Self {
+        assert!(block > 0);
+        BlockSign { block, layout: None }
+    }
+
+    /// Per-layer blocks: `sizes` must sum to the gradient dimension.
+    pub fn with_layout(sizes: Vec<usize>) -> Self {
+        assert!(!sizes.is_empty() && sizes.iter().all(|&s| s > 0));
+        BlockSign { block: 0, layout: Some(sizes) }
+    }
+}
+
+impl Compressor for BlockSign {
+    fn name(&self) -> String {
+        match &self.layout {
+            None => format!("blocksign({})", self.block),
+            Some(s) => format!("blocksign(layers={})", s.len()),
+        }
+    }
+
+    fn compress(&mut self, x: &[f32]) -> Payload {
+        match &self.layout {
+            None => {
+                let b = self.block.min(x.len().max(1));
+                let scales = x
+                    .chunks(b)
+                    .map(|c| c.iter().map(|v| v.abs()).sum::<f32>() / c.len() as f32)
+                    .collect();
+                Payload::Signs {
+                    dim: x.len() as u32,
+                    block: b as u32,
+                    scales,
+                    bits: pack_signs(x),
+                }
+            }
+            Some(sizes) => {
+                // Variable-size layer blocks: the wire carries the layout
+                // (one u32 per layer), one f32 scale per layer, and the
+                // sign bitmap — the exact per-layer semantics of Def. 2.
+                let mut scales = Vec::with_capacity(sizes.len());
+                let mut off = 0;
+                for &s in sizes {
+                    let c = &x[off..off + s];
+                    scales.push(c.iter().map(|v| v.abs()).sum::<f32>() / s as f32);
+                    off += s;
+                }
+                Payload::LayeredSigns {
+                    dim: x.len() as u32,
+                    sizes: sizes.iter().map(|&s| s as u32).collect(),
+                    scales,
+                    bits: pack_signs(x),
+                }
+            }
+        }
+    }
+
+    fn q(&self, d: usize) -> f32 {
+        let max_block = match &self.layout {
+            None => self.block.min(d),
+            Some(sizes) => sizes.iter().copied().max().unwrap_or(d),
+        };
+        (1.0 - 1.0 / max_block as f32).max(0.0).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::math::norm2_sq;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn reconstruction_is_sign_times_block_mean() {
+        let x = vec![1.0f32, -3.0, 2.0, -2.0]; // blocks of 2: scales 2.0, 2.0
+        let p = BlockSign::new(2).compress(&x);
+        assert_eq!(p.to_dense(4).unwrap(), vec![2.0, -2.0, 2.0, -2.0]);
+    }
+
+    #[test]
+    fn tail_block_smaller_than_block_size() {
+        let x = vec![4.0f32, -4.0, 8.0]; // block 2: [4,-4] scale 4; [8] scale 8
+        let p = BlockSign::new(2).compress(&x);
+        assert_eq!(p.to_dense(3).unwrap(), vec![4.0, -4.0, 8.0]);
+    }
+
+    #[test]
+    fn layered_layout_reconstruction() {
+        let x = vec![1.0f32, -1.0, 10.0, -10.0, 10.0];
+        let mut c = BlockSign::with_layout(vec![2, 3]);
+        let p = c.compress(&x);
+        assert_eq!(p.to_dense(5).unwrap(), vec![1.0, -1.0, 10.0, -10.0, 10.0]);
+    }
+
+    #[test]
+    fn q_deviate_bound_holds() {
+        let mut rng = Rng::seed(9);
+        for &block in &[4usize, 64, 1024] {
+            let mut c = BlockSign::new(block);
+            for trial in 0..10 {
+                let d = block * (trial + 1) + trial; // include ragged tails
+                let x = rng.normal_vec(d);
+                let p = c.compress(&x);
+                let dense = p.to_dense(d).unwrap();
+                let err: f64 = x
+                    .iter()
+                    .zip(&dense)
+                    .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                    .sum();
+                let q2 = (c.q(d) as f64).powi(2);
+                assert!(err <= q2 * norm2_sq(&x) + 1e-6, "block={block} d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn wire_cost_about_one_bit_per_coord() {
+        let x = vec![1.0f32; 32_768];
+        let p = BlockSign::new(4096).compress(&x);
+        // 1 bit/coord + 8 scales * 32 + header: ~32x less than dense.
+        let dense_bits = Payload::Dense(x).wire_bits();
+        assert!(p.wire_bits() * 28 < dense_bits);
+        assert!(p.wire_bits() > 32_768);
+    }
+}

@@ -1,0 +1,148 @@
+//! Error feedback (paper Algorithm 2, lines 7-8).
+//!
+//! Each worker keeps a residual `e` of everything compression has dropped
+//! so far. On each round it compresses the *corrected* gradient
+//! `g + e` and retains the new residual `e' = (g + e) - C(g + e)`.
+//!
+//! The invariant tested here (and by `testing::prop`) is the telescoping
+//! conservation law:  `decode(C(g+e)) + e' == g + e`  exactly (up to f32
+//! rounding of the subtraction), which is what makes biased compressors
+//! convergent (Karimireddy et al. 2019; paper Theorem 1).
+
+use anyhow::Result;
+
+use super::wire::Payload;
+use super::Compressor;
+
+pub struct ErrorFeedback {
+    e: Vec<f32>,
+    enabled: bool,
+    /// Scratch for the corrected gradient (avoids per-round allocation).
+    corrected: Vec<f32>,
+}
+
+impl ErrorFeedback {
+    pub fn new(dim: usize, enabled: bool) -> Self {
+        ErrorFeedback { e: vec![0.0; dim], enabled, corrected: vec![0.0; dim] }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.e.len()
+    }
+
+    pub fn residual(&self) -> &[f32] {
+        &self.e
+    }
+
+    pub fn residual_norm(&self) -> f64 {
+        crate::util::math::norm2(&self.e)
+    }
+
+    /// Compress `g` with residual correction; updates the residual.
+    pub fn compress(&mut self, g: &[f32], c: &mut dyn Compressor) -> Result<Payload> {
+        assert_eq!(g.len(), self.e.len());
+        if !self.enabled {
+            return Ok(c.compress(g));
+        }
+        // corrected = g + e
+        for ((dst, &gi), &ei) in self.corrected.iter_mut().zip(g).zip(&self.e) {
+            *dst = gi + ei;
+        }
+        let payload = c.compress(&self.corrected);
+        // e' = corrected - decode(payload). Exploit payload structure to
+        // avoid a dense decode for sparse messages (hot path).
+        match &payload {
+            Payload::Sparse { idx, .. } => {
+                self.e.copy_from_slice(&self.corrected);
+                for &i in idx {
+                    self.e[i as usize] = 0.0;
+                }
+            }
+            _ => {
+                let dense = payload.to_dense(g.len())?;
+                for ((ei, &ci), &di) in
+                    self.e.iter_mut().zip(&self.corrected).zip(&dense)
+                {
+                    *ei = ci - di;
+                }
+            }
+        }
+        Ok(payload)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{BlockSign, Identity, TopK};
+    use crate::util::rng::Rng;
+
+    fn conservation_check(c: &mut dyn Compressor, dim: usize, rounds: usize) {
+        let mut ef = ErrorFeedback::new(dim, true);
+        let mut rng = Rng::seed(1234);
+        for _ in 0..rounds {
+            let g = rng.normal_vec(dim);
+            let before: Vec<f32> =
+                g.iter().zip(ef.residual()).map(|(&a, &b)| a + b).collect();
+            let p = ef.compress(&g, c).unwrap();
+            let decoded = p.to_dense(dim).unwrap();
+            for ((&c_i, &e_i), &b_i) in
+                decoded.iter().zip(ef.residual()).zip(&before)
+            {
+                assert!((c_i + e_i - b_i).abs() <= 1e-5 * b_i.abs().max(1.0));
+            }
+        }
+    }
+
+    #[test]
+    fn conservation_topk() {
+        conservation_check(&mut TopK::new(0.05), 500, 20);
+    }
+
+    #[test]
+    fn conservation_blocksign() {
+        conservation_check(&mut BlockSign::new(64), 500, 20);
+    }
+
+    #[test]
+    fn identity_leaves_zero_residual() {
+        let mut ef = ErrorFeedback::new(100, true);
+        let mut rng = Rng::seed(5);
+        let g = rng.normal_vec(100);
+        ef.compress(&g, &mut Identity).unwrap();
+        assert!(ef.residual_norm() < 1e-6);
+    }
+
+    #[test]
+    fn disabled_ef_never_accumulates() {
+        let mut ef = ErrorFeedback::new(200, false);
+        let mut c = TopK::new(0.01);
+        let mut rng = Rng::seed(6);
+        for _ in 0..5 {
+            let g = rng.normal_vec(200);
+            let p = ef.compress(&g, &mut c).unwrap();
+            // Without EF the payload is exactly C(g).
+            assert_eq!(p, c.compress(&g));
+            assert_eq!(ef.residual_norm(), 0.0);
+        }
+    }
+
+    #[test]
+    fn residual_bounded_over_time() {
+        // Lemma 2: ||e_t||^2 <= 4q^2/(1-q^2)^2 * G^2 for bounded gradients.
+        let dim = 1000;
+        let mut ef = ErrorFeedback::new(dim, true);
+        let mut c = TopK::new(0.1);
+        let mut rng = Rng::seed(7);
+        let mut max_norm: f64 = 0.0;
+        for _ in 0..100 {
+            let g = rng.normal_vec(dim);
+            ef.compress(&g, &mut c).unwrap();
+            max_norm = max_norm.max(ef.residual_norm());
+        }
+        let g_bound = (dim as f64).sqrt() * 4.0; // ~max ||g|| whp
+        let q = c.q(dim) as f64;
+        let lemma2 = 2.0 * q / (1.0 - q * q) * g_bound;
+        assert!(max_norm <= lemma2, "{max_norm} vs {lemma2}");
+    }
+}

@@ -1,0 +1,125 @@
+//! QSGD-style stochastic quantizer (Alistarh et al. 2017; paper §2.1).
+//!
+//! Quantizes each coordinate to one of `s` levels of |x|/‖x‖₂ with
+//! *unbiased* stochastic rounding: E[Q(x)] = x. Unlike Top-k/Block-Sign
+//! it is not biased, so it converges without error feedback — it is the
+//! quantization-family baseline for the ablation benches, and its wire
+//! cost (⌈log2(s+1)⌉+1 bits/coordinate + one f32 norm) sits between
+//! Block-Sign and the sparsifiers.
+//!
+//! Wire format: the quantized magnitudes ride in a `Sparse`-free dense
+//! small-int layout — we reuse `Payload::Quantized`.
+
+use crate::util::rng::Rng;
+
+use super::wire::Payload;
+use super::Compressor;
+
+pub struct Qsgd {
+    /// Number of quantization levels (e.g. 1 = ternary sign·‖x‖, 255 = 8-bit).
+    levels: u8,
+    rng: Rng,
+}
+
+impl Qsgd {
+    pub fn new(levels: u8, seed: u64) -> Self {
+        assert!(levels >= 1);
+        Qsgd { levels, rng: Rng::seed(seed ^ 0x4590D) }
+    }
+
+    pub fn levels(&self) -> u8 {
+        self.levels
+    }
+}
+
+impl Compressor for Qsgd {
+    fn name(&self) -> String {
+        format!("qsgd({})", self.levels)
+    }
+
+    fn compress(&mut self, x: &[f32]) -> Payload {
+        let norm = crate::util::math::norm2(x) as f32;
+        let s = self.levels as f32;
+        let mut q = Vec::with_capacity(x.len());
+        if norm == 0.0 {
+            q.resize(x.len(), 0i8);
+            return Payload::Quantized { dim: x.len() as u32, norm: 0.0, levels: self.levels, q };
+        }
+        for &v in x {
+            let r = v.abs() / norm * s; // in [0, s]
+            let floor = r.floor();
+            let p = r - floor; // stochastic rounding up with prob p
+            let mag = floor + if (self.rng.next_f32() as f32) < p { 1.0 } else { 0.0 };
+            let signed = if v < 0.0 { -mag } else { mag };
+            q.push(signed as i8);
+        }
+        Payload::Quantized { dim: x.len() as u32, norm, levels: self.levels, q }
+    }
+
+    /// QSGD is unbiased, not q-deviate; its *variance* bound plays the
+    /// analogous role. We report the worst-case relative second moment
+    /// sqrt(min(d/s², √d/s)) capped below 1 for diagnostics.
+    fn q(&self, d: usize) -> f32 {
+        let s = self.levels as f32;
+        let v = (d as f32 / (s * s)).min((d as f32).sqrt() / s);
+        v.sqrt().min(0.999)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::math;
+
+    #[test]
+    fn reconstruction_is_unbiased() {
+        let x: Vec<f32> = (0..64).map(|i| ((i as f32) * 0.3).sin()).collect();
+        let mut c = Qsgd::new(4, 1);
+        let mut mean = vec![0.0f32; 64];
+        let n = 3000;
+        for _ in 0..n {
+            let d = c.compress(&x).to_dense(64).unwrap();
+            math::axpy(1.0 / n as f32, &d, &mut mean);
+        }
+        for i in 0..64 {
+            assert!(
+                (mean[i] - x[i]).abs() < 0.05,
+                "coord {i}: {} vs {}",
+                mean[i],
+                x[i]
+            );
+        }
+    }
+
+    #[test]
+    fn levels_bound_quantized_values() {
+        let mut c = Qsgd::new(8, 2);
+        let mut rng = Rng::seed(3);
+        let x = rng.normal_vec(500);
+        match c.compress(&x) {
+            Payload::Quantized { q, .. } => {
+                assert!(q.iter().all(|&v| v.unsigned_abs() <= 8));
+            }
+            _ => panic!("expected quantized payload"),
+        }
+    }
+
+    #[test]
+    fn zero_vector_roundtrips() {
+        let mut c = Qsgd::new(4, 4);
+        let x = vec![0.0f32; 32];
+        let p = c.compress(&x);
+        assert_eq!(p.to_dense(32).unwrap(), x);
+    }
+
+    #[test]
+    fn wire_cost_one_byte_per_coord_plus_header() {
+        let mut c = Qsgd::new(4, 5);
+        let x = vec![1.0f32; 10_000];
+        let p = c.compress(&x);
+        // header 5 + norm 4 + levels 1 + q bytes
+        assert_eq!(p.wire_bits(), (5 + 4 + 1 + 10_000) as u64 * 8);
+        let dense = Payload::Dense(x).wire_bits();
+        assert!(p.wire_bits() * 3 < dense); // ~4x smaller than f32
+    }
+}

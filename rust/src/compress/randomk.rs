@@ -1,0 +1,104 @@
+//! Random-k sparsifier (baseline compressor, Stich et al. 2018): keep k
+//! uniformly random coordinates. Unlike Top-k it is oblivious to the
+//! gradient, so it satisfies the q-deviate bound only in expectation —
+//! still covered by error feedback. Used by the ablation benches to show
+//! magnitude-aware selection matters.
+
+use crate::util::rng::Rng;
+
+use super::wire::Payload;
+use super::Compressor;
+
+pub struct RandomK {
+    ratio: f32,
+    rng: Rng,
+}
+
+impl RandomK {
+    pub fn new(ratio: f32, seed: u64) -> Self {
+        assert!(ratio > 0.0 && ratio <= 1.0);
+        RandomK { ratio, rng: Rng::seed(seed ^ 0x52414E_444B) }
+    }
+
+    pub fn k_for(&self, d: usize) -> usize {
+        ((self.ratio * d as f32).round() as usize).clamp(1, d)
+    }
+}
+
+impl Compressor for RandomK {
+    fn name(&self) -> String {
+        format!("randomk({})", self.ratio)
+    }
+
+    fn compress(&mut self, x: &[f32]) -> Payload {
+        let d = x.len();
+        let k = self.k_for(d);
+        // Floyd's algorithm: k distinct uniform indices in O(k).
+        let mut chosen = std::collections::BTreeSet::new();
+        for j in (d - k)..d {
+            let t = self.rng.gen_range(j + 1) as u32;
+            if !chosen.insert(t) {
+                chosen.insert(j as u32);
+            }
+        }
+        let idx: Vec<u32> = chosen.into_iter().collect();
+        let val: Vec<f32> = idx.iter().map(|&i| x[i as usize]).collect();
+        Payload::Sparse { dim: d as u32, idx, val }
+    }
+
+    fn q(&self, d: usize) -> f32 {
+        (1.0 - self.k_for(d) as f32 / d as f32).max(0.0).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn k_distinct_indices_in_range() {
+        let mut c = RandomK::new(0.1, 7);
+        let x = vec![1.0f32; 500];
+        for _ in 0..10 {
+            match c.compress(&x) {
+                Payload::Sparse { idx, .. } => {
+                    assert_eq!(idx.len(), 50);
+                    let set: std::collections::BTreeSet<_> = idx.iter().collect();
+                    assert_eq!(set.len(), 50);
+                    assert!(idx.iter().all(|&i| i < 500));
+                }
+                _ => panic!("expected sparse"),
+            }
+        }
+    }
+
+    #[test]
+    fn values_match_source() {
+        let x: Vec<f32> = (0..100).map(|i| i as f32).collect();
+        let mut c = RandomK::new(0.2, 3);
+        if let Payload::Sparse { idx, val, .. } = c.compress(&x) {
+            for (&i, &v) in idx.iter().zip(&val) {
+                assert_eq!(v, x[i as usize]);
+            }
+        } else {
+            panic!()
+        }
+    }
+
+    #[test]
+    fn different_rounds_pick_different_sets() {
+        let x = vec![1.0f32; 1000];
+        let mut c = RandomK::new(0.01, 11);
+        let a = c.compress(&x);
+        let b = c.compress(&x);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn seeded_reproducibility() {
+        let x = vec![2.0f32; 64];
+        let mut a = RandomK::new(0.25, 42);
+        let mut b = RandomK::new(0.25, 42);
+        assert_eq!(a.compress(&x), b.compress(&x));
+    }
+}

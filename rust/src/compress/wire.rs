@@ -1,0 +1,650 @@
+//! Wire formats for gradient messages + the exact bit ledger.
+//!
+//! Figure 2 of the paper plots loss/accuracy against *bits transmitted to
+//! the central server*; this module defines precisely what those bits are.
+//! Every payload serializes to a deterministic little-endian byte layout
+//! with a 5-byte header (tag u8 + dim u32); `wire_bits()` is exactly
+//! `8 * encode().len()` (asserted by tests), so the ledger reflects real
+//! bytes-on-wire rather than an estimate.
+//!
+//! Layouts:
+//! - `Dense`:  header | d * f32
+//! - `Sparse`: header | k u32 | k * u32 idx | k * f32 val          (Top-k / Random-k)
+//! - `Signs`:  header | block u32 | nb u32 | nb * f32 scales | ceil(d/8) sign bytes
+//!   (Block-Sign: 1 bit per coordinate + one f32 scale per block)
+
+use anyhow::{bail, Result};
+
+const TAG_DENSE: u8 = 1;
+const TAG_SPARSE: u8 = 2;
+const TAG_SIGNS: u8 = 3;
+const TAG_LAYERED: u8 = 4;
+const TAG_QUANTIZED: u8 = 5;
+const TAG_SPARSE16: u8 = 6;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Payload {
+    Dense(Vec<f32>),
+    Sparse { dim: u32, idx: Vec<u32>, val: Vec<f32> },
+    Signs { dim: u32, block: u32, scales: Vec<f32>, bits: Vec<u8> },
+    /// Block-Sign with explicit per-layer block sizes (paper Def. 2 with
+    /// blocks = network layers): header | nb u32 | nb*u32 sizes |
+    /// nb*f32 scales | ceil(d/8) sign bytes.
+    LayeredSigns { dim: u32, sizes: Vec<u32>, scales: Vec<f32>, bits: Vec<u8> },
+    /// QSGD stochastic quantization: per-coordinate signed level in
+    /// [-levels, levels], reconstructed as q/levels · ‖x‖₂.
+    Quantized { dim: u32, norm: f32, levels: u8, q: Vec<i8> },
+    /// Top-k with half-precision values (48 bits/coordinate instead of
+    /// 64 — the encoding that reaches the paper's ~100× at k/d = 1%).
+    SparseF16 { dim: u32, idx: Vec<u32>, val: Vec<u16> },
+}
+
+/// f32 -> IEEE 754 half (round-to-nearest-even), software conversion.
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x7F_FFFF;
+    if exp == 0xFF {
+        // Inf/NaN
+        return sign | 0x7C00 | if mant != 0 { 0x200 } else { 0 };
+    }
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7C00; // overflow -> inf
+    }
+    if unbiased >= -14 {
+        // Normal half.
+        let half_exp = (unbiased + 15) as u32;
+        let mut half_mant = mant >> 13;
+        // round-to-nearest-even on the truncated 13 bits
+        let rem = mant & 0x1FFF;
+        if rem > 0x1000 || (rem == 0x1000 && (half_mant & 1) == 1) {
+            half_mant += 1;
+        }
+        let out = (half_exp << 10) + half_mant; // mant carry bumps exp
+        return sign | out as u16;
+    }
+    if unbiased >= -24 {
+        // Subnormal half: value = half_mant * 2^-24, so
+        // half_mant = full_mant * 2^(unbiased + 1) = full >> (-unbiased - 1).
+        let shift = (-unbiased - 1) as u32; // 14..=23
+        let full = mant | 0x80_0000;
+        let mut half_mant = full >> shift;
+        let rem = full & ((1 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        if rem > halfway || (rem == halfway && (half_mant & 1) == 1) {
+            half_mant += 1;
+        }
+        return sign | half_mant as u16;
+    }
+    sign // underflow -> ±0
+}
+
+/// IEEE 754 half -> f32.
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x3FF) as u32;
+    let bits = match (exp, mant) {
+        (0, 0) => sign,
+        (0, m) => {
+            // subnormal half: value = m * 2^-24 (exact in f32)
+            let v = m as f32 * (1.0 / (1 << 24) as f32);
+            return if sign != 0 { -v } else { v };
+        }
+        (0x1F, 0) => sign | 0x7F80_0000,
+        (0x1F, m) => sign | 0x7F80_0000 | (m << 13),
+        (e, m) => sign | ((e + 127 - 15) << 23) | (m << 13),
+    };
+    f32::from_bits(bits)
+}
+
+impl Payload {
+    pub fn dim(&self) -> usize {
+        match self {
+            Payload::Dense(v) => v.len(),
+            Payload::Sparse { dim, .. } => *dim as usize,
+            Payload::Signs { dim, .. } => *dim as usize,
+            Payload::LayeredSigns { dim, .. } => *dim as usize,
+            Payload::Quantized { dim, .. } => *dim as usize,
+            Payload::SparseF16 { dim, .. } => *dim as usize,
+        }
+    }
+
+    /// Dense reconstruction (the server-side decode).
+    pub fn to_dense(&self, d: usize) -> Result<Vec<f32>> {
+        if self.dim() != d {
+            bail!("payload dim {} != expected {d}", self.dim());
+        }
+        Ok(match self {
+            Payload::Dense(v) => v.clone(),
+            Payload::Sparse { idx, val, .. } => {
+                let mut out = vec![0.0f32; d];
+                for (&i, &v) in idx.iter().zip(val) {
+                    out[i as usize] = v;
+                }
+                out
+            }
+            Payload::Signs { block, scales, bits, .. } => {
+                let mut out = vec![0.0f32; d];
+                decode_signs_into(&mut out, *block as usize, scales, bits);
+                out
+            }
+            Payload::LayeredSigns { sizes, scales, bits, .. } => {
+                let mut out = vec![0.0f32; d];
+                let mut off = 0usize;
+                for (&sz, &scale) in sizes.iter().zip(scales) {
+                    let end = off + sz as usize;
+                    write_signs_range(&mut out[off..end], off, scale, bits);
+                    off = end;
+                }
+                out
+            }
+            Payload::Quantized { norm, levels, q, .. } => {
+                let scale = norm / *levels as f32;
+                q.iter().map(|&qi| qi as f32 * scale).collect()
+            }
+            Payload::SparseF16 { idx, val, .. } => {
+                let mut out = vec![0.0f32; d];
+                for (&i, &v) in idx.iter().zip(val) {
+                    out[i as usize] = f16_to_f32(v);
+                }
+                out
+            }
+        })
+    }
+
+    /// Accumulate decode into `acc` (server averaging hot path — avoids
+    /// allocating a dense temp per worker).
+    pub fn add_into(&self, acc: &mut [f32]) -> Result<()> {
+        if self.dim() != acc.len() {
+            bail!("payload dim {} != acc {}", self.dim(), acc.len());
+        }
+        match self {
+            Payload::Dense(v) => {
+                for (a, &x) in acc.iter_mut().zip(v) {
+                    *a += x;
+                }
+            }
+            Payload::Sparse { idx, val, .. } => {
+                for (&i, &v) in idx.iter().zip(val) {
+                    acc[i as usize] += v;
+                }
+            }
+            Payload::Signs { block, scales, bits, .. } => {
+                let b = *block as usize;
+                for (bi, &scale) in scales.iter().enumerate() {
+                    let start = bi * b;
+                    let end = (start + b).min(acc.len());
+                    add_signs_range(&mut acc[start..end], start, scale, bits);
+                }
+            }
+            Payload::LayeredSigns { sizes, scales, bits, .. } => {
+                let mut off = 0usize;
+                for (&sz, &scale) in sizes.iter().zip(scales) {
+                    let end = off + sz as usize;
+                    add_signs_range(&mut acc[off..end], off, scale, bits);
+                    off = end;
+                }
+            }
+            Payload::Quantized { norm, levels, q, .. } => {
+                let scale = norm / *levels as f32;
+                for (a, &qi) in acc.iter_mut().zip(q) {
+                    *a += qi as f32 * scale;
+                }
+            }
+            Payload::SparseF16 { idx, val, .. } => {
+                for (&i, &v) in idx.iter().zip(val) {
+                    acc[i as usize] += f16_to_f32(v);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Exact message size in bits (== 8 * encode().len()).
+    pub fn wire_bits(&self) -> u64 {
+        let body = match self {
+            Payload::Dense(v) => 4 * v.len(),
+            Payload::Sparse { idx, val, .. } => 4 + 4 * idx.len() + 4 * val.len(),
+            Payload::Signs { scales, bits, .. } => 4 + 4 + 4 * scales.len() + bits.len(),
+            Payload::LayeredSigns { sizes, scales, bits, .. } => {
+                4 + 4 * sizes.len() + 4 * scales.len() + bits.len()
+            }
+            Payload::Quantized { q, .. } => 4 + 1 + q.len(),
+            Payload::SparseF16 { idx, val, .. } => 4 + 4 * idx.len() + 2 * val.len(),
+        };
+        ((5 + body) as u64) * 8
+    }
+
+    // ---- byte codec --------------------------------------------------------
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_bits() as usize / 8);
+        match self {
+            Payload::Dense(v) => {
+                out.push(TAG_DENSE);
+                out.extend((v.len() as u32).to_le_bytes());
+                for &x in v {
+                    out.extend(x.to_le_bytes());
+                }
+            }
+            Payload::Sparse { dim, idx, val } => {
+                out.push(TAG_SPARSE);
+                out.extend(dim.to_le_bytes());
+                out.extend((idx.len() as u32).to_le_bytes());
+                for &i in idx {
+                    out.extend(i.to_le_bytes());
+                }
+                for &v in val {
+                    out.extend(v.to_le_bytes());
+                }
+            }
+            Payload::Signs { dim, block, scales, bits } => {
+                out.push(TAG_SIGNS);
+                out.extend(dim.to_le_bytes());
+                out.extend(block.to_le_bytes());
+                out.extend((scales.len() as u32).to_le_bytes());
+                for &s in scales {
+                    out.extend(s.to_le_bytes());
+                }
+                out.extend_from_slice(bits);
+            }
+            Payload::LayeredSigns { dim, sizes, scales, bits } => {
+                out.push(TAG_LAYERED);
+                out.extend(dim.to_le_bytes());
+                out.extend((sizes.len() as u32).to_le_bytes());
+                for &s in sizes {
+                    out.extend(s.to_le_bytes());
+                }
+                for &s in scales {
+                    out.extend(s.to_le_bytes());
+                }
+                out.extend_from_slice(bits);
+            }
+            Payload::Quantized { dim, norm, levels, q } => {
+                out.push(TAG_QUANTIZED);
+                out.extend(dim.to_le_bytes());
+                out.extend(norm.to_le_bytes());
+                out.push(*levels);
+                out.extend(q.iter().map(|&v| v as u8));
+            }
+            Payload::SparseF16 { dim, idx, val } => {
+                out.push(TAG_SPARSE16);
+                out.extend(dim.to_le_bytes());
+                out.extend((idx.len() as u32).to_le_bytes());
+                for &i in idx {
+                    out.extend(i.to_le_bytes());
+                }
+                for &v in val {
+                    out.extend(v.to_le_bytes());
+                }
+            }
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Payload> {
+        let mut r = Reader { b: buf, i: 0 };
+        let tag = r.u8()?;
+        let dim = r.u32()?;
+        let p = match tag {
+            TAG_DENSE => {
+                let v = r.f32s(dim as usize)?;
+                Payload::Dense(v)
+            }
+            TAG_SPARSE => {
+                let k = r.u32()? as usize;
+                if k > dim as usize {
+                    bail!("sparse k {k} > dim {dim}");
+                }
+                let idx = r.u32s(k)?;
+                if idx.iter().any(|&i| i >= dim) {
+                    bail!("sparse index out of range");
+                }
+                let val = r.f32s(k)?;
+                Payload::Sparse { dim, idx, val }
+            }
+            TAG_SIGNS => {
+                let block = r.u32()?;
+                if block == 0 {
+                    bail!("signs block=0");
+                }
+                let nb = r.u32()? as usize;
+                let expect_nb = (dim as usize).div_ceil(block as usize);
+                if nb != expect_nb {
+                    bail!("signs nb {nb} != ceil(d/b) {expect_nb}");
+                }
+                let scales = r.f32s(nb)?;
+                let bits = r.bytes((dim as usize).div_ceil(8))?;
+                Payload::Signs { dim, block, scales, bits }
+            }
+            TAG_LAYERED => {
+                let nb = r.u32()? as usize;
+                let sizes = r.u32s(nb)?;
+                if sizes.iter().map(|&s| s as u64).sum::<u64>() != dim as u64 {
+                    bail!("layered sizes do not sum to dim");
+                }
+                let scales = r.f32s(nb)?;
+                let bits = r.bytes((dim as usize).div_ceil(8))?;
+                Payload::LayeredSigns { dim, sizes, scales, bits }
+            }
+            TAG_QUANTIZED => {
+                let norm = f32::from_le_bytes(r.take(4)?.try_into().unwrap());
+                let levels = r.u8()?;
+                if levels == 0 {
+                    bail!("quantized levels=0");
+                }
+                let q = r.bytes(dim as usize)?.iter().map(|&b| b as i8).collect();
+                Payload::Quantized { dim, norm, levels, q }
+            }
+            TAG_SPARSE16 => {
+                let k = r.u32()? as usize;
+                if k > dim as usize {
+                    bail!("sparse16 k {k} > dim {dim}");
+                }
+                let idx = r.u32s(k)?;
+                if idx.iter().any(|&i| i >= dim) {
+                    bail!("sparse16 index out of range");
+                }
+                let raw = r.take(2 * k)?;
+                let val = raw
+                    .chunks_exact(2)
+                    .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                Payload::SparseF16 { dim, idx, val }
+            }
+            t => bail!("bad payload tag {t}"),
+        };
+        if r.i != buf.len() {
+            bail!("trailing bytes in payload");
+        }
+        Ok(p)
+    }
+}
+
+fn decode_signs_into(out: &mut [f32], block: usize, scales: &[f32], bits: &[u8]) {
+    for (bi, &scale) in scales.iter().enumerate() {
+        let start = bi * block;
+        let end = (start + block).min(out.len());
+        write_signs_range(&mut out[start..end], start, scale, bits);
+    }
+}
+
+/// `acc[j] += ±scale` for the sign bits of global coordinates
+/// `[global_start, global_start + acc.len())`. Branchless: the sign bit
+/// from the bitmap is OR-ed straight into the f32 sign position (scales
+/// are non-negative by construction), which is ~15x faster than the
+/// naive branch per coordinate (EXPERIMENTS.md §Perf, L3 iteration 1).
+#[inline]
+fn add_signs_range(acc: &mut [f32], global_start: usize, scale: f32, bits: &[u8]) {
+    let sbits = scale.to_bits();
+    for (j, a) in acc.iter_mut().enumerate() {
+        let i = global_start + j;
+        let bit = ((bits[i >> 3] >> (i & 7)) & 1) as u32;
+        *a += f32::from_bits(sbits | (bit << 31));
+    }
+}
+
+/// `out[j] = ±scale` variant of [`add_signs_range`].
+#[inline]
+fn write_signs_range(out: &mut [f32], global_start: usize, scale: f32, bits: &[u8]) {
+    let sbits = scale.to_bits();
+    for (j, o) in out.iter_mut().enumerate() {
+        let i = global_start + j;
+        let bit = ((bits[i >> 3] >> (i & 7)) & 1) as u32;
+        *o = f32::from_bits(sbits | (bit << 31));
+    }
+}
+
+/// Pack sign bits: bit set == negative. `sign(0) := +1` (bit clear), the
+/// convention the Pallas blocksign kernel and the paper's Definition 2 use.
+pub fn pack_signs(x: &[f32]) -> Vec<u8> {
+    let mut bits = vec![0u8; x.len().div_ceil(8)];
+    for (i, &v) in x.iter().enumerate() {
+        if v < 0.0 {
+            bits[i >> 3] |= 1 << (i & 7);
+        }
+    }
+    bits
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("payload truncated");
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u32s(&mut self, n: usize) -> Result<Vec<u32>> {
+        let raw = self.take(4 * n)?;
+        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take(4 * n)?;
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<Vec<u8>> {
+        Ok(self.take(n)?.to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(p: &Payload) {
+        let buf = p.encode();
+        assert_eq!(buf.len() as u64 * 8, p.wire_bits(), "ledger must match bytes");
+        let q = Payload::decode(&buf).unwrap();
+        assert_eq!(&q, p);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        roundtrip(&Payload::Dense(vec![1.5, -2.0, 0.0, f32::MIN_POSITIVE]));
+    }
+
+    #[test]
+    fn sparse_roundtrip_and_decode() {
+        let p = Payload::Sparse { dim: 10, idx: vec![1, 7], val: vec![0.5, -3.0] };
+        roundtrip(&p);
+        let d = p.to_dense(10).unwrap();
+        assert_eq!(d[1], 0.5);
+        assert_eq!(d[7], -3.0);
+        assert_eq!(d.iter().filter(|&&x| x != 0.0).count(), 2);
+    }
+
+    #[test]
+    fn signs_roundtrip_and_decode() {
+        let x = vec![1.0f32, -1.0, 2.0, -0.5, 0.0];
+        let p = Payload::Signs {
+            dim: 5,
+            block: 3,
+            scales: vec![2.0, 0.25],
+            bits: pack_signs(&x),
+        };
+        roundtrip(&p);
+        let d = p.to_dense(5).unwrap();
+        assert_eq!(d, vec![2.0, -2.0, 2.0, -0.25, 0.25]); // sign(0) = +1
+    }
+
+    #[test]
+    fn add_into_matches_to_dense() {
+        let ps = [
+            Payload::Dense(vec![1.0, 2.0, 3.0, 4.0, 5.0]),
+            Payload::Sparse { dim: 5, idx: vec![0, 4], val: vec![-1.0, 2.0] },
+            Payload::Signs {
+                dim: 5,
+                block: 2,
+                scales: vec![1.0, 2.0, 3.0],
+                bits: pack_signs(&[1.0, -1.0, 1.0, 1.0, -1.0]),
+            },
+        ];
+        for p in &ps {
+            let mut acc = vec![0.5f32; 5];
+            p.add_into(&mut acc).unwrap();
+            let want: Vec<f32> = p
+                .to_dense(5)
+                .unwrap()
+                .iter()
+                .map(|&x| x + 0.5)
+                .collect();
+            assert_eq!(acc, want);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_corruption() {
+        let p = Payload::Sparse { dim: 8, idx: vec![3], val: vec![1.0] };
+        let mut buf = p.encode();
+        buf[0] = 99; // bad tag
+        assert!(Payload::decode(&buf).is_err());
+        let buf = p.encode();
+        assert!(Payload::decode(&buf[..buf.len() - 1]).is_err()); // truncated
+        let mut buf = p.encode();
+        buf.push(0); // trailing
+        assert!(Payload::decode(&buf).is_err());
+        // out-of-range index
+        let bad = Payload::Sparse { dim: 4, idx: vec![9], val: vec![1.0] };
+        assert!(Payload::decode(&bad.encode()).is_err());
+    }
+
+    #[test]
+    fn wire_bits_formulas() {
+        // Dense d floats: 5 + 4d bytes.
+        assert_eq!(Payload::Dense(vec![0.0; 100]).wire_bits(), (5 + 400) * 8);
+        // Sparse k of d: 5 + 4 + 8k bytes.
+        let p = Payload::Sparse { dim: 1000, idx: vec![0; 10], val: vec![0.0; 10] };
+        assert_eq!(p.wire_bits(), (5 + 4 + 80) * 8);
+        // Signs: 5 + 8 + 4*nb + ceil(d/8) bytes.
+        let p = Payload::Signs {
+            dim: 64,
+            block: 16,
+            scales: vec![0.0; 4],
+            bits: vec![0; 8],
+        };
+        assert_eq!(p.wire_bits(), (5 + 8 + 16 + 8) * 8);
+    }
+
+    #[test]
+    fn layered_roundtrip_and_decode() {
+        let x = vec![1.0f32, -1.0, 5.0, -5.0, 5.0];
+        let p = Payload::LayeredSigns {
+            dim: 5,
+            sizes: vec![2, 3],
+            scales: vec![1.0, 5.0],
+            bits: pack_signs(&x),
+        };
+        roundtrip(&p);
+        assert_eq!(p.to_dense(5).unwrap(), x);
+        let mut acc = vec![1.0f32; 5];
+        p.add_into(&mut acc).unwrap();
+        assert_eq!(acc, vec![2.0, 0.0, 6.0, -4.0, 6.0]);
+        // corrupted sizes rejected
+        let bad = Payload::LayeredSigns {
+            dim: 5,
+            sizes: vec![2, 2],
+            scales: vec![1.0, 5.0],
+            bits: pack_signs(&x),
+        };
+        assert!(Payload::decode(&bad.encode()).is_err());
+    }
+
+    #[test]
+    fn f16_conversion_roundtrips_representable_values() {
+        for &x in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 65504.0, -65504.0, 1.5e-5] {
+            let h = f32_to_f16(x);
+            let back = f16_to_f32(h);
+            // 2e-3 relative: subnormal halves (the 1.5e-5 case) quantize
+            // at absolute 2^-24.
+            assert!(
+                (back - x).abs() <= x.abs() * 2e-3 + 1e-7,
+                "{x} -> {h:#x} -> {back}"
+            );
+        }
+        assert_eq!(f16_to_f32(f32_to_f16(f32::INFINITY)), f32::INFINITY);
+        assert!(f16_to_f32(f32_to_f16(f32::NAN)).is_nan());
+        // overflow saturates to inf, underflow to zero
+        assert_eq!(f16_to_f32(f32_to_f16(1e6)), f32::INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(1e-10)), 0.0);
+    }
+
+    #[test]
+    fn f16_relative_error_bounded_over_random_values() {
+        let mut rng = crate::util::rng::Rng::seed(5);
+        for _ in 0..5000 {
+            let x = rng.normal() * 100.0;
+            let back = f16_to_f32(f32_to_f16(x));
+            assert!(
+                (back - x).abs() <= x.abs() * 1e-3,
+                "{x} -> {back}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantized_roundtrip_and_decode() {
+        let p = Payload::Quantized {
+            dim: 4,
+            norm: 8.0,
+            levels: 4,
+            q: vec![-4, 0, 2, 4],
+        };
+        roundtrip(&p);
+        assert_eq!(p.to_dense(4).unwrap(), vec![-8.0, 0.0, 4.0, 8.0]);
+        let mut acc = vec![1.0f32; 4];
+        p.add_into(&mut acc).unwrap();
+        assert_eq!(acc, vec![-7.0, 1.0, 5.0, 9.0]);
+        // corrupted levels rejected
+        let mut buf = p.encode();
+        buf[9] = 0; // levels byte
+        assert!(Payload::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn sparse16_roundtrip_and_decode() {
+        let p = Payload::SparseF16 {
+            dim: 6,
+            idx: vec![1, 5],
+            val: vec![f32_to_f16(0.5), f32_to_f16(-3.0)],
+        };
+        roundtrip(&p);
+        let d = p.to_dense(6).unwrap();
+        assert_eq!(d[1], 0.5);
+        assert_eq!(d[5], -3.0);
+        // 48 bits per kept coordinate + 9-byte header + k field
+        assert_eq!(p.wire_bits(), (5 + 4 + 2 * 6) as u64 * 8);
+        // out-of-range index rejected
+        let bad = Payload::SparseF16 { dim: 2, idx: vec![7], val: vec![0] };
+        assert!(Payload::decode(&bad.encode()).is_err());
+    }
+
+    #[test]
+    fn pack_signs_zero_is_positive() {
+        let bits = pack_signs(&[0.0, -0.0, -1.0]);
+        assert_eq!(bits[0] & 1, 0); // +0 -> positive
+        // note: -0.0 < 0.0 is false in IEEE, so -0.0 also encodes positive.
+        assert_eq!(bits[0] >> 1 & 1, 0);
+        assert_eq!(bits[0] >> 2 & 1, 1);
+    }
+}

@@ -1,0 +1,273 @@
+//! Experiment configuration.
+//!
+//! A [`TrainConfig`] fully determines a run (all randomness flows from
+//! `seed`). Configs are built from presets + CLI flags by the launcher,
+//! or parsed from JSON files (`--config run.json`) for scripted sweeps.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// Learning-rate schedule. The paper uses constant lr except CIFAR where
+/// lr is divided by 10 at epochs 40 and 80 (§5.2).
+#[derive(Clone, Debug, PartialEq)]
+pub enum LrSchedule {
+    Const,
+    /// Divide lr by `factor` at each round in `at`.
+    StepDecay { at: Vec<u64>, factor: f32 },
+}
+
+impl LrSchedule {
+    pub fn lr_at(&self, base: f32, round: u64) -> f32 {
+        match self {
+            LrSchedule::Const => base,
+            LrSchedule::StepDecay { at, factor } => {
+                let hits = at.iter().filter(|&&r| round >= r).count() as i32;
+                base / factor.powi(hits)
+            }
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Model/workload: a manifest model name (`mnist_cnn`, `cifar_lenet`,
+    /// `cifar_resnet`, `imdb_lstm`, `lm_small`, `logreg`) or an analytic
+    /// substrate (`quadratic`, `logistic`).
+    pub model: String,
+    /// Protocol spec, e.g. `comp-ams-topk:0.01` (see [`crate::algo::AlgoSpec`]).
+    pub algo: String,
+    pub workers: usize,
+    pub rounds: u64,
+    pub lr: f32,
+    pub schedule: LrSchedule,
+    pub seed: u64,
+    /// `iid` or `dirichlet:<alpha>`.
+    pub sharding: String,
+    /// Evaluate every k rounds (0 = only at the end).
+    pub eval_every: u64,
+    /// Held-out batches per evaluation.
+    pub eval_batches: usize,
+    pub artifacts: PathBuf,
+    /// Run workers on threads (analytic substrates only; PJRT models run
+    /// sequentially on this 1-core box — trajectories are identical, see
+    /// coordinator tests).
+    pub threaded: bool,
+    /// Route the AMSGrad server update through the Pallas fused artifact.
+    pub fused_update: bool,
+    /// Console metric cadence (0 = silent).
+    pub log_every: u64,
+    /// Rounds per "epoch" for reporting (dataset_size / (batch * workers)).
+    pub rounds_per_epoch: u64,
+}
+
+impl TrainConfig {
+    pub fn preset(model: &str, algo: &str) -> TrainConfig {
+        let mut cfg = TrainConfig {
+            model: model.to_string(),
+            algo: algo.to_string(),
+            workers: 16,
+            rounds: 200,
+            lr: 1e-3,
+            schedule: LrSchedule::Const,
+            seed: 42,
+            sharding: "iid".into(),
+            eval_every: 20,
+            eval_batches: 8,
+            artifacts: PathBuf::from("artifacts"),
+            threaded: false,
+            fused_update: false,
+            log_every: 0,
+            rounds_per_epoch: 100,
+        };
+        match model {
+            // Paper-shaped presets (batch sizes from §5.1; rounds_per_epoch
+            // = 60000/(32·16) MNIST-style, 50000/(32·16) CIFAR-style).
+            "mnist_cnn" => {
+                cfg.rounds_per_epoch = 117;
+                cfg.lr = 1e-3;
+            }
+            "cifar_lenet" | "cifar_resnet" => {
+                cfg.rounds_per_epoch = 97;
+                cfg.lr = 1e-3;
+            }
+            "imdb_lstm" => {
+                cfg.rounds_per_epoch = 97; // 25000/(16·16)
+                cfg.lr = 3e-3;
+            }
+            "lm_small" => {
+                cfg.workers = 4;
+                cfg.lr = 3e-4;
+                cfg.rounds_per_epoch = 100;
+            }
+            "quadratic" | "logistic" | "logreg" => {
+                cfg.workers = 8;
+                cfg.lr = 0.05;
+                cfg.eval_every = 50;
+                cfg.rounds = 500;
+                cfg.rounds_per_epoch = 100;
+            }
+            _ => {}
+        }
+        cfg
+    }
+
+    pub fn is_analytic(&self) -> bool {
+        matches!(self.model.as_str(), "quadratic" | "logistic")
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.workers == 0 {
+            bail!("workers must be >= 1");
+        }
+        if self.rounds == 0 {
+            bail!("rounds must be >= 1");
+        }
+        if !(self.lr > 0.0) {
+            bail!("lr must be positive");
+        }
+        if self.threaded && !self.is_analytic() {
+            bail!(
+                "threaded workers require an analytic substrate \
+                 (PJRT executables are pinned to the main thread)"
+            );
+        }
+        crate::algo::AlgoSpec::parse(&self.algo)?;
+        crate::data::shard::Sharding::parse(&self.sharding)?;
+        Ok(())
+    }
+
+    // ---- JSON round-trip (scripted sweeps) --------------------------------
+
+    pub fn to_json(&self) -> Json {
+        let sched = match &self.schedule {
+            LrSchedule::Const => Json::str("const"),
+            LrSchedule::StepDecay { at, factor } => Json::obj(vec![
+                ("at", Json::Arr(at.iter().map(|&r| Json::num(r as f64)).collect())),
+                ("factor", Json::num(*factor as f64)),
+            ]),
+        };
+        Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("algo", Json::str(&self.algo)),
+            ("workers", Json::num(self.workers as f64)),
+            ("rounds", Json::num(self.rounds as f64)),
+            ("lr", Json::num(self.lr as f64)),
+            ("schedule", sched),
+            ("seed", Json::num(self.seed as f64)),
+            ("sharding", Json::str(&self.sharding)),
+            ("eval_every", Json::num(self.eval_every as f64)),
+            ("eval_batches", Json::num(self.eval_batches as f64)),
+            ("artifacts", Json::str(&self.artifacts.to_string_lossy())),
+            ("threaded", Json::Bool(self.threaded)),
+            ("fused_update", Json::Bool(self.fused_update)),
+            ("log_every", Json::num(self.log_every as f64)),
+            ("rounds_per_epoch", Json::num(self.rounds_per_epoch as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TrainConfig> {
+        let mut cfg = TrainConfig::preset(
+            j.req("model")?.as_str()?,
+            j.req("algo")?.as_str()?,
+        );
+        if let Some(v) = j.get("workers") {
+            cfg.workers = v.as_usize()?;
+        }
+        if let Some(v) = j.get("rounds") {
+            cfg.rounds = v.as_usize()? as u64;
+        }
+        if let Some(v) = j.get("lr") {
+            cfg.lr = v.as_f64()? as f32;
+        }
+        if let Some(v) = j.get("schedule") {
+            cfg.schedule = match v {
+                Json::Str(s) if s == "const" => LrSchedule::Const,
+                obj => LrSchedule::StepDecay {
+                    at: obj
+                        .req("at")?
+                        .usize_arr()?
+                        .into_iter()
+                        .map(|r| r as u64)
+                        .collect(),
+                    factor: obj.req("factor")?.as_f64()? as f32,
+                },
+            };
+        }
+        if let Some(v) = j.get("seed") {
+            cfg.seed = v.as_f64()? as u64;
+        }
+        if let Some(v) = j.get("sharding") {
+            cfg.sharding = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.get("eval_every") {
+            cfg.eval_every = v.as_usize()? as u64;
+        }
+        if let Some(v) = j.get("eval_batches") {
+            cfg.eval_batches = v.as_usize()?;
+        }
+        if let Some(v) = j.get("artifacts") {
+            cfg.artifacts = PathBuf::from(v.as_str()?);
+        }
+        if let Some(v) = j.get("threaded") {
+            cfg.threaded = v.as_bool()?;
+        }
+        if let Some(v) = j.get("fused_update") {
+            cfg.fused_update = v.as_bool()?;
+        }
+        if let Some(v) = j.get("log_every") {
+            cfg.log_every = v.as_usize()? as u64;
+        }
+        if let Some(v) = j.get("rounds_per_epoch") {
+            cfg.rounds_per_epoch = v.as_usize()? as u64;
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_step_decay() {
+        let s = LrSchedule::StepDecay { at: vec![40, 80], factor: 10.0 };
+        assert_eq!(s.lr_at(1.0, 0), 1.0);
+        assert_eq!(s.lr_at(1.0, 40), 0.1);
+        assert!((s.lr_at(1.0, 85) - 0.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validate_catches_mistakes() {
+        let mut cfg = TrainConfig::preset("quadratic", "dist-ams");
+        cfg.validate().unwrap();
+        cfg.workers = 0;
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::preset("mnist_cnn", "comp-ams-topk:0.01");
+        cfg.threaded = true;
+        assert!(cfg.validate().is_err());
+        let mut cfg = TrainConfig::preset("quadratic", "bogus-algo");
+        cfg.threaded = false;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cfg = TrainConfig::preset("cifar_lenet", "comp-ams-blocksign:4096");
+        cfg.schedule = LrSchedule::StepDecay { at: vec![3880, 7760], factor: 10.0 };
+        cfg.workers = 4;
+        cfg.seed = 7;
+        let j = cfg.to_json();
+        let back = TrainConfig::from_json(&crate::util::json::parse(
+            &j.to_string_pretty(),
+        ).unwrap())
+        .unwrap();
+        assert_eq!(back.model, cfg.model);
+        assert_eq!(back.algo, cfg.algo);
+        assert_eq!(back.workers, 4);
+        assert_eq!(back.seed, 7);
+        assert_eq!(back.schedule, cfg.schedule);
+    }
+}

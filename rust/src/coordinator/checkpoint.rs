@@ -1,0 +1,139 @@
+//! Checkpointing: persist and resume the leader's training state.
+//!
+//! Layout on disk (a directory):
+//!   `state.json` — round counter, config echo, dims, RNG-free metadata
+//!   `theta.bin`  — little-endian f32 parameters
+//!   `opt.bin`    — concatenated optimizer state vectors (m | v | v̂)
+//!
+//! Worker error-feedback residuals are *not* persisted: Algorithm 2's
+//! residuals are bounded (Lemma 2) and re-warm within ~1/(1-β1) rounds;
+//! restarting with e=0 is the standard practical choice (documented so
+//! resumed curves are reproducible given the same seeds).
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::json::{self, Json};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub round: u64,
+    pub model: String,
+    pub algo: String,
+    pub theta: Vec<f32>,
+    /// Optimizer state vectors, each theta-sized (AMSGrad: [m, v, vhat]).
+    pub opt_state: Vec<Vec<f32>>,
+}
+
+impl Checkpoint {
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let meta = Json::obj(vec![
+            ("version", Json::num(1.0)),
+            ("round", Json::num(self.round as f64)),
+            ("model", Json::str(&self.model)),
+            ("algo", Json::str(&self.algo)),
+            ("p", Json::num(self.theta.len() as f64)),
+            ("opt_vectors", Json::num(self.opt_state.len() as f64)),
+        ]);
+        std::fs::write(dir.join("state.json"), meta.to_string_pretty())?;
+        std::fs::write(dir.join("theta.bin"), f32s_to_bytes(&self.theta))?;
+        let mut opt = Vec::new();
+        for v in &self.opt_state {
+            ensure!(v.len() == self.theta.len(), "opt vector dim mismatch");
+            opt.extend_from_slice(&f32s_to_bytes(v));
+        }
+        std::fs::write(dir.join("opt.bin"), opt)?;
+        Ok(())
+    }
+
+    pub fn load(dir: &Path) -> Result<Checkpoint> {
+        let meta = json::parse(
+            &std::fs::read_to_string(dir.join("state.json"))
+                .with_context(|| format!("reading {}", dir.join("state.json").display()))?,
+        )?;
+        ensure!(meta.req("version")?.as_usize()? == 1, "unsupported checkpoint version");
+        let p = meta.req("p")?.as_usize()?;
+        let nopt = meta.req("opt_vectors")?.as_usize()?;
+        let theta = bytes_to_f32s(&std::fs::read(dir.join("theta.bin"))?)?;
+        ensure!(theta.len() == p, "theta.bin length {} != p {p}", theta.len());
+        let opt_raw = bytes_to_f32s(&std::fs::read(dir.join("opt.bin"))?)?;
+        ensure!(opt_raw.len() == nopt * p, "opt.bin length mismatch");
+        let opt_state = opt_raw.chunks(p).map(|c| c.to_vec()).collect();
+        Ok(Checkpoint {
+            round: meta.req("round")?.as_usize()? as u64,
+            model: meta.req("model")?.as_str()?.to_string(),
+            algo: meta.req("algo")?.as_str()?.to_string(),
+            theta,
+            opt_state,
+        })
+    }
+}
+
+fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {
+    v.iter().flat_map(|x| x.to_le_bytes()).collect()
+}
+
+fn bytes_to_f32s(b: &[u8]) -> Result<Vec<f32>> {
+    ensure!(b.len() % 4 == 0, "binary length not a multiple of 4");
+    Ok(b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "comp_ams_ckpt_{}",
+            std::process::id() as u64 ^ std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .subsec_nanos() as u64
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let dir = tmp();
+        let ck = Checkpoint {
+            round: 42,
+            model: "mnist_cnn".into(),
+            algo: "comp-ams-topk:0.01".into(),
+            theta: vec![1.5, -2.25, 0.0],
+            opt_state: vec![vec![0.1, 0.2, 0.3], vec![1.0, 2.0, 3.0]],
+        };
+        ck.save(&dir).unwrap();
+        let back = Checkpoint::load(&dir).unwrap();
+        assert_eq!(back, ck);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupted_theta_rejected() {
+        let dir = tmp();
+        let ck = Checkpoint {
+            round: 1,
+            model: "m".into(),
+            algo: "a".into(),
+            theta: vec![1.0; 8],
+            opt_state: vec![vec![0.0; 8]],
+        };
+        ck.save(&dir).unwrap();
+        // Truncate theta.bin.
+        let raw = std::fs::read(dir.join("theta.bin")).unwrap();
+        std::fs::write(dir.join("theta.bin"), &raw[..raw.len() - 4]).unwrap();
+        assert!(Checkpoint::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_is_error() {
+        assert!(Checkpoint::load(Path::new("/nonexistent/ckpt")).is_err());
+    }
+}

@@ -1,0 +1,157 @@
+//! Worker execution backends.
+//!
+//! [`WorkerPool::Sequential`] runs each worker's gradient on the leader
+//! thread (required for PJRT executables, and the deterministic default).
+//! [`WorkerPool::Threaded`] keeps one persistent OS thread per worker fed
+//! over mpsc channels — the real leader/worker message plumbing. Both
+//! yield identical trajectories because all randomness lives in the
+//! worker-owned RNG streams, not in scheduling (asserted by the
+//! `threaded_matches_sequential` integration test).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Result};
+
+use crate::grad::GradSource;
+
+enum Cmd {
+    Grad { theta: Arc<Vec<f32>>, round: u64 },
+    Stop,
+}
+
+type GradReply = Result<(f32, Vec<f32>)>;
+
+pub struct WorkerHandle {
+    tx: Sender<Cmd>,
+    rx: Receiver<GradReply>,
+    join: Option<JoinHandle<()>>,
+}
+
+pub enum WorkerPool {
+    Sequential(Vec<Box<dyn GradSource>>),
+    Threaded(Vec<WorkerHandle>),
+}
+
+impl WorkerPool {
+    pub fn sequential(sources: Vec<Box<dyn GradSource>>) -> Self {
+        WorkerPool::Sequential(sources)
+    }
+
+    pub fn threaded(sources: Vec<Box<dyn GradSource + Send>>) -> Self {
+        let handles = sources
+            .into_iter()
+            .enumerate()
+            .map(|(wid, mut src)| {
+                let (cmd_tx, cmd_rx) = channel::<Cmd>();
+                let (rep_tx, rep_rx) = channel::<GradReply>();
+                let join = std::thread::Builder::new()
+                    .name(format!("worker-{wid}"))
+                    .spawn(move || {
+                        while let Ok(cmd) = cmd_rx.recv() {
+                            match cmd {
+                                Cmd::Grad { theta, round } => {
+                                    let reply = src.grad(&theta, round);
+                                    if rep_tx.send(reply).is_err() {
+                                        break;
+                                    }
+                                }
+                                Cmd::Stop => break,
+                            }
+                        }
+                    })
+                    .expect("spawn worker thread");
+                WorkerHandle { tx: cmd_tx, rx: rep_rx, join: Some(join) }
+            })
+            .collect();
+        WorkerPool::Threaded(handles)
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            WorkerPool::Sequential(v) => v.len(),
+            WorkerPool::Threaded(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Compute all workers' (loss, grad) at θ for this round.
+    pub fn compute_all(&mut self, theta: &[f32], round: u64) -> Result<Vec<(f32, Vec<f32>)>> {
+        match self {
+            WorkerPool::Sequential(sources) => sources
+                .iter_mut()
+                .map(|s| s.grad(theta, round))
+                .collect(),
+            WorkerPool::Threaded(handles) => {
+                let shared = Arc::new(theta.to_vec());
+                for h in handles.iter() {
+                    h.tx
+                        .send(Cmd::Grad { theta: Arc::clone(&shared), round })
+                        .map_err(|_| anyhow!("worker thread died"))?;
+                }
+                handles
+                    .iter()
+                    .map(|h| h.rx.recv().map_err(|_| anyhow!("worker thread died"))?)
+                    .collect()
+            }
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        if let WorkerPool::Threaded(handles) = self {
+            for h in handles.iter() {
+                let _ = h.tx.send(Cmd::Stop);
+            }
+            for h in handles.iter_mut() {
+                if let Some(j) = h.join.take() {
+                    let _ = j.join();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grad::quadratic::QuadraticProblem;
+
+    fn sources(n: usize) -> Vec<Box<dyn GradSource + Send>> {
+        let p = QuadraticProblem::new(1, 16, n, 4.0, 0.5, 1.0);
+        (0..n)
+            .map(|w| Box::new(p.source_for(w, 7)) as Box<dyn GradSource + Send>)
+            .collect()
+    }
+
+    #[test]
+    fn threaded_equals_sequential() {
+        let seq_sources: Vec<Box<dyn GradSource>> = sources(4)
+            .into_iter()
+            .map(|b| b as Box<dyn GradSource>)
+            .collect();
+        let mut seq = WorkerPool::sequential(seq_sources);
+        let mut thr = WorkerPool::threaded(sources(4));
+        let theta = vec![0.2f32; 16];
+        for round in 0..5 {
+            let a = seq.compute_all(&theta, round).unwrap();
+            let b = thr.compute_all(&theta, round).unwrap();
+            for ((la, ga), (lb, gb)) in a.iter().zip(&b) {
+                assert_eq!(la, lb);
+                assert_eq!(ga, gb);
+            }
+        }
+    }
+
+    #[test]
+    fn pool_reports_len() {
+        let thr = WorkerPool::threaded(sources(3));
+        assert_eq!(thr.len(), 3);
+        assert!(!thr.is_empty());
+    }
+}

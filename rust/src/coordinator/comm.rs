@@ -1,0 +1,59 @@
+//! Communication ledger: the exact bit counts behind Figure 2.
+//!
+//! Uplink (worker → server) is charged per encoded payload — the byte
+//! codec's real length, not an estimate. Downlink (server → worker) is
+//! the dense θ broadcast, charged per worker per round. The paper's
+//! Figure 2 x-axis is uplink bits ("bits transmitted to the central
+//! server"); both directions are recorded.
+
+use crate::compress::Payload;
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CommLedger {
+    pub uplink_bits: u64,
+    pub downlink_bits: u64,
+    pub uplink_msgs: u64,
+}
+
+impl CommLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn charge_uplink(&mut self, p: &Payload) {
+        self.uplink_bits += p.wire_bits();
+        self.uplink_msgs += 1;
+    }
+
+    /// Dense f32 broadcast of a d-vector to `n` workers.
+    pub fn charge_downlink_dense(&mut self, d: usize, n: usize) {
+        self.downlink_bits += (n as u64) * 8 * (5 + 4 * d as u64);
+    }
+
+    pub fn total_bits(&self) -> u64 {
+        self.uplink_bits + self.downlink_bits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uplink_matches_payload_bits() {
+        let mut l = CommLedger::new();
+        let p = Payload::Dense(vec![0.0; 10]);
+        l.charge_uplink(&p);
+        l.charge_uplink(&p);
+        assert_eq!(l.uplink_bits, 2 * p.wire_bits());
+        assert_eq!(l.uplink_msgs, 2);
+    }
+
+    #[test]
+    fn downlink_formula() {
+        let mut l = CommLedger::new();
+        l.charge_downlink_dense(100, 4);
+        assert_eq!(l.downlink_bits, 4 * 8 * 405);
+        assert_eq!(l.total_bits(), l.downlink_bits);
+    }
+}

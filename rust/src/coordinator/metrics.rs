@@ -1,0 +1,129 @@
+//! Run metrics: what every experiment driver records and the CSV schema
+//! all figures are regenerated from.
+
+use crate::grad::EvalStats;
+
+#[derive(Clone, Debug)]
+pub struct RoundMetric {
+    pub round: u64,
+    /// Fractional epoch (round / rounds_per_epoch).
+    pub epoch: f32,
+    /// Mean worker training loss this round.
+    pub train_loss: f32,
+    /// Held-out stats if this was an eval round.
+    pub eval: Option<EvalStats>,
+    /// Cumulative uplink bits so far.
+    pub uplink_bits: u64,
+    /// Cumulative downlink bits so far.
+    pub downlink_bits: u64,
+    pub lr: f32,
+    pub wall_ms: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub algo: String,
+    pub model: String,
+    pub workers: usize,
+    pub metrics: Vec<RoundMetric>,
+    pub final_eval: EvalStats,
+    pub total_wall_ms: f64,
+    /// Mean non-gradient (coordination) share of round time, 0..1.
+    pub coord_overhead: f64,
+}
+
+impl RunResult {
+    /// First round whose train loss (smoothed over a window) drops below
+    /// `target`. Used by the Fig. 3 speedup analysis.
+    pub fn rounds_to_loss(&self, target: f32, window: usize) -> Option<u64> {
+        if self.metrics.is_empty() {
+            return None;
+        }
+        let w = window.max(1);
+        let mut acc = 0.0f32;
+        let mut buf = std::collections::VecDeque::new();
+        for m in &self.metrics {
+            buf.push_back(m.train_loss);
+            acc += m.train_loss;
+            if buf.len() > w {
+                acc -= buf.pop_front().unwrap();
+            }
+            if buf.len() == w && acc / w as f32 <= target {
+                return Some(m.round);
+            }
+        }
+        None
+    }
+
+    /// Final train loss (smoothed over the last `window` rounds).
+    pub fn final_train_loss(&self, window: usize) -> f32 {
+        let n = self.metrics.len();
+        if n == 0 {
+            return f32::NAN;
+        }
+        let w = window.clamp(1, n);
+        self.metrics[n - w..].iter().map(|m| m.train_loss).sum::<f32>() / w as f32
+    }
+
+    pub fn uplink_bits(&self) -> u64 {
+        self.metrics.last().map(|m| m.uplink_bits).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metric(round: u64, loss: f32) -> RoundMetric {
+        RoundMetric {
+            round,
+            epoch: 0.0,
+            train_loss: loss,
+            eval: None,
+            uplink_bits: round * 100,
+            downlink_bits: 0,
+            lr: 0.1,
+            wall_ms: 1.0,
+        }
+    }
+
+    fn run(losses: &[f32]) -> RunResult {
+        RunResult {
+            algo: "x".into(),
+            model: "m".into(),
+            workers: 1,
+            metrics: losses
+                .iter()
+                .enumerate()
+                .map(|(i, &l)| metric(i as u64, l))
+                .collect(),
+            final_eval: EvalStats { loss: 0.0, accuracy: 0.0 },
+            total_wall_ms: 0.0,
+            coord_overhead: 0.0,
+        }
+    }
+
+    #[test]
+    fn rounds_to_loss_finds_crossing() {
+        let r = run(&[5.0, 4.0, 3.0, 2.0, 1.0, 0.5]);
+        assert_eq!(r.rounds_to_loss(2.0, 1), Some(3));
+        assert_eq!(r.rounds_to_loss(0.1, 1), None);
+    }
+
+    #[test]
+    fn smoothing_window_filters_spikes() {
+        let r = run(&[5.0, 0.1, 5.0, 2.0, 2.0, 2.0]);
+        // window 1 triggers on the spike; window 3 waits until the
+        // 3-round mean crosses (round 3: mean(0.1, 5, 2) = 2.37 <= 3).
+        assert_eq!(r.rounds_to_loss(1.0, 1), Some(1));
+        assert_eq!(r.rounds_to_loss(3.0, 3), Some(3));
+        assert_eq!(r.rounds_to_loss(2.1, 3), Some(5));
+    }
+
+    #[test]
+    fn final_train_loss_windows() {
+        let r = run(&[4.0, 3.0, 2.0, 1.0]);
+        assert_eq!(r.final_train_loss(2), 1.5);
+        assert_eq!(r.final_train_loss(100), 2.5);
+    }
+}

@@ -1,0 +1,28 @@
+//! The L3 coordinator: synchronous leader/worker rounds, communication
+//! accounting, metrics, and the training driver.
+//!
+//! One round of the paper's Algorithm 2:
+//!
+//! ```text
+//!   leader ──θ_t──▶ workers (downlink: n dense broadcasts, charged)
+//!   worker i: g_i = ∇f_i(θ_t; batch_i)        [grad::GradSource]
+//!             msg_i = algo.worker_msg(g_i)    [compression + EF]
+//!   workers ──msg_i──▶ leader (uplink: exact wire bits, charged)
+//!   leader: algo.server_step(θ, msgs)         [AMSGrad on the server]
+//! ```
+//!
+//! Gradient computation — the dominant cost — runs either sequentially on
+//! the leader thread (required for PJRT executables) or on persistent
+//! worker threads ([`cluster`]). Both produce bit-identical trajectories
+//! (each worker owns a seeded RNG stream), which the integration tests
+//! assert.
+
+pub mod cluster;
+pub mod checkpoint;
+pub mod comm;
+pub mod metrics;
+pub mod trainer;
+
+pub use comm::CommLedger;
+pub use metrics::{RoundMetric, RunResult};
+pub use trainer::{train, Trainer};

@@ -1,0 +1,385 @@
+//! The training driver: assembles workers, protocol, evaluator, and runs
+//! synchronous rounds with communication accounting.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::algo::{Algorithm, AlgoSpec, CompAms, RoundCtx};
+use crate::config::TrainConfig;
+use crate::data::{
+    images::SyntheticImages, lm::ByteCorpus, shard::Sharding, text::SyntheticText,
+    vectors::GaussianVectors, Dataset,
+};
+use crate::grad::{
+    logistic::{LogisticEvaluator, LogisticProblem},
+    pjrt_model::{PjrtEvaluator, PjrtSource, ShardStream},
+    quadratic::{QuadraticEvaluator, QuadraticProblem},
+    EvalStats, Evaluator, GradSource,
+};
+use crate::runtime::{ModelBundle, Runtime};
+use crate::util::timer::Stopwatch;
+
+use super::cluster::WorkerPool;
+use super::comm::CommLedger;
+use super::metrics::{RoundMetric, RunResult};
+
+pub struct Trainer {
+    cfg: TrainConfig,
+    pool: WorkerPool,
+    algo: Box<dyn Algorithm>,
+    evaluator: Box<dyn Evaluator>,
+    pub theta: Vec<f32>,
+    ledger: CommLedger,
+    metrics: Vec<RoundMetric>,
+    grad_ms_total: f64,
+    round_ms_total: f64,
+}
+
+impl Trainer {
+    pub fn new(cfg: &TrainConfig) -> Result<Trainer> {
+        cfg.validate()?;
+        let spec = AlgoSpec::parse(&cfg.algo)?;
+        let (pool, evaluator, theta, fused) = build_workload(cfg)?;
+        let algo = build_algo(&spec, theta.len(), cfg, fused);
+        Ok(Trainer {
+            cfg: cfg.clone(),
+            pool,
+            algo,
+            evaluator,
+            theta,
+            ledger: CommLedger::new(),
+            metrics: Vec::new(),
+            grad_ms_total: 0.0,
+            round_ms_total: 0.0,
+        })
+    }
+
+    pub fn algo_name(&self) -> String {
+        self.algo.name()
+    }
+
+    /// Run one synchronous round; returns the mean worker train loss.
+    pub fn step(&mut self, round: u64) -> Result<f32> {
+        let sw = Stopwatch::start();
+        let lr = self.cfg.schedule.lr_at(self.cfg.lr, round);
+        let ctx = RoundCtx { round, lr };
+
+        // Downlink: θ broadcast.
+        self.ledger.charge_downlink_dense(self.theta.len(), self.pool.len());
+
+        // Workers: gradients (the dominant compute).
+        let gsw = Stopwatch::start();
+        let grads = self.pool.compute_all(&self.theta, round)?;
+        self.grad_ms_total += gsw.ms();
+
+        // Workers: compression + EF; uplink accounting.
+        let mut msgs = Vec::with_capacity(grads.len());
+        let mut train_loss = 0.0f32;
+        for (wid, (loss, g)) in grads.iter().enumerate() {
+            train_loss += loss / grads.len() as f32;
+            let msg = self.algo.worker_msg(wid, g, &ctx)?;
+            self.ledger.charge_uplink(&msg);
+            msgs.push(msg);
+        }
+
+        // Leader: aggregate + optimizer.
+        self.algo.server_step(&mut self.theta, &msgs, &ctx)?;
+
+        let wall = sw.ms();
+        self.round_ms_total += wall;
+        let eval = if self.cfg.eval_every > 0 && (round + 1) % self.cfg.eval_every == 0 {
+            Some(self.evaluator.eval(&self.theta)?)
+        } else {
+            None
+        };
+        self.metrics.push(RoundMetric {
+            round,
+            epoch: (round + 1) as f32 / self.cfg.rounds_per_epoch.max(1) as f32,
+            train_loss,
+            eval,
+            uplink_bits: self.ledger.uplink_bits,
+            downlink_bits: self.ledger.downlink_bits,
+            lr,
+            wall_ms: wall,
+        });
+        if self.cfg.log_every > 0 && (round + 1) % self.cfg.log_every == 0 {
+            let e = self.metrics.last().unwrap();
+            let acc = e
+                .eval
+                .map(|s| format!(" test_acc={:.4} test_loss={:.4}", s.accuracy, s.loss))
+                .unwrap_or_default();
+            eprintln!(
+                "[{}] round {:>6} epoch {:>6.2} loss {:.4}{} lr {:.2e} uplink {:.2} MB",
+                self.algo.name(),
+                round + 1,
+                e.epoch,
+                train_loss,
+                acc,
+                lr,
+                e.uplink_bits as f64 / 8e6,
+            );
+        }
+        Ok(train_loss)
+    }
+
+    pub fn run(mut self) -> Result<RunResult> {
+        let total = Stopwatch::start();
+        for round in 0..self.cfg.rounds {
+            self.step(round)?;
+        }
+        let final_eval = self.evaluator.eval(&self.theta)?;
+        Ok(RunResult {
+            algo: self.algo.name(),
+            model: self.cfg.model.clone(),
+            workers: self.cfg.workers,
+            metrics: self.metrics,
+            final_eval,
+            total_wall_ms: total.ms(),
+            coord_overhead: if self.round_ms_total > 0.0 {
+                1.0 - self.grad_ms_total / self.round_ms_total
+            } else {
+                0.0
+            },
+        })
+    }
+
+    pub fn eval_now(&mut self) -> Result<EvalStats> {
+        self.evaluator.eval(&self.theta)
+    }
+
+    pub fn ledger(&self) -> CommLedger {
+        self.ledger
+    }
+}
+
+/// One-call convenience: build + run.
+pub fn train(cfg: &TrainConfig) -> Result<RunResult> {
+    Trainer::new(cfg)?.run()
+}
+
+// ---------------------------------------------------------------------------
+
+fn build_algo(
+    spec: &AlgoSpec,
+    dim: usize,
+    cfg: &TrainConfig,
+    fused: Option<Rc<crate::runtime::OptimizerExe>>,
+) -> Box<dyn Algorithm> {
+    if cfg.fused_update {
+        // Route the AMSGrad server update through the Pallas artifact for
+        // the protocols that use AMSGrad.
+        if let Some(exe) = fused {
+            match spec {
+                AlgoSpec::DistAms => {
+                    return Box::new(
+                        CompAms::new(
+                            dim,
+                            cfg.workers,
+                            crate::compress::CompressorSpec::Identity,
+                            false,
+                            "dist-ams",
+                        )
+                        .with_fused(exe),
+                    )
+                }
+                AlgoSpec::CompAms { compressor, error_feedback } => {
+                    return Box::new(
+                        CompAms::new(
+                            dim,
+                            cfg.workers,
+                            compressor.clone(),
+                            *error_feedback,
+                            "comp-ams",
+                        )
+                        .with_fused(exe),
+                    )
+                }
+                _ => {}
+            }
+        }
+    }
+    spec.build(dim, cfg.workers, cfg.rounds)
+}
+
+type Workload = (
+    WorkerPool,
+    Box<dyn Evaluator>,
+    Vec<f32>,
+    Option<Rc<crate::runtime::OptimizerExe>>,
+);
+
+fn build_workload(cfg: &TrainConfig) -> Result<Workload> {
+    match cfg.model.as_str() {
+        "quadratic" => {
+            // Dirichlet sharding has no labels here; non-iid is expressed
+            // through σ_g > 0 instead.
+            let sigma_g = match Sharding::parse(&cfg.sharding)? {
+                Sharding::Iid => 0.0,
+                Sharding::Dirichlet { alpha } => (1.0 / alpha).min(10.0),
+            };
+            let p = QuadraticProblem::new(cfg.seed, 256, cfg.workers, 20.0, 1.0, sigma_g);
+            let sources: Vec<Box<dyn GradSource + Send>> = (0..cfg.workers)
+                .map(|w| Box::new(p.source_for(w, cfg.seed)) as _)
+                .collect();
+            let pool = make_pool(cfg, sources);
+            let theta = vec![0.0f32; p.dim()];
+            let eval = Box::new(QuadraticEvaluator { problem: p });
+            Ok((pool, eval, theta, None))
+        }
+        "logistic" => {
+            let p = LogisticProblem::new(cfg.seed, 64, 10, 32, 0.5);
+            let sources: Vec<Box<dyn GradSource + Send>> = (0..cfg.workers)
+                .map(|w| Box::new(p.source_for(w, cfg.seed)) as _)
+                .collect();
+            let pool = make_pool(cfg, sources);
+            let theta = vec![0.0f32; p.p()];
+            let eval =
+                Box::new(LogisticEvaluator { problem: p, seed: cfg.seed ^ 0xE0, n: 2000 });
+            Ok((pool, eval, theta, None))
+        }
+        name => build_pjrt_workload(cfg, name),
+    }
+}
+
+fn make_pool(cfg: &TrainConfig, sources: Vec<Box<dyn GradSource + Send>>) -> WorkerPool {
+    if cfg.threaded {
+        WorkerPool::threaded(sources)
+    } else {
+        WorkerPool::sequential(sources.into_iter().map(|b| b as Box<dyn GradSource>).collect())
+    }
+}
+
+fn build_pjrt_workload(cfg: &TrainConfig, name: &str) -> Result<Workload> {
+    let rt = Rc::new(Runtime::cpu()?);
+    let bundle = Rc::new(
+        ModelBundle::load(&rt, Path::new(&cfg.artifacts), name).with_context(|| {
+            format!(
+                "loading model '{name}' from {} (run `make artifacts`?)",
+                cfg.artifacts.display()
+            )
+        })?,
+    );
+    let entry = &bundle.entry;
+    let seq_len = entry.x_shape.first().copied().unwrap_or(0);
+
+    // Dataset per workload (DESIGN.md §4 substitutions).
+    let mk_classif = |ds: Rc<dyn Dataset>| -> Result<Vec<ShardStream>> {
+        let mut rng = crate::util::rng::Rng::seed(cfg.seed ^ 0x5A4D);
+        let weights = Sharding::parse(&cfg.sharding)?.worker_weights(
+            &mut rng,
+            cfg.workers,
+            ds.classes(),
+        );
+        Ok(weights
+            .into_iter()
+            .map(|w| ShardStream::Classif { ds: Rc::clone(&ds), weights: w })
+            .collect())
+    };
+
+    let streams: Vec<ShardStream> = match name {
+        "mnist_cnn" => mk_classif(Rc::new(SyntheticImages::mnist_like(cfg.seed)))?,
+        "cifar_lenet" | "cifar_resnet" => {
+            mk_classif(Rc::new(SyntheticImages::cifar_like(cfg.seed)))?
+        }
+        "imdb_lstm" => mk_classif(Rc::new(SyntheticText::imdb_like(cfg.seed, seq_len)))?,
+        "logreg" => mk_classif(Rc::new(GaussianVectors::new(cfg.seed, 64, 4, 0.5)))?,
+        "lm_small" | "lm_large" => {
+            let corpus = Rc::new(ByteCorpus::generate(cfg.seed, 262_144, seq_len));
+            (0..cfg.workers)
+                .map(|_| ShardStream::Lm { corpus: Rc::clone(&corpus) })
+                .collect()
+        }
+        other => bail!("no data substrate wired for model '{other}'"),
+    };
+
+    // The evaluator draws its own iid test stream (never label-skewed).
+    let eval_stream = match &streams[0] {
+        ShardStream::Classif { ds, .. } => {
+            ShardStream::Classif { ds: Rc::clone(ds), weights: None }
+        }
+        ShardStream::Lm { corpus } => ShardStream::Lm { corpus: Rc::clone(corpus) },
+    };
+    let evaluator = Box::new(PjrtEvaluator::new(
+        Rc::clone(&bundle),
+        &eval_stream,
+        cfg.seed,
+        cfg.eval_batches,
+    ));
+
+    let sources: Vec<Box<dyn GradSource>> = streams
+        .into_iter()
+        .enumerate()
+        .map(|(w, stream)| {
+            Box::new(PjrtSource::new(Rc::clone(&bundle), stream, cfg.seed, w)) as _
+        })
+        .collect();
+    let theta = bundle.init_theta.clone();
+    let fused = Some(Rc::clone(&bundle.amsgrad));
+    Ok((WorkerPool::sequential(sources), evaluator, theta, fused))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TrainConfig;
+
+    #[test]
+    fn quadratic_comp_ams_descends() {
+        let mut cfg = TrainConfig::preset("quadratic", "comp-ams-topk:0.05");
+        cfg.workers = 4;
+        cfg.rounds = 300;
+        cfg.lr = 0.05;
+        cfg.eval_every = 0;
+        let run = train(&cfg).unwrap();
+        let first = run.metrics[0].train_loss;
+        let last = run.final_train_loss(20);
+        assert!(last < first - 0.5, "no descent: {first} -> {last}");
+    }
+
+    #[test]
+    fn threaded_matches_sequential_trajectory() {
+        let mut cfg = TrainConfig::preset("quadratic", "comp-ams-blocksign:64");
+        cfg.workers = 3;
+        cfg.rounds = 40;
+        cfg.eval_every = 0;
+        let a = train(&cfg).unwrap();
+        cfg.threaded = true;
+        let b = train(&cfg).unwrap();
+        for (ma, mb) in a.metrics.iter().zip(&b.metrics) {
+            assert_eq!(ma.train_loss, mb.train_loss, "round {}", ma.round);
+            assert_eq!(ma.uplink_bits, mb.uplink_bits);
+        }
+    }
+
+    #[test]
+    fn uplink_accounting_topk_vs_dense() {
+        let mut cfg = TrainConfig::preset("quadratic", "dist-ams");
+        cfg.workers = 2;
+        cfg.rounds = 10;
+        cfg.eval_every = 0;
+        let dense = train(&cfg).unwrap();
+        cfg.algo = "comp-ams-topk:0.01".into();
+        let sparse = train(&cfg).unwrap();
+        assert!(sparse.uplink_bits() < dense.uplink_bits() / 10);
+    }
+
+    #[test]
+    fn logistic_learns_with_all_protocols() {
+        for algo in ["dist-ams", "comp-ams-topk:0.05", "comp-ams-blocksign:64", "qadam",
+                     "1bitadam:20", "dist-sgd"] {
+            let mut cfg = TrainConfig::preset("logistic", algo);
+            cfg.workers = 4;
+            cfg.rounds = 250;
+            cfg.lr = if algo == "dist-sgd" { 0.1 } else { 0.05 };
+            cfg.eval_every = 0;
+            let run = train(&cfg).unwrap();
+            assert!(
+                run.final_eval.accuracy > 0.5,
+                "{algo}: acc={}",
+                run.final_eval.accuracy
+            );
+        }
+    }
+}

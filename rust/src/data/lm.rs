@@ -1,0 +1,174 @@
+//! Procedural byte corpus for the transformer LM end-to-end driver.
+//!
+//! Generates deterministic pseudo-English: a seeded vocabulary of word
+//! forms composed into sentences with Zipf word frequencies and light
+//! punctuation structure. The corpus has real next-byte structure
+//! (within-word character transitions, spaces, sentence boundaries), so a
+//! byte LM's loss drops well below the uniform 5.545 nats as it learns —
+//! which is what the e2e example's loss curve demonstrates.
+
+use crate::util::rng::Rng;
+
+use super::Dataset;
+
+pub struct ByteCorpus {
+    corpus: Vec<u8>,
+    seq_len: usize,
+}
+
+impl ByteCorpus {
+    pub fn generate(seed: u64, target_bytes: usize, seq_len: usize) -> Self {
+        let mut rng = Rng::seed(seed ^ 0xB17E);
+        // Seeded word list: 2-4 syllables of consonant+vowel pairs.
+        const CONS: &[u8] = b"bcdfghklmnprstvwz";
+        const VOWS: &[u8] = b"aeiou";
+        let n_words = 512;
+        let words: Vec<Vec<u8>> = (0..n_words)
+            .map(|_| {
+                let syll = 1 + rng.gen_range(3);
+                let mut w = Vec::new();
+                for _ in 0..=syll {
+                    w.push(CONS[rng.gen_range(CONS.len())]);
+                    w.push(VOWS[rng.gen_range(VOWS.len())]);
+                }
+                w
+            })
+            .collect();
+        let mut corpus = Vec::with_capacity(target_bytes + 64);
+        let mut sentence_left = 4 + rng.gen_range(12);
+        while corpus.len() < target_bytes {
+            let w = &words[rng.zipf(n_words, 1.5)];
+            corpus.extend_from_slice(w);
+            sentence_left -= 1;
+            if sentence_left == 0 {
+                corpus.extend_from_slice(b". ");
+                sentence_left = 4 + rng.gen_range(12);
+            } else {
+                corpus.push(b' ');
+            }
+        }
+        corpus.truncate(target_bytes);
+        ByteCorpus { corpus, seq_len }
+    }
+
+    pub fn len_bytes(&self) -> usize {
+        self.corpus.len()
+    }
+
+    /// Sample a window: x = bytes[i..i+L], y = bytes[i+1..i+L+1].
+    pub fn sample_window(&self, rng: &mut Rng) -> (Vec<i32>, Vec<i32>) {
+        let max_start = self.corpus.len() - self.seq_len - 1;
+        let start = rng.gen_range(max_start);
+        let x = self.corpus[start..start + self.seq_len]
+            .iter()
+            .map(|&b| b as i32)
+            .collect();
+        let y = self.corpus[start + 1..start + self.seq_len + 1]
+            .iter()
+            .map(|&b| b as i32)
+            .collect();
+        (x, y)
+    }
+
+    /// Assemble an LM batch (y is the shifted window, token-level labels).
+    pub fn make_lm_batch(&self, rng: &mut Rng, batch: usize) -> super::Batch {
+        let mut xs = Vec::with_capacity(batch * self.seq_len);
+        let mut ys = Vec::with_capacity(batch * self.seq_len);
+        for _ in 0..batch {
+            let (x, y) = self.sample_window(rng);
+            xs.extend(x);
+            ys.extend(y);
+        }
+        super::Batch { x: super::BatchData::I32(xs), y: ys }
+    }
+}
+
+/// `Dataset` impl so the LM corpus can flow through the generic sharder
+/// (class = always 0; the LM task has no labels).
+impl Dataset for ByteCorpus {
+    fn x_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn classes(&self) -> usize {
+        1
+    }
+
+    fn integer_x(&self) -> bool {
+        true
+    }
+
+    fn sample(&self, rng: &mut Rng, buf: &mut [f32]) -> i32 {
+        let (x, _) = self.sample_window(rng);
+        for (b, v) in buf.iter_mut().zip(x) {
+            *b = v as f32;
+        }
+        0
+    }
+
+    fn sample_class(&self, rng: &mut Rng, _label: i32, buf: &mut [f32]) {
+        self.sample(rng, buf);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_is_printable_ascii() {
+        let c = ByteCorpus::generate(1, 10_000, 32);
+        assert_eq!(c.len_bytes(), 10_000);
+        assert!(c.corpus.iter().all(|&b| b == b' ' || b == b'.' || b.is_ascii_lowercase()));
+    }
+
+    #[test]
+    fn windows_are_shifted_pairs() {
+        let c = ByteCorpus::generate(2, 5_000, 16);
+        let mut rng = Rng::seed(4);
+        for _ in 0..10 {
+            let (x, y) = c.sample_window(&mut rng);
+            assert_eq!(x.len(), 16);
+            assert_eq!(&x[1..], &y[..15]);
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = ByteCorpus::generate(9, 2_000, 8);
+        let b = ByteCorpus::generate(9, 2_000, 8);
+        assert_eq!(a.corpus, b.corpus);
+    }
+
+    #[test]
+    fn lm_batch_shapes() {
+        let c = ByteCorpus::generate(3, 4_000, 32);
+        let mut rng = Rng::seed(5);
+        let b = c.make_lm_batch(&mut rng, 4);
+        match &b.x {
+            super::super::BatchData::I32(v) => assert_eq!(v.len(), 4 * 32),
+            _ => panic!(),
+        }
+        assert_eq!(b.y.len(), 4 * 32);
+    }
+
+    #[test]
+    fn corpus_has_structure() {
+        // Bigram entropy must be far below uniform log(96) for the LM to
+        // have something to learn.
+        let c = ByteCorpus::generate(7, 50_000, 32);
+        let mut counts = std::collections::BTreeMap::new();
+        for w in c.corpus.windows(2) {
+            *counts.entry((w[0], w[1])).or_insert(0usize) += 1;
+        }
+        let n = (c.corpus.len() - 1) as f64;
+        let h: f64 = counts
+            .values()
+            .map(|&c| {
+                let p = c as f64 / n;
+                -p * p.ln()
+            })
+            .sum();
+        assert!(h < 5.0, "bigram entropy {h}");
+    }
+}

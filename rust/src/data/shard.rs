@@ -1,0 +1,100 @@
+//! Shard assignment: how workers see the data distribution.
+//!
+//! - `Iid`: the paper's main setting — every worker samples from the full
+//!   distribution (σ_g² = 0 in Assumption 4).
+//! - `Dirichlet(α)`: federated-style label skew — worker i's label
+//!   distribution is a Dirichlet(α) draw, giving σ_g² > 0. Used by the
+//!   non-iid ablation (Theorem 1's global-variance term).
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Sharding {
+    Iid,
+    Dirichlet { alpha: f32 },
+}
+
+impl Sharding {
+    pub fn parse(s: &str) -> anyhow::Result<Sharding> {
+        if s == "iid" {
+            return Ok(Sharding::Iid);
+        }
+        if let Some(a) = s.strip_prefix("dirichlet:") {
+            return Ok(Sharding::Dirichlet { alpha: a.parse()? });
+        }
+        anyhow::bail!("unknown sharding '{s}' (iid | dirichlet:<alpha>)")
+    }
+
+    /// Per-worker label weights; `None` = sample the full distribution.
+    pub fn worker_weights(
+        &self,
+        rng: &mut Rng,
+        n_workers: usize,
+        classes: usize,
+    ) -> Vec<Option<Vec<f32>>> {
+        match self {
+            Sharding::Iid => vec![None; n_workers],
+            Sharding::Dirichlet { alpha } => (0..n_workers)
+                .map(|_| Some(rng.dirichlet(*alpha, classes)))
+                .collect(),
+        }
+    }
+}
+
+/// Mean total-variation distance of worker label distributions from
+/// uniform — a diagnostic for how non-iid a sharding draw is.
+pub fn label_skew(weights: &[Option<Vec<f32>>], classes: usize) -> f32 {
+    let uniform = 1.0 / classes as f32;
+    let mut total = 0.0f32;
+    let mut count = 0usize;
+    for w in weights.iter().flatten() {
+        total += 0.5 * w.iter().map(|&p| (p - uniform).abs()).sum::<f32>();
+        count += 1;
+    }
+    if count == 0 {
+        0.0
+    } else {
+        total / count as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn iid_gives_no_weights() {
+        let mut rng = Rng::seed(1);
+        let w = Sharding::Iid.worker_weights(&mut rng, 4, 10);
+        assert!(w.iter().all(|x| x.is_none()));
+        assert_eq!(label_skew(&w, 10), 0.0);
+    }
+
+    #[test]
+    fn dirichlet_weights_are_distributions() {
+        let mut rng = Rng::seed(2);
+        let w = Sharding::Dirichlet { alpha: 0.5 }.worker_weights(&mut rng, 8, 10);
+        for wi in w.iter().flatten() {
+            assert_eq!(wi.len(), 10);
+            assert!((wi.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn smaller_alpha_is_more_skewed() {
+        let mut rng = Rng::seed(3);
+        let sharp = Sharding::Dirichlet { alpha: 0.05 }.worker_weights(&mut rng, 16, 10);
+        let flat = Sharding::Dirichlet { alpha: 50.0 }.worker_weights(&mut rng, 16, 10);
+        assert!(label_skew(&sharp, 10) > label_skew(&flat, 10) + 0.2);
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(Sharding::parse("iid").unwrap(), Sharding::Iid);
+        assert_eq!(
+            Sharding::parse("dirichlet:0.3").unwrap(),
+            Sharding::Dirichlet { alpha: 0.3 }
+        );
+        assert!(Sharding::parse("x").is_err());
+    }
+}

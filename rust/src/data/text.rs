@@ -1,0 +1,152 @@
+//! Synthetic sentiment text (IMDB stand-in, DESIGN.md §4).
+//!
+//! Binary classification over padded i32 token sequences, vocab 2000.
+//! Each class owns a random permutation of the vocabulary; tokens are
+//! drawn Zipf-distributed through that permutation, so the two classes
+//! put high probability on (mostly) disjoint token subsets — like
+//! sentiment-bearing words. Sequence lengths are uniform in
+//! [L/4, L], remainder padded with token 0.
+//!
+//! What matters for the paper's Top-k-wins-on-text claim is preserved:
+//! a batch touches only a small vocab subset, so embedding-row gradients
+//! are extremely sparse and padding adds exact zeros.
+
+use crate::util::rng::Rng;
+
+use super::Dataset;
+
+pub struct SyntheticText {
+    vocab: usize,
+    seq_len: usize,
+    classes: usize,
+    /// Per-class vocab permutation (rank -> token id).
+    perms: Vec<Vec<u32>>,
+    zipf_s: f32,
+    /// Fraction of tokens drawn from the class distribution (the rest are
+    /// "neutral" tokens shared across classes).
+    class_frac: f32,
+}
+
+impl SyntheticText {
+    pub fn new(seed: u64, vocab: usize, seq_len: usize, classes: usize) -> Self {
+        let mut rng = Rng::seed(seed ^ 0x7E47);
+        let perms = (0..classes)
+            .map(|_| {
+                let mut p: Vec<u32> = (1..vocab as u32).collect(); // 0 = pad
+                rng.shuffle(&mut p);
+                p
+            })
+            .collect();
+        SyntheticText { vocab, seq_len, classes, perms, zipf_s: 1.3, class_frac: 0.5 }
+    }
+
+    /// Paper-shaped IMDB stand-in: vocab 2000, binary labels.
+    pub fn imdb_like(seed: u64, seq_len: usize) -> Self {
+        Self::new(seed, 2000, seq_len, 2)
+    }
+
+    fn render(&self, rng: &mut Rng, label: usize, buf: &mut [f32]) {
+        debug_assert_eq!(buf.len(), self.seq_len);
+        let len = self.seq_len / 4 + rng.gen_range(self.seq_len - self.seq_len / 4);
+        for slot in buf.iter_mut().take(len) {
+            let tok = if rng.next_f32() < self.class_frac {
+                // Class-specific: low Zipf ranks through this class's perm.
+                self.perms[label][rng.zipf(self.vocab - 1, self.zipf_s)]
+            } else {
+                // Neutral: shared Zipf head (perm of class 0 reversed tail
+                // would re-correlate; use raw token ids).
+                (1 + rng.zipf(self.vocab - 1, self.zipf_s)) as u32
+            };
+            *slot = tok as f32;
+        }
+        for slot in buf.iter_mut().skip(len) {
+            *slot = 0.0; // pad
+        }
+    }
+}
+
+impl Dataset for SyntheticText {
+    fn x_len(&self) -> usize {
+        self.seq_len
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn integer_x(&self) -> bool {
+        true
+    }
+
+    fn sample(&self, rng: &mut Rng, buf: &mut [f32]) -> i32 {
+        let label = rng.gen_range(self.classes);
+        self.render(rng, label, buf);
+        label as i32
+    }
+
+    fn sample_class(&self, rng: &mut Rng, label: i32, buf: &mut [f32]) {
+        self.render(rng, label as usize, buf);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_in_vocab_and_padded() {
+        let ds = SyntheticText::imdb_like(3, 64);
+        let mut rng = Rng::seed(1);
+        let mut buf = vec![0.0f32; 64];
+        for _ in 0..20 {
+            ds.sample(&mut rng, &mut buf);
+            assert!(buf.iter().all(|&t| t >= 0.0 && t < 2000.0));
+            // Once padding starts it continues to the end.
+            let first_pad = buf.iter().position(|&t| t == 0.0);
+            if let Some(i) = first_pad {
+                assert!(buf[i..].iter().all(|&t| t == 0.0));
+                assert!(i >= 16, "min length L/4");
+            }
+        }
+    }
+
+    #[test]
+    fn classes_use_different_token_heads() {
+        let ds = SyntheticText::imdb_like(11, 64);
+        let mut rng = Rng::seed(2);
+        let mut buf = vec![0.0f32; 64];
+        let mut head = |label: i32| -> std::collections::BTreeSet<u32> {
+            let mut counts = std::collections::BTreeMap::new();
+            for _ in 0..200 {
+                ds.sample_class(&mut rng, label, &mut buf);
+                for &t in buf.iter().filter(|&&t| t != 0.0) {
+                    *counts.entry(t as u32).or_insert(0usize) += 1;
+                }
+            }
+            let mut v: Vec<_> = counts.into_iter().collect();
+            v.sort_by_key(|&(_, c)| std::cmp::Reverse(c));
+            v.into_iter().take(10).map(|(t, _)| t).collect()
+        };
+        let h0 = head(0);
+        let h1 = head(1);
+        let overlap = h0.intersection(&h1).count();
+        assert!(overlap < 8, "class token heads overlap too much: {overlap}");
+    }
+
+    #[test]
+    fn batch_touches_small_vocab_subset() {
+        // The sparsity property Top-k exploits: one batch references far
+        // fewer distinct tokens than the vocab.
+        let ds = SyntheticText::imdb_like(5, 64);
+        let mut rng = Rng::seed(3);
+        let mut buf = vec![0.0f32; 64];
+        let mut distinct = std::collections::BTreeSet::new();
+        for _ in 0..16 {
+            ds.sample(&mut rng, &mut buf);
+            for &t in buf.iter() {
+                distinct.insert(t as u32);
+            }
+        }
+        assert!(distinct.len() < 500, "batch touched {} tokens", distinct.len());
+    }
+}

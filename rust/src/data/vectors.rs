@@ -1,0 +1,73 @@
+//! Gaussian-cluster feature vectors — the workload for the tiny `logreg`
+//! smoke model (integration tests / micro-benches of the full PJRT path).
+
+use crate::util::rng::Rng;
+
+use super::Dataset;
+
+pub struct GaussianVectors {
+    dim: usize,
+    classes: usize,
+    means: Vec<Vec<f32>>,
+    noise: f32,
+}
+
+impl GaussianVectors {
+    pub fn new(seed: u64, dim: usize, classes: usize, noise: f32) -> Self {
+        let mut rng = Rng::seed(seed ^ 0x6A55);
+        let means = (0..classes).map(|_| rng.normal_vec(dim)).collect();
+        GaussianVectors { dim, classes, means, noise }
+    }
+
+    fn render(&self, rng: &mut Rng, label: usize, buf: &mut [f32]) {
+        for (b, &m) in buf.iter_mut().zip(&self.means[label]) {
+            *b = m + self.noise * rng.normal();
+        }
+    }
+}
+
+impl Dataset for GaussianVectors {
+    fn x_len(&self) -> usize {
+        self.dim
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn sample(&self, rng: &mut Rng, buf: &mut [f32]) -> i32 {
+        let label = rng.gen_range(self.classes);
+        self.render(rng, label, buf);
+        label as i32
+    }
+
+    fn sample_class(&self, rng: &mut Rng, label: i32, buf: &mut [f32]) {
+        self.render(rng, label as usize, buf);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clusters_are_separable() {
+        let ds = GaussianVectors::new(1, 16, 4, 0.3);
+        let mut rng = Rng::seed(2);
+        let mut buf = vec![0.0f32; 16];
+        for _ in 0..50 {
+            let y = ds.sample(&mut rng, &mut buf) as usize;
+            // Nearest mean should be the true class.
+            let mut best = 0;
+            let mut best_d = f64::INFINITY;
+            for (c, m) in ds.means.iter().enumerate() {
+                let d = crate::util::math::dist_sq(m, &buf);
+                if d < best_d {
+                    best_d = d;
+                    best = c;
+                }
+            }
+            assert_eq!(best, y);
+        }
+    }
+}

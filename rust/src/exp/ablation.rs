@@ -1,0 +1,121 @@
+//! Ablations for the design choices DESIGN.md §7 calls out:
+//!
+//! 1. Error feedback on/off (the paper's §2.1 motivation for EF).
+//! 2. Compression ratio sweep k/d (Remark 1: q² = 1 − k/d).
+//! 3. iid vs Dirichlet non-iid shards (Theorem 1's σ_g term).
+//!
+//! Output: `ablation.csv`.
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::exp::common::{self, ExpOpts};
+use crate::util::csv::CsvWriter;
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    eprintln!("=== ablation: EF on/off, ratio sweep, iid vs non-iid ===");
+    let mut w = CsvWriter::create(
+        &opts.results_dir.join("ablation.csv"),
+        &["study", "setting", "final_loss", "accuracy", "uplink_mb"],
+    )?;
+    let rounds = opts.scale_rounds(800, 80);
+
+    // (1) EF on/off at aggressive compression.
+    for (label, algo) in [
+        ("ef_on", "comp-ams-topk:0.01"),
+        ("ef_off", "comp-ams-topk:0.01:noef"),
+        ("ef_on_bs", "comp-ams-blocksign:64"),
+        ("ef_off_bs", "comp-ams-blocksign:64:noef"),
+    ] {
+        let mut cfg = TrainConfig::preset("logistic", algo);
+        opts.apply(&mut cfg);
+        cfg.rounds = rounds;
+        cfg.eval_every = 0;
+        let run = common::run_one(&cfg)?;
+        w.row(&[
+            "error_feedback".into(),
+            label.into(),
+            format!("{:.4}", run.final_train_loss(20)),
+            format!("{:.4}", run.final_eval.accuracy),
+            format!("{:.3}", run.uplink_bits() as f64 / 8e6),
+        ])?;
+    }
+
+    // (2) Ratio sweep.
+    for ratio in ["0.001", "0.01", "0.1", "1.0"] {
+        let mut cfg =
+            TrainConfig::preset("logistic", &format!("comp-ams-topk:{ratio}"));
+        opts.apply(&mut cfg);
+        cfg.rounds = rounds;
+        cfg.eval_every = 0;
+        let run = common::run_one(&cfg)?;
+        w.row(&[
+            "topk_ratio".into(),
+            ratio.into(),
+            format!("{:.4}", run.final_train_loss(20)),
+            format!("{:.4}", run.final_eval.accuracy),
+            format!("{:.3}", run.uplink_bits() as f64 / 8e6),
+        ])?;
+    }
+
+    // (2b) Compressor family shoot-out at matched sparsity/precision:
+    // f32 vs f16 Top-k values, Random-k, and unbiased QSGD quantization.
+    for comp in ["topk:0.01", "topk16:0.01", "randomk:0.01", "qsgd:4"] {
+        let mut cfg = TrainConfig::preset("logistic", &format!("comp-ams-{comp}"));
+        opts.apply(&mut cfg);
+        cfg.rounds = rounds;
+        cfg.eval_every = 0;
+        let run = common::run_one(&cfg)?;
+        w.row(&[
+            "compressor_family".into(),
+            comp.into(),
+            format!("{:.4}", run.final_train_loss(20)),
+            format!("{:.4}", run.final_eval.accuracy),
+            format!("{:.3}", run.uplink_bits() as f64 / 8e6),
+        ])?;
+    }
+
+    // (3) iid vs non-iid — on the quadratic, whose sharding knob maps to
+    // an exact σ_g (Assumption 4(ii); the logistic substrate ignores
+    // sharding, and the PJRT image models take Dirichlet label weights —
+    // see coordinator::trainer::build_workload).
+    for sharding in ["iid", "dirichlet:0.5", "dirichlet:0.1"] {
+        let mut cfg = TrainConfig::preset("quadratic", "comp-ams-topk:0.05");
+        opts.apply(&mut cfg);
+        cfg.rounds = rounds;
+        cfg.lr = 0.02;
+        cfg.sharding = sharding.into();
+        cfg.eval_every = 0;
+        let run = common::run_one(&cfg)?;
+        w.row(&[
+            "sharding".into(),
+            sharding.into(),
+            format!("{:.4}", run.final_train_loss(20)),
+            format!("{:.4}", run.final_eval.accuracy),
+            format!("{:.3}", run.uplink_bits() as f64 / 8e6),
+        ])?;
+    }
+
+    // (4) Server-update backend (pure Rust vs Pallas fused artifact) on
+    // the PJRT smoke model.
+    for fused in [false, true] {
+        let mut cfg = TrainConfig::preset("logreg", "comp-ams-topk:0.1");
+        opts.apply(&mut cfg);
+        cfg.workers = 4;
+        cfg.rounds = opts.scale_rounds(60, 10);
+        cfg.fused_update = fused;
+        cfg.eval_every = 0;
+        let run = common::run_one(&cfg)?;
+        w.row(&[
+            "server_backend".into(),
+            if fused { "pallas_fused" } else { "pure_rust" }.into(),
+            format!("{:.4}", run.final_train_loss(10)),
+            format!("{:.4}", run.final_eval.accuracy),
+            format!("{:.3}", run.uplink_bits() as f64 / 8e6),
+        ])?;
+    }
+
+    w.flush()?;
+    eprintln!("  wrote {}", opts.results_dir.join("ablation.csv").display());
+    Ok(())
+}

@@ -1,0 +1,133 @@
+//! Shared experiment plumbing: run sets of configs, dump metric CSVs,
+//! print aligned summary tables.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::coordinator::metrics::RunResult;
+use crate::coordinator::trainer::train;
+use crate::util::csv::CsvWriter;
+
+#[derive(Clone, Debug)]
+pub struct ExpOpts {
+    /// Shrink round budgets for smoke runs.
+    pub fast: bool,
+    pub artifacts: PathBuf,
+    pub results_dir: PathBuf,
+    pub seed: u64,
+    /// Per-round console logging.
+    pub verbose: bool,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        ExpOpts {
+            fast: false,
+            artifacts: PathBuf::from("artifacts"),
+            results_dir: PathBuf::from("results"),
+            seed: 42,
+            verbose: false,
+        }
+    }
+}
+
+impl ExpOpts {
+    pub fn scale_rounds(&self, full: u64, fast: u64) -> u64 {
+        if self.fast {
+            fast
+        } else {
+            full
+        }
+    }
+
+    pub fn apply(&self, cfg: &mut TrainConfig) {
+        cfg.artifacts = self.artifacts.clone();
+        cfg.seed = self.seed;
+        if self.verbose {
+            cfg.log_every = 10;
+        }
+    }
+}
+
+/// Train one config, echoing a one-line summary.
+pub fn run_one(cfg: &TrainConfig) -> Result<RunResult> {
+    let run = train(cfg)?;
+    eprintln!(
+        "  {:<36} loss {:.4}  acc {:>6}  uplink {:>9.2} MB  {:>8.1} ms",
+        format!("{}/{}", run.model, run.algo),
+        run.final_train_loss(10),
+        if run.final_eval.accuracy.is_nan() {
+            "-".to_string()
+        } else {
+            format!("{:.4}", run.final_eval.accuracy)
+        },
+        run.uplink_bits() as f64 / 8e6,
+        run.total_wall_ms,
+    );
+    Ok(run)
+}
+
+/// Dump per-round metrics for a set of labelled runs into one CSV with
+/// the standard schema (the input every figure is re-plotted from).
+pub fn write_curves_csv(
+    path: &PathBuf,
+    runs: &[(String, &RunResult)],
+) -> Result<()> {
+    let mut w = CsvWriter::create(
+        path,
+        &[
+            "task", "algo", "workers", "round", "epoch", "train_loss",
+            "test_loss", "test_acc", "uplink_bits", "downlink_bits", "lr",
+        ],
+    )?;
+    for (task, run) in runs {
+        for m in &run.metrics {
+            let (tl, ta) = match m.eval {
+                Some(e) => (format!("{:.6}", e.loss), format!("{:.6}", e.accuracy)),
+                None => (String::new(), String::new()),
+            };
+            w.row(&[
+                task.clone(),
+                run.algo.clone(),
+                run.workers.to_string(),
+                m.round.to_string(),
+                format!("{:.4}", m.epoch),
+                format!("{:.6}", m.train_loss),
+                tl,
+                ta,
+                m.uplink_bits.to_string(),
+                m.downlink_bits.to_string(),
+                format!("{:.6e}", m.lr),
+            ])?;
+        }
+    }
+    w.flush()?;
+    eprintln!("  wrote {}", path.display());
+    Ok(())
+}
+
+/// The paper's five Fig. 1 methods (§5.1).
+pub fn paper_methods() -> Vec<&'static str> {
+    vec![
+        "dist-ams",
+        "comp-ams-topk:0.01",
+        "comp-ams-blocksign:4096",
+        "qadam",
+        "1bitadam",
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_rounds_honors_fast() {
+        let mut o = ExpOpts::default();
+        assert_eq!(o.scale_rounds(1000, 10), 1000);
+        o.fast = true;
+        assert_eq!(o.scale_rounds(1000, 10), 10);
+    }
+}

@@ -1,0 +1,78 @@
+//! Figures 1 & 2: train loss / test accuracy vs. epochs (Fig. 1) and vs.
+//! bits uplinked (Fig. 2) on the three paper workloads with n=16 workers.
+//!
+//! Paper setup (§5.1): MNIST+CNN (b=32), CIFAR-10+LeNet (b=32),
+//! IMDB+LSTM (b=16); methods Dist-AMS, COMP-AMS Top-k(1%),
+//! COMP-AMS Block-Sign, QAdam, 1BitAdam; β=(0.9, 0.999), ε=1e-8.
+//! Both figures come from the same runs, so this driver emits
+//! `fig1.csv` (curves keyed by epoch) and `fig2.csv` (keyed by bits).
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::exp::common::{self, ExpOpts};
+
+struct Task {
+    model: &'static str,
+    lr: f32,
+    rounds_full: u64,
+    rounds_fast: u64,
+}
+
+// Round budgets sized for the 1-core testbed (~0.55 synthetic epochs at
+// the paper's n=16 batch geometry); the paper trains ~100 epochs on a
+// V100 cluster. Method *ordering* stabilizes within this budget; heavy
+// compressors are still mid-transient on CIFAR (EXPERIMENTS.md §FIG1).
+const TASKS: &[Task] = &[
+    Task { model: "mnist_cnn", lr: 1e-3, rounds_full: 64, rounds_fast: 12 },
+    Task { model: "cifar_lenet", lr: 1e-3, rounds_full: 64, rounds_fast: 12 },
+    Task { model: "imdb_lstm", lr: 3e-3, rounds_full: 64, rounds_fast: 12 },
+];
+
+pub fn run(opts: &ExpOpts, as_fig2: bool) -> Result<()> {
+    let label = if as_fig2 { "fig2" } else { "fig1" };
+    eprintln!("=== {label}: loss/accuracy curves, n=16, 5 methods, 3 workloads ===");
+    let mut all: Vec<(String, crate::coordinator::metrics::RunResult)> = Vec::new();
+    for task in TASKS {
+        eprintln!("[{label}] task {}", task.model);
+        for algo in common::paper_methods() {
+            let rounds = opts.scale_rounds(task.rounds_full, task.rounds_fast);
+            // Per-method tuning, as the paper does over Table 1's grids:
+            // 1BitAdam needs a longer warm-up than total/20 at this round
+            // budget plus a smaller lr or its frozen preconditioner
+            // diverges (the §5.4 sensitivity; see exp::ablation).
+            let algo_s = if algo == "1bitadam" {
+                format!("1bitadam:{}", (rounds / 5).max(2))
+            } else {
+                algo.to_string()
+            };
+            let mut cfg = TrainConfig::preset(task.model, &algo_s);
+            opts.apply(&mut cfg);
+            cfg.workers = 16;
+            cfg.lr = if algo == "1bitadam" { task.lr / 3.0 } else { task.lr };
+            cfg.rounds = rounds;
+            cfg.eval_every = (cfg.rounds / 8).max(1);
+            cfg.eval_batches = if opts.fast { 2 } else { 4 };
+            let run = common::run_one(&cfg)?;
+            all.push((task.model.to_string(), run));
+        }
+    }
+    let refs: Vec<(String, &crate::coordinator::metrics::RunResult)> =
+        all.iter().map(|(t, r)| (t.clone(), r)).collect();
+    common::write_curves_csv(&opts.results_dir.join("fig1.csv"), &refs)?;
+    common::write_curves_csv(&opts.results_dir.join("fig2.csv"), &refs)?;
+
+    // Console summary: the paper's headline comparisons.
+    eprintln!("\n{label} summary (final train loss / test acc / uplink MB):");
+    for (task, run) in &all {
+        eprintln!(
+            "  {:<12} {:<28} {:>8.4} {:>8.4} {:>10.2}",
+            task,
+            run.algo,
+            run.final_train_loss(10),
+            run.final_eval.accuracy,
+            run.uplink_bits() as f64 / 8e6
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,36 @@
+//! Experiment drivers: one per table/figure in the paper's evaluation
+//! (DESIGN.md §6 index), each emitting a CSV under `results/` plus a
+//! console summary with the paper-vs-measured comparison hooks used by
+//! EXPERIMENTS.md.
+//!
+//! Every driver accepts a `fast` flag (CLI `--fast`) that shrinks round
+//! budgets for smoke runs; the full budgets are what EXPERIMENTS.md
+//! records.
+
+pub mod ablation;
+pub mod common;
+pub mod fig1;
+pub mod fig3;
+pub mod fig4;
+pub mod table1;
+
+pub use common::ExpOpts;
+
+use anyhow::Result;
+
+/// Dispatch an experiment by name (the `comp-ams exp <name>` CLI).
+pub fn run(name: &str, opts: &ExpOpts) -> Result<()> {
+    match name {
+        "fig1" => fig1::run(opts, false),
+        // Figure 2 is the same runs as Figure 1 plotted against uplink
+        // bits; the driver emits both CSVs in one pass.
+        "fig2" => fig1::run(opts, true),
+        "fig3" => fig3::run(opts),
+        "fig4" => fig4::run(opts),
+        "table1" => table1::run(opts),
+        "ablation" => ablation::run(opts),
+        other => anyhow::bail!(
+            "unknown experiment '{other}' (fig1|fig2|fig3|fig4|table1|ablation)"
+        ),
+    }
+}

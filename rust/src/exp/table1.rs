@@ -1,0 +1,85 @@
+//! Table 1: learning-rate grid search per method.
+//!
+//! The paper reports the search grids and states every result uses the
+//! best grid point averaged over 3 seeds. This driver reproduces that
+//! machinery: it sweeps each method's grid on a workload, reports the
+//! best lr and its accuracy, and writes `table1.csv`. (On the fast
+//! analytic substrate by default — the sweep is 4 methods × ~10 grid
+//! points × 3 seeds; PJRT workloads would take hours on 1 core.)
+
+use anyhow::Result;
+
+use crate::config::TrainConfig;
+use crate::exp::common::{self, ExpOpts};
+use crate::util::csv::CsvWriter;
+
+/// The paper's Table 1 grids (Appendix A).
+pub fn grid_for(algo: &str) -> Vec<f32> {
+    let standard = vec![
+        0.00001, 0.00003, 0.00005, 0.0001, 0.0003, 0.0005, 0.001, 0.003, 0.005, 0.01,
+    ];
+    let qadam = vec![
+        0.0001, 0.0003, 0.0005, 0.001, 0.003, 0.005, 0.01, 0.03, 0.05, 0.1, 0.3, 0.5,
+    ];
+    if algo.starts_with("qadam") {
+        qadam
+    } else {
+        standard
+    }
+}
+
+pub fn run(opts: &ExpOpts) -> Result<()> {
+    eprintln!("=== table1: lr grid search, best-of-grid over 3 seeds ===");
+    let mut w = CsvWriter::create(
+        &opts.results_dir.join("table1.csv"),
+        &["algo", "lr", "mean_final_loss", "mean_acc", "is_best"],
+    )?;
+    let rounds = opts.scale_rounds(400, 60);
+    let seeds = if opts.fast { 1 } else { 3 };
+    for algo in ["dist-ams", "comp-ams-topk:0.01", "comp-ams-blocksign:64", "qadam", "1bitadam"] {
+        // The analytic workload saturates at tiny lrs from the paper's
+        // grids; scale the grid up by 10x to put the optimum mid-grid
+        // (the *structure* — per-method grids, QAdam needing larger lr —
+        // is what Table 1 documents).
+        let grid: Vec<f32> = grid_for(algo).iter().map(|&lr| lr * 10.0).collect();
+        let mut rows: Vec<(f32, f32, f32)> = Vec::new();
+        for &lr in &grid {
+            let mut loss_sum = 0.0f32;
+            let mut acc_sum = 0.0f32;
+            for s in 0..seeds {
+                let mut cfg = TrainConfig::preset("logistic", algo);
+                opts.apply(&mut cfg);
+                cfg.workers = 8;
+                cfg.rounds = rounds;
+                cfg.lr = lr;
+                cfg.seed = opts.seed + s as u64;
+                cfg.eval_every = 0;
+                let run = common::run_one(&cfg)?;
+                loss_sum += run.final_train_loss(20);
+                acc_sum += run.final_eval.accuracy;
+            }
+            rows.push((lr, loss_sum / seeds as f32, acc_sum / seeds as f32));
+        }
+        let best = rows
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1 .2.partial_cmp(&b.1 .2).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        for (i, (lr, loss, acc)) in rows.iter().enumerate() {
+            w.row(&[
+                algo.to_string(),
+                format!("{lr:.5}"),
+                format!("{loss:.4}"),
+                format!("{acc:.4}"),
+                (i == best).to_string(),
+            ])?;
+        }
+        eprintln!(
+            "  {:<28} best lr {:.5} acc {:.4}",
+            algo, rows[best].0, rows[best].2
+        );
+    }
+    w.flush()?;
+    Ok(())
+}

@@ -1,0 +1,45 @@
+//! Gradient sources: where a worker's stochastic gradient comes from.
+//!
+//! The coordinator is generic over [`GradSource`], with two families:
+//!
+//! - [`pjrt_model::PjrtSource`] — the real path: the AOT-compiled JAX
+//!   model (L2, with L1 Pallas kernels inside) executed via PJRT on a
+//!   synthetic-data shard.
+//! - [`quadratic::QuadraticSource`] / [`logistic::LogisticSource`] —
+//!   analytic pure-Rust objectives with *controllable* local variance σ²
+//!   and global variance σ_g² (Assumption 4), used by the property /
+//!   integration tests and the fast mode of the speedup experiment where
+//!   thousands of rounds are needed.
+
+pub mod logistic;
+pub mod pjrt_model;
+pub mod quadratic;
+
+pub use logistic::LogisticSource;
+pub use pjrt_model::{PjrtEvaluator, PjrtSource};
+pub use quadratic::QuadraticSource;
+
+use anyhow::Result;
+
+/// A worker-local stochastic gradient oracle.
+pub trait GradSource {
+    fn dim(&self) -> usize;
+
+    /// Loss and gradient of the worker's objective on its next local
+    /// mini-batch, evaluated at `theta`. `round` seeds per-round
+    /// randomness (dropout) deterministically.
+    fn grad(&mut self, theta: &[f32], round: u64) -> Result<(f32, Vec<f32>)>;
+}
+
+/// Test-set statistics.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EvalStats {
+    pub loss: f32,
+    /// Fraction correct in [0,1]; NaN for objectives without accuracy.
+    pub accuracy: f32,
+}
+
+/// Periodic held-out evaluation of the global model.
+pub trait Evaluator {
+    fn eval(&mut self, theta: &[f32]) -> Result<EvalStats>;
+}

@@ -1,0 +1,105 @@
+//! The real gradient path: AOT-compiled JAX model via PJRT.
+//!
+//! Each worker holds a shared reference to the compiled [`ModelBundle`]
+//! (executables are stateless), its own data RNG stream, and — in non-iid
+//! mode — its own label-distribution weights. One `grad()` call is one
+//! PJRT execution of the model's fused fwd+bwd HLO.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::data::{self, lm::ByteCorpus, Dataset};
+use crate::runtime::executable::Batch;
+use crate::runtime::ModelBundle;
+use crate::util::rng::Rng;
+
+use super::{EvalStats, Evaluator, GradSource};
+
+/// The worker's local data stream.
+pub enum ShardStream {
+    /// Labeled classification dataset, optional label weights (non-iid).
+    Classif { ds: Rc<dyn Dataset>, weights: Option<Vec<f32>> },
+    /// Byte-LM corpus windows.
+    Lm { corpus: Rc<ByteCorpus> },
+}
+
+impl ShardStream {
+    fn next_batch(&self, rng: &mut Rng, batch: usize) -> Batch {
+        match self {
+            ShardStream::Classif { ds, weights } => {
+                data::make_batch(ds.as_ref(), rng, batch, weights.as_deref())
+            }
+            ShardStream::Lm { corpus } => corpus.make_lm_batch(rng, batch),
+        }
+    }
+}
+
+pub struct PjrtSource {
+    bundle: Rc<ModelBundle>,
+    stream: ShardStream,
+    rng: Rng,
+    worker: usize,
+}
+
+impl PjrtSource {
+    pub fn new(bundle: Rc<ModelBundle>, stream: ShardStream, seed: u64, worker: usize) -> Self {
+        PjrtSource {
+            bundle,
+            stream,
+            rng: Rng::seed(seed ^ (worker as u64 + 1).wrapping_mul(0x9E37_79B9)),
+            worker,
+        }
+    }
+}
+
+impl GradSource for PjrtSource {
+    fn dim(&self) -> usize {
+        self.bundle.entry.p
+    }
+
+    fn grad(&mut self, theta: &[f32], round: u64) -> Result<(f32, Vec<f32>)> {
+        let batch = self.stream.next_batch(&mut self.rng, self.bundle.entry.batch);
+        // Dropout seed: unique per (round, worker), reproducible.
+        let seed = (round as i32)
+            .wrapping_mul(1_000_003)
+            .wrapping_add(self.worker as i32);
+        self.bundle.grad.run(theta, &batch, seed)
+    }
+}
+
+/// Held-out evaluation: a fixed set of pre-drawn test batches.
+pub struct PjrtEvaluator {
+    bundle: Rc<ModelBundle>,
+    test_batches: Vec<Batch>,
+}
+
+impl PjrtEvaluator {
+    /// Draw `n_batches` test batches from the dataset with a dedicated
+    /// seed stream (disjoint from all training streams).
+    pub fn new(bundle: Rc<ModelBundle>, stream: &ShardStream, seed: u64, n_batches: usize) -> Self {
+        let mut rng = Rng::seed(seed ^ 0x7E57_7E57);
+        let test_batches = (0..n_batches)
+            .map(|_| stream.next_batch(&mut rng, bundle.entry.batch))
+            .collect();
+        PjrtEvaluator { bundle, test_batches }
+    }
+}
+
+impl Evaluator for PjrtEvaluator {
+    fn eval(&mut self, theta: &[f32]) -> Result<EvalStats> {
+        let mut loss = 0.0f64;
+        let mut correct = 0u64;
+        let mut total = 0u64;
+        for b in &self.test_batches {
+            let (l, c) = self.bundle.eval.run(theta, b)?;
+            loss += l as f64;
+            correct += c as u64;
+            total += self.bundle.entry.labels_per_batch() as u64;
+        }
+        Ok(EvalStats {
+            loss: (loss / self.test_batches.len() as f64) as f32,
+            accuracy: correct as f32 / total as f32,
+        })
+    }
+}

@@ -1,0 +1,209 @@
+//! Analytic quadratic objective with controllable σ² and σ_g².
+//!
+//! Worker i minimizes f_i(θ) = 0.5 θᵀ A θ − b_iᵀ θ with a shared PSD
+//! diagonal A and worker-specific b_i = b̄ + δ_i. Then:
+//!   ∇f_i(θ) = Aθ − b_i,         global optimum θ* = A⁻¹ b̄,
+//!   σ_g² = mean ‖δ_i‖²          (Assumption 4(ii), exactly),
+//! and the stochastic oracle adds N(0, σ²/d I) noise (Assumption 4(i)).
+//!
+//! Because every quantity is closed-form, the integration tests can
+//! assert convergence *to θ\** and the speedup experiment can measure
+//! iterations-to-ε cheaply over thousands of rounds.
+
+use anyhow::Result;
+
+use crate::util::math;
+use crate::util::rng::Rng;
+
+use super::{EvalStats, Evaluator, GradSource};
+
+/// Shared problem definition (one per experiment; workers hold clones).
+#[derive(Clone)]
+pub struct QuadraticProblem {
+    /// Diagonal of A (condition number controls difficulty).
+    pub a: Vec<f32>,
+    /// Mean linear term b̄.
+    pub b_mean: Vec<f32>,
+    /// Per-worker offsets δ_i (empty ⇒ iid, σ_g = 0).
+    pub deltas: Vec<Vec<f32>>,
+    /// Stochastic gradient noise std (total, split across coords).
+    pub sigma: f32,
+}
+
+impl QuadraticProblem {
+    pub fn new(seed: u64, dim: usize, n_workers: usize, cond: f32, sigma: f32, sigma_g: f32) -> Self {
+        let mut rng = Rng::seed(seed ^ 0x9A4D);
+        // Log-uniform spectrum in [1, cond].
+        let a: Vec<f32> = (0..dim)
+            .map(|i| cond.powf(i as f32 / (dim.max(2) - 1) as f32))
+            .collect();
+        let b_mean: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+        let deltas: Vec<Vec<f32>> = (0..n_workers)
+            .map(|_| {
+                let mut d = rng.normal_vec(dim);
+                let norm = math::norm2(&d) as f32;
+                let target = sigma_g;
+                for x in &mut d {
+                    *x *= target / norm.max(1e-9);
+                }
+                d
+            })
+            .collect();
+        // Center deltas so that mean_i b_i == b_mean exactly.
+        let mut mean_delta = vec![0.0f32; dim];
+        for d in &deltas {
+            math::axpy(1.0 / n_workers as f32, d, &mut mean_delta);
+        }
+        let deltas = deltas
+            .into_iter()
+            .map(|mut d| {
+                for (x, &m) in d.iter_mut().zip(&mean_delta) {
+                    *x -= m;
+                }
+                d
+            })
+            .collect();
+        QuadraticProblem { a, b_mean, deltas, sigma }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.a.len()
+    }
+
+    /// Global optimum θ* = A⁻¹ b̄.
+    pub fn optimum(&self) -> Vec<f32> {
+        self.a.iter().zip(&self.b_mean).map(|(&a, &b)| b / a).collect()
+    }
+
+    /// Global objective f(θ) (average over workers; the δ_i average out
+    /// in the linear term because they are centered).
+    pub fn global_loss(&self, theta: &[f32]) -> f32 {
+        let mut f = 0.0f64;
+        for i in 0..self.dim() {
+            f += 0.5 * self.a[i] as f64 * (theta[i] as f64).powi(2)
+                - self.b_mean[i] as f64 * theta[i] as f64;
+        }
+        f as f32
+    }
+
+    /// Exact σ_g² of this instance (Assumption 4(ii)).
+    pub fn sigma_g_sq(&self) -> f32 {
+        if self.deltas.is_empty() {
+            return 0.0;
+        }
+        let total: f64 = self.deltas.iter().map(|d| math::norm2_sq(d)).sum();
+        (total / self.deltas.len() as f64) as f32
+    }
+
+    pub fn source_for(&self, worker: usize, seed: u64) -> QuadraticSource {
+        QuadraticSource {
+            problem: self.clone(),
+            worker,
+            rng: Rng::seed(seed ^ (worker as u64).wrapping_mul(0xABCD_1234_5678)),
+        }
+    }
+}
+
+pub struct QuadraticSource {
+    problem: QuadraticProblem,
+    worker: usize,
+    rng: Rng,
+}
+
+impl GradSource for QuadraticSource {
+    fn dim(&self) -> usize {
+        self.problem.dim()
+    }
+
+    fn grad(&mut self, theta: &[f32], _round: u64) -> Result<(f32, Vec<f32>)> {
+        let p = &self.problem;
+        let d = p.dim();
+        let noise_std = p.sigma / (d as f32).sqrt();
+        let delta = p.deltas.get(self.worker);
+        let mut g = Vec::with_capacity(d);
+        let mut loss = 0.0f64;
+        for i in 0..d {
+            let b_i = p.b_mean[i] + delta.map(|dl| dl[i]).unwrap_or(0.0);
+            let gi = p.a[i] * theta[i] - b_i + noise_std * self.rng.normal();
+            g.push(gi);
+            loss += 0.5 * p.a[i] as f64 * (theta[i] as f64).powi(2)
+                - b_i as f64 * theta[i] as f64;
+        }
+        Ok((loss as f32, g))
+    }
+}
+
+/// Evaluator: exact global loss (no accuracy notion).
+pub struct QuadraticEvaluator {
+    pub problem: QuadraticProblem,
+}
+
+impl Evaluator for QuadraticEvaluator {
+    fn eval(&mut self, theta: &[f32]) -> Result<EvalStats> {
+        Ok(EvalStats { loss: self.problem.global_loss(theta), accuracy: f32::NAN })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn optimum_zeroes_mean_gradient() {
+        let p = QuadraticProblem::new(1, 50, 4, 10.0, 0.0, 2.0);
+        let opt = p.optimum();
+        // Average worker gradient at θ* must vanish (deltas are centered).
+        let mut avg = vec![0.0f32; 50];
+        for w in 0..4 {
+            let mut s = p.source_for(w, 9);
+            let (_, g) = s.grad(&opt, 0).unwrap();
+            math::axpy(0.25, &g, &mut avg);
+        }
+        assert!(math::norm2(&avg) < 1e-3, "{}", math::norm2(&avg));
+    }
+
+    #[test]
+    fn sigma_g_matches_request() {
+        let p = QuadraticProblem::new(2, 64, 8, 5.0, 0.0, 3.0);
+        // Centering shifts norms slightly; should be in the ballpark.
+        let sg = p.sigma_g_sq().sqrt();
+        assert!((sg - 3.0).abs() < 1.0, "sigma_g={sg}");
+        let p0 = QuadraticProblem::new(2, 64, 8, 5.0, 0.0, 0.0);
+        assert!(p0.sigma_g_sq() < 1e-9);
+    }
+
+    #[test]
+    fn gradient_descent_converges_to_optimum() {
+        let p = QuadraticProblem::new(3, 20, 1, 4.0, 0.0, 0.0);
+        let mut s = p.source_for(0, 1);
+        let mut theta = vec![0.0f32; 20];
+        for _ in 0..400 {
+            let (_, g) = s.grad(&theta, 0).unwrap();
+            math::axpy(-0.2, &g, &mut theta);
+        }
+        let opt = p.optimum();
+        assert!(math::dist_sq(&theta, &opt) < 1e-6);
+    }
+
+    #[test]
+    fn noisy_gradient_is_unbiased() {
+        let p = QuadraticProblem::new(4, 10, 1, 2.0, 1.0, 0.0);
+        let mut s = p.source_for(0, 2);
+        let theta = vec![0.5f32; 10];
+        let mut mean = vec![0.0f32; 10];
+        let n = 2000;
+        for _ in 0..n {
+            let (_, g) = s.grad(&theta, 0).unwrap();
+            math::axpy(1.0 / n as f32, &g, &mut mean);
+        }
+        let mut s2 = p.source_for(0, 3);
+        let (_, exact) = {
+            let mut p2 = p.clone();
+            p2.sigma = 0.0;
+            let mut sx = QuadraticSource { problem: p2, worker: 0, rng: Rng::seed(1) };
+            sx.grad(&theta, 0).unwrap()
+        };
+        let _ = &mut s2;
+        assert!(math::dist_sq(&mean, &exact) < 0.01);
+    }
+}

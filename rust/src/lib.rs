@@ -1,0 +1,46 @@
+//! # COMP-AMS: distributed adaptive optimization with gradient compression
+//!
+//! Production-grade reproduction of *"On Distributed Adaptive Optimization
+//! with Gradient Compression"* (Li, Karimi, Li — ICLR 2022): a synchronous
+//! data-parallel training framework where each worker compresses its
+//! stochastic gradient (Top-k / Block-Sign) with error feedback, and a
+//! central leader averages the decoded gradients and applies an AMSGrad
+//! update whose moment state lives **only on the leader**.
+//!
+//! Three-layer architecture (see DESIGN.md):
+//! - **L3 (this crate)**: the coordinator — leader/worker round scheduler,
+//!   compression codecs + exact wire-format bit ledger, error feedback,
+//!   server optimizers, synthetic data substrates, experiment drivers.
+//! - **L2 (python/compile, build time)**: JAX models AOT-lowered to HLO
+//!   text, executed here through PJRT ([`runtime`]).
+//! - **L1 (python/compile/kernels, build time)**: Pallas kernels (fused
+//!   AMSGrad update, tiled matmul, block-sign codec) embedded in the HLO.
+//!
+//! Python never runs on the training path: after `make artifacts` the
+//! binary is self-contained.
+//!
+//! ## Quick start
+//! ```no_run
+//! use comp_ams::config::TrainConfig;
+//! use comp_ams::coordinator::trainer::train;
+//!
+//! let mut cfg = TrainConfig::preset("quadratic", "comp-ams-topk");
+//! cfg.workers = 8;
+//! cfg.rounds = 200;
+//! let run = train(&cfg).unwrap();
+//! println!("final loss {:.4}", run.metrics.last().unwrap().train_loss);
+//! ```
+
+pub mod algo;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod exp;
+pub mod grad;
+pub mod optim;
+pub mod runtime;
+pub mod testing;
+pub mod util;
+
+pub use config::TrainConfig;

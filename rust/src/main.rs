@@ -1,0 +1,167 @@
+//! `comp-ams` — launcher for the COMP-AMS distributed training framework.
+//!
+//! ```text
+//! comp-ams train --model mnist_cnn --algo comp-ams-topk:0.01 --workers 16 \
+//!                --rounds 200 --lr 0.001 [--sharding dirichlet:0.5]
+//! comp-ams train --config run.json
+//! comp-ams exp fig1|fig2|fig3|fig4|table1|ablation [--fast]
+//! comp-ams inspect [--artifacts artifacts]
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use comp_ams::config::{LrSchedule, TrainConfig};
+use comp_ams::coordinator::trainer::train;
+use comp_ams::exp::{self, ExpOpts};
+use comp_ams::runtime::Manifest;
+use comp_ams::util::cli::Args;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&args),
+        Some("exp") => cmd_exp(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some(other) => bail!("unknown command '{other}' (train | exp | inspect)"),
+        None => {
+            eprintln!("{}", USAGE);
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "\
+comp-ams — COMP-AMS distributed adaptive training (ICLR 2022 reproduction)
+
+commands:
+  train    run one training job
+           --model <name>      mnist_cnn|cifar_lenet|cifar_resnet|imdb_lstm|
+                               lm_small|logreg|quadratic|logistic
+           --algo <spec>       dist-ams|comp-ams-topk:R|comp-ams-blocksign:B|
+                               qadam|1bitadam[:W]|dist-sgd
+           --workers N --rounds N --lr F --seed N
+           --sharding iid|dirichlet:A   --eval-every N --log-every N
+           --fused true        use the Pallas fused AMSGrad artifact
+           --decay-at r1,r2 --decay-factor F
+           --config file.json  load a config (flags override)
+  exp      regenerate a paper artifact: fig1|fig2|fig3|fig4|table1|ablation
+           [--fast] [--seed N] [--artifacts DIR] [--results DIR] [--verbose]
+  inspect  print the artifact manifest";
+
+fn cmd_train(args: &Args) -> Result<()> {
+    args.ensure_known(&[
+        "model", "algo", "workers", "rounds", "lr", "seed", "sharding",
+        "eval-every", "eval-batches", "log-every", "fused", "threaded",
+        "artifacts", "config", "decay-at", "decay-factor", "rounds-per-epoch",
+    ])?;
+    let mut cfg = match args.get("config") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading config {path}"))?;
+            TrainConfig::from_json(&comp_ams::util::json::parse(&text)?)?
+        }
+        None => TrainConfig::preset(
+            args.get("model").unwrap_or("quadratic"),
+            args.get("algo").unwrap_or("comp-ams-topk:0.01"),
+        ),
+    };
+    if let Some(m) = args.get("model") {
+        cfg.model = m.into();
+    }
+    if let Some(a) = args.get("algo") {
+        cfg.algo = a.into();
+    }
+    cfg.workers = args.usize_or("workers", cfg.workers)?;
+    cfg.rounds = args.u64_or("rounds", cfg.rounds)?;
+    cfg.lr = args.f32_or("lr", cfg.lr)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.sharding = args.str_or("sharding", &cfg.sharding);
+    cfg.eval_every = args.u64_or("eval-every", cfg.eval_every)?;
+    cfg.eval_batches = args.usize_or("eval-batches", cfg.eval_batches)?;
+    cfg.log_every =
+        args.u64_or("log-every", if cfg.log_every == 0 { 10 } else { cfg.log_every })?;
+    cfg.fused_update = args.bool_or("fused", cfg.fused_update)?;
+    cfg.threaded = args.bool_or("threaded", cfg.threaded)?;
+    cfg.rounds_per_epoch = args.u64_or("rounds-per-epoch", cfg.rounds_per_epoch)?;
+    cfg.artifacts = PathBuf::from(args.str_or("artifacts", &cfg.artifacts.to_string_lossy()));
+    if let Some(at) = args.get("decay-at") {
+        let at: Vec<u64> = at
+            .split(',')
+            .map(|s| s.trim().parse().context("bad --decay-at"))
+            .collect::<Result<_>>()?;
+        cfg.schedule = LrSchedule::StepDecay {
+            at,
+            factor: args.f32_or("decay-factor", 10.0)?,
+        };
+    }
+
+    eprintln!(
+        "training {} with {} on {} workers, {} rounds (seed {})",
+        cfg.model, cfg.algo, cfg.workers, cfg.rounds, cfg.seed
+    );
+    let run = train(&cfg)?;
+    eprintln!(
+        "done: final train loss {:.4}, test loss {:.4}, test acc {:.4}",
+        run.final_train_loss(10),
+        run.final_eval.loss,
+        run.final_eval.accuracy
+    );
+    eprintln!(
+        "comm: uplink {:.2} MB, downlink {:.2} MB | wall {:.1}s | coord overhead {:.1}%",
+        run.uplink_bits() as f64 / 8e6,
+        run.metrics.last().map(|m| m.downlink_bits).unwrap_or(0) as f64 / 8e6,
+        run.total_wall_ms / 1e3,
+        run.coord_overhead * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    args.ensure_known(&["fast", "seed", "artifacts", "results", "verbose"])?;
+    let name = args
+        .positional
+        .get(1)
+        .context("usage: comp-ams exp <fig1|fig2|fig3|fig4|table1|ablation>")?;
+    let opts = ExpOpts {
+        fast: args.bool_or("fast", false)?,
+        artifacts: PathBuf::from(args.str_or("artifacts", "artifacts")),
+        results_dir: PathBuf::from(args.str_or("results", "results")),
+        seed: args.u64_or("seed", 42)?,
+        verbose: args.bool_or("verbose", false)?,
+    };
+    exp::run(name, &opts)
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    args.ensure_known(&["artifacts"])?;
+    let dir = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let m = Manifest::load(&dir.join("manifest.json"))?;
+    println!(
+        "optimizer: beta1={} beta2={} eps={}",
+        m.optimizer.beta1, m.optimizer.beta2, m.optimizer.eps
+    );
+    println!(
+        "{:<14} {:>10} {:>6}  {:<16} {:<8}",
+        "model", "params", "batch", "x_shape", "dtype"
+    );
+    for e in &m.models {
+        println!(
+            "{:<14} {:>10} {:>6}  {:<16} {:<8}",
+            e.name,
+            e.p,
+            e.batch,
+            format!("{:?}", e.x_shape),
+            format!("{:?}", e.x_dtype),
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,86 @@
+//! Adam (Kingma & Ba 2015) with bias correction — the server optimizer
+//! inside the QAdam / 1BitAdam baselines (their underlying method is Adam,
+//! not AMSGrad; see paper §5.4 discussion).
+
+use super::ServerOpt;
+
+pub struct Adam {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(dim: usize, beta1: f32, beta2: f32, eps: f32) -> Self {
+        Adam { m: vec![0.0; dim], v: vec![0.0; dim], beta1, beta2, eps, t: 0 }
+    }
+
+    pub fn default_hp(dim: usize) -> Self {
+        Self::new(dim, super::BETA1, super::BETA2, super::EPS)
+    }
+
+    /// Freeze and return the current second-moment estimate (1BitAdam's
+    /// end-of-warm-up step).
+    pub fn freeze_v(&self) -> Vec<f32> {
+        self.v.clone()
+    }
+}
+
+impl ServerOpt for Adam {
+    fn name(&self) -> String {
+        "adam".into()
+    }
+
+    fn dim(&self) -> usize {
+        self.m.len()
+    }
+
+    fn step(&mut self, theta: &mut [f32], grad: &[f32], lr: f32) {
+        self.t += 1;
+        let (b1, b2, eps) = (self.beta1, self.beta2, self.eps);
+        let bc1 = 1.0 - b1.powi(self.t as i32);
+        let bc2 = 1.0 - b2.powi(self.t as i32);
+        for i in 0..theta.len() {
+            let g = grad[i];
+            let m = b1 * self.m[i] + (1.0 - b1) * g;
+            let v = b2 * self.v[i] + (1.0 - b2) * g * g;
+            self.m[i] = m;
+            self.v[i] = v;
+            let mhat = m / bc1;
+            let vhat = v / bc2;
+            theta[i] -= lr * mhat / (vhat.sqrt() + eps);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::ServerOpt;
+
+    #[test]
+    fn first_step_is_lr_sized_regardless_of_grad_scale() {
+        // Bias correction makes the first Adam step ≈ lr * sign(g).
+        for &scale in &[0.01f32, 1.0, 100.0] {
+            let mut opt = Adam::default_hp(1);
+            let mut theta = vec![0.0f32];
+            opt.step(&mut theta, &[scale], 0.05);
+            assert!((theta[0] + 0.05).abs() < 1e-3, "scale={scale} got {}", theta[0]);
+        }
+    }
+
+    #[test]
+    fn freeze_v_snapshots_state() {
+        let mut opt = Adam::default_hp(4);
+        let mut theta = vec![1.0f32; 4];
+        for _ in 0..10 {
+            opt.step(&mut theta, &[0.5, -0.5, 1.0, -1.0], 0.01);
+        }
+        let frozen = opt.freeze_v();
+        assert_eq!(frozen, opt.v);
+        assert!(frozen.iter().all(|&v| v > 0.0));
+    }
+}

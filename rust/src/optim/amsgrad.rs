@@ -1,0 +1,112 @@
+//! AMSGrad (Reddi et al. 2018) — the paper's server optimizer.
+//!
+//! m_t   = β1 m_{t-1} + (1-β1) g_t
+//! v_t   = β2 v_{t-1} + (1-β2) g_t²
+//! v̂_t  = max(v̂_{t-1}, v_t)
+//! θ_{t+1} = θ_t − η m_t / √(v̂_t + ε)
+//!
+//! Two backends: the pure-Rust loop below (default, and the reference for
+//! the property tests), and the AOT-compiled L1 Pallas fused kernel via
+//! PJRT ([`crate::runtime::OptimizerExe`]) — selected by the coordinator
+//! config and compared in `bench_optim`.
+
+use super::ServerOpt;
+
+pub struct AmsGrad {
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub vhat: Vec<f32>,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+}
+
+impl AmsGrad {
+    pub fn new(dim: usize, beta1: f32, beta2: f32, eps: f32) -> Self {
+        AmsGrad {
+            m: vec![0.0; dim],
+            v: vec![0.0; dim],
+            vhat: vec![0.0; dim],
+            beta1,
+            beta2,
+            eps,
+        }
+    }
+
+    pub fn default_hp(dim: usize) -> Self {
+        Self::new(dim, super::BETA1, super::BETA2, super::EPS)
+    }
+}
+
+impl ServerOpt for AmsGrad {
+    fn name(&self) -> String {
+        "amsgrad".into()
+    }
+
+    fn dim(&self) -> usize {
+        self.m.len()
+    }
+
+    fn step(&mut self, theta: &mut [f32], grad: &[f32], lr: f32) {
+        debug_assert_eq!(theta.len(), self.m.len());
+        debug_assert_eq!(grad.len(), self.m.len());
+        let (b1, b2, eps) = (self.beta1, self.beta2, self.eps);
+        for i in 0..theta.len() {
+            let g = grad[i];
+            let m = b1 * self.m[i] + (1.0 - b1) * g;
+            let v = b2 * self.v[i] + (1.0 - b2) * g * g;
+            let vhat = self.vhat[i].max(v);
+            self.m[i] = m;
+            self.v[i] = v;
+            self.vhat[i] = vhat;
+            theta[i] -= lr * m / (vhat + eps).sqrt();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::{ServerOpt, BETA1, BETA2, EPS};
+
+    #[test]
+    fn single_step_matches_hand_math() {
+        let mut opt = AmsGrad::new(1, 0.9, 0.99, 1e-8);
+        let mut theta = vec![1.0f32];
+        opt.step(&mut theta, &[2.0], 0.1);
+        let m = 0.1 * 2.0;
+        let v = 0.01 * 4.0;
+        let want = 1.0 - 0.1 * m / (v as f32 + 1e-8).sqrt();
+        assert!((theta[0] - want).abs() < 1e-6, "{} vs {want}", theta[0]);
+    }
+
+    #[test]
+    fn vhat_is_monotone_nondecreasing() {
+        let mut opt = AmsGrad::default_hp(8);
+        let mut theta = vec![0.5f32; 8];
+        let mut prev = opt.vhat.clone();
+        for t in 0..50 {
+            let g: Vec<f32> = (0..8).map(|i| ((t * i) as f32).sin()).collect();
+            opt.step(&mut theta, &g, 0.01);
+            for (a, b) in opt.vhat.iter().zip(&prev) {
+                assert!(a >= b);
+            }
+            prev = opt.vhat.clone();
+        }
+    }
+
+    #[test]
+    fn update_magnitude_bounded_by_lr_over_sqrt_eps_region() {
+        // |Δθ| = lr |m| / sqrt(vhat+eps); with constant gradient the ratio
+        // |m|/sqrt(vhat) -> 1, so steps approach lr.
+        let mut opt = AmsGrad::new(1, BETA1, BETA2, EPS);
+        let mut theta = vec![0.0f32];
+        let mut last = 0.0f32;
+        for _ in 0..2000 {
+            let before = theta[0];
+            opt.step(&mut theta, &[1.0], 0.01);
+            last = (theta[0] - before).abs();
+        }
+        assert!((last - 0.01).abs() < 0.002, "step={last}");
+    }
+}

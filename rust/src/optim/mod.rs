@@ -1,0 +1,58 @@
+//! Server-side optimizers.
+//!
+//! In COMP-AMS all adaptive state lives on the leader (the paper's memory
+//! argument vs. QAdam/1BitAdam, §3.2): workers only ever hold their error
+//! accumulator. Each optimizer here consumes the decoded average gradient
+//! and updates `theta` in place.
+
+pub mod adam;
+pub mod amsgrad;
+pub mod momentum;
+pub mod sgd;
+
+pub use adam::Adam;
+pub use amsgrad::AmsGrad;
+pub use momentum::MomentumSgd;
+pub use sgd::Sgd;
+
+/// A stateful server optimizer over a flat f32 parameter vector.
+pub trait ServerOpt: Send {
+    fn name(&self) -> String;
+
+    /// Apply one update with the given (averaged) gradient and step size.
+    fn step(&mut self, theta: &mut [f32], grad: &[f32], lr: f32);
+
+    /// Dimension the optimizer state was allocated for.
+    fn dim(&self) -> usize;
+}
+
+/// Paper-default hyper-parameters (β1, β2, ε) shared by AMSGrad/Adam.
+pub const BETA1: f32 = 0.9;
+pub const BETA2: f32 = 0.999;
+pub const EPS: f32 = 1e-8;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// All optimizers must descend a simple quadratic f(x) = 0.5||x||^2.
+    #[test]
+    fn all_optimizers_descend_quadratic() {
+        let d = 32;
+        let opts: Vec<Box<dyn ServerOpt>> = vec![
+            Box::new(Sgd::new(d)),
+            Box::new(MomentumSgd::new(d, 0.9)),
+            Box::new(Adam::new(d, BETA1, BETA2, EPS)),
+            Box::new(AmsGrad::new(d, BETA1, BETA2, EPS)),
+        ];
+        for mut opt in opts {
+            let mut theta = vec![1.0f32; d];
+            for _ in 0..300 {
+                let grad: Vec<f32> = theta.clone(); // ∇(0.5||x||²) = x
+                opt.step(&mut theta, &grad, 0.05);
+            }
+            let norm = crate::util::math::norm2(&theta);
+            assert!(norm < 0.25, "{} stalled at {norm}", opt.name());
+        }
+    }
+}

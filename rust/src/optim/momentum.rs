@@ -1,0 +1,90 @@
+//! Heavy-ball momentum SGD — the effective server update of 1BitAdam
+//! after its warm-up freezes v (paper §3.2: "1BitAdam is actually more
+//! like a distributed momentum SGD with pre-conditioned coordinate-wise
+//! learning rates"), and the Dist-SGD appendix baseline's optional
+//! momentum.
+
+use super::ServerOpt;
+
+pub struct MomentumSgd {
+    pub buf: Vec<f32>,
+    mu: f32,
+}
+
+impl MomentumSgd {
+    pub fn new(dim: usize, mu: f32) -> Self {
+        MomentumSgd { buf: vec![0.0; dim], mu }
+    }
+
+    /// Momentum step with a per-coordinate preconditioner `precond[i]`
+    /// multiplying the learning rate (1BitAdam's frozen 1/√(v+ε)).
+    pub fn step_preconditioned(
+        &mut self,
+        theta: &mut [f32],
+        grad: &[f32],
+        lr: f32,
+        precond: &[f32],
+    ) {
+        for i in 0..theta.len() {
+            let b = self.mu * self.buf[i] + (1.0 - self.mu) * grad[i];
+            self.buf[i] = b;
+            theta[i] -= lr * b * precond[i];
+        }
+    }
+}
+
+impl ServerOpt for MomentumSgd {
+    fn name(&self) -> String {
+        format!("momentum({})", self.mu)
+    }
+
+    fn dim(&self) -> usize {
+        self.buf.len()
+    }
+
+    fn step(&mut self, theta: &mut [f32], grad: &[f32], lr: f32) {
+        for i in 0..theta.len() {
+            let b = self.mu * self.buf[i] + (1.0 - self.mu) * grad[i];
+            self.buf[i] = b;
+            theta[i] -= lr * b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::ServerOpt;
+
+    #[test]
+    fn zero_momentum_equals_sgd() {
+        let mut m = MomentumSgd::new(2, 0.0);
+        let mut a = vec![1.0f32, 2.0];
+        m.step(&mut a, &[0.5, -0.5], 0.1);
+        assert_eq!(a, vec![1.0 - 0.05, 2.0 + 0.05]);
+    }
+
+    #[test]
+    fn preconditioner_scales_coordinates() {
+        let mut m = MomentumSgd::new(2, 0.0);
+        let mut a = vec![0.0f32, 0.0];
+        m.step_preconditioned(&mut a, &[1.0, 1.0], 0.1, &[1.0, 10.0]);
+        assert!((a[0] + 0.1).abs() < 1e-6);
+        assert!((a[1] + 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut m = MomentumSgd::new(1, 0.9);
+        let mut a = vec![0.0f32];
+        let mut steps = Vec::new();
+        for _ in 0..30 {
+            let before = a[0];
+            m.step(&mut a, &[1.0], 0.1);
+            steps.push((before - a[0]).abs());
+        }
+        // step size grows toward lr as buffer saturates at g
+        assert!(steps[29] > steps[0]);
+        assert!((steps[29] - 0.1).abs() < 0.01);
+    }
+}

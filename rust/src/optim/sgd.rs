@@ -1,0 +1,41 @@
+//! Plain SGD — the Dist-SGD baseline of the paper's appendix (Fig. 4).
+
+use super::ServerOpt;
+
+pub struct Sgd {
+    dim: usize,
+}
+
+impl Sgd {
+    pub fn new(dim: usize) -> Self {
+        Sgd { dim }
+    }
+}
+
+impl ServerOpt for Sgd {
+    fn name(&self) -> String {
+        "sgd".into()
+    }
+
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn step(&mut self, theta: &mut [f32], grad: &[f32], lr: f32) {
+        crate::util::math::axpy(-lr, grad, theta);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::ServerOpt;
+
+    #[test]
+    fn exact_update() {
+        let mut opt = Sgd::new(3);
+        let mut theta = vec![1.0f32, 2.0, 3.0];
+        opt.step(&mut theta, &[1.0, -1.0, 0.0], 0.5);
+        assert_eq!(theta, vec![0.5, 2.5, 3.0]);
+    }
+}

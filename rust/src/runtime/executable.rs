@@ -1,0 +1,159 @@
+//! Typed wrappers over compiled PJRT executables.
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::client::Runtime;
+use super::manifest::{ModelEntry, XDtype};
+
+/// One training batch in host memory.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Batch {
+    pub x: BatchData,
+    pub y: Vec<i32>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum BatchData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Batch {
+    fn x_literal(&self, entry: &ModelEntry) -> Result<xla::Literal> {
+        let dims = entry.x_dims();
+        let lit = match (&self.x, &entry.x_dtype) {
+            (BatchData::F32(v), XDtype::F32) => {
+                anyhow::ensure!(v.len() == entry.x_len(), "x len mismatch");
+                xla::Literal::vec1(v)
+            }
+            (BatchData::I32(v), XDtype::I32) => {
+                anyhow::ensure!(v.len() == entry.x_len(), "x len mismatch");
+                xla::Literal::vec1(v)
+            }
+            _ => anyhow::bail!("batch dtype does not match model '{}'", entry.name),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    fn y_literal(&self, entry: &ModelEntry) -> Result<xla::Literal> {
+        anyhow::ensure!(self.y.len() == entry.y_len(), "y len mismatch");
+        Ok(xla::Literal::vec1(&self.y).reshape(&entry.y_dims())?)
+    }
+}
+
+fn run_tuple(
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: &[xla::Literal],
+) -> Result<Vec<xla::Literal>> {
+    let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+    // aot.py lowers with return_tuple=True: output is always one tuple.
+    Ok(result.to_tuple()?)
+}
+
+fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+/// `(θ f32[P], x, y, seed i32[]) → (loss f32[], grad f32[P])`
+pub struct GradExe {
+    exe: xla::PjRtLoadedExecutable,
+    entry: ModelEntry,
+}
+
+impl GradExe {
+    pub fn load(rt: &Rc<Runtime>, path: &Path, entry: &ModelEntry) -> Result<GradExe> {
+        Ok(GradExe { exe: rt.compile_hlo_text(path)?, entry: entry.clone() })
+    }
+
+    pub fn run(&self, theta: &[f32], batch: &Batch, seed: i32) -> Result<(f32, Vec<f32>)> {
+        anyhow::ensure!(theta.len() == self.entry.p, "theta dim mismatch");
+        let inputs = [
+            xla::Literal::vec1(theta),
+            batch.x_literal(&self.entry)?,
+            batch.y_literal(&self.entry)?,
+            xla::Literal::scalar(seed),
+        ];
+        let out = run_tuple(&self.exe, &inputs).context("grad exe")?;
+        anyhow::ensure!(out.len() == 2, "grad exe returned {} outputs", out.len());
+        let loss = scalar_f32(&out[0])?;
+        let grad = out[1].to_vec::<f32>()?;
+        anyhow::ensure!(grad.len() == self.entry.p, "grad dim mismatch");
+        Ok((loss, grad))
+    }
+}
+
+/// `(θ, x, y) → (loss f32[], correct i32[])`
+pub struct EvalExe {
+    exe: xla::PjRtLoadedExecutable,
+    entry: ModelEntry,
+}
+
+impl EvalExe {
+    pub fn load(rt: &Rc<Runtime>, path: &Path, entry: &ModelEntry) -> Result<EvalExe> {
+        Ok(EvalExe { exe: rt.compile_hlo_text(path)?, entry: entry.clone() })
+    }
+
+    pub fn run(&self, theta: &[f32], batch: &Batch) -> Result<(f32, u32)> {
+        let inputs = [
+            xla::Literal::vec1(theta),
+            batch.x_literal(&self.entry)?,
+            batch.y_literal(&self.entry)?,
+        ];
+        let out = run_tuple(&self.exe, &inputs).context("eval exe")?;
+        anyhow::ensure!(out.len() == 2, "eval exe returned {} outputs", out.len());
+        let loss = scalar_f32(&out[0])?;
+        let correct = out[1].get_first_element::<i32>()?;
+        Ok((loss, correct.max(0) as u32))
+    }
+}
+
+/// The L1 Pallas fused AMSGrad update:
+/// `(θ, m, v, v̂, ĝ, lr) → (θ', m', v', v̂')`.
+pub struct OptimizerExe {
+    exe: xla::PjRtLoadedExecutable,
+    p: usize,
+}
+
+impl OptimizerExe {
+    pub fn load(rt: &Rc<Runtime>, path: &Path, p: usize) -> Result<OptimizerExe> {
+        Ok(OptimizerExe { exe: rt.compile_hlo_text(path)?, p })
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    #[allow(clippy::type_complexity)]
+    pub fn run(
+        &self,
+        theta: &[f32],
+        m: &[f32],
+        v: &[f32],
+        vhat: &[f32],
+        g: &[f32],
+        lr: f32,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+        for (nm, s) in [("theta", theta), ("m", m), ("v", v), ("vhat", vhat), ("g", g)] {
+            anyhow::ensure!(s.len() == self.p, "{nm} dim {} != {}", s.len(), self.p);
+        }
+        let inputs = [
+            xla::Literal::vec1(theta),
+            xla::Literal::vec1(m),
+            xla::Literal::vec1(v),
+            xla::Literal::vec1(vhat),
+            xla::Literal::vec1(g),
+            xla::Literal::scalar(lr),
+        ];
+        let out = run_tuple(&self.exe, &inputs).context("amsgrad exe")?;
+        anyhow::ensure!(out.len() == 4, "amsgrad exe returned {} outputs", out.len());
+        Ok((
+            out[0].to_vec::<f32>()?,
+            out[1].to_vec::<f32>()?,
+            out[2].to_vec::<f32>()?,
+            out[3].to_vec::<f32>()?,
+        ))
+    }
+}

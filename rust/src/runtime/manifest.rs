@@ -1,0 +1,197 @@
+//! Artifact manifest: the contract written by `python/compile/aot.py`.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{self, Json};
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Files {
+    pub grad: String,
+    pub eval: String,
+    pub amsgrad: String,
+    pub init: String,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum XDtype {
+    F32,
+    I32,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelEntry {
+    pub name: String,
+    /// Flat parameter count.
+    pub p: usize,
+    pub batch: usize,
+    /// Per-example input shape (without batch dim).
+    pub x_shape: Vec<usize>,
+    pub x_dtype: XDtype,
+    /// Per-example label shape (empty = scalar label).
+    pub y_shape: Vec<usize>,
+    pub classes: usize,
+    /// LM-style per-token labels: accuracy denominators count tokens.
+    pub token_level: bool,
+    pub files: Files,
+}
+
+impl ModelEntry {
+    /// Number of x elements per batch.
+    pub fn x_len(&self) -> usize {
+        self.batch * self.x_shape.iter().product::<usize>()
+    }
+
+    /// Number of y elements per batch.
+    pub fn y_len(&self) -> usize {
+        self.batch * self.y_shape.iter().product::<usize>().max(1)
+    }
+
+    /// Labels per batch for accuracy denominators (tokens for LM).
+    pub fn labels_per_batch(&self) -> usize {
+        self.y_len()
+    }
+
+    pub fn x_dims(&self) -> Vec<i64> {
+        std::iter::once(self.batch as i64)
+            .chain(self.x_shape.iter().map(|&d| d as i64))
+            .collect()
+    }
+
+    pub fn y_dims(&self) -> Vec<i64> {
+        std::iter::once(self.batch as i64)
+            .chain(self.y_shape.iter().map(|&d| d as i64))
+            .collect()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct OptimizerHp {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub optimizer: OptimizerHp,
+    pub models: Vec<ModelEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = json::parse(text)?;
+        let version = j.req("version")?.as_usize()?;
+        anyhow::ensure!(version == 1, "unsupported manifest version {version}");
+        let opt = j.req("optimizer")?;
+        let optimizer = OptimizerHp {
+            beta1: opt.req("beta1")?.as_f64()? as f32,
+            beta2: opt.req("beta2")?.as_f64()? as f32,
+            eps: opt.req("eps")?.as_f64()? as f32,
+        };
+        let models = j
+            .req("models")?
+            .as_arr()?
+            .iter()
+            .map(parse_entry)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest { optimizer, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| {
+                let names: Vec<_> = self.models.iter().map(|m| m.name.as_str()).collect();
+                anyhow!("model '{name}' not in manifest (have: {})", names.join(", "))
+            })
+    }
+}
+
+fn parse_entry(j: &Json) -> Result<ModelEntry> {
+    let files = j.req("files")?;
+    Ok(ModelEntry {
+        name: j.req("name")?.as_str()?.to_string(),
+        p: j.req("p")?.as_usize()?,
+        batch: j.req("batch")?.as_usize()?,
+        x_shape: j.req("x_shape")?.usize_arr()?,
+        x_dtype: match j.req("x_dtype")?.as_str()? {
+            "f32" => XDtype::F32,
+            "i32" => XDtype::I32,
+            other => anyhow::bail!("bad x_dtype '{other}'"),
+        },
+        y_shape: j.req("y_shape")?.usize_arr()?,
+        classes: j.req("classes")?.as_usize()?,
+        token_level: j.req("token_level")?.as_bool()?,
+        files: Files {
+            grad: files.req("grad")?.as_str()?.to_string(),
+            eval: files.req("eval")?.as_str()?.to_string(),
+            amsgrad: files.req("amsgrad")?.as_str()?.to_string(),
+            init: files.req("init")?.as_str()?.to_string(),
+        },
+    })
+}
+
+/// Read a little-endian f32 flat parameter dump.
+pub fn read_init_bin(path: &Path) -> Result<Vec<f32>> {
+    let raw = std::fs::read(path)
+        .with_context(|| format!("reading init bin {}", path.display()))?;
+    anyhow::ensure!(raw.len() % 4 == 0, "init.bin length not a multiple of 4");
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "optimizer": {"beta1": 0.9, "beta2": 0.999, "eps": 1e-08},
+      "models": [{
+        "name": "toy", "p": 100, "batch": 4,
+        "x_shape": [8, 8, 1], "x_dtype": "f32",
+        "y_shape": [], "classes": 10, "token_level": false,
+        "files": {"grad": "g", "eval": "e", "amsgrad": "a", "init": "i"}
+      }]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.optimizer.beta1, 0.9);
+        let e = m.model("toy").unwrap();
+        assert_eq!(e.p, 100);
+        assert_eq!(e.x_len(), 4 * 64);
+        assert_eq!(e.y_len(), 4);
+        assert_eq!(e.x_dims(), vec![4, 8, 8, 1]);
+        assert!(m.model("missing").is_err());
+    }
+
+    #[test]
+    fn token_level_y_len_counts_tokens() {
+        let text = SAMPLE
+            .replace("\"y_shape\": []", "\"y_shape\": [16]")
+            .replace("\"token_level\": false", "\"token_level\": true");
+        let m = Manifest::parse(&text).unwrap();
+        let e = m.model("toy").unwrap();
+        assert_eq!(e.y_len(), 64);
+        assert_eq!(e.y_dims(), vec![4, 16]);
+    }
+
+    #[test]
+    fn rejects_bad_version_and_dtype() {
+        assert!(Manifest::parse(&SAMPLE.replace("\"version\": 1", "\"version\": 2")).is_err());
+        assert!(Manifest::parse(&SAMPLE.replace("\"f32\"", "\"f64\"")).is_err());
+    }
+}

@@ -1,0 +1,58 @@
+//! PJRT runtime: load and execute the AOT artifacts from the Rust hot path.
+//!
+//! `python/compile/aot.py` lowers each model to HLO **text** (the
+//! xla_extension-0.5.1-safe interchange format); this module compiles the
+//! text once per process on the PJRT CPU client and exposes typed
+//! wrappers:
+//!
+//! - [`GradExe`]   — `(θ, x, y, seed) → (loss, ∇θ)`
+//! - [`EvalExe`]   — `(θ, x, y) → (loss, #correct)`
+//! - [`OptimizerExe`] — the L1 Pallas fused AMSGrad update
+//! - [`ModelBundle`]  — all three plus the manifest entry + initial θ.
+//!
+//! Python never runs here: after `make artifacts` these files are plain
+//! inputs.
+
+pub mod client;
+pub mod executable;
+pub mod manifest;
+
+pub use client::Runtime;
+pub use executable::{EvalExe, GradExe, OptimizerExe};
+pub use manifest::{Manifest, ModelEntry};
+
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+/// Everything the coordinator needs to train one model via PJRT.
+pub struct ModelBundle {
+    pub entry: ModelEntry,
+    pub init_theta: Vec<f32>,
+    pub grad: GradExe,
+    pub eval: EvalExe,
+    /// Shared so the server optimizer can hold it independently.
+    pub amsgrad: Rc<OptimizerExe>,
+}
+
+impl ModelBundle {
+    /// Load a model by name from an artifacts directory. The `Runtime` is
+    /// shared (one PJRT client per process).
+    pub fn load(rt: &Rc<Runtime>, artifacts: &Path, name: &str) -> Result<ModelBundle> {
+        let manifest = Manifest::load(&artifacts.join("manifest.json"))?;
+        let entry = manifest.model(name)?.clone();
+        let init_theta = manifest::read_init_bin(&artifacts.join(&entry.files.init))?;
+        anyhow::ensure!(
+            init_theta.len() == entry.p,
+            "init.bin has {} params, manifest says {}",
+            init_theta.len(),
+            entry.p
+        );
+        let grad = GradExe::load(rt, &artifacts.join(&entry.files.grad), &entry)?;
+        let eval = EvalExe::load(rt, &artifacts.join(&entry.files.eval), &entry)?;
+        let amsgrad =
+            Rc::new(OptimizerExe::load(rt, &artifacts.join(&entry.files.amsgrad), entry.p)?);
+        Ok(ModelBundle { entry, init_theta, grad, eval, amsgrad })
+    }
+}

@@ -1,0 +1,126 @@
+//! Criterion-style micro-bench harness (criterion is not in the offline
+//! registry). Used by the `rust/benches/*.rs` targets (harness = false).
+//!
+//! Method: warm up, then run timed batches until `target_time` elapses;
+//! report median / mean / p95 of per-iteration times plus derived
+//! throughput. Deterministic enough for before/after comparisons in
+//! EXPERIMENTS.md §Perf on an otherwise idle box.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.mean.as_secs_f64()
+    }
+
+    /// Throughput given per-iteration payload bytes.
+    pub fn mb_per_sec(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.mean.as_secs_f64() / 1e6
+    }
+}
+
+pub struct Bencher {
+    target: Duration,
+    warmup: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // `cargo bench -- --fast` style control via env var.
+        let fast = std::env::var("COMP_AMS_BENCH_FAST").is_ok();
+        Bencher {
+            target: if fast { Duration::from_millis(200) } else { Duration::from_secs(1) },
+            warmup: if fast { Duration::from_millis(50) } else { Duration::from_millis(250) },
+            results: Vec::new(),
+        }
+    }
+
+    /// Benchmark `f`, which must do one unit of work per call. A returned
+    /// value should be wrapped in `std::hint::black_box` by the caller.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> BenchResult {
+        // Warmup.
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            f();
+        }
+        // Timed samples.
+        let mut samples: Vec<Duration> = Vec::new();
+        let t0 = Instant::now();
+        while t0.elapsed() < self.target || samples.len() < 10 {
+            let s = Instant::now();
+            f();
+            samples.push(s.elapsed());
+            if samples.len() >= 1_000_000 {
+                break;
+            }
+        }
+        samples.sort_unstable();
+        let iters = samples.len() as u64;
+        let median = samples[samples.len() / 2];
+        let p95 = samples[(samples.len() * 95 / 100).min(samples.len() - 1)];
+        let mean = samples.iter().sum::<Duration>() / samples.len() as u32;
+        self.results.push(BenchResult { name: name.to_string(), iters, median, mean, p95 });
+        println!(
+            "{:<44} {:>10} iters   median {:>10}   mean {:>10}   p95 {:>10}",
+            name,
+            iters,
+            crate::util::timer::fmt_duration(median),
+            crate::util::timer::fmt_duration(mean),
+            crate::util::timer::fmt_duration(p95),
+        );
+        self.results.last().unwrap().clone()
+    }
+
+    /// Print a one-line throughput annotation for the last benchmark.
+    pub fn note(&self, text: &str) {
+        println!("{:<44} {}", "", text);
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+/// Standard bench-main prologue: print header, honor --fast.
+pub fn bench_main(title: &str) -> Bencher {
+    for a in std::env::args() {
+        if a == "--fast" {
+            std::env::set_var("COMP_AMS_BENCH_FAST", "1");
+        }
+    }
+    println!("=== {title} ===");
+    Bencher::new()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        std::env::set_var("COMP_AMS_BENCH_FAST", "1");
+        let mut b = Bencher::new();
+        let r = b.bench("noop-ish", || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters >= 10);
+        assert!(r.median <= r.p95);
+        assert!(r.per_sec() > 0.0);
+    }
+}

@@ -1,0 +1,5 @@
+//! Test & bench substrates (no proptest/criterion in the offline
+//! registry — DESIGN.md §2).
+
+pub mod bench;
+pub mod prop;

@@ -1,0 +1,140 @@
+//! Miniature property-based testing harness.
+//!
+//! A property is a closure over a [`Gen`] (seeded value generator). The
+//! driver runs `cases` random cases; on failure it re-runs with the same
+//! seed to confirm, then reports the seed so the case can be replayed
+//! with [`check_seeded`]. Generators bias toward boundary sizes
+//! (0/1/2, powers of two ± 1) the way real shrinkers find bugs.
+
+use crate::util::rng::Rng;
+
+/// Value generator handed to each property case.
+pub struct Gen {
+    pub rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    /// A size in [lo, hi], biased toward boundary values.
+    pub fn size(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let span = hi - lo + 1;
+        if self.rng.next_f32() < 0.25 {
+            // Boundary bias: lo, hi, and powers of two ±1 inside range.
+            let candidates = [
+                lo,
+                hi,
+                lo + 1.min(span - 1),
+                (lo + span / 2).min(hi),
+                (lo + 1).next_power_of_two().clamp(lo, hi),
+                ((lo + 1).next_power_of_two() + 1).clamp(lo, hi),
+            ];
+            candidates[self.rng.gen_range(candidates.len())]
+        } else {
+            lo + self.rng.gen_range(span)
+        }
+    }
+
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform(lo, hi)
+    }
+
+    /// A gradient-like vector: mixture of gaussian / heavy-tailed /
+    /// sparse-with-zeros — shapes that stress compressors.
+    pub fn grad_vec(&mut self, d: usize) -> Vec<f32> {
+        let style = self.rng.gen_range(4);
+        (0..d)
+            .map(|_| match style {
+                0 => self.rng.normal(),
+                1 => self.rng.normal().powi(3), // heavy tail
+                2 => {
+                    if self.rng.next_f32() < 0.9 {
+                        0.0
+                    } else {
+                        self.rng.normal() * 10.0
+                    }
+                }
+                _ => self.rng.uniform(-1.0, 1.0),
+            })
+            .collect()
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics with the failing seed.
+pub fn check<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut prop: F) {
+    // Base seed is fixed for CI determinism; override with COMP_AMS_PROP_SEED.
+    let base = std::env::var("COMP_AMS_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut gen = Gen { rng: Rng::seed(seed), seed };
+            prop(&mut gen);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<panic>".into());
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}):\n  {msg}\n\
+                 replay: testing::prop::check_seeded({seed:#x}, ..)"
+            );
+        }
+    }
+}
+
+/// Replay a single case by seed.
+pub fn check_seeded<F: FnMut(&mut Gen)>(seed: u64, mut prop: F) {
+    let mut gen = Gen { rng: Rng::seed(seed), seed };
+    prop(&mut gen);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("tautology", 50, |g| {
+            let n = g.size(0, 100);
+            assert!(n <= 100);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'falsifiable' failed")]
+    fn failing_property_reports_seed() {
+        check("falsifiable", 200, |g| {
+            let n = g.size(0, 10);
+            assert!(n != 0, "found the zero");
+        });
+    }
+
+    #[test]
+    fn grad_vec_has_requested_len() {
+        check("grad_vec_len", 30, |g| {
+            let d = g.size(1, 2000);
+            assert_eq!(g.grad_vec(d).len(), d);
+        });
+    }
+
+    #[test]
+    fn size_hits_boundaries() {
+        let mut seen_lo = false;
+        let mut seen_hi = false;
+        check_seeded(42, |g| {
+            for _ in 0..500 {
+                match g.size(3, 17) {
+                    3 => seen_lo = true,
+                    17 => seen_hi = true,
+                    v => assert!((3..=17).contains(&v)),
+                }
+            }
+        });
+        assert!(seen_lo && seen_hi);
+    }
+}

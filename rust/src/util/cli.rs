@@ -1,0 +1,140 @@
+//! Tiny CLI argument parser for the launcher (no clap offline).
+//!
+//! Grammar: `comp-ams <positional...> [--key value | --flag]`.
+//! `--key=value` is also accepted. Unknown flags are collected and can be
+//! rejected by the caller via [`Args::ensure_known`].
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if rest.is_empty() {
+                    bail!("bare '--' not supported");
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    args.flags.insert(rest.to_string(), it.next().unwrap());
+                } else {
+                    // boolean flag
+                    args.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key}: bad usize '{v}'")),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key}: bad u64 '{v}'")),
+        }
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> Result<f32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key}: bad f32 '{v}'")),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            None => Ok(default),
+            Some("true") | Some("1") => Ok(true),
+            Some("false") | Some("0") => Ok(false),
+            Some(v) => bail!("--{key}: bad bool '{v}'"),
+        }
+    }
+
+    /// Error out on any flag not in `known` (catches typos in launch cmds).
+    pub fn ensure_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k} (known: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positionals_and_flags() {
+        let a = parse("train fig1 --model mnist_cnn --workers 16 --fast");
+        assert_eq!(a.positional, vec!["train", "fig1"]);
+        assert_eq!(a.get("model"), Some("mnist_cnn"));
+        assert_eq!(a.usize_or("workers", 1).unwrap(), 16);
+        assert!(a.bool_or("fast", false).unwrap());
+    }
+
+    #[test]
+    fn eq_form_and_defaults() {
+        let a = parse("x --lr=0.001");
+        assert_eq!(a.f32_or("lr", 0.0).unwrap(), 0.001);
+        assert_eq!(a.usize_or("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn trailing_boolean_flag() {
+        let a = parse("exp fig3 --fast");
+        assert!(a.bool_or("fast", false).unwrap());
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let a = parse("t --oops 1");
+        assert!(a.ensure_known(&["model"]).is_err());
+        assert!(a.ensure_known(&["oops"]).is_ok());
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = parse("t --n abc");
+        assert!(a.usize_or("n", 0).is_err());
+    }
+}

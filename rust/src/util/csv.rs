@@ -1,0 +1,68 @@
+//! CSV writer for experiment outputs (`results/*.csv`), the format every
+//! `exp::fig*` driver emits so curves can be re-plotted externally.
+
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+use anyhow::Result;
+
+pub struct CsvWriter {
+    w: BufWriter<File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    pub fn create<P: AsRef<Path>>(path: P, header: &[&str]) -> Result<Self> {
+        if let Some(dir) = path.as_ref().parent() {
+            fs::create_dir_all(dir)?;
+        }
+        let mut w = BufWriter::new(File::create(path)?);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(CsvWriter { w, cols: header.len() })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> Result<()> {
+        debug_assert_eq!(fields.len(), self.cols, "csv row arity mismatch");
+        let escaped: Vec<String> = fields.iter().map(|f| escape(f)).collect();
+        writeln!(self.w, "{}", escaped.join(","))?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.w.flush()?;
+        Ok(())
+    }
+}
+
+fn escape(f: &str) -> String {
+    if f.contains(',') || f.contains('"') || f.contains('\n') {
+        format!("\"{}\"", f.replace('"', "\"\""))
+    } else {
+        f.to_string()
+    }
+}
+
+/// Convenience macro-free row builder.
+pub fn fields(items: &[&dyn std::fmt::Display]) -> Vec<String> {
+    items.iter().map(|i| i.to_string()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_escapes() {
+        let dir = std::env::temp_dir().join("comp_ams_csv_test");
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&fields(&[&1.5, &"x,y"])).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1.5,\"x,y\"\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

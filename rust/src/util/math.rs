@@ -1,0 +1,124 @@
+//! Small dense-vector kernels shared across the coordinator hot path.
+//!
+//! These are the L3 inner loops (averaging, axpy, norms) — kept in one
+//! place so the §Perf pass can optimize them once. All operate on plain
+//! `&[f32]` slices; the compiler auto-vectorizes the simple loops.
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Sum of squares.
+#[inline]
+pub fn norm2_sq(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum()
+}
+
+pub fn norm2(x: &[f32]) -> f64 {
+    norm2_sq(x).sqrt()
+}
+
+/// L1 norm.
+#[inline]
+pub fn norm1(x: &[f32]) -> f64 {
+    x.iter().map(|&v| v.abs() as f64).sum()
+}
+
+/// Squared distance ||a-b||^2.
+pub fn dist_sq(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum()
+}
+
+/// Elementwise mean of rows into `out` (the gradient-averaging hot loop).
+/// `rows` must all have `out.len()` elements.
+pub fn mean_into(rows: &[&[f32]], out: &mut [f32]) {
+    let n = rows.len();
+    assert!(n > 0);
+    let inv = 1.0 / n as f32;
+    out.copy_from_slice(rows[0]);
+    for row in &rows[1..] {
+        debug_assert_eq!(row.len(), out.len());
+        for (o, &r) in out.iter_mut().zip(*row) {
+            *o += r;
+        }
+    }
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+}
+
+/// Softmax cross-entropy + argmax over one logits row (used by the
+/// pure-Rust GradSources).
+pub fn log_softmax_row(logits: &mut [f32]) {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for l in logits.iter_mut() {
+        *l -= max;
+        sum += l.exp();
+    }
+    let ln_sum = sum.ln();
+    for l in logits.iter_mut() {
+        *l -= ln_sum;
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn axpy_and_norms() {
+        let x = [1.0f32, 2.0, 3.0];
+        let mut y = [1.0f32, 1.0, 1.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [3.0, 5.0, 7.0]);
+        assert!((norm2_sq(&x) - 14.0).abs() < 1e-9);
+        assert!((norm1(&x) - 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_matches_manual() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 6.0];
+        let mut out = [0.0f32; 2];
+        mean_into(&[&a, &b], &mut out);
+        assert_eq!(out, [2.0, 4.0]);
+    }
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let mut row = [1.0f32, 2.0, 3.0];
+        log_softmax_row(&mut row);
+        let total: f32 = row.iter().map(|l| l.exp()).sum();
+        assert!((total - 1.0).abs() < 1e-5);
+        assert_eq!(argmax(&row), 2);
+    }
+
+    #[test]
+    fn dist_sq_zero_on_equal() {
+        let a = [0.5f32; 10];
+        assert_eq!(dist_sq(&a, &a), 0.0);
+    }
+}

@@ -1,0 +1,13 @@
+//! From-scratch utility substrates.
+//!
+//! The build image's crate registry only carries the `xla` dependency
+//! closure, so everything a framework usually pulls from crates.io (RNG,
+//! JSON, CSV, CLI parsing, timers) is implemented here (DESIGN.md §2).
+
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod math;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,310 @@
+//! Deterministic PRNG: xoshiro256** seeded via SplitMix64, with Box-Muller
+//! normals and the sampling helpers the data generators need.
+//!
+//! Every stochastic component in the framework (data synthesis, sharding,
+//! Random-k compression, dropout seeds) draws from a seeded [`Rng`] so a
+//! run is reproducible from `TrainConfig::seed` alone, and the threaded
+//! and sequential coordinators produce identical trajectories.
+
+/// SplitMix64: seeds the main generator and derives sub-streams.
+#[inline]
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// xoshiro256** — fast, high-quality 64-bit generator.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Cached second normal from Box-Muller.
+    spare_normal: Option<f32>,
+}
+
+impl Rng {
+    pub fn seed(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s, spare_normal: None }
+    }
+
+    /// Derive an independent stream (e.g. one per worker) from this one.
+    pub fn split(&mut self, salt: u64) -> Rng {
+        Rng::seed(self.next_u64() ^ salt.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let r = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        r
+    }
+
+    /// Uniform f32 in [0, 1) with 24 bits of precision.
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform f64 in [0, 1) with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n). Unbiased via rejection (Lemire-style).
+    #[inline]
+    pub fn gen_range(&mut self, n: usize) -> usize {
+        assert!(n > 0, "gen_range(0)");
+        let n = n as u64;
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Uniform f32 in [lo, hi).
+    #[inline]
+    pub fn uniform(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.next_f32()
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn normal(&mut self) -> f32 {
+        if let Some(z) = self.spare_normal.take() {
+            return z;
+        }
+        // Avoid ln(0).
+        let u1 = (self.next_f64().max(1e-300)) as f64;
+        let u2 = self.next_f64();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let t = 2.0 * std::f64::consts::PI * u2;
+        self.spare_normal = Some((r * t.sin()) as f32);
+        (r * t.cos()) as f32
+    }
+
+    /// Vector of standard normals.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.normal()).collect()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_range(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample an index from an (unnormalized) non-negative weight vector.
+    pub fn sample_weighted(&mut self, weights: &[f32]) -> usize {
+        let total: f32 = weights.iter().sum();
+        debug_assert!(total > 0.0);
+        let mut u = self.next_f32() * total;
+        for (i, &w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Sample a Gamma(alpha, 1) variate (Marsaglia–Tsang; alpha > 0),
+    /// used for Dirichlet non-iid shard allocation.
+    pub fn gamma(&mut self, alpha: f32) -> f32 {
+        if alpha < 1.0 {
+            // Boosting: Gamma(a) = Gamma(a+1) * U^{1/a}.
+            let u = self.next_f64().max(1e-12);
+            return self.gamma(alpha + 1.0) * (u.powf(1.0 / alpha as f64)) as f32;
+        }
+        let d = alpha as f64 - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal() as f64;
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.next_f64();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+            {
+                return (d * v) as f32;
+            }
+        }
+    }
+
+    /// Dirichlet(alpha * 1_k) draw.
+    pub fn dirichlet(&mut self, alpha: f32, k: usize) -> Vec<f32> {
+        let mut g: Vec<f32> = (0..k).map(|_| self.gamma(alpha).max(1e-12)).collect();
+        let s: f32 = g.iter().sum();
+        for x in &mut g {
+            *x /= s;
+        }
+        g
+    }
+
+    /// Zipf-like rank sampler over [0, n): P(r) ∝ 1/(r+1)^s.
+    pub fn zipf(&mut self, n: usize, s: f32) -> usize {
+        // Inverse-CDF on a precomputable harmonic sum would be faster, but
+        // text generation is off the hot path; rejection is fine here.
+        loop {
+            let u = self.next_f64();
+            let r = ((n as f64).powf(u) - 1.0) as usize; // log-uniform skew
+            let r = r.min(n - 1);
+            let accept = 1.0 / ((r + 1) as f64).powf(s as f64 - 1.0);
+            if self.next_f64() < accept {
+                return r;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_across_instances() {
+        let mut a = Rng::seed(7);
+        let mut b = Rng::seed(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = Rng::seed(1);
+        let mut b = Rng::seed(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn split_streams_are_independent() {
+        let mut root = Rng::seed(3);
+        let mut w0 = root.split(0);
+        let mut w1 = root.split(1);
+        assert_ne!(w0.next_u64(), w1.next_u64());
+    }
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut r = Rng::seed(11);
+        let n = 20_000;
+        let mut sum = 0.0f64;
+        for _ in 0..n {
+            let x = r.next_f32();
+            assert!((0.0..1.0).contains(&x));
+            sum += x as f64;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::seed(13);
+        let n = 50_000;
+        let xs: Vec<f32> = (0..n).map(|_| r.normal()).collect();
+        let mean: f64 = xs.iter().map(|&x| x as f64).sum::<f64>() / n as f64;
+        let var: f64 =
+            xs.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn gen_range_covers_all_and_in_bounds() {
+        let mut r = Rng::seed(17);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let k = r.gen_range(10);
+            assert!(k < 10);
+            seen[k] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one() {
+        let mut r = Rng::seed(19);
+        for &alpha in &[0.1f32, 0.5, 1.0, 10.0] {
+            let p = r.dirichlet(alpha, 8);
+            let s: f32 = p.iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+            assert!(p.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn gamma_mean_approx_alpha() {
+        let mut r = Rng::seed(23);
+        for &alpha in &[0.5f32, 2.0, 5.0] {
+            let n = 20_000;
+            let mean: f64 = (0..n).map(|_| r.gamma(alpha) as f64).sum::<f64>() / n as f64;
+            assert!(
+                (mean - alpha as f64).abs() < 0.1 * alpha as f64 + 0.05,
+                "alpha={alpha} mean={mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::seed(29);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn zipf_is_skewed_toward_low_ranks() {
+        let mut r = Rng::seed(31);
+        let mut counts = [0usize; 100];
+        for _ in 0..10_000 {
+            counts[r.zipf(100, 1.2)] += 1;
+        }
+        assert!(counts[0] > counts[50].max(1) * 3);
+    }
+
+    #[test]
+    fn sample_weighted_respects_weights() {
+        let mut r = Rng::seed(37);
+        let w = [0.0f32, 1.0, 3.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..12_000 {
+            counts[r.sample_weighted(&w)] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        assert!(counts[2] > counts[1] * 2);
+    }
+}

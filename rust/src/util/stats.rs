@@ -1,0 +1,101 @@
+//! Summary statistics for multi-seed experiment aggregation (the paper
+//! reports best-of-grid *averaged over three independent runs*).
+
+/// Mean, sample std, and a normal-approximation 95% CI half-width.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub ci95: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    assert!(!xs.is_empty());
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = if n > 1 {
+        xs.iter().map(|&x| (x - mean).powi(2)).sum::<f64>() / (n - 1) as f64
+    } else {
+        0.0
+    };
+    let std = var.sqrt();
+    Summary {
+        n,
+        mean,
+        std,
+        ci95: 1.96 * std / (n as f64).sqrt(),
+        min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+        max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+    }
+}
+
+/// Ordinary least squares slope/intercept of y on x, plus R².
+/// Used by the Fig. 3 analysis: regress log2(rounds-to-target) on
+/// log2(n) — perfect linear speedup gives slope -1.
+pub fn linreg(x: &[f64], y: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(x.len(), y.len());
+    assert!(x.len() >= 2);
+    let n = x.len() as f64;
+    let mx = x.iter().sum::<f64>() / n;
+    let my = y.iter().sum::<f64>() / n;
+    let sxy: f64 = x.iter().zip(y).map(|(&a, &b)| (a - mx) * (b - my)).sum();
+    let sxx: f64 = x.iter().map(|&a| (a - mx).powi(2)).sum();
+    let slope = sxy / sxx;
+    let intercept = my - slope * mx;
+    let ss_tot: f64 = y.iter().map(|&b| (b - my).powi(2)).sum();
+    let ss_res: f64 = x
+        .iter()
+        .zip(y)
+        .map(|(&a, &b)| (b - (intercept + slope * a)).powi(2))
+        .sum();
+    let r2 = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { 1.0 };
+    (slope, intercept, r2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_hand_check() {
+        let s = summarize(&[1.0, 2.0, 3.0]);
+        assert_eq!(s.n, 3);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        assert!((s.std - 1.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+    }
+
+    #[test]
+    fn single_sample_has_zero_spread() {
+        let s = summarize(&[5.0]);
+        assert_eq!(s.std, 0.0);
+        assert_eq!(s.ci95, 0.0);
+    }
+
+    #[test]
+    fn linreg_recovers_exact_line() {
+        let x = [0.0, 1.0, 2.0, 3.0];
+        let y = [1.0, 3.0, 5.0, 7.0];
+        let (slope, intercept, r2) = linreg(&x, &y);
+        assert!((slope - 2.0).abs() < 1e-12);
+        assert!((intercept - 1.0).abs() < 1e-12);
+        assert!((r2 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn linreg_speedup_shape() {
+        // rounds halving per doubling of n -> slope -1 in log2-log2.
+        let x: Vec<f64> = [1, 2, 4, 8, 16].iter().map(|&n| (n as f64).log2()).collect();
+        let y: Vec<f64> = [1600, 800, 400, 200, 100]
+            .iter()
+            .map(|&r| (r as f64).log2())
+            .collect();
+        let (slope, _, r2) = linreg(&x, &y);
+        assert!((slope + 1.0).abs() < 1e-9);
+        assert!(r2 > 0.999);
+    }
+}

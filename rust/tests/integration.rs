@@ -1,0 +1,179 @@
+//! Coordinator-level integration tests on the analytic substrates:
+//! protocol convergence, determinism, communication accounting, and the
+//! paper's qualitative claims at test scale.
+
+use comp_ams::config::TrainConfig;
+use comp_ams::coordinator::trainer::{train, Trainer};
+
+fn quad_cfg(algo: &str) -> TrainConfig {
+    let mut cfg = TrainConfig::preset("quadratic", algo);
+    cfg.workers = 4;
+    cfg.rounds = 800;
+    cfg.lr = 0.02;
+    cfg.eval_every = 0;
+    cfg
+}
+
+#[test]
+fn every_protocol_descends_the_quadratic() {
+    for algo in [
+        "dist-ams",
+        "comp-ams-topk:0.05",
+        "comp-ams-blocksign:64",
+        "comp-ams-randomk:0.1",
+        "qadam",
+        "1bitadam:80",
+        "dist-sgd",
+    ] {
+        let mut cfg = quad_cfg(algo);
+        if algo.starts_with("1bitadam") {
+            // 1BitAdam's frozen preconditioner needs a per-method lr (the
+            // paper tunes each method over its own grid — Table 1); with
+            // the shared lr it diverges here, which is exactly the
+            // warm-up sensitivity §5.4 describes (see the ablation).
+            cfg.lr = 0.002;
+        }
+        let run = train(&cfg).unwrap_or_else(|e| panic!("{algo}: {e:#}"));
+        let first = run.metrics[0].train_loss;
+        let last = run.final_train_loss(20);
+        assert!(last < first - 0.3, "{algo}: {first:.3} -> {last:.3}");
+    }
+}
+
+#[test]
+fn identical_seeds_are_bit_deterministic() {
+    let cfg = quad_cfg("comp-ams-topk:0.02");
+    let a = train(&cfg).unwrap();
+    let b = train(&cfg).unwrap();
+    assert_eq!(a.metrics.len(), b.metrics.len());
+    for (ma, mb) in a.metrics.iter().zip(&b.metrics) {
+        assert_eq!(ma.train_loss.to_bits(), mb.train_loss.to_bits());
+        assert_eq!(ma.uplink_bits, mb.uplink_bits);
+    }
+}
+
+#[test]
+fn different_seeds_differ() {
+    let mut cfg = quad_cfg("comp-ams-topk:0.02");
+    let a = train(&cfg).unwrap();
+    cfg.seed = 43;
+    let b = train(&cfg).unwrap();
+    assert_ne!(
+        a.metrics.last().unwrap().train_loss.to_bits(),
+        b.metrics.last().unwrap().train_loss.to_bits()
+    );
+}
+
+#[test]
+fn comp_ams_matches_dist_ams_loss_with_fraction_of_bits() {
+    // The paper's headline (C1 + C2) at test scale: similar final loss,
+    // order-of-magnitude less uplink.
+    let dense = train(&quad_cfg("dist-ams")).unwrap();
+    let sparse = train(&quad_cfg("comp-ams-topk:0.05")).unwrap();
+    let dl = dense.final_train_loss(20);
+    let sl = sparse.final_train_loss(20);
+    // Within 2.5% of the dense loss *range* (loss drops 0 -> ~-35.6).
+    assert!(
+        sl < dl + 0.025 * dl.abs(),
+        "comp-ams loss {sl:.3} far above dist-ams {dl:.3}"
+    );
+    assert!(sparse.uplink_bits() * 8 < dense.uplink_bits());
+}
+
+#[test]
+fn error_feedback_fixes_biased_compression_under_heterogeneity() {
+    // Where EF provably matters (paper §2.1): with non-iid workers the
+    // per-worker Top-k selections are mutually biased — without EF the
+    // aggregate stalls above the optimum; EF telescopes the residuals
+    // through and closes the gap.
+    let run_with = |algo: &str| {
+        let mut cfg = TrainConfig::preset("quadratic", algo);
+        cfg.workers = 8;
+        cfg.sharding = "dirichlet:0.2".into();
+        cfg.rounds = 3000;
+        cfg.lr = 0.02;
+        cfg.eval_every = 0;
+        train(&cfg).unwrap().final_train_loss(50)
+    };
+    let le = run_with("comp-ams-topk:0.05");
+    let ln = run_with("comp-ams-topk:0.05:noef");
+    assert!(le < ln - 0.15, "EF {le:.3} should beat no-EF {ln:.3}");
+}
+
+#[test]
+fn linear_speedup_direction_on_logistic() {
+    // More workers with lr ∝ √n must not be slower to a fixed loss
+    // (Corollary 2 at smoke scale: n=8 ≤ half the rounds of n=1).
+    let rounds_for = |n: usize| {
+        let mut cfg = TrainConfig::preset("logistic", "comp-ams-topk:0.05");
+        cfg.workers = n;
+        cfg.rounds = 4000;
+        cfg.lr = 0.005 * (n as f32).sqrt();
+        cfg.eval_every = 0;
+        let run = train(&cfg).unwrap();
+        run.rounds_to_loss(0.25, 25)
+    };
+    let r1 = rounds_for(1).expect("n=1 never hit target");
+    let r8 = rounds_for(8).expect("n=8 never hit target");
+    assert!(
+        r8 * 2 <= r1,
+        "no speedup: n=1 took {r1} rounds, n=8 took {r8}"
+    );
+}
+
+#[test]
+fn non_iid_sharding_still_converges() {
+    let mut cfg = quad_cfg("comp-ams-blocksign:64");
+    cfg.sharding = "dirichlet:0.5".into();
+    let run = train(&cfg).unwrap();
+    assert!(run.final_train_loss(20) < run.metrics[0].train_loss - 0.3);
+}
+
+#[test]
+fn downlink_accounting_is_rounds_times_workers_times_theta() {
+    let mut cfg = quad_cfg("dist-ams");
+    cfg.rounds = 7;
+    cfg.workers = 3;
+    let mut t = Trainer::new(&cfg).unwrap();
+    for r in 0..7 {
+        t.step(r).unwrap();
+    }
+    let expect = 7 * 3 * 8 * (5 + 4 * t.theta.len() as u64);
+    assert_eq!(t.ledger().downlink_bits, expect);
+}
+
+#[test]
+fn uplink_ledger_scales_with_compression_ratio() {
+    let bits_for = |ratio: &str| {
+        let mut cfg = quad_cfg(&format!("comp-ams-topk:{ratio}"));
+        cfg.rounds = 5;
+        train(&cfg).unwrap().uplink_bits()
+    };
+    let b01 = bits_for("0.01");
+    let b10 = bits_for("0.10");
+    let ratio = b10 as f64 / b01 as f64;
+    assert!((6.0..14.0).contains(&ratio), "expected ~10x, got {ratio:.1}x");
+}
+
+#[test]
+fn trainer_rejects_invalid_configs() {
+    let mut cfg = quad_cfg("comp-ams-topk:0.05");
+    cfg.workers = 0;
+    assert!(Trainer::new(&cfg).is_err());
+    let cfg = quad_cfg("not-an-algo");
+    assert!(Trainer::new(&cfg).is_err());
+    let mut cfg = quad_cfg("comp-ams-topk:0.05");
+    cfg.sharding = "bogus".into();
+    assert!(Trainer::new(&cfg).is_err());
+}
+
+#[test]
+fn qadam_and_onebit_report_worker_memory_overhead() {
+    use comp_ams::algo::{Algorithm, AlgoSpec};
+    let q = AlgoSpec::parse("qadam").unwrap().build(1000, 4, 100);
+    let o = AlgoSpec::parse("1bitadam:10").unwrap().build(1000, 4, 100);
+    let c = AlgoSpec::parse("comp-ams-topk:0.01").unwrap().build(1000, 4, 100);
+    assert_eq!(q.worker_state_bytes(), 8000); // m + v
+    assert_eq!(o.worker_state_bytes(), 4000); // m
+    assert_eq!(c.worker_state_bytes(), 0); // the paper's §3.2 point
+}

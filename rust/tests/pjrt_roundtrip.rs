@@ -1,0 +1,176 @@
+//! PJRT round-trip tests: the Rust↔artifact contract. These need
+//! `make artifacts`; they self-skip (with a loud message) if the
+//! artifacts directory is absent so `cargo test` works pre-build.
+
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use comp_ams::config::TrainConfig;
+use comp_ams::coordinator::trainer::train;
+use comp_ams::data::{vectors::GaussianVectors, Batch, BatchData};
+use comp_ams::optim::{AmsGrad, ServerOpt};
+use comp_ams::runtime::{ModelBundle, Runtime};
+use comp_ams::util::rng::Rng;
+
+fn artifacts() -> Option<PathBuf> {
+    let p = PathBuf::from("artifacts");
+    if p.join("manifest.json").exists() {
+        Some(p)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+fn load(name: &str) -> Option<(Rc<Runtime>, ModelBundle)> {
+    let dir = artifacts()?;
+    let rt = Rc::new(Runtime::cpu().expect("pjrt cpu"));
+    let bundle = ModelBundle::load(&rt, Path::new(&dir), name).expect("load bundle");
+    Some((rt, bundle))
+}
+
+fn logreg_batch(seed: u64) -> Batch {
+    let ds = GaussianVectors::new(7, 64, 4, 0.5);
+    let mut rng = Rng::seed(seed);
+    comp_ams::data::make_batch(&ds, &mut rng, 16, None)
+}
+
+#[test]
+fn grad_exe_matches_finite_differences() {
+    let Some((_rt, bundle)) = load("logreg") else { return };
+    let theta = bundle.init_theta.clone();
+    let batch = logreg_batch(1);
+    let (_, grad) = bundle.grad.run(&theta, &batch, 0).unwrap();
+    assert_eq!(grad.len(), theta.len());
+    // Central differences on a few coordinates through the *loss* output.
+    let eps = 1e-2f32;
+    for &i in &[0usize, 63, 130, 259] {
+        let mut tp = theta.clone();
+        tp[i] += eps;
+        let (lp, _) = bundle.grad.run(&tp, &batch, 0).unwrap();
+        let mut tm = theta.clone();
+        tm[i] -= eps;
+        let (lm, _) = bundle.grad.run(&tm, &batch, 0).unwrap();
+        let fd = (lp - lm) / (2.0 * eps);
+        assert!(
+            (fd - grad[i]).abs() < 5e-2 * grad[i].abs().max(0.05),
+            "coord {i}: fd={fd} grad={}",
+            grad[i]
+        );
+    }
+}
+
+#[test]
+fn grad_exe_is_deterministic_given_seed() {
+    let Some((_rt, bundle)) = load("logreg") else { return };
+    let theta = bundle.init_theta.clone();
+    let batch = logreg_batch(2);
+    let (l1, g1) = bundle.grad.run(&theta, &batch, 5).unwrap();
+    let (l2, g2) = bundle.grad.run(&theta, &batch, 5).unwrap();
+    assert_eq!(l1.to_bits(), l2.to_bits());
+    assert_eq!(g1, g2);
+}
+
+#[test]
+fn eval_exe_counts_are_bounded_and_loss_finite() {
+    let Some((_rt, bundle)) = load("logreg") else { return };
+    let batch = logreg_batch(3);
+    let (loss, correct) = bundle.eval.run(&bundle.init_theta, &batch).unwrap();
+    assert!(loss.is_finite());
+    assert!(correct <= 16);
+}
+
+#[test]
+fn pallas_fused_amsgrad_matches_pure_rust() {
+    // The L1 kernel and the L3 reference implementation must agree to
+    // f32 tolerance for several consecutive steps.
+    let Some((_rt, bundle)) = load("logreg") else { return };
+    let p = bundle.entry.p;
+    let mut rng = Rng::seed(11);
+    let mut rust_opt = AmsGrad::default_hp(p);
+    let mut theta_rust = rng.normal_vec(p);
+    let mut theta_pjrt = theta_rust.clone();
+    let (mut m, mut v, mut vhat) = (vec![0.0f32; p], vec![0.0f32; p], vec![0.0f32; p]);
+    for step in 0..5 {
+        let g = rng.normal_vec(p);
+        rust_opt.step(&mut theta_rust, &g, 1e-3);
+        let (t2, m2, v2, vh2) = bundle
+            .amsgrad
+            .run(&theta_pjrt, &m, &v, &vhat, &g, 1e-3)
+            .unwrap();
+        theta_pjrt = t2;
+        m = m2;
+        v = v2;
+        vhat = vh2;
+        for i in 0..p {
+            assert!(
+                (theta_rust[i] - theta_pjrt[i]).abs() < 1e-5,
+                "step {step} coord {i}: rust {} pjrt {}",
+                theta_rust[i],
+                theta_pjrt[i]
+            );
+            assert!((rust_opt.m[i] - m[i]).abs() < 1e-6);
+            assert!((rust_opt.vhat[i] - vhat[i]).abs() < 1e-6);
+        }
+    }
+}
+
+#[test]
+fn training_decreases_loss_on_pjrt_smoke_model() {
+    if artifacts().is_none() {
+        return;
+    }
+    let mut cfg = TrainConfig::preset("logreg", "comp-ams-topk:0.1");
+    cfg.workers = 4;
+    cfg.rounds = 40;
+    cfg.lr = 0.01;
+    cfg.eval_every = 0;
+    let run = train(&cfg).unwrap();
+    let first = run.metrics[0].train_loss;
+    let last = run.final_train_loss(5);
+    assert!(last < first * 0.8, "pjrt training stalled: {first} -> {last}");
+    assert!(run.final_eval.accuracy > 0.4);
+}
+
+#[test]
+fn fused_and_rust_server_updates_train_identically_enough() {
+    if artifacts().is_none() {
+        return;
+    }
+    let mut cfg = TrainConfig::preset("logreg", "dist-ams");
+    cfg.workers = 2;
+    cfg.rounds = 15;
+    cfg.eval_every = 0;
+    let rust_run = train(&cfg).unwrap();
+    cfg.fused_update = true;
+    let fused_run = train(&cfg).unwrap();
+    for (a, b) in rust_run.metrics.iter().zip(&fused_run.metrics) {
+        assert!(
+            (a.train_loss - b.train_loss).abs() < 1e-4,
+            "round {}: {} vs {}",
+            a.round,
+            a.train_loss,
+            b.train_loss
+        );
+    }
+}
+
+#[test]
+fn manifest_lists_all_default_models() {
+    let Some(dir) = artifacts() else { return };
+    let m = comp_ams::runtime::Manifest::load(&dir.join("manifest.json")).unwrap();
+    for name in ["logreg", "mnist_cnn", "cifar_lenet", "cifar_resnet", "imdb_lstm", "lm_small"]
+    {
+        let e = m.model(name).unwrap();
+        assert!(e.p > 0);
+        assert!(dir.join(&e.files.grad).exists());
+        assert!(dir.join(&e.files.init).exists());
+    }
+}
+
+#[test]
+fn batch_dtype_mismatch_is_rejected() {
+    let Some((_rt, bundle)) = load("logreg") else { return };
+    let bad = Batch { x: BatchData::I32(vec![0; 16 * 64]), y: vec![0; 16] };
+    assert!(bundle.grad.run(&bundle.init_theta, &bad, 0).is_err());
+}

@@ -1,0 +1,208 @@
+//! Property-based invariants (via the in-tree `testing::prop` harness):
+//! the paper's Assumption 1 bound, wire-format exactness, error-feedback
+//! conservation, aggregation linearity, and optimizer-state monotonicity
+//! over randomized shapes and gradient distributions.
+
+use comp_ams::algo::average_payloads;
+use comp_ams::compress::{
+    BlockSign, Compressor, ErrorFeedback, Identity, Payload, RandomK, TopK,
+};
+use comp_ams::optim::{AmsGrad, ServerOpt};
+use comp_ams::testing::prop::{check, Gen};
+use comp_ams::util::math;
+
+fn random_compressor(g: &mut Gen) -> Box<dyn Compressor> {
+    match g.rng.gen_range(4) {
+        0 => Box::new(TopK::new(g.f32_range(0.005, 1.0))),
+        1 => Box::new(BlockSign::new(g.size(1, 512))),
+        2 => Box::new(RandomK::new(g.f32_range(0.005, 1.0), g.rng.next_u64())),
+        _ => Box::new(Identity),
+    }
+}
+
+#[test]
+fn prop_q_deviate_bound_deterministic_compressors() {
+    // Assumption 1: ||C(x) - x|| <= q ||x|| for Top-k and Block-Sign
+    // (deterministic q-deviate compressors; Remark 1 gives their q).
+    check("q_deviate", 150, |g| {
+        let d = g.size(1, 5000);
+        let x = g.grad_vec(d);
+        let mut cs: Vec<Box<dyn Compressor>> = vec![
+            Box::new(TopK::new(g.f32_range(0.005, 1.0))),
+            Box::new(BlockSign::new(g.size(1, 512))),
+        ];
+        for c in &mut cs {
+            let p = c.compress(&x);
+            let dense = p.to_dense(d).unwrap();
+            let err: f64 = x
+                .iter()
+                .zip(&dense)
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum();
+            let q2 = (c.q(d) as f64).powi(2);
+            let bound = q2 * math::norm2_sq(&x) + 1e-5;
+            assert!(err <= bound, "{}: d={d} err={err} bound={bound}", c.name());
+        }
+    });
+}
+
+#[test]
+fn prop_wire_roundtrip_exact() {
+    // encode/decode must be the identity, and the ledger must equal the
+    // encoded length exactly, for every payload any compressor can emit.
+    check("wire_roundtrip", 200, |g| {
+        let d = g.size(1, 3000);
+        let x = g.grad_vec(d);
+        let mut c = random_compressor(g);
+        let p = c.compress(&x);
+        let bytes = p.encode();
+        assert_eq!(bytes.len() as u64 * 8, p.wire_bits());
+        let q = Payload::decode(&bytes).unwrap();
+        assert_eq!(p, q);
+        // Dense reconstruction must also survive the byte round-trip.
+        assert_eq!(p.to_dense(d).unwrap(), q.to_dense(d).unwrap());
+    });
+}
+
+#[test]
+fn prop_error_feedback_conservation() {
+    // decode(C(g+e)) + e' == g + e (Alg. 2 lines 7-8) to f32 rounding.
+    check("ef_conservation", 100, |g| {
+        let d = g.size(1, 2000);
+        let mut ef = ErrorFeedback::new(d, true);
+        let mut c = random_compressor(g);
+        for round in 0..5 {
+            let grad = g.grad_vec(d);
+            let corrected: Vec<f32> = grad
+                .iter()
+                .zip(ef.residual())
+                .map(|(&a, &b)| a + b)
+                .collect();
+            let p = ef.compress(&grad, c.as_mut()).unwrap();
+            let sent = p.to_dense(d).unwrap();
+            for i in 0..d {
+                let lhs = sent[i] + ef.residual()[i];
+                assert!(
+                    (lhs - corrected[i]).abs() <= 1e-4 * corrected[i].abs().max(1.0),
+                    "round {round} coord {i}: {lhs} vs {}",
+                    corrected[i]
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_average_payloads_matches_dense_mean() {
+    check("avg_linearity", 100, |g| {
+        let d = g.size(1, 1500);
+        let n = g.size(1, 8);
+        let mut msgs = Vec::new();
+        let mut dense = Vec::new();
+        for _ in 0..n {
+            let x = g.grad_vec(d);
+            let mut c = random_compressor(g);
+            let p = c.compress(&x);
+            dense.push(p.to_dense(d).unwrap());
+            msgs.push(p);
+        }
+        let mut avg = Vec::new();
+        average_payloads(&msgs, d, &mut avg).unwrap();
+        for i in 0..d {
+            let want: f32 = dense.iter().map(|v| v[i]).sum::<f32>() / n as f32;
+            assert!((avg[i] - want).abs() <= 1e-4 * want.abs().max(1.0));
+        }
+    });
+}
+
+#[test]
+fn prop_amsgrad_vhat_monotone_and_step_bounded() {
+    check("amsgrad_invariants", 60, |g| {
+        let d = g.size(1, 300);
+        let mut opt = AmsGrad::default_hp(d);
+        let mut theta = g.grad_vec(d);
+        let lr = g.f32_range(1e-4, 0.1);
+        let mut prev_vhat = vec![0.0f32; d];
+        for _ in 0..10 {
+            let grad = g.grad_vec(d);
+            let before = theta.clone();
+            opt.step(&mut theta, &grad, lr);
+            for i in 0..d {
+                assert!(opt.vhat[i] >= prev_vhat[i], "vhat decreased");
+                // |Δθ_i| <= lr * |m_i| / sqrt(vhat_i) <= lr / sqrt(1-β2)
+                // whenever vhat >= (1-β2) m² — always true since vhat >= v
+                // >= (1-β2) g² and |m| <= max|g| seen. Use the loose bound.
+                let step = (theta[i] - before[i]).abs();
+                assert!(step <= lr * 40.0, "step {step} too large for lr {lr}");
+            }
+            prev_vhat = opt.vhat.clone();
+        }
+    });
+}
+
+#[test]
+fn prop_topk_payload_is_best_k_approximation() {
+    // Top-k minimizes ||C(x) - x|| over all k-sparse selections: its error
+    // must be <= Random-k's error on the same vector and same k.
+    check("topk_optimality", 80, |g| {
+        let d = g.size(2, 2000);
+        let ratio = g.f32_range(0.01, 0.9);
+        let x = g.grad_vec(d);
+        let mut topk = TopK::new(ratio);
+        let mut randk = RandomK::new(ratio, g.rng.next_u64());
+        let et: f64 = {
+            let dn = topk.compress(&x).to_dense(d).unwrap();
+            x.iter().zip(&dn).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum()
+        };
+        let er: f64 = {
+            let dn = randk.compress(&x).to_dense(d).unwrap();
+            x.iter().zip(&dn).map(|(&a, &b)| ((a - b) as f64).powi(2)).sum()
+        };
+        assert!(et <= er + 1e-6, "topk err {et} > randomk err {er}");
+    });
+}
+
+#[test]
+fn prop_config_json_roundtrip() {
+    use comp_ams::config::{LrSchedule, TrainConfig};
+    check("config_roundtrip", 60, |g| {
+        let models = ["quadratic", "logistic", "mnist_cnn", "imdb_lstm"];
+        let algos = ["dist-ams", "comp-ams-topk:0.01", "qadam", "1bitadam:7", "dist-sgd"];
+        let mut cfg = TrainConfig::preset(
+            models[g.rng.gen_range(models.len())],
+            algos[g.rng.gen_range(algos.len())],
+        );
+        cfg.workers = g.size(1, 64);
+        cfg.rounds = g.size(1, 100_000) as u64;
+        cfg.lr = g.f32_range(1e-5, 1.0);
+        cfg.seed = g.rng.next_u64() >> 12;
+        if g.rng.next_f32() < 0.5 {
+            cfg.schedule = LrSchedule::StepDecay {
+                at: vec![g.size(1, 500) as u64, g.size(500, 1000) as u64],
+                factor: g.f32_range(2.0, 10.0),
+            };
+        }
+        let text = cfg.to_json().to_string_pretty();
+        let back =
+            TrainConfig::from_json(&comp_ams::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.model, cfg.model);
+        assert_eq!(back.algo, cfg.algo);
+        assert_eq!(back.workers, cfg.workers);
+        assert_eq!(back.rounds, cfg.rounds);
+        assert_eq!(back.seed, cfg.seed);
+        assert_eq!(back.schedule, cfg.schedule);
+        assert!((back.lr - cfg.lr).abs() <= 1e-9 * cfg.lr.abs());
+    });
+}
+
+#[test]
+fn prop_rng_streams_do_not_collide() {
+    check("rng_streams", 40, |g| {
+        let mut root = comp_ams::util::rng::Rng::seed(g.rng.next_u64());
+        let n = g.size(2, 32);
+        let mut streams: Vec<_> = (0..n).map(|i| root.split(i as u64)).collect();
+        let firsts: Vec<u64> = streams.iter_mut().map(|s| s.next_u64()).collect();
+        let set: std::collections::BTreeSet<_> = firsts.iter().collect();
+        assert_eq!(set.len(), n, "stream collision");
+    });
+}
