@@ -1,9 +1,16 @@
 //! End-to-end round latency per protocol — the paper's per-iteration cost
 //! table, on both the analytic substrate (coordinator-dominated) and the
-//! PJRT smoke model (gradient-dominated). One bench per Fig. 1 method.
+//! PJRT smoke model (gradient-dominated). One bench per Fig. 1 method,
+//! plus a sequential-vs-threaded race of the full worker pipeline
+//! (grad + EF + compress + encode) now that compression runs on worker
+//! threads.
 
+use comp_ams::algo::{AlgoSpec, RoundCtx};
 use comp_ams::config::TrainConfig;
+use comp_ams::coordinator::cluster::WorkerPool;
 use comp_ams::coordinator::trainer::Trainer;
+use comp_ams::grad::quadratic::QuadraticProblem;
+use comp_ams::grad::GradSource;
 use comp_ams::testing::bench::bench_main;
 
 fn main() {
@@ -32,6 +39,48 @@ fn main() {
             round += 1;
         });
     }
+
+    // Sequential vs. threaded full-pipeline race on a large synthetic
+    // model: the per-worker stage (grad + EF + compress + encode) is the
+    // dominant cost at this dimension, so the threaded backend's speedup
+    // measures how well the split API parallelizes compression.
+    let dim = 400_000;
+    let n = 8;
+    let spec = AlgoSpec::parse("comp-ams-topk:0.01").expect("spec");
+    let problem = QuadraticProblem::new(11, dim, n, 10.0, 1.0, 0.5);
+    let mut means = Vec::new();
+    for threaded in [false, true] {
+        let (workers, mut server) = spec.build(dim, n, 1_000_000);
+        let mut pool = if threaded {
+            let sources: Vec<Box<dyn GradSource + Send>> = (0..n)
+                .map(|w| Box::new(problem.source_for(w, 11)) as _)
+                .collect();
+            WorkerPool::threaded(sources, workers).expect("pool")
+        } else {
+            let sources: Vec<Box<dyn GradSource>> = (0..n)
+                .map(|w| Box::new(problem.source_for(w, 11)) as _)
+                .collect();
+            WorkerPool::sequential(sources, workers).expect("pool")
+        };
+        let mut theta = vec![0.2f32; dim];
+        let mut round = 0u64;
+        let label = if threaded { "threaded" } else { "sequential" };
+        let r = b.bench(
+            &format!("full-pipeline d={dim} n={n} comp-ams-topk:0.01 {label}"),
+            || {
+                let ctx = RoundCtx { round, lr: 0.01 };
+                let rounds = pool.run_round(&theta, &ctx).unwrap();
+                let msgs: Vec<_> = rounds.into_iter().map(|w| w.payload).collect();
+                server.step(&mut theta, &msgs, &ctx).unwrap();
+                round += 1;
+            },
+        );
+        means.push(r.mean.as_secs_f64());
+    }
+    b.note(&format!(
+        "  -> threaded speedup over sequential: {:.2}x (n={n} workers)",
+        means[0] / means[1]
+    ));
 
     // PJRT path (artifacts required): full grad + protocol round.
     if std::path::Path::new("artifacts/manifest.json").exists() {

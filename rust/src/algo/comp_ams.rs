@@ -1,14 +1,17 @@
 //! COMP-AMS (paper Algorithm 2) — and, with the Identity compressor, the
 //! full-precision Dist-AMS baseline.
 //!
-//! Worker i (lines 5-9):  ĝ_i = C(g_i + e_i);  e_i ← e_i + g_i − ĝ_i.
-//! Server (lines 11-16):  ḡ = mean_i ĝ_i; AMSGrad(θ, ḡ) with m, v, v̂
-//! held **only on the server**.
+//! Worker i (lines 5-9, [`CompAmsWorker`]):  ĝ_i = C(g_i + e_i);
+//! e_i ← e_i + g_i − ĝ_i. Each worker owns its compressor and EF
+//! accumulator outright, so the whole stage runs on the worker thread.
+//!
+//! Server (lines 11-16, [`CompAmsServer`]):  ḡ = mean_i ĝ_i;
+//! AMSGrad(θ, ḡ) with m, v, v̂ held **only on the server**.
 //!
 //! The server update has two backends: the pure-Rust [`AmsGrad`] loop and
 //! the AOT-compiled L1 Pallas fused kernel ([`OptimizerExe`]), selected
-//! via [`CompAms::with_fused`]. Both are bit-compared in the integration
-//! tests and raced in `bench_optim`.
+//! via [`CompAmsServer::with_fused`]. Both are bit-compared in the
+//! integration tests and raced in `bench_optim`.
 
 use std::rc::Rc;
 
@@ -18,47 +21,50 @@ use crate::compress::{Compressor, CompressorSpec, ErrorFeedback, Payload};
 use crate::optim::{AmsGrad, ServerOpt};
 use crate::runtime::OptimizerExe;
 
-use super::{average_payloads, Algorithm, RoundCtx};
+use super::{average_payloads, per_worker_spec, Protocol, RoundCtx, ServerAlgo, WorkerAlgo};
 
-pub struct CompAms {
+/// Worker half: compressor + error-feedback accumulator (no optimizer
+/// state — the paper's §3.2 memory argument vs. QAdam/1BitAdam).
+pub struct CompAmsWorker {
+    compressor: Box<dyn Compressor>,
+    ef: ErrorFeedback,
+}
+
+impl CompAmsWorker {
+    pub fn new(dim: usize, compressor: Box<dyn Compressor>, error_feedback: bool) -> Self {
+        CompAmsWorker { compressor, ef: ErrorFeedback::new(dim, error_feedback) }
+    }
+
+    /// This worker's EF residual (diagnostics / tests).
+    pub fn residual(&self) -> &[f32] {
+        self.ef.residual()
+    }
+
+    pub fn residual_norm(&self) -> f64 {
+        self.ef.residual_norm()
+    }
+}
+
+impl WorkerAlgo for CompAmsWorker {
+    fn process(&mut self, grad: &[f32], _ctx: &RoundCtx) -> Result<Payload> {
+        self.ef.compress(grad, self.compressor.as_mut())
+    }
+}
+
+/// Server half: AMSGrad with all moment state on the leader.
+pub struct CompAmsServer {
     label: &'static str,
-    compressors: Vec<Box<dyn Compressor>>,
-    efs: Vec<ErrorFeedback>,
+    comp_name: String,
     opt: AmsGrad,
     fused: Option<Rc<OptimizerExe>>,
     avg: Vec<f32>,
 }
 
-impl CompAms {
-    pub fn new(
-        dim: usize,
-        n: usize,
-        compressor: CompressorSpec,
-        error_feedback: bool,
-        label: &'static str,
-    ) -> Self {
-        let compressors = (0..n)
-            .map(|w| {
-                // Give stateful compressors distinct streams per worker.
-                match &compressor {
-                    CompressorSpec::RandomK { ratio, seed } => CompressorSpec::RandomK {
-                        ratio: *ratio,
-                        seed: seed ^ (w as u64 + 1),
-                    }
-                    .build(),
-                    CompressorSpec::Qsgd { levels, seed } => CompressorSpec::Qsgd {
-                        levels: *levels,
-                        seed: seed ^ (w as u64 + 1),
-                    }
-                    .build(),
-                    c => c.build(),
-                }
-            })
-            .collect();
-        CompAms {
+impl CompAmsServer {
+    pub fn new(dim: usize, comp_name: String, label: &'static str) -> Self {
+        CompAmsServer {
             label,
-            compressors,
-            efs: (0..n).map(|_| ErrorFeedback::new(dim, error_feedback)).collect(),
+            comp_name,
             opt: AmsGrad::default_hp(dim),
             fused: None,
             avg: Vec::new(),
@@ -71,27 +77,18 @@ impl CompAms {
         self.fused = Some(exe);
         self
     }
-
-    /// Residual norms (diagnostics / tests).
-    pub fn residual_norms(&self) -> Vec<f64> {
-        self.efs.iter().map(|e| e.residual_norm()).collect()
-    }
 }
 
-impl Algorithm for CompAms {
+impl ServerAlgo for CompAmsServer {
     fn name(&self) -> String {
         if self.label == "dist-ams" {
             "dist-ams".into()
         } else {
-            format!("comp-ams[{}]", self.compressors[0].name())
+            format!("comp-ams[{}]", self.comp_name)
         }
     }
 
-    fn worker_msg(&mut self, wid: usize, grad: &[f32], _ctx: &RoundCtx) -> Result<Payload> {
-        self.efs[wid].compress(grad, self.compressors[wid].as_mut())
-    }
-
-    fn server_step(
+    fn step(
         &mut self,
         theta: &mut [f32],
         msgs: &[Payload],
@@ -115,6 +112,32 @@ impl Algorithm for CompAms {
     }
 }
 
+/// Build the full COMP-AMS protocol: n worker halves + the server half.
+pub fn protocol(
+    dim: usize,
+    n: usize,
+    compressor: CompressorSpec,
+    error_feedback: bool,
+    label: &'static str,
+    fused: Option<Rc<OptimizerExe>>,
+) -> Protocol {
+    let comp_name = compressor.build().name();
+    let workers: Vec<Box<dyn WorkerAlgo>> = (0..n)
+        .map(|w| {
+            Box::new(CompAmsWorker::new(
+                dim,
+                per_worker_spec(&compressor, w).build(),
+                error_feedback,
+            )) as Box<dyn WorkerAlgo>
+        })
+        .collect();
+    let mut server = CompAmsServer::new(dim, comp_name, label);
+    if let Some(exe) = fused {
+        server = server.with_fused(exe);
+    }
+    (workers, Box::new(server))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -123,21 +146,35 @@ mod tests {
         RoundCtx { round, lr: 0.01 }
     }
 
+    fn build(
+        dim: usize,
+        n: usize,
+        spec: CompressorSpec,
+        ef: bool,
+    ) -> (Vec<CompAmsWorker>, CompAmsServer) {
+        let comp_name = spec.build().name();
+        let workers = (0..n)
+            .map(|w| CompAmsWorker::new(dim, per_worker_spec(&spec, w).build(), ef))
+            .collect();
+        (workers, CompAmsServer::new(dim, comp_name, "comp-ams"))
+    }
+
     #[test]
     fn identity_variant_equals_sequential_amsgrad() {
         // Dist-AMS with n workers and identical gradients must match a
         // single-machine AMSGrad trace exactly.
         let dim = 16;
-        let mut algo = CompAms::new(dim, 4, CompressorSpec::Identity, false, "dist-ams");
+        let (mut workers, mut server) = build(dim, 4, CompressorSpec::Identity, false);
         let mut reference = AmsGrad::default_hp(dim);
         let mut theta_a = vec![0.3f32; dim];
         let mut theta_b = vec![0.3f32; dim];
         for r in 0..20 {
             let g: Vec<f32> = (0..dim).map(|i| ((r * i) as f32 * 0.1).sin()).collect();
-            let msgs: Vec<Payload> = (0..4)
-                .map(|w| algo.worker_msg(w, &g, &ctx(r as u64)).unwrap())
+            let msgs: Vec<Payload> = workers
+                .iter_mut()
+                .map(|w| w.process(&g, &ctx(r as u64)).unwrap())
                 .collect();
-            algo.server_step(&mut theta_a, &msgs, &ctx(r as u64)).unwrap();
+            server.step(&mut theta_a, &msgs, &ctx(r as u64)).unwrap();
             reference.step(&mut theta_b, &g, 0.01);
             assert_eq!(theta_a, theta_b, "round {r}");
         }
@@ -148,19 +185,18 @@ mod tests {
         // With EF, the *sum* of transmitted messages telescopes to the sum
         // of true gradients minus the final residual (Alg. 2 invariant).
         let dim = 64;
-        let mut algo =
-            CompAms::new(dim, 1, CompressorSpec::TopK { ratio: 0.1 }, true, "comp-ams");
+        let (mut workers, _) = build(dim, 1, CompressorSpec::TopK { ratio: 0.1 }, true);
         let mut rng = crate::util::rng::Rng::seed(3);
         let mut sum_g = vec![0.0f32; dim];
         let mut sum_sent = vec![0.0f32; dim];
         for r in 0..30 {
             let g = rng.normal_vec(dim);
             crate::util::math::axpy(1.0, &g, &mut sum_g);
-            let msg = algo.worker_msg(0, &g, &ctx(r)).unwrap();
+            let msg = workers[0].process(&g, &ctx(r)).unwrap();
             let dense = msg.to_dense(dim).unwrap();
             crate::util::math::axpy(1.0, &dense, &mut sum_sent);
         }
-        let residual = algo.efs[0].residual();
+        let residual = workers[0].residual();
         for i in 0..dim {
             assert!(
                 (sum_g[i] - sum_sent[i] - residual[i]).abs() < 1e-3,
@@ -172,11 +208,24 @@ mod tests {
     #[test]
     fn worker_messages_are_actually_compressed() {
         let dim = 10_000;
-        let mut algo =
-            CompAms::new(dim, 2, CompressorSpec::TopK { ratio: 0.01 }, true, "comp-ams");
+        let (mut workers, _) = build(dim, 2, CompressorSpec::TopK { ratio: 0.01 }, true);
         let g = vec![1.0f32; dim];
-        let msg = algo.worker_msg(0, &g, &ctx(0)).unwrap();
+        let msg = workers[0].process(&g, &ctx(0)).unwrap();
         let dense_bits = Payload::Dense(g).wire_bits();
         assert!(msg.wire_bits() < dense_bits / 40);
+    }
+
+    #[test]
+    fn workers_have_independent_residuals() {
+        // Two workers fed different gradients accumulate different EF
+        // residuals — per-worker state is genuinely per-instance now.
+        let dim = 32;
+        let (mut workers, _) = build(dim, 2, CompressorSpec::TopK { ratio: 0.1 }, true);
+        let g0 = vec![1.0f32; dim];
+        let mut g1 = vec![0.0f32; dim];
+        g1[0] = 5.0;
+        workers[0].process(&g0, &ctx(0)).unwrap();
+        workers[1].process(&g1, &ctx(0)).unwrap();
+        assert!(workers[1].residual_norm() < workers[0].residual_norm());
     }
 }

@@ -6,29 +6,35 @@ use anyhow::Result;
 use crate::compress::Payload;
 use crate::optim::{MomentumSgd, ServerOpt};
 
-use super::{average_payloads, Algorithm, RoundCtx};
+use super::{average_payloads, Protocol, RoundCtx, ServerAlgo, WorkerAlgo};
 
-pub struct DistSgd {
+/// Worker half: stateless dense uplink.
+pub struct DistSgdWorker;
+
+impl WorkerAlgo for DistSgdWorker {
+    fn process(&mut self, grad: &[f32], _ctx: &RoundCtx) -> Result<Payload> {
+        Ok(Payload::Dense(grad.to_vec()))
+    }
+}
+
+/// Server half: momentum SGD on the averaged gradient.
+pub struct DistSgdServer {
     opt: MomentumSgd,
     avg: Vec<f32>,
 }
 
-impl DistSgd {
+impl DistSgdServer {
     pub fn new(dim: usize, momentum: f32) -> Self {
-        DistSgd { opt: MomentumSgd::new(dim, momentum), avg: Vec::new() }
+        DistSgdServer { opt: MomentumSgd::new(dim, momentum), avg: Vec::new() }
     }
 }
 
-impl Algorithm for DistSgd {
+impl ServerAlgo for DistSgdServer {
     fn name(&self) -> String {
         "dist-sgd".into()
     }
 
-    fn worker_msg(&mut self, _wid: usize, grad: &[f32], _ctx: &RoundCtx) -> Result<Payload> {
-        Ok(Payload::Dense(grad.to_vec()))
-    }
-
-    fn server_step(
+    fn step(
         &mut self,
         theta: &mut [f32],
         msgs: &[Payload],
@@ -42,20 +48,36 @@ impl Algorithm for DistSgd {
     }
 }
 
+/// Build the full Dist-SGD protocol: n worker halves + the server half.
+pub fn protocol(dim: usize, n: usize, momentum: f32) -> Protocol {
+    let workers: Vec<Box<dyn WorkerAlgo>> =
+        (0..n).map(|_| Box::new(DistSgdWorker) as Box<dyn WorkerAlgo>).collect();
+    (workers, Box::new(DistSgdServer::new(dim, momentum)))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
     fn averaging_two_workers_matches_mean_gradient_step() {
-        let mut algo = DistSgd::new(3, 0.0);
+        let mut server = DistSgdServer::new(3, 0.0);
         let mut theta = vec![0.0f32; 3];
         let ctx = RoundCtx { round: 0, lr: 1.0 };
         let msgs = vec![
             Payload::Dense(vec![1.0, 0.0, 2.0]),
             Payload::Dense(vec![3.0, 0.0, 0.0]),
         ];
-        algo.server_step(&mut theta, &msgs, &ctx).unwrap();
+        server.step(&mut theta, &msgs, &ctx).unwrap();
         assert_eq!(theta, vec![-2.0, 0.0, -1.0]);
+    }
+
+    #[test]
+    fn worker_half_is_a_dense_passthrough() {
+        let mut w = DistSgdWorker;
+        let ctx = RoundCtx { round: 0, lr: 0.1 };
+        let g = vec![1.0f32, -2.0];
+        assert_eq!(w.process(&g, &ctx).unwrap(), Payload::Dense(g.clone()));
+        assert_eq!(w.state_bytes(), 0);
     }
 }

@@ -1,32 +1,52 @@
 //! Distributed optimization protocols — the paper's Algorithm 2 and every
-//! baseline in its evaluation (§5.1):
+//! baseline in its evaluation (§5.1).
 //!
-//! | name            | worker uplink                    | server update            |
-//! |-----------------|----------------------------------|--------------------------|
-//! | `dist-ams`      | dense gradient                   | AMSGrad                  |
-//! | `comp-ams-*`    | C(g + e) with error feedback     | AMSGrad (state on server)|
-//! | `qadam`         | C(m/√v) with EF (local m, v)     | lr · avg ratio           |
+//! A protocol is **two-sided**, mirroring Algorithm 2's layout:
+//!
+//! | trait          | runs on        | owns                                        |
+//! |----------------|----------------|---------------------------------------------|
+//! | [`WorkerAlgo`] | worker thread  | compressor, EF accumulator, local optimizer state (QAdam m/v, 1BitAdam m) |
+//! | [`ServerAlgo`] | leader thread  | aggregation buffers, server optimizer state, fused-kernel routing |
+//!
+//! [`AlgoSpec::build`] instantiates one `WorkerAlgo` **per worker** plus a
+//! single `ServerAlgo`. `WorkerAlgo: Send` so the coordinator's threaded
+//! backend can move each instance into its worker thread and run the full
+//! per-worker pipeline (gradient → EF → compress → encode) off the leader;
+//! the `ServerAlgo` stays on the leader (it may hold non-`Send` PJRT
+//! handles for the Pallas fused update).
+//!
+//! Per-protocol split (worker uplink / server update):
+//!
+//! | name            | worker side ([`WorkerAlgo`])     | server side ([`ServerAlgo`]) |
+//! |-----------------|----------------------------------|------------------------------|
+//! | `dist-ams`      | dense gradient                   | AMSGrad                      |
+//! | `comp-ams-*`    | C(g + e) with error feedback     | AMSGrad (state on server)    |
+//! | `qadam`         | C(m/√v) with EF (local m, v)     | lr · avg ratio               |
 //! | `1bitadam`      | dense g (warm-up) then C(m) + EF | Adam, then frozen-v momentum |
-//! | `dist-sgd`      | dense gradient                   | (momentum) SGD           |
+//! | `dist-sgd`      | dense gradient                   | (momentum) SGD               |
 //!
-//! A protocol is a single [`Algorithm`] object: `worker_msg` is the code
-//! that would run on worker i (its per-worker state is indexed by `wid`),
-//! `server_step` is the leader. The coordinator routes payloads between
-//! them and charges the byte ledger.
+//! Migration note: the old fused `Algorithm` trait (`worker_msg` +
+//! `server_step` on one `&mut self` object) is gone — `worker_msg` became
+//! [`WorkerAlgo::process`] on a per-worker instance, `server_step` became
+//! [`ServerAlgo::step`], and `worker_state_bytes` became
+//! [`WorkerAlgo::state_bytes`] (still *per worker*).
 
 pub mod comp_ams;
 pub mod dist_sgd;
 pub mod onebit_adam;
 pub mod qadam;
 
-pub use comp_ams::CompAms;
-pub use dist_sgd::DistSgd;
-pub use onebit_adam::OneBitAdam;
-pub use qadam::QAdam;
+pub use comp_ams::{CompAmsServer, CompAmsWorker};
+pub use dist_sgd::{DistSgdServer, DistSgdWorker};
+pub use onebit_adam::{OneBitAdamServer, OneBitAdamWorker};
+pub use qadam::{QAdamServer, QAdamWorker};
+
+use std::rc::Rc;
 
 use anyhow::{bail, Result};
 
 use crate::compress::{CompressorSpec, Payload};
+use crate::runtime::OptimizerExe;
 
 /// Per-round context handed to both sides of the protocol.
 #[derive(Clone, Copy, Debug)]
@@ -35,23 +55,35 @@ pub struct RoundCtx {
     pub lr: f32,
 }
 
-pub trait Algorithm {
-    fn name(&self) -> String;
-
-    /// Worker `wid` turns its raw stochastic gradient into the uplink
+/// The worker half of a protocol: one instance per worker, owning that
+/// worker's compressor, error-feedback accumulator, and any local
+/// optimizer state. `Send` so the threaded coordinator can run the whole
+/// gradient → EF → compress → encode pipeline inside the worker thread.
+pub trait WorkerAlgo: Send {
+    /// Turn this worker's raw stochastic gradient into the uplink
     /// message (compression + any worker-local state updates).
-    fn worker_msg(&mut self, wid: usize, grad: &[f32], ctx: &RoundCtx) -> Result<Payload>;
-
-    /// The leader consumes all n uplink messages and updates `theta`.
-    fn server_step(&mut self, theta: &mut [f32], msgs: &[Payload], ctx: &RoundCtx)
-        -> Result<()>;
+    fn process(&mut self, grad: &[f32], ctx: &RoundCtx) -> Result<Payload>;
 
     /// Extra per-worker memory (bytes) beyond the error accumulator —
     /// the paper's §3.2 memory-footprint comparison.
-    fn worker_state_bytes(&self) -> usize {
+    fn state_bytes(&self) -> usize {
         0
     }
 }
+
+/// The server half of a protocol: consumes all n uplink messages and
+/// updates `theta`. Lives on the leader thread; may hold non-`Send`
+/// resources (the Pallas fused-update PJRT executable).
+pub trait ServerAlgo {
+    fn name(&self) -> String;
+
+    fn step(&mut self, theta: &mut [f32], msgs: &[Payload], ctx: &RoundCtx)
+        -> Result<()>;
+}
+
+/// A fully instantiated protocol: one worker half per worker plus the
+/// server half. What [`AlgoSpec::build`] returns.
+pub type Protocol = (Vec<Box<dyn WorkerAlgo>>, Box<dyn ServerAlgo>);
 
 /// Parsed protocol spec (from CLI/config strings).
 #[derive(Clone, Debug, PartialEq)]
@@ -105,27 +137,40 @@ impl AlgoSpec {
     }
 
     /// Instantiate for `n` workers over a `dim`-dimensional model.
-    /// `warmup_override` lets the trainer set 1BitAdam's warm-up from the
-    /// schedule (paper: 1/20 of total epochs) when the spec says 0.
-    pub fn build(&self, dim: usize, n: usize, total_rounds: u64) -> Box<dyn Algorithm> {
+    /// `total_rounds` lets 1BitAdam derive its warm-up from the schedule
+    /// (paper: 1/20 of total epochs) when the spec says 0.
+    pub fn build(&self, dim: usize, n: usize, total_rounds: u64) -> Protocol {
+        self.build_fused(dim, n, total_rounds, None)
+    }
+
+    /// Like [`AlgoSpec::build`], but routes AMSGrad-family server updates
+    /// through the Pallas fused-update artifact when one is supplied.
+    /// Protocols whose server is not AMSGrad ignore `fused`.
+    pub fn build_fused(
+        &self,
+        dim: usize,
+        n: usize,
+        total_rounds: u64,
+        fused: Option<Rc<OptimizerExe>>,
+    ) -> Protocol {
         match self {
-            AlgoSpec::DistAms => Box::new(CompAms::new(
+            AlgoSpec::DistAms => comp_ams::protocol(
                 dim,
                 n,
                 CompressorSpec::Identity,
                 false,
                 "dist-ams",
-            )),
-            AlgoSpec::CompAms { compressor, error_feedback } => Box::new(CompAms::new(
+                fused,
+            ),
+            AlgoSpec::CompAms { compressor, error_feedback } => comp_ams::protocol(
                 dim,
                 n,
                 compressor.clone(),
                 *error_feedback,
                 "comp-ams",
-            )),
-            AlgoSpec::QAdam { compressor } => {
-                Box::new(QAdam::new(dim, n, compressor.clone()))
-            }
+                fused,
+            ),
+            AlgoSpec::QAdam { compressor } => qadam::protocol(dim, n, compressor.clone()),
             AlgoSpec::OneBitAdam { warmup_rounds, block } => {
                 let warmup = if *warmup_rounds == 0 {
                     // Paper §5.1: warm-up = 1/20 of the training budget.
@@ -133,10 +178,26 @@ impl AlgoSpec {
                 } else {
                     *warmup_rounds
                 };
-                Box::new(OneBitAdam::new(dim, n, warmup, *block))
+                onebit_adam::protocol(dim, n, warmup, *block)
             }
-            AlgoSpec::DistSgd { momentum } => Box::new(DistSgd::new(dim, *momentum)),
+            AlgoSpec::DistSgd { momentum } => dist_sgd::protocol(dim, n, *momentum),
         }
+    }
+}
+
+/// Give stateful compressors (Random-k, QSGD) distinct streams per worker;
+/// deterministic compressors are cloned as-is.
+pub(crate) fn per_worker_spec(spec: &CompressorSpec, wid: usize) -> CompressorSpec {
+    match spec {
+        CompressorSpec::RandomK { ratio, seed } => CompressorSpec::RandomK {
+            ratio: *ratio,
+            seed: seed ^ (wid as u64 + 1),
+        },
+        CompressorSpec::Qsgd { levels, seed } => CompressorSpec::Qsgd {
+            levels: *levels,
+            seed: seed ^ (wid as u64 + 1),
+        },
+        c => c.clone(),
     }
 }
 
@@ -195,12 +256,28 @@ mod tests {
     }
 
     #[test]
-    fn build_names() {
-        assert_eq!(AlgoSpec::DistAms.build(10, 2, 100).name(), "dist-ams");
-        assert!(AlgoSpec::parse("comp-ams-topk:0.01")
-            .unwrap()
-            .build(10, 2, 100)
-            .name()
-            .contains("topk"));
+    fn build_yields_one_worker_half_per_worker() {
+        let (workers, server) = AlgoSpec::DistAms.build(10, 2, 100);
+        assert_eq!(workers.len(), 2);
+        assert_eq!(server.name(), "dist-ams");
+        let (workers, server) =
+            AlgoSpec::parse("comp-ams-topk:0.01").unwrap().build(10, 3, 100);
+        assert_eq!(workers.len(), 3);
+        assert!(server.name().contains("topk"));
+    }
+
+    #[test]
+    fn worker_halves_are_send() {
+        fn assert_send<T: Send + ?Sized>() {}
+        assert_send::<dyn WorkerAlgo>();
+        assert_send::<Box<dyn WorkerAlgo>>();
+    }
+
+    #[test]
+    fn per_worker_spec_salts_stateful_compressors() {
+        let rk = CompressorSpec::RandomK { ratio: 0.1, seed: 7 };
+        assert_ne!(per_worker_spec(&rk, 0), per_worker_spec(&rk, 1));
+        let tk = CompressorSpec::TopK { ratio: 0.1 };
+        assert_eq!(per_worker_spec(&tk, 0), per_worker_spec(&tk, 1));
     }
 }

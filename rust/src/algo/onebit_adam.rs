@@ -1,15 +1,19 @@
 //! 1BitAdam baseline (Tang et al. 2021, as described in the paper §3.2).
 //!
-//! Phase 1 (warm-up, full precision): workers uplink dense gradients and
-//! the server runs standard Adam. At the end of warm-up the server
-//! freezes the second moment v and broadcasts the preconditioner
-//! 1/(√v̂+ε).
+//! Phase 1 (warm-up, full precision): workers uplink dense gradients
+//! ([`OneBitAdamWorker`] passes them through) and the server runs
+//! standard Adam. At the end of warm-up the server freezes the second
+//! moment v into the preconditioner 1/(√v̂+ε) ([`OneBitAdamServer`]).
 //!
 //! Phase 2 (compressed): each worker keeps a **local** momentum m_i,
 //! updates m_i ← β1 m_i + (1−β1) g_i, and uplinks C(m_i) (1-bit
 //! block-sign) with error feedback. The server averages the decoded
 //! momenta and applies θ ← θ − lr · m̄ ⊙ precond — i.e. momentum SGD with
 //! frozen coordinate-wise learning rates (the paper's §3.2 reading).
+//!
+//! Both halves carry the warm-up horizon so the phase switch needs no
+//! cross-thread coordination: workers and server each read it off the
+//! shared [`RoundCtx`] round counter.
 //!
 //! The paper's observed failure mode — sensitivity to warm-up quality,
 //! especially on sparse text where v is unstable — emerges from exactly
@@ -20,29 +24,64 @@ use anyhow::Result;
 use crate::compress::{BlockSign, ErrorFeedback, Payload};
 use crate::optim::{Adam, ServerOpt, BETA1, EPS};
 
-use super::{average_payloads, Algorithm, RoundCtx};
+use super::{average_payloads, Protocol, RoundCtx, ServerAlgo, WorkerAlgo};
 
-pub struct OneBitAdam {
+/// Worker half: local momentum + block-sign + EF, dense during warm-up.
+pub struct OneBitAdamWorker {
+    warmup_rounds: u64,
+    /// Worker-local momentum (phase 2 state).
+    m: Vec<f32>,
+    compressor: BlockSign,
+    ef: ErrorFeedback,
+}
+
+impl OneBitAdamWorker {
+    pub fn new(dim: usize, warmup_rounds: u64, block: usize) -> Self {
+        OneBitAdamWorker {
+            warmup_rounds,
+            m: vec![0.0; dim],
+            compressor: BlockSign::new(block),
+            ef: ErrorFeedback::new(dim, true),
+        }
+    }
+
+    pub fn in_warmup(&self, round: u64) -> bool {
+        round < self.warmup_rounds
+    }
+}
+
+impl WorkerAlgo for OneBitAdamWorker {
+    fn process(&mut self, grad: &[f32], ctx: &RoundCtx) -> Result<Payload> {
+        if self.in_warmup(ctx.round) {
+            return Ok(Payload::Dense(grad.to_vec()));
+        }
+        for i in 0..grad.len() {
+            self.m[i] = BETA1 * self.m[i] + (1.0 - BETA1) * grad[i];
+        }
+        self.ef.compress(&self.m, &mut self.compressor)
+    }
+
+    fn state_bytes(&self) -> usize {
+        // local momentum per worker (paper §3.2: "extra tensors for m").
+        self.m.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Server half: Adam during warm-up, frozen-preconditioner momentum after.
+pub struct OneBitAdamServer {
     warmup_rounds: u64,
     adam: Adam,
     /// Frozen 1/(√v+ε) preconditioner (None during warm-up).
     precond: Option<Vec<f32>>,
-    /// Worker-local momenta (phase 2 state).
-    m: Vec<Vec<f32>>,
-    compressors: Vec<BlockSign>,
-    efs: Vec<ErrorFeedback>,
     avg: Vec<f32>,
 }
 
-impl OneBitAdam {
-    pub fn new(dim: usize, n: usize, warmup_rounds: u64, block: usize) -> Self {
-        OneBitAdam {
+impl OneBitAdamServer {
+    pub fn new(dim: usize, warmup_rounds: u64) -> Self {
+        OneBitAdamServer {
             warmup_rounds,
             adam: Adam::default_hp(dim),
             precond: None,
-            m: vec![vec![0.0; dim]; n],
-            compressors: (0..n).map(|_| BlockSign::new(block)).collect(),
-            efs: (0..n).map(|_| ErrorFeedback::new(dim, true)).collect(),
             avg: Vec::new(),
         }
     }
@@ -51,30 +90,22 @@ impl OneBitAdam {
         round < self.warmup_rounds
     }
 
+    pub fn precond(&self) -> Option<&[f32]> {
+        self.precond.as_deref()
+    }
+
     fn freeze(&mut self) {
         let v = self.adam.freeze_v();
         self.precond = Some(v.iter().map(|&vi| 1.0 / (vi.sqrt() + EPS)).collect());
     }
 }
 
-impl Algorithm for OneBitAdam {
+impl ServerAlgo for OneBitAdamServer {
     fn name(&self) -> String {
         format!("1bitadam[warmup={}]", self.warmup_rounds)
     }
 
-    fn worker_msg(&mut self, wid: usize, grad: &[f32], ctx: &RoundCtx) -> Result<Payload> {
-        if self.in_warmup(ctx.round) {
-            return Ok(Payload::Dense(grad.to_vec()));
-        }
-        let m = &mut self.m[wid];
-        for i in 0..grad.len() {
-            m[i] = BETA1 * m[i] + (1.0 - BETA1) * grad[i];
-        }
-        let m_snapshot = m.clone();
-        self.efs[wid].compress(&m_snapshot, &mut self.compressors[wid])
-    }
-
-    fn server_step(
+    fn step(
         &mut self,
         theta: &mut [f32],
         msgs: &[Payload],
@@ -103,62 +134,78 @@ impl Algorithm for OneBitAdam {
         self.avg = avg;
         Ok(())
     }
+}
 
-    fn worker_state_bytes(&self) -> usize {
-        // local momentum per worker (paper §3.2: "extra tensors for m").
-        self.m[0].len() * std::mem::size_of::<f32>()
-    }
+/// Build the full 1BitAdam protocol: n worker halves + the server half.
+pub fn protocol(dim: usize, n: usize, warmup_rounds: u64, block: usize) -> Protocol {
+    let workers: Vec<Box<dyn WorkerAlgo>> = (0..n)
+        .map(|_| {
+            Box::new(OneBitAdamWorker::new(dim, warmup_rounds, block))
+                as Box<dyn WorkerAlgo>
+        })
+        .collect();
+    (workers, Box::new(OneBitAdamServer::new(dim, warmup_rounds)))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn pair(dim: usize, warmup: u64, block: usize) -> (OneBitAdamWorker, OneBitAdamServer) {
+        (OneBitAdamWorker::new(dim, warmup, block), OneBitAdamServer::new(dim, warmup))
+    }
+
     #[test]
     fn warmup_messages_are_dense_then_compressed() {
-        let mut a = OneBitAdam::new(256, 1, 3, 64);
+        let (mut w, mut s) = pair(256, 3, 64);
         let g = vec![1.0f32; 256];
         for r in 0..6 {
             let ctx = RoundCtx { round: r, lr: 0.01 };
-            let msg = a.worker_msg(0, &g, &ctx).unwrap();
+            let msg = w.process(&g, &ctx).unwrap();
             let mut theta = vec![0.0f32; 256];
             let dense = matches!(msg, Payload::Dense(_));
             assert_eq!(dense, r < 3, "round {r}");
-            a.server_step(&mut theta, &[msg], &ctx).unwrap();
+            s.step(&mut theta, &[msg], &ctx).unwrap();
         }
     }
 
     #[test]
     fn freezes_preconditioner_at_warmup_boundary() {
-        let mut a = OneBitAdam::new(8, 1, 2, 8);
+        let (mut w, mut s) = pair(8, 2, 8);
         let mut theta = vec![1.0f32; 8];
         for r in 0..2 {
             let ctx = RoundCtx { round: r, lr: 0.01 };
-            let msg = a.worker_msg(0, &theta.clone(), &ctx).unwrap();
-            a.server_step(&mut theta, &[msg], &ctx).unwrap();
+            let msg = w.process(&theta.clone(), &ctx).unwrap();
+            s.step(&mut theta, &[msg], &ctx).unwrap();
         }
-        assert!(a.precond.is_some());
-        let frozen = a.precond.clone().unwrap();
+        assert!(s.precond().is_some());
+        let frozen = s.precond().unwrap().to_vec();
         // Further rounds must not change the preconditioner.
         for r in 2..10 {
             let ctx = RoundCtx { round: r, lr: 0.01 };
-            let msg = a.worker_msg(0, &theta.clone(), &ctx).unwrap();
-            a.server_step(&mut theta, &[msg], &ctx).unwrap();
+            let msg = w.process(&theta.clone(), &ctx).unwrap();
+            s.step(&mut theta, &[msg], &ctx).unwrap();
         }
-        assert_eq!(a.precond.unwrap(), frozen);
+        assert_eq!(s.precond().unwrap(), &frozen[..]);
     }
 
     #[test]
     fn descends_quadratic_with_reasonable_warmup() {
-        let mut a = OneBitAdam::new(16, 2, 20, 16);
+        let (mut workers, mut server) = protocol(16, 2, 20, 16);
         let mut theta = vec![2.0f32; 16];
         for r in 0..400 {
             let ctx = RoundCtx { round: r, lr: 0.02 };
-            let msgs: Vec<Payload> = (0..2)
-                .map(|w| a.worker_msg(w, &theta.clone(), &ctx).unwrap())
+            let g = theta.clone();
+            let msgs: Vec<Payload> = workers
+                .iter_mut()
+                .map(|w| w.process(&g, &ctx).unwrap())
                 .collect();
-            a.server_step(&mut theta, &msgs, &ctx).unwrap();
+            server.step(&mut theta, &msgs, &ctx).unwrap();
         }
-        assert!(crate::util::math::norm2(&theta) < 0.5, "{}", crate::util::math::norm2(&theta));
+        assert!(
+            crate::util::math::norm2(&theta) < 0.5,
+            "{}",
+            crate::util::math::norm2(&theta)
+        );
     }
 }

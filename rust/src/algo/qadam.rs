@@ -3,57 +3,74 @@
 //! Every worker keeps a **local** copy of the Adam moments (m_i, v_i) —
 //! the 2× model-size memory overhead the paper contrasts COMP-AMS
 //! against — and uplinks the compressed update ratio m_i/√(v_i+ε) with
-//! error feedback. The server averages the decoded ratios and applies
-//! θ ← θ − lr · mean_i C(m_i/√(v_i+ε)).
+//! error feedback ([`QAdamWorker`]). The server averages the decoded
+//! ratios and applies θ ← θ − lr · mean_i C(m_i/√(v_i+ε))
+//! ([`QAdamServer`]).
 
 use anyhow::Result;
 
 use crate::compress::{Compressor, CompressorSpec, ErrorFeedback, Payload};
 use crate::optim::{BETA1, BETA2, EPS};
 
-use super::{average_payloads, Algorithm, RoundCtx};
+use super::{average_payloads, per_worker_spec, Protocol, RoundCtx, ServerAlgo, WorkerAlgo};
 
-pub struct QAdam {
-    compressors: Vec<Box<dyn Compressor>>,
-    efs: Vec<ErrorFeedback>,
-    /// Worker-local first moments.
-    m: Vec<Vec<f32>>,
-    /// Worker-local second moments.
-    v: Vec<Vec<f32>>,
+/// Worker half: local Adam moments + EF + compressor.
+pub struct QAdamWorker {
+    compressor: Box<dyn Compressor>,
+    ef: ErrorFeedback,
+    /// Worker-local first moment.
+    m: Vec<f32>,
+    /// Worker-local second moment.
+    v: Vec<f32>,
     ratio_buf: Vec<f32>,
+}
+
+impl QAdamWorker {
+    pub fn new(dim: usize, compressor: Box<dyn Compressor>) -> Self {
+        QAdamWorker {
+            compressor,
+            ef: ErrorFeedback::new(dim, true),
+            m: vec![0.0; dim],
+            v: vec![0.0; dim],
+            ratio_buf: vec![0.0; dim],
+        }
+    }
+}
+
+impl WorkerAlgo for QAdamWorker {
+    fn process(&mut self, grad: &[f32], _ctx: &RoundCtx) -> Result<Payload> {
+        for i in 0..grad.len() {
+            self.m[i] = BETA1 * self.m[i] + (1.0 - BETA1) * grad[i];
+            self.v[i] = BETA2 * self.v[i] + (1.0 - BETA2) * grad[i] * grad[i];
+            self.ratio_buf[i] = self.m[i] / (self.v[i].sqrt() + EPS);
+        }
+        self.ef.compress(&self.ratio_buf, self.compressor.as_mut())
+    }
+
+    fn state_bytes(&self) -> usize {
+        // m + v per worker — the §3.2 memory argument.
+        2 * self.m.len() * std::mem::size_of::<f32>()
+    }
+}
+
+/// Server half: stateless averaging + lr step over the decoded ratios.
+pub struct QAdamServer {
+    comp_name: String,
     avg: Vec<f32>,
 }
 
-impl QAdam {
-    pub fn new(dim: usize, n: usize, compressor: CompressorSpec) -> Self {
-        QAdam {
-            compressors: (0..n).map(|_| compressor.build()).collect(),
-            efs: (0..n).map(|_| ErrorFeedback::new(dim, true)).collect(),
-            m: vec![vec![0.0; dim]; n],
-            v: vec![vec![0.0; dim]; n],
-            ratio_buf: vec![0.0; dim],
-            avg: Vec::new(),
-        }
+impl QAdamServer {
+    pub fn new(comp_name: String) -> Self {
+        QAdamServer { comp_name, avg: Vec::new() }
     }
 }
 
-impl Algorithm for QAdam {
+impl ServerAlgo for QAdamServer {
     fn name(&self) -> String {
-        format!("qadam[{}]", self.compressors[0].name())
+        format!("qadam[{}]", self.comp_name)
     }
 
-    fn worker_msg(&mut self, wid: usize, grad: &[f32], _ctx: &RoundCtx) -> Result<Payload> {
-        let m = &mut self.m[wid];
-        let v = &mut self.v[wid];
-        for i in 0..grad.len() {
-            m[i] = BETA1 * m[i] + (1.0 - BETA1) * grad[i];
-            v[i] = BETA2 * v[i] + (1.0 - BETA2) * grad[i] * grad[i];
-            self.ratio_buf[i] = m[i] / (v[i].sqrt() + EPS);
-        }
-        self.efs[wid].compress(&self.ratio_buf, self.compressors[wid].as_mut())
-    }
-
-    fn server_step(
+    fn step(
         &mut self,
         theta: &mut [f32],
         msgs: &[Payload],
@@ -65,11 +82,18 @@ impl Algorithm for QAdam {
         self.avg = avg;
         Ok(())
     }
+}
 
-    fn worker_state_bytes(&self) -> usize {
-        // m + v per worker — the §3.2 memory argument.
-        2 * self.m[0].len() * std::mem::size_of::<f32>()
-    }
+/// Build the full QAdam protocol: n worker halves + the server half.
+pub fn protocol(dim: usize, n: usize, compressor: CompressorSpec) -> Protocol {
+    let comp_name = compressor.build().name();
+    let workers: Vec<Box<dyn WorkerAlgo>> = (0..n)
+        .map(|w| {
+            Box::new(QAdamWorker::new(dim, per_worker_spec(&compressor, w).build()))
+                as Box<dyn WorkerAlgo>
+        })
+        .collect();
+    (workers, Box::new(QAdamServer::new(comp_name)))
 }
 
 #[cfg(test)]
@@ -80,11 +104,11 @@ mod tests {
     fn ratio_is_bounded_like_adam() {
         // |m/√v| ≤ √(1/(1-β2)) for any gradient sequence; the uplinked
         // ratios should never explode even with huge gradients.
-        let mut q = QAdam::new(8, 1, CompressorSpec::Identity);
+        let mut w = QAdamWorker::new(8, CompressorSpec::Identity.build());
         let ctx = RoundCtx { round: 0, lr: 0.001 };
         for r in 0..50 {
             let g = vec![1e6f32; 8];
-            let msg = q.worker_msg(0, &g, &ctx).unwrap();
+            let msg = w.process(&g, &ctx).unwrap();
             let d = msg.to_dense(8).unwrap();
             for &x in &d {
                 assert!(x.abs() < 40.0, "round {r}: ratio {x}");
@@ -94,24 +118,24 @@ mod tests {
 
     #[test]
     fn descends_quadratic() {
-        let mut q = QAdam::new(4, 2, CompressorSpec::BlockSign { block: 4 });
+        let (mut workers, mut server) =
+            protocol(4, 2, CompressorSpec::BlockSign { block: 4 });
         let mut theta = vec![2.0f32; 4];
         for r in 0..400 {
             let ctx = RoundCtx { round: r, lr: 0.02 };
-            let msgs: Vec<Payload> = (0..2)
-                .map(|w| {
-                    let g: Vec<f32> = theta.clone();
-                    q.worker_msg(w, &g, &ctx).unwrap()
-                })
+            let g: Vec<f32> = theta.clone();
+            let msgs: Vec<Payload> = workers
+                .iter_mut()
+                .map(|w| w.process(&g, &ctx).unwrap())
                 .collect();
-            q.server_step(&mut theta, &msgs, &ctx).unwrap();
+            server.step(&mut theta, &msgs, &ctx).unwrap();
         }
         assert!(crate::util::math::norm2(&theta) < 0.5);
     }
 
     #[test]
     fn reports_local_state_overhead() {
-        let q = QAdam::new(1000, 4, CompressorSpec::Identity);
-        assert_eq!(q.worker_state_bytes(), 8000);
+        let w = QAdamWorker::new(1000, CompressorSpec::Identity.build());
+        assert_eq!(w.state_bytes(), 8000);
     }
 }

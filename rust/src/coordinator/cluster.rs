@@ -1,58 +1,132 @@
 //! Worker execution backends.
 //!
-//! [`WorkerPool::Sequential`] runs each worker's gradient on the leader
-//! thread (required for PJRT executables, and the deterministic default).
-//! [`WorkerPool::Threaded`] keeps one persistent OS thread per worker fed
-//! over mpsc channels — the real leader/worker message plumbing. Both
-//! yield identical trajectories because all randomness lives in the
-//! worker-owned RNG streams, not in scheduling (asserted by the
-//! `threaded_matches_sequential` integration test).
+//! A [`WorkerPool`] pairs each worker's gradient source with its
+//! [`WorkerAlgo`] half and runs the **entire** per-worker pipeline —
+//! gradient → error feedback → compression → wire encoding — as one unit,
+//! returning a [`WorkerRound`] per worker.
+//!
+//! The sequential backend runs each worker's round on the leader thread
+//! (required for PJRT executables, and the deterministic default). The
+//! threaded backend keeps one persistent OS thread per worker fed over
+//! mpsc channels — the real leader/worker message plumbing — and moves
+//! the worker's compressor/EF/local-optimizer state into that thread, so
+//! compression cost parallelizes with gradient cost. Both yield identical
+//! trajectories because all randomness lives in worker-owned RNG streams,
+//! not in scheduling (asserted by the `threaded_matches_sequential`
+//! integration test and the cross-protocol property test).
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, ensure, Result};
 
+use crate::algo::{RoundCtx, WorkerAlgo};
+use crate::compress::Payload;
 use crate::grad::GradSource;
 
+/// One worker's complete output for a round, produced where the payload
+/// is produced (worker thread in the threaded backend).
+#[derive(Debug)]
+pub struct WorkerRound {
+    /// Training loss on this worker's mini-batch.
+    pub loss: f32,
+    /// The encoded uplink message.
+    pub payload: Payload,
+    /// Exact wire bits of `payload` — uplink accounting happens at the
+    /// production site, not on the leader.
+    pub uplink_bits: u64,
+}
+
+/// Run one worker's full round: gradient, then the protocol's worker half.
+fn worker_round(
+    src: &mut dyn GradSource,
+    algo: &mut dyn WorkerAlgo,
+    theta: &[f32],
+    ctx: &RoundCtx,
+) -> Result<WorkerRound> {
+    let (loss, grad) = src.grad(theta, ctx.round)?;
+    let payload = algo.process(&grad, ctx)?;
+    let uplink_bits = payload.wire_bits();
+    Ok(WorkerRound { loss, payload, uplink_bits })
+}
+
 enum Cmd {
-    Grad { theta: Arc<Vec<f32>>, round: u64 },
+    Round { theta: Arc<Vec<f32>>, ctx: RoundCtx },
     Stop,
 }
 
-type GradReply = Result<(f32, Vec<f32>)>;
+struct SeqWorker {
+    src: Box<dyn GradSource>,
+    algo: Box<dyn WorkerAlgo>,
+}
 
-pub struct WorkerHandle {
+struct WorkerHandle {
     tx: Sender<Cmd>,
-    rx: Receiver<GradReply>,
+    rx: Receiver<Result<WorkerRound>>,
     join: Option<JoinHandle<()>>,
 }
 
-pub enum WorkerPool {
-    Sequential(Vec<Box<dyn GradSource>>),
+enum Backend {
+    Sequential(Vec<SeqWorker>),
     Threaded(Vec<WorkerHandle>),
 }
 
+pub struct WorkerPool {
+    backend: Backend,
+}
+
 impl WorkerPool {
-    pub fn sequential(sources: Vec<Box<dyn GradSource>>) -> Self {
-        WorkerPool::Sequential(sources)
+    /// Leader-thread backend. `sources[i]` is paired with `algos[i]`.
+    pub fn sequential(
+        sources: Vec<Box<dyn GradSource>>,
+        algos: Vec<Box<dyn WorkerAlgo>>,
+    ) -> Result<Self> {
+        ensure!(
+            sources.len() == algos.len(),
+            "pool mismatch: {} sources vs {} worker algos",
+            sources.len(),
+            algos.len()
+        );
+        let workers = sources
+            .into_iter()
+            .zip(algos)
+            .map(|(src, algo)| SeqWorker { src, algo })
+            .collect();
+        Ok(WorkerPool { backend: Backend::Sequential(workers) })
     }
 
-    pub fn threaded(sources: Vec<Box<dyn GradSource + Send>>) -> Self {
+    /// One persistent OS thread per worker; each thread owns its gradient
+    /// source *and* its protocol worker half.
+    pub fn threaded(
+        sources: Vec<Box<dyn GradSource + Send>>,
+        algos: Vec<Box<dyn WorkerAlgo>>,
+    ) -> Result<Self> {
+        ensure!(
+            sources.len() == algos.len(),
+            "pool mismatch: {} sources vs {} worker algos",
+            sources.len(),
+            algos.len()
+        );
         let handles = sources
             .into_iter()
+            .zip(algos)
             .enumerate()
-            .map(|(wid, mut src)| {
+            .map(|(wid, (mut src, mut algo))| {
                 let (cmd_tx, cmd_rx) = channel::<Cmd>();
-                let (rep_tx, rep_rx) = channel::<GradReply>();
+                let (rep_tx, rep_rx) = channel::<Result<WorkerRound>>();
                 let join = std::thread::Builder::new()
                     .name(format!("worker-{wid}"))
                     .spawn(move || {
                         while let Ok(cmd) = cmd_rx.recv() {
                             match cmd {
-                                Cmd::Grad { theta, round } => {
-                                    let reply = src.grad(&theta, round);
+                                Cmd::Round { theta, ctx } => {
+                                    let reply = worker_round(
+                                        src.as_mut(),
+                                        algo.as_mut(),
+                                        &theta,
+                                        &ctx,
+                                    );
                                     if rep_tx.send(reply).is_err() {
                                         break;
                                     }
@@ -65,13 +139,13 @@ impl WorkerPool {
                 WorkerHandle { tx: cmd_tx, rx: rep_rx, join: Some(join) }
             })
             .collect();
-        WorkerPool::Threaded(handles)
+        Ok(WorkerPool { backend: Backend::Threaded(handles) })
     }
 
     pub fn len(&self) -> usize {
-        match self {
-            WorkerPool::Sequential(v) => v.len(),
-            WorkerPool::Threaded(v) => v.len(),
+        match &self.backend {
+            Backend::Sequential(v) => v.len(),
+            Backend::Threaded(v) => v.len(),
         }
     }
 
@@ -79,24 +153,35 @@ impl WorkerPool {
         self.len() == 0
     }
 
-    /// Compute all workers' (loss, grad) at θ for this round.
-    pub fn compute_all(&mut self, theta: &[f32], round: u64) -> Result<Vec<(f32, Vec<f32>)>> {
-        match self {
-            WorkerPool::Sequential(sources) => sources
+    pub fn is_threaded(&self) -> bool {
+        matches!(self.backend, Backend::Threaded(_))
+    }
+
+    /// Run every worker's full round (gradient + EF + compress + encode)
+    /// at θ; results are ordered by worker id in both backends.
+    pub fn run_round(&mut self, theta: &[f32], ctx: &RoundCtx) -> Result<Vec<WorkerRound>> {
+        match &mut self.backend {
+            Backend::Sequential(workers) => workers
                 .iter_mut()
-                .map(|s| s.grad(theta, round))
+                .map(|w| worker_round(w.src.as_mut(), w.algo.as_mut(), theta, ctx))
                 .collect(),
-            WorkerPool::Threaded(handles) => {
+            Backend::Threaded(handles) => {
                 let shared = Arc::new(theta.to_vec());
                 for h in handles.iter() {
                     h.tx
-                        .send(Cmd::Grad { theta: Arc::clone(&shared), round })
+                        .send(Cmd::Round { theta: Arc::clone(&shared), ctx: *ctx })
                         .map_err(|_| anyhow!("worker thread died"))?;
                 }
-                handles
-                    .iter()
-                    .map(|h| h.rx.recv().map_err(|_| anyhow!("worker thread died"))?)
-                    .collect()
+                // Drain every worker's reply before surfacing any error:
+                // a short-circuit would leave this round's remaining
+                // replies queued and silently deliver them next round.
+                let mut replies = Vec::with_capacity(handles.len());
+                for h in handles.iter() {
+                    replies.push(
+                        h.rx.recv().map_err(|_| anyhow!("worker thread died"))?,
+                    );
+                }
+                replies.into_iter().collect()
             }
         }
     }
@@ -104,7 +189,7 @@ impl WorkerPool {
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        if let WorkerPool::Threaded(handles) = self {
+        if let Backend::Threaded(handles) = &mut self.backend {
             for h in handles.iter() {
                 let _ = h.tx.send(Cmd::Stop);
             }
@@ -120,6 +205,7 @@ impl Drop for WorkerPool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::algo::AlgoSpec;
     use crate::grad::quadratic::QuadraticProblem;
 
     fn sources(n: usize) -> Vec<Box<dyn GradSource + Send>> {
@@ -129,29 +215,65 @@ mod tests {
             .collect()
     }
 
+    fn algos(n: usize, spec: &str) -> Vec<Box<dyn WorkerAlgo>> {
+        AlgoSpec::parse(spec).unwrap().build(16, n, 100).0
+    }
+
     #[test]
-    fn threaded_equals_sequential() {
-        let seq_sources: Vec<Box<dyn GradSource>> = sources(4)
-            .into_iter()
-            .map(|b| b as Box<dyn GradSource>)
-            .collect();
-        let mut seq = WorkerPool::sequential(seq_sources);
-        let mut thr = WorkerPool::threaded(sources(4));
-        let theta = vec![0.2f32; 16];
-        for round in 0..5 {
-            let a = seq.compute_all(&theta, round).unwrap();
-            let b = thr.compute_all(&theta, round).unwrap();
-            for ((la, ga), (lb, gb)) in a.iter().zip(&b) {
-                assert_eq!(la, lb);
-                assert_eq!(ga, gb);
+    fn threaded_equals_sequential_full_pipeline() {
+        // Identical (loss, payload, bits) per worker per round — the whole
+        // worker pipeline, not just the gradient, is deterministic.
+        for spec in ["dist-sgd", "comp-ams-topk:0.2", "comp-ams-blocksign:8"] {
+            let seq_sources: Vec<Box<dyn GradSource>> = sources(4)
+                .into_iter()
+                .map(|b| b as Box<dyn GradSource>)
+                .collect();
+            let mut seq = WorkerPool::sequential(seq_sources, algos(4, spec)).unwrap();
+            let mut thr = WorkerPool::threaded(sources(4), algos(4, spec)).unwrap();
+            let theta = vec![0.2f32; 16];
+            for round in 0..5 {
+                let ctx = RoundCtx { round, lr: 0.01 };
+                let a = seq.run_round(&theta, &ctx).unwrap();
+                let b = thr.run_round(&theta, &ctx).unwrap();
+                for (ra, rb) in a.iter().zip(&b) {
+                    assert_eq!(ra.loss.to_bits(), rb.loss.to_bits(), "{spec}");
+                    assert_eq!(ra.payload, rb.payload, "{spec}");
+                    assert_eq!(ra.uplink_bits, rb.uplink_bits, "{spec}");
+                }
             }
         }
     }
 
     #[test]
-    fn pool_reports_len() {
-        let thr = WorkerPool::threaded(sources(3));
+    fn uplink_bits_match_payload_encoding() {
+        let seq_sources: Vec<Box<dyn GradSource>> = sources(2)
+            .into_iter()
+            .map(|b| b as Box<dyn GradSource>)
+            .collect();
+        let mut pool =
+            WorkerPool::sequential(seq_sources, algos(2, "comp-ams-topk:0.2")).unwrap();
+        let theta = vec![0.1f32; 16];
+        let ctx = RoundCtx { round: 0, lr: 0.01 };
+        for r in pool.run_round(&theta, &ctx).unwrap() {
+            assert_eq!(r.uplink_bits, r.payload.wire_bits());
+            assert_eq!(r.uplink_bits, r.payload.encode().len() as u64 * 8);
+        }
+    }
+
+    #[test]
+    fn pool_reports_len_and_backend() {
+        let thr = WorkerPool::threaded(sources(3), algos(3, "dist-sgd")).unwrap();
         assert_eq!(thr.len(), 3);
         assert!(!thr.is_empty());
+        assert!(thr.is_threaded());
+    }
+
+    #[test]
+    fn mismatched_sources_and_algos_rejected() {
+        let seq_sources: Vec<Box<dyn GradSource>> = sources(2)
+            .into_iter()
+            .map(|b| b as Box<dyn GradSource>)
+            .collect();
+        assert!(WorkerPool::sequential(seq_sources, algos(3, "dist-sgd")).is_err());
     }
 }

@@ -1,18 +1,21 @@
 //! Communication ledger: the exact bit counts behind Figure 2.
 //!
 //! Uplink (worker → server) is charged per encoded payload — the byte
-//! codec's real length, not an estimate. Downlink (server → worker) is
-//! the dense θ broadcast, charged per worker per round. The paper's
-//! Figure 2 x-axis is uplink bits ("bits transmitted to the central
-//! server"); both directions are recorded.
+//! codec's real length, not an estimate. The bits are counted **where the
+//! payload is produced** (the worker thread, in the threaded backend) and
+//! recorded here per worker, so Figure-2-style reporting can break the
+//! uplink bill down by worker. Downlink (server → worker) is the dense θ
+//! broadcast, charged per worker per round. The paper's Figure 2 x-axis
+//! is uplink bits ("bits transmitted to the central server"); both
+//! directions are recorded.
 
-use crate::compress::Payload;
-
-#[derive(Clone, Copy, Debug, Default, PartialEq)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct CommLedger {
     pub uplink_bits: u64,
     pub downlink_bits: u64,
     pub uplink_msgs: u64,
+    /// Cumulative uplink bits per worker id (grows on first charge).
+    pub uplink_bits_by_worker: Vec<u64>,
 }
 
 impl CommLedger {
@@ -20,8 +23,13 @@ impl CommLedger {
         Self::default()
     }
 
-    pub fn charge_uplink(&mut self, p: &Payload) {
-        self.uplink_bits += p.wire_bits();
+    /// Record one worker's uplink message of `bits` wire bits.
+    pub fn charge_uplink(&mut self, wid: usize, bits: u64) {
+        if wid >= self.uplink_bits_by_worker.len() {
+            self.uplink_bits_by_worker.resize(wid + 1, 0);
+        }
+        self.uplink_bits_by_worker[wid] += bits;
+        self.uplink_bits += bits;
         self.uplink_msgs += 1;
     }
 
@@ -38,15 +46,30 @@ impl CommLedger {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::Payload;
 
     #[test]
     fn uplink_matches_payload_bits() {
         let mut l = CommLedger::new();
         let p = Payload::Dense(vec![0.0; 10]);
-        l.charge_uplink(&p);
-        l.charge_uplink(&p);
+        l.charge_uplink(0, p.wire_bits());
+        l.charge_uplink(1, p.wire_bits());
         assert_eq!(l.uplink_bits, 2 * p.wire_bits());
         assert_eq!(l.uplink_msgs, 2);
+    }
+
+    #[test]
+    fn per_worker_breakdown_sums_to_total() {
+        let mut l = CommLedger::new();
+        l.charge_uplink(0, 100);
+        l.charge_uplink(2, 300);
+        l.charge_uplink(0, 50);
+        assert_eq!(l.uplink_bits_by_worker, vec![150, 0, 300]);
+        assert_eq!(
+            l.uplink_bits_by_worker.iter().sum::<u64>(),
+            l.uplink_bits
+        );
+        assert_eq!(l.uplink_msgs, 3);
     }
 
     #[test]

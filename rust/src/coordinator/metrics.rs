@@ -28,8 +28,11 @@ pub struct RunResult {
     pub metrics: Vec<RoundMetric>,
     pub final_eval: EvalStats,
     pub total_wall_ms: f64,
-    /// Mean non-gradient (coordination) share of round time, 0..1.
+    /// Mean leader-side (non-worker-pipeline) share of round time, 0..1.
     pub coord_overhead: f64,
+    /// Cumulative uplink bits per worker id — the Figure-2-style
+    /// per-worker communication breakdown.
+    pub uplink_bits_by_worker: Vec<u64>,
 }
 
 impl RunResult {
@@ -100,6 +103,7 @@ mod tests {
             final_eval: EvalStats { loss: 0.0, accuracy: 0.0 },
             total_wall_ms: 0.0,
             coord_overhead: 0.0,
+            uplink_bits_by_worker: Vec::new(),
         }
     }
 

@@ -1,21 +1,25 @@
 //! The L3 coordinator: synchronous leader/worker rounds, communication
 //! accounting, metrics, and the training driver.
 //!
-//! One round of the paper's Algorithm 2:
+//! One round of the paper's Algorithm 2, with the protocol split into its
+//! worker and server halves:
 //!
 //! ```text
 //!   leader ──θ_t──▶ workers (downlink: n dense broadcasts, charged)
-//!   worker i: g_i = ∇f_i(θ_t; batch_i)        [grad::GradSource]
-//!             msg_i = algo.worker_msg(g_i)    [compression + EF]
-//!   workers ──msg_i──▶ leader (uplink: exact wire bits, charged)
-//!   leader: algo.server_step(θ, msgs)         [AMSGrad on the server]
+//!   worker i: g_i  = ∇f_i(θ_t; batch_i)        [grad::GradSource]
+//!             msg_i = worker_algo_i.process(g_i) [EF + compression]
+//!             bits_i = msg_i.wire_bits()          [uplink accounting]
+//!   workers ──(loss_i, msg_i, bits_i)──▶ leader
+//!   leader: server_algo.step(θ, msgs)           [AMSGrad on the server]
 //! ```
 //!
-//! Gradient computation — the dominant cost — runs either sequentially on
-//! the leader thread (required for PJRT executables) or on persistent
-//! worker threads ([`cluster`]). Both produce bit-identical trajectories
-//! (each worker owns a seeded RNG stream), which the integration tests
-//! assert.
+//! The whole per-worker pipeline — gradient, error feedback, compression,
+//! wire encoding — runs either sequentially on the leader thread
+//! (required for PJRT executables) or inside persistent worker threads
+//! ([`cluster`]), each of which owns its worker's
+//! [`WorkerAlgo`](crate::algo::WorkerAlgo) state. Both backends produce
+//! bit-identical trajectories (each worker owns a seeded RNG stream),
+//! which the integration and property tests assert across all protocols.
 
 pub mod cluster;
 pub mod checkpoint;
@@ -23,6 +27,7 @@ pub mod comm;
 pub mod metrics;
 pub mod trainer;
 
+pub use cluster::{WorkerPool, WorkerRound};
 pub use comm::CommLedger;
 pub use metrics::{RoundMetric, RunResult};
 pub use trainer::{train, Trainer};

@@ -1,12 +1,19 @@
 //! The training driver: assembles workers, protocol, evaluator, and runs
 //! synchronous rounds with communication accounting.
+//!
+//! The protocol is split per Algorithm 2: each worker's
+//! [`WorkerAlgo`](crate::algo::WorkerAlgo) half (compressor + EF + local
+//! optimizer state) lives inside the [`WorkerPool`] next to its gradient
+//! source, so the threaded backend runs the whole per-worker pipeline off
+//! the leader; only the [`ServerAlgo`](crate::algo::ServerAlgo) half
+//! (aggregation + server optimizer) runs here.
 
 use std::path::Path;
 use std::rc::Rc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::algo::{Algorithm, AlgoSpec, CompAms, RoundCtx};
+use crate::algo::{AlgoSpec, RoundCtx, ServerAlgo};
 use crate::config::TrainConfig;
 use crate::data::{
     images::SyntheticImages, lm::ByteCorpus, shard::Sharding, text::SyntheticText,
@@ -18,7 +25,7 @@ use crate::grad::{
     quadratic::{QuadraticEvaluator, QuadraticProblem},
     EvalStats, Evaluator, GradSource,
 };
-use crate::runtime::{ModelBundle, Runtime};
+use crate::runtime::{ModelBundle, OptimizerExe, Runtime};
 use crate::util::timer::Stopwatch;
 
 use super::cluster::WorkerPool;
@@ -28,12 +35,13 @@ use super::metrics::{RoundMetric, RunResult};
 pub struct Trainer {
     cfg: TrainConfig,
     pool: WorkerPool,
-    algo: Box<dyn Algorithm>,
+    server: Box<dyn ServerAlgo>,
+    algo_name: String,
     evaluator: Box<dyn Evaluator>,
     pub theta: Vec<f32>,
     ledger: CommLedger,
     metrics: Vec<RoundMetric>,
-    grad_ms_total: f64,
+    worker_ms_total: f64,
     round_ms_total: f64,
 }
 
@@ -41,23 +49,35 @@ impl Trainer {
     pub fn new(cfg: &TrainConfig) -> Result<Trainer> {
         cfg.validate()?;
         let spec = AlgoSpec::parse(&cfg.algo)?;
-        let (pool, evaluator, theta, fused) = build_workload(cfg)?;
-        let algo = build_algo(&spec, theta.len(), cfg, fused);
+        let (sources, evaluator, theta, fused) = build_workload(cfg)?;
+        let fused = if cfg.fused_update { fused } else { None };
+        let (workers, server) =
+            spec.build_fused(theta.len(), cfg.workers, cfg.rounds, fused);
+        let pool = match sources {
+            Sources::Threadable(s) if cfg.threaded => WorkerPool::threaded(s, workers)?,
+            Sources::Threadable(s) => WorkerPool::sequential(
+                s.into_iter().map(|b| b as Box<dyn GradSource>).collect(),
+                workers,
+            )?,
+            Sources::LeaderOnly(s) => WorkerPool::sequential(s, workers)?,
+        };
+        let algo_name = server.name();
         Ok(Trainer {
             cfg: cfg.clone(),
             pool,
-            algo,
+            server,
+            algo_name,
             evaluator,
             theta,
             ledger: CommLedger::new(),
             metrics: Vec::new(),
-            grad_ms_total: 0.0,
+            worker_ms_total: 0.0,
             round_ms_total: 0.0,
         })
     }
 
     pub fn algo_name(&self) -> String {
-        self.algo.name()
+        self.algo_name.clone()
     }
 
     /// Run one synchronous round; returns the mean worker train loss.
@@ -69,23 +89,23 @@ impl Trainer {
         // Downlink: θ broadcast.
         self.ledger.charge_downlink_dense(self.theta.len(), self.pool.len());
 
-        // Workers: gradients (the dominant compute).
-        let gsw = Stopwatch::start();
-        let grads = self.pool.compute_all(&self.theta, round)?;
-        self.grad_ms_total += gsw.ms();
+        // Workers: the full per-worker pipeline (gradient + EF +
+        // compression + wire encoding), on worker threads when threaded.
+        let wsw = Stopwatch::start();
+        let rounds = self.pool.run_round(&self.theta, &ctx)?;
+        self.worker_ms_total += wsw.ms();
 
-        // Workers: compression + EF; uplink accounting.
-        let mut msgs = Vec::with_capacity(grads.len());
+        let n = rounds.len() as f32;
+        let mut msgs = Vec::with_capacity(rounds.len());
         let mut train_loss = 0.0f32;
-        for (wid, (loss, g)) in grads.iter().enumerate() {
-            train_loss += loss / grads.len() as f32;
-            let msg = self.algo.worker_msg(wid, g, &ctx)?;
-            self.ledger.charge_uplink(&msg);
-            msgs.push(msg);
+        for (wid, wr) in rounds.into_iter().enumerate() {
+            train_loss += wr.loss / n;
+            self.ledger.charge_uplink(wid, wr.uplink_bits);
+            msgs.push(wr.payload);
         }
 
-        // Leader: aggregate + optimizer.
-        self.algo.server_step(&mut self.theta, &msgs, &ctx)?;
+        // Leader: aggregate + server optimizer.
+        self.server.step(&mut self.theta, &msgs, &ctx)?;
 
         let wall = sw.ms();
         self.round_ms_total += wall;
@@ -112,7 +132,7 @@ impl Trainer {
                 .unwrap_or_default();
             eprintln!(
                 "[{}] round {:>6} epoch {:>6.2} loss {:.4}{} lr {:.2e} uplink {:.2} MB",
-                self.algo.name(),
+                self.algo_name,
                 round + 1,
                 e.epoch,
                 train_loss,
@@ -131,17 +151,18 @@ impl Trainer {
         }
         let final_eval = self.evaluator.eval(&self.theta)?;
         Ok(RunResult {
-            algo: self.algo.name(),
+            algo: self.algo_name.clone(),
             model: self.cfg.model.clone(),
             workers: self.cfg.workers,
             metrics: self.metrics,
             final_eval,
             total_wall_ms: total.ms(),
             coord_overhead: if self.round_ms_total > 0.0 {
-                1.0 - self.grad_ms_total / self.round_ms_total
+                1.0 - self.worker_ms_total / self.round_ms_total
             } else {
                 0.0
             },
+            uplink_bits_by_worker: self.ledger.uplink_bits_by_worker.clone(),
         })
     }
 
@@ -149,8 +170,8 @@ impl Trainer {
         self.evaluator.eval(&self.theta)
     }
 
-    pub fn ledger(&self) -> CommLedger {
-        self.ledger
+    pub fn ledger(&self) -> &CommLedger {
+        &self.ledger
     }
 }
 
@@ -161,53 +182,19 @@ pub fn train(cfg: &TrainConfig) -> Result<RunResult> {
 
 // ---------------------------------------------------------------------------
 
-fn build_algo(
-    spec: &AlgoSpec,
-    dim: usize,
-    cfg: &TrainConfig,
-    fused: Option<Rc<crate::runtime::OptimizerExe>>,
-) -> Box<dyn Algorithm> {
-    if cfg.fused_update {
-        // Route the AMSGrad server update through the Pallas artifact for
-        // the protocols that use AMSGrad.
-        if let Some(exe) = fused {
-            match spec {
-                AlgoSpec::DistAms => {
-                    return Box::new(
-                        CompAms::new(
-                            dim,
-                            cfg.workers,
-                            crate::compress::CompressorSpec::Identity,
-                            false,
-                            "dist-ams",
-                        )
-                        .with_fused(exe),
-                    )
-                }
-                AlgoSpec::CompAms { compressor, error_feedback } => {
-                    return Box::new(
-                        CompAms::new(
-                            dim,
-                            cfg.workers,
-                            compressor.clone(),
-                            *error_feedback,
-                            "comp-ams",
-                        )
-                        .with_fused(exe),
-                    )
-                }
-                _ => {}
-            }
-        }
-    }
-    spec.build(dim, cfg.workers, cfg.rounds)
+/// Gradient sources for the pool. The analytic substrates produce `Send`
+/// sources that can move into worker threads; the PJRT path is pinned to
+/// the leader thread (`Rc` handles inside the executables).
+enum Sources {
+    Threadable(Vec<Box<dyn GradSource + Send>>),
+    LeaderOnly(Vec<Box<dyn GradSource>>),
 }
 
 type Workload = (
-    WorkerPool,
+    Sources,
     Box<dyn Evaluator>,
     Vec<f32>,
-    Option<Rc<crate::runtime::OptimizerExe>>,
+    Option<Rc<OptimizerExe>>,
 );
 
 fn build_workload(cfg: &TrainConfig) -> Result<Workload> {
@@ -223,31 +210,21 @@ fn build_workload(cfg: &TrainConfig) -> Result<Workload> {
             let sources: Vec<Box<dyn GradSource + Send>> = (0..cfg.workers)
                 .map(|w| Box::new(p.source_for(w, cfg.seed)) as _)
                 .collect();
-            let pool = make_pool(cfg, sources);
             let theta = vec![0.0f32; p.dim()];
             let eval = Box::new(QuadraticEvaluator { problem: p });
-            Ok((pool, eval, theta, None))
+            Ok((Sources::Threadable(sources), eval, theta, None))
         }
         "logistic" => {
             let p = LogisticProblem::new(cfg.seed, 64, 10, 32, 0.5);
             let sources: Vec<Box<dyn GradSource + Send>> = (0..cfg.workers)
                 .map(|w| Box::new(p.source_for(w, cfg.seed)) as _)
                 .collect();
-            let pool = make_pool(cfg, sources);
             let theta = vec![0.0f32; p.p()];
             let eval =
                 Box::new(LogisticEvaluator { problem: p, seed: cfg.seed ^ 0xE0, n: 2000 });
-            Ok((pool, eval, theta, None))
+            Ok((Sources::Threadable(sources), eval, theta, None))
         }
         name => build_pjrt_workload(cfg, name),
-    }
-}
-
-fn make_pool(cfg: &TrainConfig, sources: Vec<Box<dyn GradSource + Send>>) -> WorkerPool {
-    if cfg.threaded {
-        WorkerPool::threaded(sources)
-    } else {
-        WorkerPool::sequential(sources.into_iter().map(|b| b as Box<dyn GradSource>).collect())
     }
 }
 
@@ -317,7 +294,7 @@ fn build_pjrt_workload(cfg: &TrainConfig, name: &str) -> Result<Workload> {
         .collect();
     let theta = bundle.init_theta.clone();
     let fused = Some(Rc::clone(&bundle.amsgrad));
-    Ok((WorkerPool::sequential(sources), evaluator, theta, fused))
+    Ok((Sources::LeaderOnly(sources), evaluator, theta, fused))
 }
 
 #[cfg(test)]
@@ -351,6 +328,7 @@ mod tests {
             assert_eq!(ma.train_loss, mb.train_loss, "round {}", ma.round);
             assert_eq!(ma.uplink_bits, mb.uplink_bits);
         }
+        assert_eq!(a.uplink_bits_by_worker, b.uplink_bits_by_worker);
     }
 
     #[test]

@@ -4,6 +4,8 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use super::xla;
+
 pub struct Runtime {
     client: xla::PjRtClient,
 }

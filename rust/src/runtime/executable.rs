@@ -7,6 +7,7 @@ use anyhow::{Context, Result};
 
 use super::client::Runtime;
 use super::manifest::{ModelEntry, XDtype};
+use super::xla;
 
 /// One training batch in host memory.
 #[derive(Clone, Debug, PartialEq)]

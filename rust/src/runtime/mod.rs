@@ -16,6 +16,7 @@
 pub mod client;
 pub mod executable;
 pub mod manifest;
+pub mod xla;
 
 pub use client::Runtime;
 pub use executable::{EvalExe, GradExe, OptimizerExe};

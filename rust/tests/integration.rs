@@ -169,11 +169,25 @@ fn trainer_rejects_invalid_configs() {
 
 #[test]
 fn qadam_and_onebit_report_worker_memory_overhead() {
-    use comp_ams::algo::{Algorithm, AlgoSpec};
-    let q = AlgoSpec::parse("qadam").unwrap().build(1000, 4, 100);
-    let o = AlgoSpec::parse("1bitadam:10").unwrap().build(1000, 4, 100);
-    let c = AlgoSpec::parse("comp-ams-topk:0.01").unwrap().build(1000, 4, 100);
-    assert_eq!(q.worker_state_bytes(), 8000); // m + v
-    assert_eq!(o.worker_state_bytes(), 4000); // m
-    assert_eq!(c.worker_state_bytes(), 0); // the paper's §3.2 point
+    use comp_ams::algo::{AlgoSpec, WorkerAlgo};
+    let (q, _) = AlgoSpec::parse("qadam").unwrap().build(1000, 4, 100);
+    let (o, _) = AlgoSpec::parse("1bitadam:10").unwrap().build(1000, 4, 100);
+    let (c, _) = AlgoSpec::parse("comp-ams-topk:0.01").unwrap().build(1000, 4, 100);
+    assert_eq!(q[0].state_bytes(), 8000); // m + v
+    assert_eq!(o[0].state_bytes(), 4000); // m
+    assert_eq!(c[0].state_bytes(), 0); // the paper's §3.2 point
+}
+
+#[test]
+fn per_worker_uplink_breakdown_reflects_compression() {
+    // Figure-2-style reporting: the per-worker uplink breakdown must sum
+    // to the total and be uniform for a deterministic same-ratio sparsifier.
+    let mut cfg = quad_cfg("comp-ams-topk:0.05");
+    cfg.rounds = 20;
+    let run = train(&cfg).unwrap();
+    assert_eq!(run.uplink_bits_by_worker.len(), cfg.workers);
+    assert_eq!(run.uplink_bits_by_worker.iter().sum::<u64>(), run.uplink_bits());
+    let first = run.uplink_bits_by_worker[0];
+    assert!(first > 0);
+    assert!(run.uplink_bits_by_worker.iter().all(|&b| b == first));
 }

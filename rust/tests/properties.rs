@@ -196,6 +196,57 @@ fn prop_config_json_roundtrip() {
 }
 
 #[test]
+fn prop_worker_halves_are_send_and_threaded_is_bitwise_identical() {
+    // The split-API contract: every WorkerAlgo is Send (compile-time), and
+    // running the full worker pipeline (grad + EF + compress + encode) on
+    // worker threads yields bitwise-identical losses AND uplink bits to
+    // the sequential backend, for every protocol family.
+    use comp_ams::algo::WorkerAlgo;
+    use comp_ams::config::TrainConfig;
+    use comp_ams::coordinator::trainer::train;
+
+    fn assert_send<T: Send + ?Sized>() {}
+    assert_send::<dyn WorkerAlgo>();
+    assert_send::<Box<dyn WorkerAlgo>>();
+
+    for algo in [
+        "dist-ams",
+        "comp-ams-topk:0.05",
+        "comp-ams-blocksign:64",
+        "qadam",
+        "1bitadam:10",
+        "dist-sgd",
+    ] {
+        let mut cfg = TrainConfig::preset("quadratic", algo);
+        cfg.workers = 3;
+        cfg.rounds = 30;
+        cfg.lr = 0.01;
+        cfg.eval_every = 0;
+        let seq = train(&cfg).unwrap();
+        cfg.threaded = true;
+        let thr = train(&cfg).unwrap();
+        assert_eq!(seq.metrics.len(), thr.metrics.len(), "{algo}");
+        for (ma, mb) in seq.metrics.iter().zip(&thr.metrics) {
+            assert_eq!(
+                ma.train_loss.to_bits(),
+                mb.train_loss.to_bits(),
+                "{algo}: loss diverged at round {}",
+                ma.round
+            );
+            assert_eq!(
+                ma.uplink_bits, mb.uplink_bits,
+                "{algo}: uplink diverged at round {}",
+                ma.round
+            );
+        }
+        assert_eq!(
+            seq.uplink_bits_by_worker, thr.uplink_bits_by_worker,
+            "{algo}: per-worker uplink breakdown diverged"
+        );
+    }
+}
+
+#[test]
 fn prop_rng_streams_do_not_collide() {
     check("rng_streams", 40, |g| {
         let mut root = comp_ams::util::rng::Rng::seed(g.rng.next_u64());
