@@ -3,9 +3,10 @@
 //! PJRT smoke model (gradient-dominated). One bench per Fig. 1 method,
 //! plus a sequential-vs-threaded race of the full worker pipeline
 //! (grad + EF + compress + encode) now that compression runs on worker
-//! threads.
+//! threads, and a sharded-server race (the leader's dense update split
+//! across S parallel θ shards).
 
-use comp_ams::algo::{AlgoSpec, RoundCtx};
+use comp_ams::algo::{AlgoSpec, RoundCtx, ServerAlgo, ShardedServer};
 use comp_ams::config::TrainConfig;
 use comp_ams::coordinator::cluster::WorkerPool;
 use comp_ams::coordinator::trainer::Trainer;
@@ -80,6 +81,53 @@ fn main() {
     b.note(&format!(
         "  -> threaded speedup over sequential: {:.2}x (n={n} workers)",
         means[0] / means[1]
+    ));
+
+    // Sharded-server race: with the worker pipeline off the leader, the
+    // dense server update is the serial remainder. Split θ across S
+    // shard servers (threaded backend for S > 1) and time *only* the
+    // server step over a fixed set of top-k uplinks — trajectories are
+    // bitwise identical across S, so this is pure systems speedup.
+    let (mut sh_workers, _) = spec.build(dim, n, 1_000_000);
+    let ctx0 = RoundCtx { round: 0, lr: 0.01 };
+    let mut rng = comp_ams::util::rng::Rng::seed(17);
+    let uplinks: Vec<_> = sh_workers
+        .iter_mut()
+        .map(|w| {
+            let g = rng.normal_vec(dim);
+            w.process(&g, &ctx0).expect("worker payload")
+        })
+        .collect();
+    let mut shard_means = Vec::new();
+    for shards in [1usize, 2, 4, 8] {
+        // S=1 is the honest baseline: the plain unsharded server, no
+        // slice-routing on its path at all.
+        let mut server: Box<dyn ServerAlgo> = if shards == 1 {
+            spec.build(dim, n, 1_000_000).1
+        } else {
+            Box::new(
+                ShardedServer::new(&spec, dim, 1_000_000, shards, true)
+                    .expect("sharded server"),
+            )
+        };
+        let mut theta = vec![0.2f32; dim];
+        let mut round = 0u64;
+        let label = if shards > 1 { "threaded" } else { "unsharded" };
+        let r = b.bench(
+            &format!("server-step d={dim} n={n} comp-ams-topk:0.01 S={shards} {label}"),
+            || {
+                let ctx = RoundCtx { round, lr: 0.01 };
+                server.step(&mut theta, &uplinks, &ctx).unwrap();
+                round += 1;
+            },
+        );
+        shard_means.push(r.mean.as_secs_f64());
+    }
+    b.note(&format!(
+        "  -> sharded server speedup over S=1: S=2 {:.2}x, S=4 {:.2}x, S=8 {:.2}x",
+        shard_means[0] / shard_means[1],
+        shard_means[0] / shard_means[2],
+        shard_means[0] / shard_means[3],
     ));
 
     // PJRT path (artifacts required): full grad + protocol round.

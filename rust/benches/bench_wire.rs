@@ -1,5 +1,6 @@
 //! Wire codec micro-benches: encode/decode/add_into throughput for each
-//! payload kind, plus the server-side averaging hot loop.
+//! payload kind, the server-side averaging hot loop, and the sharded
+//! server's slice-by-range routing primitive.
 
 use comp_ams::compress::{BlockSign, Compressor, Payload, TopK};
 use comp_ams::testing::bench::bench_main;
@@ -44,4 +45,21 @@ fn main() {
         comp_ams::algo::average_payloads(&msgs, d, &mut out).unwrap();
     });
     b.note(&format!("  -> {:.2} ms/round", r.mean.as_secs_f64() * 1e3));
+
+    // Shard routing: slice each payload kind into 8 ranges (what the
+    // sharded server does to every uplink, once per shard per round).
+    let shards = 8usize;
+    for (name, p) in &payloads {
+        let r = b.bench(&format!("slice_range x{shards} {name}"), || {
+            for s in 0..shards {
+                let lo = s * d / shards;
+                let hi = (s + 1) * d / shards;
+                std::hint::black_box(p.slice_range(lo, hi).unwrap());
+            }
+        });
+        b.note(&format!(
+            "  -> {:.2} ms per n=1 round of S={shards} routing",
+            r.mean.as_secs_f64() * 1e3
+        ));
+    }
 }

@@ -8,10 +8,13 @@
 //! Server (lines 11-16, [`CompAmsServer`]):  ḡ = mean_i ĝ_i;
 //! AMSGrad(θ, ḡ) with m, v, v̂ held **only on the server**.
 //!
-//! The server update has two backends: the pure-Rust [`AmsGrad`] loop and
-//! the AOT-compiled L1 Pallas fused kernel ([`OptimizerExe`]), selected
-//! via [`CompAmsServer::with_fused`]. Both are bit-compared in the
-//! integration tests and raced in `bench_optim`.
+//! The server update has two backends: the pure-Rust [`AmsGrad`] loop in
+//! [`CompAmsServer`] (which is `Send`, so the sharded server can move
+//! per-shard instances onto leader-side threads) and the AOT-compiled L1
+//! Pallas fused kernel ([`OptimizerExe`]) in [`FusedCompAmsServer`]
+//! (which holds non-`Send` PJRT handles and stays pinned to the leader).
+//! Both are bit-compared in the integration tests and raced in
+//! `bench_optim`.
 
 use std::rc::Rc;
 
@@ -51,31 +54,20 @@ impl WorkerAlgo for CompAmsWorker {
     }
 }
 
-/// Server half: AMSGrad with all moment state on the leader.
+/// Server half: AMSGrad with all moment state on the leader. Pure-Rust
+/// update loop; the state is strictly per-coordinate, so a `ShardedServer`
+/// can run one instance per contiguous θ shard with trajectories bitwise
+/// identical to the unsharded server.
 pub struct CompAmsServer {
     label: &'static str,
     comp_name: String,
     opt: AmsGrad,
-    fused: Option<Rc<OptimizerExe>>,
     avg: Vec<f32>,
 }
 
 impl CompAmsServer {
     pub fn new(dim: usize, comp_name: String, label: &'static str) -> Self {
-        CompAmsServer {
-            label,
-            comp_name,
-            opt: AmsGrad::default_hp(dim),
-            fused: None,
-            avg: Vec::new(),
-        }
-    }
-
-    /// Route the server update through the Pallas fused-update artifact.
-    pub fn with_fused(mut self, exe: Rc<OptimizerExe>) -> Self {
-        assert_eq!(exe.p(), self.opt.dim());
-        self.fused = Some(exe);
-        self
+        CompAmsServer { label, comp_name, opt: AmsGrad::default_hp(dim), avg: Vec::new() }
     }
 }
 
@@ -96,18 +88,49 @@ impl ServerAlgo for CompAmsServer {
     ) -> Result<()> {
         let mut avg = std::mem::take(&mut self.avg);
         average_payloads(msgs, theta.len(), &mut avg)?;
-        match &self.fused {
-            None => self.opt.step(theta, &avg, ctx.lr),
-            Some(exe) => {
-                let (t2, m2, v2, vh2) =
-                    exe.run(theta, &self.opt.m, &self.opt.v, &self.opt.vhat, &avg, ctx.lr)?;
-                theta.copy_from_slice(&t2);
-                self.opt.m = m2;
-                self.opt.v = v2;
-                self.opt.vhat = vh2;
-            }
-        }
+        self.opt.step(theta, &avg, ctx.lr);
         self.avg = avg;
+        Ok(())
+    }
+}
+
+/// [`CompAmsServer`] with the update routed through the Pallas
+/// fused-update artifact. Holds non-`Send` PJRT handles, so it is pinned
+/// to the leader thread and cannot be sharded (the fused executable is
+/// AOT-compiled for the full θ dimension).
+pub struct FusedCompAmsServer {
+    inner: CompAmsServer,
+    exe: Rc<OptimizerExe>,
+}
+
+impl FusedCompAmsServer {
+    pub fn new(inner: CompAmsServer, exe: Rc<OptimizerExe>) -> Self {
+        assert_eq!(exe.p(), inner.opt.dim());
+        FusedCompAmsServer { inner, exe }
+    }
+}
+
+impl ServerAlgo for FusedCompAmsServer {
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn step(
+        &mut self,
+        theta: &mut [f32],
+        msgs: &[Payload],
+        ctx: &RoundCtx,
+    ) -> Result<()> {
+        let opt = &mut self.inner.opt;
+        let mut avg = std::mem::take(&mut self.inner.avg);
+        average_payloads(msgs, theta.len(), &mut avg)?;
+        let (t2, m2, v2, vh2) =
+            self.exe.run(theta, &opt.m, &opt.v, &opt.vhat, &avg, ctx.lr)?;
+        theta.copy_from_slice(&t2);
+        opt.m = m2;
+        opt.v = v2;
+        opt.vhat = vh2;
+        self.inner.avg = avg;
         Ok(())
     }
 }
@@ -131,11 +154,18 @@ pub fn protocol(
             )) as Box<dyn WorkerAlgo>
         })
         .collect();
-    let mut server = CompAmsServer::new(dim, comp_name, label);
-    if let Some(exe) = fused {
-        server = server.with_fused(exe);
-    }
-    (workers, Box::new(server))
+    let server = CompAmsServer::new(dim, comp_name, label);
+    let server: Box<dyn ServerAlgo> = match fused {
+        None => Box::new(server),
+        Some(exe) => Box::new(FusedCompAmsServer::new(server, exe)),
+    };
+    (workers, server)
+}
+
+/// Build just the pure-Rust (`Send`) server half over a `dim`-slice of θ —
+/// the per-shard constructor used by [`crate::algo::sharded::ShardedServer`].
+pub fn server(dim: usize, compressor: &CompressorSpec, label: &'static str) -> CompAmsServer {
+    CompAmsServer::new(dim, compressor.build().name(), label)
 }
 
 #[cfg(test)]

@@ -17,7 +17,9 @@ impl WorkerAlgo for DistSgdWorker {
     }
 }
 
-/// Server half: momentum SGD on the averaged gradient.
+/// Server half: momentum SGD on the averaged gradient. The velocity is
+/// per-coordinate, so it shards exactly under
+/// [`crate::algo::sharded::ShardedServer`].
 pub struct DistSgdServer {
     opt: MomentumSgd,
     avg: Vec<f32>,

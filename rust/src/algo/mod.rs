@@ -11,9 +11,18 @@
 //! [`AlgoSpec::build`] instantiates one `WorkerAlgo` **per worker** plus a
 //! single `ServerAlgo`. `WorkerAlgo: Send` so the coordinator's threaded
 //! backend can move each instance into its worker thread and run the full
-//! per-worker pipeline (gradient → EF → compress → encode) off the leader;
-//! the `ServerAlgo` stays on the leader (it may hold non-`Send` PJRT
-//! handles for the Pallas fused update).
+//! per-worker pipeline (gradient → EF → compress → encode) off the leader.
+//!
+//! The server half no longer has to be a single leader-pinned object:
+//! because every server optimizer here is strictly per-coordinate,
+//! [`AlgoSpec::build_server`] can instantiate one `Send` server half per
+//! contiguous θ shard and [`sharded::ShardedServer`] runs the S shard
+//! updates sequentially or on a leader-side thread pool, with
+//! trajectories bitwise identical to the unsharded server. The one
+//! exception is the Pallas fused-update backend
+//! ([`comp_ams::FusedCompAmsServer`]): it holds non-`Send` PJRT handles
+//! compiled for the full θ, so it stays on the leader and is mutually
+//! exclusive with sharding.
 //!
 //! Per-protocol split (worker uplink / server update):
 //!
@@ -35,11 +44,13 @@ pub mod comp_ams;
 pub mod dist_sgd;
 pub mod onebit_adam;
 pub mod qadam;
+pub mod sharded;
 
-pub use comp_ams::{CompAmsServer, CompAmsWorker};
+pub use comp_ams::{CompAmsServer, CompAmsWorker, FusedCompAmsServer};
 pub use dist_sgd::{DistSgdServer, DistSgdWorker};
 pub use onebit_adam::{OneBitAdamServer, OneBitAdamWorker};
 pub use qadam::{QAdamServer, QAdamWorker};
+pub use sharded::{ShardStats, ShardedServer};
 
 use std::rc::Rc;
 
@@ -72,13 +83,24 @@ pub trait WorkerAlgo: Send {
 }
 
 /// The server half of a protocol: consumes all n uplink messages and
-/// updates `theta`. Lives on the leader thread; may hold non-`Send`
-/// resources (the Pallas fused-update PJRT executable).
+/// updates `theta`.
+///
+/// The trait itself is object-safe and not `Send`-bound — the fused PJRT
+/// backend holds non-`Send` handles — but every pure-Rust implementation
+/// is `Send`, which is what lets [`AlgoSpec::build_server`] hand per-shard
+/// instances to the [`sharded::ShardedServer`] thread pool.
 pub trait ServerAlgo {
     fn name(&self) -> String;
 
     fn step(&mut self, theta: &mut [f32], msgs: &[Payload], ctx: &RoundCtx)
         -> Result<()>;
+
+    /// Per-shard accounting when this server partitions θ across several
+    /// shard optimizers ([`sharded::ShardedServer`] overrides this);
+    /// `None` for single-shard servers.
+    fn shard_stats(&self) -> Option<&ShardStats> {
+        None
+    }
 }
 
 /// A fully instantiated protocol: one worker half per worker plus the
@@ -171,17 +193,54 @@ impl AlgoSpec {
                 fused,
             ),
             AlgoSpec::QAdam { compressor } => qadam::protocol(dim, n, compressor.clone()),
-            AlgoSpec::OneBitAdam { warmup_rounds, block } => {
-                let warmup = if *warmup_rounds == 0 {
-                    // Paper §5.1: warm-up = 1/20 of the training budget.
-                    (total_rounds / 20).max(1)
-                } else {
-                    *warmup_rounds
-                };
-                onebit_adam::protocol(dim, n, warmup, *block)
-            }
+            AlgoSpec::OneBitAdam { warmup_rounds, block } => onebit_adam::protocol(
+                dim,
+                n,
+                resolve_warmup(*warmup_rounds, total_rounds),
+                *block,
+            ),
             AlgoSpec::DistSgd { momentum } => dist_sgd::protocol(dim, n, *momentum),
         }
+    }
+
+    /// Build just the server half over a `dim`-slice of θ, without fused
+    /// routing. Unlike [`AlgoSpec::build_fused`], the result is `Send`:
+    /// this is the per-shard constructor [`sharded::ShardedServer`] uses
+    /// to move shard optimizers onto leader-side threads. Server state is
+    /// per-coordinate for every protocol, so S shard servers over a
+    /// contiguous partition reproduce the unsharded trajectory bitwise.
+    pub fn build_server(
+        &self,
+        dim: usize,
+        total_rounds: u64,
+    ) -> Box<dyn ServerAlgo + Send> {
+        match self {
+            AlgoSpec::DistAms => {
+                Box::new(comp_ams::server(dim, &CompressorSpec::Identity, "dist-ams"))
+            }
+            AlgoSpec::CompAms { compressor, .. } => {
+                Box::new(comp_ams::server(dim, compressor, "comp-ams"))
+            }
+            AlgoSpec::QAdam { compressor } => {
+                Box::new(QAdamServer::new(compressor.build().name()))
+            }
+            AlgoSpec::OneBitAdam { warmup_rounds, .. } => Box::new(
+                OneBitAdamServer::new(dim, resolve_warmup(*warmup_rounds, total_rounds)),
+            ),
+            AlgoSpec::DistSgd { momentum } => {
+                Box::new(DistSgdServer::new(dim, *momentum))
+            }
+        }
+    }
+}
+
+/// 1BitAdam warm-up horizon: the spec value, or — when the spec says 0 —
+/// 1/20 of the training budget (paper §5.1).
+fn resolve_warmup(spec_rounds: u64, total_rounds: u64) -> u64 {
+    if spec_rounds == 0 {
+        (total_rounds / 20).max(1)
+    } else {
+        spec_rounds
     }
 }
 
@@ -271,6 +330,27 @@ mod tests {
         fn assert_send<T: Send + ?Sized>() {}
         assert_send::<dyn WorkerAlgo>();
         assert_send::<Box<dyn WorkerAlgo>>();
+    }
+
+    #[test]
+    fn build_server_matches_full_build_name_per_protocol() {
+        for spec_str in
+            ["dist-ams", "comp-ams-topk:0.01", "qadam", "1bitadam:50", "dist-sgd"]
+        {
+            let spec = AlgoSpec::parse(spec_str).unwrap();
+            let (_, full) = spec.build(10, 2, 100);
+            // The Send bound is part of the signature (compile-time check).
+            let shard: Box<dyn ServerAlgo + Send> = spec.build_server(10, 100);
+            assert_eq!(shard.name(), full.name(), "{spec_str}");
+            assert!(shard.shard_stats().is_none());
+        }
+        // `1bitadam` (warmup 0) derives its warm-up from the schedule the
+        // same way in both constructors.
+        let spec = AlgoSpec::parse("1bitadam").unwrap();
+        assert_eq!(
+            spec.build_server(10, 200).name(),
+            spec.build(10, 2, 200).1.name()
+        );
     }
 
     #[test]

@@ -68,6 +68,10 @@ impl WorkerAlgo for OneBitAdamWorker {
 }
 
 /// Server half: Adam during warm-up, frozen-preconditioner momentum after.
+/// Adam's moments and the frozen preconditioner are per-coordinate, and
+/// the phase switch reads the shared round counter, so per-shard instances
+/// under [`crate::algo::sharded::ShardedServer`] freeze at the same round
+/// and reproduce the unsharded trajectory bitwise.
 pub struct OneBitAdamServer {
     warmup_rounds: u64,
     adam: Adam,

@@ -54,6 +54,8 @@ impl WorkerAlgo for QAdamWorker {
 }
 
 /// Server half: stateless averaging + lr step over the decoded ratios.
+/// Per-coordinate (no cross-coordinate state at all), so it shards
+/// exactly under [`crate::algo::sharded::ShardedServer`].
 pub struct QAdamServer {
     comp_name: String,
     avg: Vec<f32>,

@@ -1,0 +1,394 @@
+//! Sharded server: split θ across S parallel [`ServerAlgo`] shards.
+//!
+//! PR 1 moved the whole worker pipeline onto worker threads, which leaves
+//! the leader's dense server update as the serial bottleneck (Amdahl). The
+//! fix is the classic parameter-server partition: θ is cut into S
+//! contiguous shards, each shard gets its **own** server optimizer built
+//! by [`AlgoSpec::build_server`], each round's worker payloads are sliced
+//! per shard with [`Payload::slice_range`], and the S shard updates run
+//! either sequentially or on a pool of persistent leader-side shard
+//! threads — mirroring the sequential/threaded [`WorkerPool`] backends.
+//!
+//! Correctness rests on two facts, both asserted by tests:
+//!
+//! 1. **Slicing is exact**: decoding a payload slice is bitwise identical
+//!    to slicing the full decode (see `compress::wire`).
+//! 2. **Server state is per-coordinate**: AMSGrad/Adam moments, the
+//!    1BitAdam preconditioner, and SGD velocity never mix coordinates,
+//!    and every cross-shard scalar (round counter, lr, 1/n averaging
+//!    weight) comes from the shared [`RoundCtx`]. So S shard optimizers
+//!    over a contiguous partition walk exactly the trajectory of one
+//!    full-θ optimizer — S=1, sequential-S, and threaded-S are all
+//!    bitwise identical.
+//!
+//! This is also the architectural step toward multi-process parameter
+//! serving: each shard already sees only its own `(θ-slice, payload
+//! slices)` view, so a shard can later move behind a channel or socket
+//! without touching the protocol code.
+//!
+//! [`WorkerPool`]: crate::coordinator::cluster::WorkerPool
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::compress::Payload;
+use crate::util::timer::Stopwatch;
+
+use super::{AlgoSpec, RoundCtx, ServerAlgo};
+
+/// Fenceposts of a contiguous partition of `0..dim` into `shards` ranges
+/// whose lengths differ by at most one (the first `dim % shards` shards
+/// take the extra coordinate). Returns `shards + 1` offsets starting at 0
+/// and ending at `dim`.
+pub fn shard_bounds(dim: usize, shards: usize) -> Vec<usize> {
+    assert!(shards >= 1 && shards <= dim, "bad partition: {shards} shards of {dim}");
+    let base = dim / shards;
+    let rem = dim % shards;
+    let mut bounds = Vec::with_capacity(shards + 1);
+    bounds.push(0);
+    let mut off = 0;
+    for s in 0..shards {
+        off += base + usize::from(s < rem);
+        bounds.push(off);
+    }
+    bounds
+}
+
+/// Cumulative per-shard accounting, surfaced through
+/// [`ServerAlgo::shard_stats`] into the `CommLedger` / `RunResult`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ShardStats {
+    /// The `S + 1` fenceposts of the θ partition ([`shard_bounds`]).
+    pub bounds: Vec<usize>,
+    /// Cumulative wire bits of the sliced payloads routed to each shard —
+    /// what each shard's future standalone process would receive on its
+    /// uplink once shards live behind real transport.
+    pub routed_bits: Vec<u64>,
+    /// Cumulative wall-clock ms spent inside each shard's `step`
+    /// (measured on the shard thread in the threaded backend).
+    pub step_ms: Vec<f64>,
+}
+
+impl ShardStats {
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.bounds.len().saturating_sub(1)
+    }
+}
+
+enum Cmd {
+    Step { theta: Vec<f32>, msgs: Vec<Payload>, ctx: RoundCtx },
+    Stop,
+}
+
+struct Reply {
+    theta: Vec<f32>,
+    ms: f64,
+}
+
+struct ShardHandle {
+    tx: Sender<Cmd>,
+    rx: Receiver<Result<Reply>>,
+    join: Option<JoinHandle<()>>,
+}
+
+/// One persistent leader-side thread owning one shard's server optimizer.
+/// The thread receives this round's θ-slice and sliced payloads, runs the
+/// shard update, and sends the updated slice back.
+fn spawn_shard(sid: usize, mut server: Box<dyn ServerAlgo + Send>) -> ShardHandle {
+    let (cmd_tx, cmd_rx) = channel::<Cmd>();
+    let (rep_tx, rep_rx) = channel::<Result<Reply>>();
+    let join = std::thread::Builder::new()
+        .name(format!("shard-{sid}"))
+        .spawn(move || {
+            while let Ok(cmd) = cmd_rx.recv() {
+                match cmd {
+                    Cmd::Step { mut theta, msgs, ctx } => {
+                        let sw = Stopwatch::start();
+                        let res = server.step(&mut theta, &msgs, &ctx);
+                        let reply = res.map(|()| Reply { theta, ms: sw.ms() });
+                        if rep_tx.send(reply).is_err() {
+                            break;
+                        }
+                    }
+                    Cmd::Stop => break,
+                }
+            }
+        })
+        .expect("spawn shard thread");
+    ShardHandle { tx: cmd_tx, rx: rep_rx, join: Some(join) }
+}
+
+enum Backend {
+    Sequential(Vec<Box<dyn ServerAlgo + Send>>),
+    Threaded(Vec<ShardHandle>),
+}
+
+/// A [`ServerAlgo`] that partitions θ into S contiguous shards, each with
+/// its own independently-built server half, and routes every worker
+/// payload to each shard as a [`Payload::slice_range`] slice. See the
+/// module docs for why this is bitwise-exact.
+pub struct ShardedServer {
+    name: String,
+    backend: Backend,
+    stats: ShardStats,
+}
+
+impl ShardedServer {
+    /// Partition `dim` coordinates into `shards` and build one server
+    /// half per shard from `spec`. `threaded` selects the persistent
+    /// shard-thread backend (trajectories are identical either way).
+    ///
+    /// Fails if `shards` is 0 or exceeds `dim`. Fused Pallas routing is
+    /// deliberately not supported here — the fused executable is compiled
+    /// for full-θ shapes (the config layer rejects that combination).
+    pub fn new(
+        spec: &AlgoSpec,
+        dim: usize,
+        total_rounds: u64,
+        shards: usize,
+        threaded: bool,
+    ) -> Result<ShardedServer> {
+        ensure!(shards >= 1, "server shards must be >= 1");
+        ensure!(
+            shards <= dim,
+            "more server shards ({shards}) than model coordinates ({dim})"
+        );
+        let bounds = shard_bounds(dim, shards);
+        let servers: Vec<Box<dyn ServerAlgo + Send>> = (0..shards)
+            .map(|s| spec.build_server(bounds[s + 1] - bounds[s], total_rounds))
+            .collect();
+        let name = servers[0].name();
+        let stats = ShardStats {
+            bounds,
+            routed_bits: vec![0; shards],
+            step_ms: vec![0.0; shards],
+        };
+        let backend = if threaded {
+            Backend::Threaded(
+                servers
+                    .into_iter()
+                    .enumerate()
+                    .map(|(s, srv)| spawn_shard(s, srv))
+                    .collect(),
+            )
+        } else {
+            Backend::Sequential(servers)
+        };
+        Ok(ShardedServer { name, backend, stats })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.stats.shards()
+    }
+
+    pub fn is_threaded(&self) -> bool {
+        matches!(self.backend, Backend::Threaded(_))
+    }
+}
+
+impl ServerAlgo for ShardedServer {
+    /// The protocol name is the per-shard server's name (all shards agree)
+    /// so sharding never changes how a run is labelled in results.
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn step(
+        &mut self,
+        theta: &mut [f32],
+        msgs: &[Payload],
+        ctx: &RoundCtx,
+    ) -> Result<()> {
+        let bounds = self.stats.bounds.clone();
+        let dim = *bounds.last().unwrap();
+        ensure!(
+            theta.len() == dim,
+            "sharded server built for dim {dim}, got θ of {}",
+            theta.len()
+        );
+        let shards = bounds.len() - 1;
+
+        // Route: slice every worker payload down to each shard's range.
+        let mut routed: Vec<Vec<Payload>> = Vec::with_capacity(shards);
+        for s in 0..shards {
+            let sub: Vec<Payload> = msgs
+                .iter()
+                .map(|m| m.slice_range(bounds[s], bounds[s + 1]))
+                .collect::<Result<_>>()?;
+            self.stats.routed_bits[s] += sub.iter().map(|p| p.wire_bits()).sum::<u64>();
+            routed.push(sub);
+        }
+
+        match &mut self.backend {
+            Backend::Sequential(servers) => {
+                for (s, (server, sub)) in servers.iter_mut().zip(routed).enumerate() {
+                    let sw = Stopwatch::start();
+                    server.step(&mut theta[bounds[s]..bounds[s + 1]], &sub, ctx)?;
+                    self.stats.step_ms[s] += sw.ms();
+                }
+            }
+            Backend::Threaded(handles) => {
+                for (s, (h, sub)) in handles.iter().zip(routed).enumerate() {
+                    let slice = theta[bounds[s]..bounds[s + 1]].to_vec();
+                    h.tx
+                        .send(Cmd::Step { theta: slice, msgs: sub, ctx: *ctx })
+                        .map_err(|_| anyhow!("shard thread died"))?;
+                }
+                // Drain every shard's reply before surfacing any error —
+                // a short-circuit would leave replies queued and silently
+                // deliver them next round (same rationale as WorkerPool).
+                let mut replies = Vec::with_capacity(handles.len());
+                for h in handles.iter() {
+                    replies
+                        .push(h.rx.recv().map_err(|_| anyhow!("shard thread died"))?);
+                }
+                for (s, r) in replies.into_iter().enumerate() {
+                    let Reply { theta: updated, ms } = r?;
+                    theta[bounds[s]..bounds[s + 1]].copy_from_slice(&updated);
+                    self.stats.step_ms[s] += ms;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn shard_stats(&self) -> Option<&ShardStats> {
+        Some(&self.stats)
+    }
+}
+
+impl Drop for ShardedServer {
+    fn drop(&mut self) {
+        if let Backend::Threaded(handles) = &mut self.backend {
+            for h in handles.iter() {
+                let _ = h.tx.send(Cmd::Stop);
+            }
+            for h in handles.iter_mut() {
+                if let Some(j) = h.join.take() {
+                    let _ = j.join();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bounds_partition_evenly_with_remainder_up_front() {
+        assert_eq!(shard_bounds(10, 1), vec![0, 10]);
+        assert_eq!(shard_bounds(10, 2), vec![0, 5, 10]);
+        assert_eq!(shard_bounds(11, 3), vec![0, 4, 8, 11]);
+        assert_eq!(shard_bounds(5, 5), vec![0, 1, 2, 3, 4, 5]);
+        // Lengths differ by at most one and cover everything.
+        let b = shard_bounds(1013, 7);
+        assert_eq!(*b.last().unwrap(), 1013);
+        let lens: Vec<usize> = b.windows(2).map(|w| w[1] - w[0]).collect();
+        assert_eq!(lens.iter().sum::<usize>(), 1013);
+        assert!(lens.iter().max().unwrap() - lens.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn rejects_zero_or_oversized_shard_counts() {
+        let spec = AlgoSpec::parse("dist-sgd").unwrap();
+        assert!(ShardedServer::new(&spec, 8, 100, 0, false).is_err());
+        assert!(ShardedServer::new(&spec, 8, 100, 9, false).is_err());
+    }
+
+    /// Drive a full-θ server and a sharded server with identical message
+    /// streams; trajectories must agree bitwise.
+    fn assert_sharded_matches_unsharded(spec_str: &str, shards: usize, threaded: bool) {
+        let dim = 37; // prime, so every shard count partitions unevenly
+        let n = 3;
+        let rounds = 25;
+        let spec = AlgoSpec::parse(spec_str).unwrap();
+        let run = |sharded: Option<(usize, bool)>| -> Vec<f32> {
+            let (mut workers, full) = spec.build(dim, n, rounds);
+            let mut server: Box<dyn ServerAlgo> = match sharded {
+                None => full,
+                Some((s, thr)) => {
+                    Box::new(ShardedServer::new(&spec, dim, rounds, s, thr).unwrap())
+                }
+            };
+            let mut theta: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.37).sin()).collect();
+            for r in 0..rounds {
+                let ctx = RoundCtx { round: r, lr: 0.02 };
+                // Deterministic per-worker pseudo-gradients.
+                let msgs: Vec<Payload> = workers
+                    .iter_mut()
+                    .enumerate()
+                    .map(|(w, wk)| {
+                        let g: Vec<f32> = (0..dim)
+                            .map(|i| ((r as usize * 31 + w * 7 + i) as f32 * 0.11).cos())
+                            .collect();
+                        wk.process(&g, &ctx).unwrap()
+                    })
+                    .collect();
+                server.step(&mut theta, &msgs, &ctx).unwrap();
+            }
+            theta
+        };
+        let a = run(None);
+        let b = run(Some((shards, threaded)));
+        for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{spec_str} S={shards} threaded={threaded}: θ[{i}] {x} vs {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_trajectory_is_bitwise_identical_across_protocols() {
+        for spec_str in [
+            "dist-ams",
+            "comp-ams-topk:0.2",
+            "comp-ams-blocksign:8",
+            "qadam",
+            "1bitadam:5",
+            "dist-sgd",
+        ] {
+            assert_sharded_matches_unsharded(spec_str, 4, false);
+            assert_sharded_matches_unsharded(spec_str, 4, true);
+            assert_sharded_matches_unsharded(spec_str, 3, true); // 37 % 3 != 0
+        }
+    }
+
+    #[test]
+    fn stats_track_bounds_bits_and_time() {
+        let spec = AlgoSpec::parse("comp-ams-topk:0.5").unwrap();
+        let (mut workers, _) = spec.build(16, 2, 10);
+        let mut server = ShardedServer::new(&spec, 16, 10, 4, false).unwrap();
+        assert_eq!(server.shards(), 4);
+        assert!(!server.is_threaded());
+        let mut theta = vec![0.1f32; 16];
+        for r in 0..3 {
+            let ctx = RoundCtx { round: r, lr: 0.01 };
+            let g = vec![1.0f32; 16];
+            let msgs: Vec<Payload> =
+                workers.iter_mut().map(|w| w.process(&g, &ctx).unwrap()).collect();
+            server.step(&mut theta, &msgs, &ctx).unwrap();
+        }
+        let stats = ServerAlgo::shard_stats(&server).unwrap();
+        assert_eq!(stats.bounds, vec![0, 4, 8, 12, 16]);
+        assert_eq!(stats.shards(), 4);
+        assert!(stats.routed_bits.iter().all(|&b| b > 0));
+        assert_eq!(stats.step_ms.len(), 4);
+    }
+
+    #[test]
+    fn wrong_theta_dim_is_rejected() {
+        let spec = AlgoSpec::parse("dist-sgd").unwrap();
+        let mut server = ShardedServer::new(&spec, 8, 10, 2, false).unwrap();
+        let ctx = RoundCtx { round: 0, lr: 0.01 };
+        let msgs = vec![Payload::Dense(vec![0.0; 8])];
+        let mut theta = vec![0.0f32; 7];
+        assert!(server.step(&mut theta, &msgs, &ctx).is_err());
+    }
+}

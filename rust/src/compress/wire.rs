@@ -2,16 +2,46 @@
 //!
 //! Figure 2 of the paper plots loss/accuracy against *bits transmitted to
 //! the central server*; this module defines precisely what those bits are.
-//! Every payload serializes to a deterministic little-endian byte layout
-//! with a 5-byte header (tag u8 + dim u32); `wire_bits()` is exactly
-//! `8 * encode().len()` (asserted by tests), so the ledger reflects real
-//! bytes-on-wire rather than an estimate.
 //!
-//! Layouts:
-//! - `Dense`:  header | d * f32
-//! - `Sparse`: header | k u32 | k * u32 idx | k * f32 val          (Top-k / Random-k)
-//! - `Signs`:  header | block u32 | nb u32 | nb * f32 scales | ceil(d/8) sign bytes
-//!   (Block-Sign: 1 bit per coordinate + one f32 scale per block)
+//! ## Byte layout
+//!
+//! Every payload serializes to a deterministic **little-endian** byte
+//! stream opening with a 5-byte header: `tag u8 | dim u32`, where `dim`
+//! is the dense dimension the payload decodes to. The bodies are:
+//!
+//! | variant                | body after the header                                        |
+//! |------------------------|--------------------------------------------------------------|
+//! | [`Payload::Dense`]     | `d × f32`                                                    |
+//! | [`Payload::Sparse`]    | `k u32 \| k × u32 idx \| k × f32 val` (Top-k / Random-k)     |
+//! | [`Payload::Signs`]     | `block u32 \| nb u32 \| nb × f32 scales \| ceil(d/8) bytes`  |
+//! | [`Payload::LayeredSigns`] | `nb u32 \| nb × u32 sizes \| nb × f32 scales \| ceil(d/8) bytes` |
+//! | [`Payload::Quantized`] | `norm f32 \| levels u8 \| d × i8`                            |
+//! | [`Payload::SparseF16`] | `k u32 \| k × u32 idx \| k × u16 (IEEE half) val`            |
+//!
+//! Sign bitmaps store one bit per coordinate, little-endian within each
+//! byte (coordinate `i` is bit `i & 7` of byte `i >> 3`); a **set** bit
+//! means negative ([`pack_signs`]).
+//!
+//! ## Bit-accounting rules
+//!
+//! [`Payload::wire_bits`] is the ledger's source of truth and obeys two
+//! invariants, both asserted by the tests here and re-checked by the
+//! `uplink_bits` assertions in the coordinator tests:
+//!
+//! 1. `wire_bits() == 8 * encode().len()` exactly — the ledger counts
+//!    real bytes-on-wire, never an estimate;
+//! 2. bits are charged **where the payload is produced** (the worker
+//!    thread in the threaded backend), so the accounting is identical
+//!    across execution backends.
+//!
+//! ## Shard slicing
+//!
+//! [`Payload::slice_range`] restricts a payload to a contiguous
+//! coordinate range without decoding it, which is how the sharded server
+//! ([`crate::algo::sharded`]) routes one uplink message to S per-shard
+//! optimizers. Decoding a slice is bitwise identical to slicing the full
+//! decode (the slicing property test), so sharded and unsharded servers
+//! produce identical trajectories.
 
 use anyhow::{bail, Result};
 
@@ -201,6 +231,100 @@ impl Payload {
             }
         }
         Ok(())
+    }
+
+    /// Restrict this payload to the contiguous coordinate range
+    /// `[start, end)` without decoding it, yielding a payload over
+    /// `end - start` local coordinates (index 0 = global `start`).
+    ///
+    /// Decoding the slice is **bitwise identical** to slicing the full
+    /// decode: sparse indices are filtered and rebased, sign bitmaps are
+    /// repacked from bit `start`, and per-block/per-layer scales keep
+    /// their original f32 values (a [`Payload::Signs`] slice becomes a
+    /// [`Payload::LayeredSigns`] whose segments are the block overlaps,
+    /// so a range may start or end mid-block). `Quantized` keeps the
+    /// *full-vector* norm so the reconstruction scale is unchanged.
+    ///
+    /// This is the routing primitive of the sharded server
+    /// ([`crate::algo::sharded::ShardedServer`]): each worker uplink is
+    /// sliced once per shard and handed to that shard's optimizer.
+    pub fn slice_range(&self, start: usize, end: usize) -> Result<Payload> {
+        let d = self.dim();
+        if start >= end || end > d {
+            bail!("bad payload slice [{start}, {end}) of dim {d}");
+        }
+        let len = (end - start) as u32;
+        Ok(match self {
+            Payload::Dense(v) => Payload::Dense(v[start..end].to_vec()),
+            Payload::Sparse { idx, val, .. } => {
+                let mut si = Vec::new();
+                let mut sv = Vec::new();
+                for (&i, &v) in idx.iter().zip(val) {
+                    let i = i as usize;
+                    if (start..end).contains(&i) {
+                        si.push((i - start) as u32);
+                        sv.push(v);
+                    }
+                }
+                Payload::Sparse { dim: len, idx: si, val: sv }
+            }
+            Payload::SparseF16 { idx, val, .. } => {
+                let mut si = Vec::new();
+                let mut sv = Vec::new();
+                for (&i, &v) in idx.iter().zip(val) {
+                    let i = i as usize;
+                    if (start..end).contains(&i) {
+                        si.push((i - start) as u32);
+                        sv.push(v);
+                    }
+                }
+                Payload::SparseF16 { dim: len, idx: si, val: sv }
+            }
+            Payload::Signs { block, scales, bits, .. } => {
+                let b = *block as usize;
+                let mut sizes = Vec::new();
+                let mut ss = Vec::new();
+                for bi in start / b..=(end - 1) / b {
+                    let lo = (bi * b).max(start);
+                    let hi = ((bi + 1) * b).min(end);
+                    sizes.push((hi - lo) as u32);
+                    ss.push(scales[bi]);
+                }
+                Payload::LayeredSigns {
+                    dim: len,
+                    sizes,
+                    scales: ss,
+                    bits: slice_sign_bits(bits, start, end - start),
+                }
+            }
+            Payload::LayeredSigns { sizes, scales, bits, .. } => {
+                let mut out_sizes = Vec::new();
+                let mut out_scales = Vec::new();
+                let mut off = 0usize;
+                for (&sz, &sc) in sizes.iter().zip(scales) {
+                    let seg_end = off + sz as usize;
+                    let lo = off.max(start);
+                    let hi = seg_end.min(end);
+                    if lo < hi {
+                        out_sizes.push((hi - lo) as u32);
+                        out_scales.push(sc);
+                    }
+                    off = seg_end;
+                }
+                Payload::LayeredSigns {
+                    dim: len,
+                    sizes: out_sizes,
+                    scales: out_scales,
+                    bits: slice_sign_bits(bits, start, end - start),
+                }
+            }
+            Payload::Quantized { norm, levels, q, .. } => Payload::Quantized {
+                dim: len,
+                norm: *norm,
+                levels: *levels,
+                q: q[start..end].to_vec(),
+            },
+        })
     }
 
     /// Exact message size in bits (== 8 * encode().len()).
@@ -396,6 +520,20 @@ fn write_signs_range(out: &mut [f32], global_start: usize, scale: f32, bits: &[u
         let bit = ((bits[i >> 3] >> (i & 7)) & 1) as u32;
         *o = f32::from_bits(sbits | (bit << 31));
     }
+}
+
+/// Repack the sign bits of global coordinates `[start, start + len)`
+/// into a fresh bitmap whose bit 0 is global coordinate `start` (the
+/// [`Payload::slice_range`] helper for the sign-based payloads).
+fn slice_sign_bits(bits: &[u8], start: usize, len: usize) -> Vec<u8> {
+    let mut out = vec![0u8; len.div_ceil(8)];
+    for j in 0..len {
+        let i = start + j;
+        if (bits[i >> 3] >> (i & 7)) & 1 == 1 {
+            out[j >> 3] |= 1 << (j & 7);
+        }
+    }
+    out
 }
 
 /// Pack sign bits: bit set == negative. `sign(0) := +1` (bit clear), the
@@ -637,6 +775,108 @@ mod tests {
         // out-of-range index rejected
         let bad = Payload::SparseF16 { dim: 2, idx: vec![7], val: vec![0] };
         assert!(Payload::decode(&bad.encode()).is_err());
+    }
+
+    /// Slice `p` at `bounds` fenceposts and check every slice decodes to
+    /// exactly the corresponding range of the full decode (bitwise), for
+    /// both `to_dense` and `add_into`, and still round-trips the codec.
+    fn assert_slices_match(p: &Payload, bounds: &[usize]) {
+        let d = p.dim();
+        let full = p.to_dense(d).unwrap();
+        for w in bounds.windows(2) {
+            let (lo, hi) = (w[0], w[1]);
+            let s = p.slice_range(lo, hi).unwrap();
+            assert_eq!(s.dim(), hi - lo);
+            roundtrip(&s);
+            let dec = s.to_dense(hi - lo).unwrap();
+            for (j, &x) in dec.iter().enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    full[lo + j].to_bits(),
+                    "coord {} of [{lo}, {hi})",
+                    lo + j
+                );
+            }
+            let mut acc = vec![0.25f32; hi - lo];
+            s.add_into(&mut acc).unwrap();
+            for (j, &x) in acc.iter().enumerate() {
+                assert_eq!(x.to_bits(), (full[lo + j] + 0.25).to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn slice_range_all_kinds_uneven_partition() {
+        // d = 11 over 3 shards: 4 | 4 | 3 (d % S != 0), and sign blocks of
+        // 4 so shard boundaries fall mid-block.
+        let bounds = [0usize, 4, 8, 11];
+        let x: Vec<f32> = (0..11).map(|i| (i as f32 - 5.0) * 0.5).collect();
+        let ps = [
+            Payload::Dense(x.clone()),
+            Payload::Sparse { dim: 11, idx: vec![0, 3, 4, 10], val: vec![1.0, -2.0, 3.5, 0.25] },
+            Payload::SparseF16 {
+                dim: 11,
+                idx: vec![2, 7, 8],
+                val: vec![f32_to_f16(0.5), f32_to_f16(-3.0), f32_to_f16(1.25)],
+            },
+            Payload::Signs {
+                dim: 11,
+                block: 4,
+                scales: vec![2.0, 0.5, 1.5],
+                bits: pack_signs(&x),
+            },
+            Payload::LayeredSigns {
+                dim: 11,
+                sizes: vec![3, 6, 2],
+                scales: vec![1.0, 0.75, 4.0],
+                bits: pack_signs(&x),
+            },
+            Payload::Quantized {
+                dim: 11,
+                norm: 8.0,
+                levels: 4,
+                q: vec![-4, -3, -2, -1, 0, 1, 2, 3, 4, 0, -4],
+            },
+        ];
+        for p in &ps {
+            assert_slices_match(p, &bounds);
+        }
+    }
+
+    #[test]
+    fn slice_range_single_coordinate_and_full_range() {
+        let p = Payload::Signs {
+            dim: 5,
+            block: 3,
+            scales: vec![2.0, 0.25],
+            bits: pack_signs(&[1.0, -1.0, 2.0, -0.5, 0.0]),
+        };
+        // Whole range: slice is equivalent to the original decode.
+        assert_slices_match(&p, &[0, 5]);
+        // Every single-coordinate slice.
+        assert_slices_match(&p, &[0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn slice_range_rejects_bad_ranges() {
+        let p = Payload::Dense(vec![1.0, 2.0, 3.0]);
+        assert!(p.slice_range(1, 1).is_err()); // empty
+        assert!(p.slice_range(2, 1).is_err()); // inverted
+        assert!(p.slice_range(0, 4).is_err()); // past the end
+    }
+
+    #[test]
+    fn sparse_slice_filters_and_rebases_indices() {
+        let p = Payload::Sparse { dim: 10, idx: vec![1, 4, 7], val: vec![0.5, -3.0, 2.0] };
+        let s = p.slice_range(4, 8).unwrap();
+        assert_eq!(
+            s,
+            Payload::Sparse { dim: 4, idx: vec![0, 3], val: vec![-3.0, 2.0] }
+        );
+        // A range with no surviving indices decodes to zeros.
+        let empty = p.slice_range(8, 10).unwrap();
+        assert_eq!(empty, Payload::Sparse { dim: 2, idx: vec![], val: vec![] });
+        assert_eq!(empty.to_dense(2).unwrap(), vec![0.0, 0.0]);
     }
 
     #[test]

@@ -56,7 +56,17 @@ pub struct TrainConfig {
     /// coordinator tests).
     pub threaded: bool,
     /// Route the AMSGrad server update through the Pallas fused artifact.
+    /// Incompatible with `server_shards > 1` (the artifact is compiled
+    /// for full-θ shapes).
     pub fused_update: bool,
+    /// Split the server update across this many contiguous θ shards, one
+    /// `ServerAlgo` per shard (1 = single unsharded server). Trajectories
+    /// are bitwise identical for any shard count; see
+    /// [`crate::algo::sharded`].
+    pub server_shards: usize,
+    /// Run the shard updates on persistent leader-side shard threads
+    /// instead of sequentially (only meaningful with `server_shards > 1`).
+    pub server_threaded: bool,
     /// Console metric cadence (0 = silent).
     pub log_every: u64,
     /// Rounds per "epoch" for reporting (dataset_size / (batch * workers)).
@@ -79,6 +89,8 @@ impl TrainConfig {
             artifacts: PathBuf::from("artifacts"),
             threaded: false,
             fused_update: false,
+            server_shards: 1,
+            server_threaded: false,
             log_every: 0,
             rounds_per_epoch: 100,
         };
@@ -134,6 +146,15 @@ impl TrainConfig {
                  (PJRT executables are pinned to the main thread)"
             );
         }
+        if self.server_shards == 0 {
+            bail!("server_shards must be >= 1");
+        }
+        if self.fused_update && self.server_shards > 1 {
+            bail!(
+                "fused_update routes the full-θ Pallas artifact and cannot \
+                 be combined with server_shards > 1"
+            );
+        }
         crate::algo::AlgoSpec::parse(&self.algo)?;
         crate::data::shard::Sharding::parse(&self.sharding)?;
         Ok(())
@@ -163,6 +184,8 @@ impl TrainConfig {
             ("artifacts", Json::str(&self.artifacts.to_string_lossy())),
             ("threaded", Json::Bool(self.threaded)),
             ("fused_update", Json::Bool(self.fused_update)),
+            ("server_shards", Json::num(self.server_shards as f64)),
+            ("server_threaded", Json::Bool(self.server_threaded)),
             ("log_every", Json::num(self.log_every as f64)),
             ("rounds_per_epoch", Json::num(self.rounds_per_epoch as f64)),
         ])
@@ -217,6 +240,12 @@ impl TrainConfig {
         if let Some(v) = j.get("fused_update") {
             cfg.fused_update = v.as_bool()?;
         }
+        if let Some(v) = j.get("server_shards") {
+            cfg.server_shards = v.as_usize()?;
+        }
+        if let Some(v) = j.get("server_threaded") {
+            cfg.server_threaded = v.as_bool()?;
+        }
         if let Some(v) = j.get("log_every") {
             cfg.log_every = v.as_usize()? as u64;
         }
@@ -254,11 +283,29 @@ mod tests {
     }
 
     #[test]
+    fn validate_server_sharding() {
+        let mut cfg = TrainConfig::preset("quadratic", "dist-ams");
+        cfg.server_shards = 4;
+        cfg.server_threaded = true;
+        cfg.validate().unwrap();
+        cfg.server_shards = 0;
+        assert!(cfg.validate().is_err());
+        // The fused Pallas artifact walks the full θ: no sharding.
+        cfg.server_shards = 2;
+        cfg.fused_update = true;
+        assert!(cfg.validate().is_err());
+        cfg.server_shards = 1;
+        cfg.validate().unwrap();
+    }
+
+    #[test]
     fn json_roundtrip() {
         let mut cfg = TrainConfig::preset("cifar_lenet", "comp-ams-blocksign:4096");
         cfg.schedule = LrSchedule::StepDecay { at: vec![3880, 7760], factor: 10.0 };
         cfg.workers = 4;
         cfg.seed = 7;
+        cfg.server_shards = 4;
+        cfg.server_threaded = true;
         let j = cfg.to_json();
         let back = TrainConfig::from_json(&crate::util::json::parse(
             &j.to_string_pretty(),
@@ -269,5 +316,7 @@ mod tests {
         assert_eq!(back.workers, 4);
         assert_eq!(back.seed, 7);
         assert_eq!(back.schedule, cfg.schedule);
+        assert_eq!(back.server_shards, 4);
+        assert!(back.server_threaded);
     }
 }

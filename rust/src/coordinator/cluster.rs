@@ -14,6 +14,13 @@
 //! trajectories because all randomness lives in worker-owned RNG streams,
 //! not in scheduling (asserted by the `threaded_matches_sequential`
 //! integration test and the cross-protocol property test).
+//!
+//! The server half is **not** pinned to the leader anymore: the same
+//! sequential/threaded backend pattern is mirrored on the server side by
+//! [`ShardedServer`](crate::algo::sharded::ShardedServer), which splits θ
+//! across per-shard `ServerAlgo` instances on persistent shard threads.
+//! Only the Pallas fused-update server (non-`Send` PJRT handles) remains
+//! leader-only.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;

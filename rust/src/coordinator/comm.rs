@@ -16,6 +16,12 @@ pub struct CommLedger {
     pub uplink_msgs: u64,
     /// Cumulative uplink bits per worker id (grows on first charge).
     pub uplink_bits_by_worker: Vec<u64>,
+    /// Cumulative uplink bits as routed to each server shard after
+    /// payload slicing — what each shard's standalone process would
+    /// receive once shards live behind real transport. Empty when the
+    /// server is unsharded; kept in sync from
+    /// [`ShardStats`](crate::algo::sharded::ShardStats) by the trainer.
+    pub uplink_bits_by_shard: Vec<u64>,
 }
 
 impl CommLedger {
@@ -31,6 +37,15 @@ impl CommLedger {
         self.uplink_bits_by_worker[wid] += bits;
         self.uplink_bits += bits;
         self.uplink_msgs += 1;
+    }
+
+    /// Overwrite the per-shard routing snapshot (`routed_bits` values are
+    /// already cumulative — the sharded server accumulates them at the
+    /// slicing site, the way uplink bits are counted at the production
+    /// site).
+    pub fn sync_shard_routing(&mut self, routed_bits: &[u64]) {
+        self.uplink_bits_by_shard.clear();
+        self.uplink_bits_by_shard.extend_from_slice(routed_bits);
     }
 
     /// Dense f32 broadcast of a d-vector to `n` workers.
@@ -70,6 +85,16 @@ mod tests {
             l.uplink_bits
         );
         assert_eq!(l.uplink_msgs, 3);
+    }
+
+    #[test]
+    fn shard_routing_snapshot_is_overwritten() {
+        let mut l = CommLedger::new();
+        assert!(l.uplink_bits_by_shard.is_empty());
+        l.sync_shard_routing(&[100, 200]);
+        assert_eq!(l.uplink_bits_by_shard, vec![100, 200]);
+        l.sync_shard_routing(&[150, 250]);
+        assert_eq!(l.uplink_bits_by_shard, vec![150, 250]);
     }
 
     #[test]

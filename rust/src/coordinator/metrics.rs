@@ -33,6 +33,12 @@ pub struct RunResult {
     /// Cumulative uplink bits per worker id — the Figure-2-style
     /// per-worker communication breakdown.
     pub uplink_bits_by_worker: Vec<u64>,
+    /// Cumulative uplink bits routed to each server shard after payload
+    /// slicing (empty for an unsharded server).
+    pub uplink_bits_by_shard: Vec<u64>,
+    /// Cumulative wall-clock ms spent inside each server shard's update
+    /// (empty for an unsharded server).
+    pub server_ms_by_shard: Vec<f64>,
 }
 
 impl RunResult {
@@ -104,6 +110,8 @@ mod tests {
             total_wall_ms: 0.0,
             coord_overhead: 0.0,
             uplink_bits_by_worker: Vec::new(),
+            uplink_bits_by_shard: Vec::new(),
+            server_ms_by_shard: Vec::new(),
         }
     }
 

@@ -11,15 +11,19 @@
 //!             bits_i = msg_i.wire_bits()          [uplink accounting]
 //!   workers ──(loss_i, msg_i, bits_i)──▶ leader
 //!   leader: server_algo.step(θ, msgs)           [AMSGrad on the server]
+//!           (sharded: msg slices routed to S parallel θ-shard servers)
 //! ```
 //!
 //! The whole per-worker pipeline — gradient, error feedback, compression,
 //! wire encoding — runs either sequentially on the leader thread
 //! (required for PJRT executables) or inside persistent worker threads
 //! ([`cluster`]), each of which owns its worker's
-//! [`WorkerAlgo`](crate::algo::WorkerAlgo) state. Both backends produce
-//! bit-identical trajectories (each worker owns a seeded RNG stream),
-//! which the integration and property tests assert across all protocols.
+//! [`WorkerAlgo`](crate::algo::WorkerAlgo) state. The server update can
+//! likewise be split across parallel θ shards
+//! ([`crate::algo::sharded::ShardedServer`], `--server-shards`). All
+//! backend combinations produce bit-identical trajectories (each worker
+//! owns a seeded RNG stream; server state is per-coordinate), which the
+//! integration and property tests assert across all protocols.
 
 pub mod cluster;
 pub mod checkpoint;

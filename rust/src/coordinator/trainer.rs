@@ -5,15 +5,18 @@
 //! [`WorkerAlgo`](crate::algo::WorkerAlgo) half (compressor + EF + local
 //! optimizer state) lives inside the [`WorkerPool`] next to its gradient
 //! source, so the threaded backend runs the whole per-worker pipeline off
-//! the leader; only the [`ServerAlgo`](crate::algo::ServerAlgo) half
-//! (aggregation + server optimizer) runs here.
+//! the leader; the [`ServerAlgo`](crate::algo::ServerAlgo) half
+//! (aggregation + server optimizer) runs here — either as one full-θ
+//! server or, with `server_shards > 1`, as a
+//! [`ShardedServer`](crate::algo::sharded::ShardedServer) that splits θ
+//! across parallel per-shard optimizers (bitwise-identical trajectories).
 
 use std::path::Path;
 use std::rc::Rc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::algo::{AlgoSpec, RoundCtx, ServerAlgo};
+use crate::algo::{AlgoSpec, RoundCtx, ServerAlgo, ShardedServer};
 use crate::config::TrainConfig;
 use crate::data::{
     images::SyntheticImages, lm::ByteCorpus, shard::Sharding, text::SyntheticText,
@@ -51,8 +54,19 @@ impl Trainer {
         let spec = AlgoSpec::parse(&cfg.algo)?;
         let (sources, evaluator, theta, fused) = build_workload(cfg)?;
         let fused = if cfg.fused_update { fused } else { None };
-        let (workers, server) =
+        let (workers, mut server) =
             spec.build_fused(theta.len(), cfg.workers, cfg.rounds, fused);
+        if cfg.server_shards > 1 {
+            // Replace the full-θ server with S per-shard servers (the
+            // validate() above already rejected the fused combination).
+            server = Box::new(ShardedServer::new(
+                &spec,
+                theta.len(),
+                cfg.rounds,
+                cfg.server_shards,
+                cfg.server_threaded,
+            )?);
+        }
         let pool = match sources {
             Sources::Threadable(s) if cfg.threaded => WorkerPool::threaded(s, workers)?,
             Sources::Threadable(s) => WorkerPool::sequential(
@@ -104,8 +118,11 @@ impl Trainer {
             msgs.push(wr.payload);
         }
 
-        // Leader: aggregate + server optimizer.
+        // Leader: aggregate + server optimizer (per-shard when sharded).
         self.server.step(&mut self.theta, &msgs, &ctx)?;
+        if let Some(stats) = self.server.shard_stats() {
+            self.ledger.sync_shard_routing(&stats.routed_bits);
+        }
 
         let wall = sw.ms();
         self.round_ms_total += wall;
@@ -150,6 +167,11 @@ impl Trainer {
             self.step(round)?;
         }
         let final_eval = self.evaluator.eval(&self.theta)?;
+        let server_ms_by_shard = self
+            .server
+            .shard_stats()
+            .map(|st| st.step_ms.clone())
+            .unwrap_or_default();
         Ok(RunResult {
             algo: self.algo_name.clone(),
             model: self.cfg.model.clone(),
@@ -163,6 +185,8 @@ impl Trainer {
                 0.0
             },
             uplink_bits_by_worker: self.ledger.uplink_bits_by_worker.clone(),
+            uplink_bits_by_shard: self.ledger.uplink_bits_by_shard.clone(),
+            server_ms_by_shard,
         })
     }
 
@@ -329,6 +353,32 @@ mod tests {
             assert_eq!(ma.uplink_bits, mb.uplink_bits);
         }
         assert_eq!(a.uplink_bits_by_worker, b.uplink_bits_by_worker);
+    }
+
+    #[test]
+    fn sharded_server_matches_unsharded_trajectory() {
+        let mut cfg = TrainConfig::preset("quadratic", "comp-ams-topk:0.1");
+        cfg.workers = 3;
+        cfg.rounds = 40;
+        cfg.eval_every = 0;
+        let a = train(&cfg).unwrap();
+        cfg.server_shards = 4;
+        let b = train(&cfg).unwrap();
+        cfg.server_threaded = true;
+        let c = train(&cfg).unwrap();
+        for ((ma, mb), mc) in a.metrics.iter().zip(&b.metrics).zip(&c.metrics) {
+            assert_eq!(ma.train_loss.to_bits(), mb.train_loss.to_bits());
+            assert_eq!(ma.train_loss.to_bits(), mc.train_loss.to_bits());
+            assert_eq!(ma.uplink_bits, mb.uplink_bits);
+        }
+        // Per-shard accounting surfaces only for sharded runs, and the
+        // deterministic routing bills identical bits on both backends.
+        assert!(a.uplink_bits_by_shard.is_empty());
+        assert!(a.server_ms_by_shard.is_empty());
+        assert_eq!(b.uplink_bits_by_shard.len(), 4);
+        assert_eq!(b.server_ms_by_shard.len(), 4);
+        assert!(b.uplink_bits_by_shard.iter().all(|&bits| bits > 0));
+        assert_eq!(b.uplink_bits_by_shard, c.uplink_bits_by_shard);
     }
 
     #[test]

@@ -19,6 +19,27 @@
 //! Python never runs on the training path: after `make artifacts` the
 //! binary is self-contained.
 //!
+//! ## Module map
+//!
+//! | module          | what lives there                                                    |
+//! |-----------------|---------------------------------------------------------------------|
+//! | [`algo`]        | the two-sided protocols ([`algo::WorkerAlgo`] / [`algo::ServerAlgo`]), [`algo::AlgoSpec`] parsing, and the sharded server ([`algo::sharded`]) |
+//! | [`compress`]    | Top-k / Random-k / Block-Sign / QSGD compressors, error feedback, and the exact wire codec ([`compress::wire`]) |
+//! | [`config`]      | [`TrainConfig`]: presets, validation, JSON round-trip               |
+//! | [`coordinator`] | trainer, worker pool backends, communication ledger, run metrics    |
+//! | [`data`]        | synthetic datasets + label-skew sharding (Dirichlet)                |
+//! | [`exp`]         | drivers regenerating the paper's figures and tables                 |
+//! | [`grad`]        | gradient sources: analytic substrates + the PJRT model path         |
+//! | [`optim`]       | server optimizers: AMSGrad, Adam, (momentum) SGD                    |
+//! | [`runtime`]     | PJRT client/executable wrappers around the AOT artifacts            |
+//! | [`testing`]     | in-tree property-test and micro-bench harnesses                     |
+//! | [`util`]        | rng, math, timers, CSV/JSON, CLI parsing                            |
+//!
+//! Execution is parallel on both sides of the wire while staying
+//! bit-deterministic: worker pipelines run on per-worker threads
+//! ([`coordinator::cluster::WorkerPool`]), and the server update can be
+//! partitioned across θ shards ([`algo::sharded::ShardedServer`]).
+//!
 //! ## Quick start
 //! ```no_run
 //! use comp_ams::config::TrainConfig;

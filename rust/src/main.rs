@@ -51,6 +51,9 @@ commands:
            --workers N --rounds N --lr F --seed N
            --sharding iid|dirichlet:A   --eval-every N --log-every N
            --fused true        use the Pallas fused AMSGrad artifact
+           --server-shards S   split the server update across S parallel
+                               θ shards (bitwise-identical trajectories)
+           --server-threaded t run shard updates on a leader thread pool
            --decay-at r1,r2 --decay-factor F
            --config file.json  load a config (flags override)
   exp      regenerate a paper artifact: fig1|fig2|fig3|fig4|table1|ablation
@@ -61,7 +64,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     args.ensure_known(&[
         "model", "algo", "workers", "rounds", "lr", "seed", "sharding",
         "eval-every", "eval-batches", "log-every", "fused", "threaded",
-        "artifacts", "config", "decay-at", "decay-factor", "rounds-per-epoch",
+        "server-shards", "server-threaded", "artifacts", "config", "decay-at",
+        "decay-factor", "rounds-per-epoch",
     ])?;
     let mut cfg = match args.get("config") {
         Some(path) => {
@@ -91,6 +95,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         args.u64_or("log-every", if cfg.log_every == 0 { 10 } else { cfg.log_every })?;
     cfg.fused_update = args.bool_or("fused", cfg.fused_update)?;
     cfg.threaded = args.bool_or("threaded", cfg.threaded)?;
+    cfg.server_shards = args.usize_or("server-shards", cfg.server_shards)?;
+    cfg.server_threaded = args.bool_or("server-threaded", cfg.server_threaded)?;
     cfg.rounds_per_epoch = args.u64_or("rounds-per-epoch", cfg.rounds_per_epoch)?;
     cfg.artifacts = PathBuf::from(args.str_or("artifacts", &cfg.artifacts.to_string_lossy()));
     if let Some(at) = args.get("decay-at") {
@@ -122,6 +128,15 @@ fn cmd_train(args: &Args) -> Result<()> {
         run.total_wall_ms / 1e3,
         run.coord_overhead * 100.0
     );
+    if !run.server_ms_by_shard.is_empty() {
+        let ms: Vec<String> =
+            run.server_ms_by_shard.iter().map(|m| format!("{m:.0}")).collect();
+        eprintln!(
+            "server: {} shards | step ms/shard [{}]",
+            run.server_ms_by_shard.len(),
+            ms.join(", ")
+        );
+    }
     Ok(())
 }
 

@@ -1,7 +1,8 @@
 //! Property-based invariants (via the in-tree `testing::prop` harness):
 //! the paper's Assumption 1 bound, wire-format exactness, error-feedback
-//! conservation, aggregation linearity, and optimizer-state monotonicity
-//! over randomized shapes and gradient distributions.
+//! conservation, aggregation linearity, optimizer-state monotonicity, and
+//! shard-slicing/sharded-server exactness over randomized shapes and
+//! gradient distributions.
 
 use comp_ams::algo::average_payloads;
 use comp_ams::compress::{
@@ -243,6 +244,139 @@ fn prop_worker_halves_are_send_and_threaded_is_bitwise_identical() {
             seq.uplink_bits_by_worker, thr.uplink_bits_by_worker,
             "{algo}: per-worker uplink breakdown diverged"
         );
+    }
+}
+
+#[test]
+fn prop_payload_slice_concat_reproduces_full_decode() {
+    // Sharded-server routing invariant: splitting any payload kind by a
+    // random (generally uneven, d % S != 0) contiguous partition and
+    // re-concatenating the slice decodes reproduces the full decode
+    // bitwise — so per-shard servers see exactly the coordinates the
+    // full-θ server would.
+    use comp_ams::compress::wire::f32_to_f16;
+    check("payload_slice_concat", 150, |g| {
+        let d = g.size(1, 2000);
+        let x = g.grad_vec(d);
+        // Every payload kind, not just what random_compressor emits:
+        // dense, top-k sparse, random-k, block-sign, plus hand-built
+        // layered-sign / quantized / f16-sparse messages.
+        let mut payloads: Vec<Payload> = Vec::new();
+        for c in &mut [
+            Box::new(Identity) as Box<dyn Compressor>,
+            Box::new(TopK::new(g.f32_range(0.005, 1.0))),
+            Box::new(TopK::new_fp16(g.f32_range(0.005, 1.0))),
+            Box::new(BlockSign::new(g.size(1, 512))),
+            Box::new(RandomK::new(g.f32_range(0.005, 1.0), g.rng.next_u64())),
+        ] {
+            payloads.push(c.compress(&x));
+        }
+        let mut layer_sizes: Vec<u32> = Vec::new();
+        let mut rest = d;
+        while rest > 0 {
+            let s = g.size(1, rest);
+            layer_sizes.push(s as u32);
+            rest -= s;
+        }
+        payloads.push(Payload::LayeredSigns {
+            dim: d as u32,
+            sizes: layer_sizes.clone(),
+            scales: layer_sizes.iter().map(|_| g.f32_range(0.0, 3.0)).collect(),
+            bits: comp_ams::compress::wire::pack_signs(&x),
+        });
+        payloads.push(Payload::Quantized {
+            dim: d as u32,
+            norm: g.f32_range(0.1, 10.0),
+            levels: g.size(1, 127) as u8,
+            q: x.iter().map(|&v| (v.clamp(-1.0, 1.0) * 4.0) as i8).collect(),
+        });
+        payloads.push(Payload::SparseF16 {
+            dim: d as u32,
+            idx: (0..d).step_by(3).map(|i| i as u32).collect(),
+            val: (0..d).step_by(3).map(|i| f32_to_f16(x[i])).collect(),
+        });
+        let shards = g.size(1, d.min(8));
+        // Uneven fenceposts: random interior cut points, sorted.
+        let mut bounds: Vec<usize> = (0..shards - 1).map(|_| g.size(1, d)).collect();
+        bounds.push(0);
+        bounds.push(d);
+        bounds.sort_unstable();
+        bounds.dedup();
+
+        for p in &payloads {
+            let full = p.to_dense(d).unwrap();
+            let mut rebuilt: Vec<f32> = Vec::with_capacity(d);
+            for w in bounds.windows(2) {
+                let s = p.slice_range(w[0], w[1]).unwrap();
+                // Slices must survive the byte codec like any payload.
+                let rt = Payload::decode(&s.encode()).unwrap();
+                assert_eq!(rt, s);
+                rebuilt.extend(s.to_dense(w[1] - w[0]).unwrap());
+            }
+            assert_eq!(rebuilt.len(), d);
+            for i in 0..d {
+                assert_eq!(
+                    rebuilt[i].to_bits(),
+                    full[i].to_bits(),
+                    "kind {p:?} coord {i} of d={d} bounds={bounds:?}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sharded_server_trajectory_bitwise_identical() {
+    // The tentpole acceptance bar: for every protocol string, S=1 vs S=4
+    // — on both the sequential and the threaded shard backend — produce
+    // bitwise-identical loss trajectories AND final θ through the full
+    // Trainer. Quadratic dim is 256, so also exercise S=3 (256 % 3 != 0).
+    use comp_ams::config::TrainConfig;
+    use comp_ams::coordinator::trainer::Trainer;
+
+    fn run(cfg: &TrainConfig) -> (Vec<f32>, Vec<f32>) {
+        let mut t = Trainer::new(cfg).unwrap();
+        let mut losses = Vec::new();
+        for r in 0..cfg.rounds {
+            losses.push(t.step(r).unwrap());
+        }
+        (losses, t.theta)
+    }
+
+    for algo in [
+        "dist-ams",
+        "comp-ams-topk:0.05",
+        "comp-ams-blocksign:64",
+        "comp-ams-randomk:0.1",
+        "qadam",
+        "1bitadam:10",
+        "dist-sgd",
+    ] {
+        let mut cfg = TrainConfig::preset("quadratic", algo);
+        cfg.workers = 3;
+        cfg.rounds = 30;
+        cfg.lr = 0.01;
+        cfg.eval_every = 0;
+        let (base_loss, base_theta) = run(&cfg);
+        for (shards, threaded) in [(4, false), (4, true), (3, true)] {
+            cfg.server_shards = shards;
+            cfg.server_threaded = threaded;
+            let (loss, theta) = run(&cfg);
+            for (r, (a, b)) in base_loss.iter().zip(&loss).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{algo} S={shards} threaded={threaded}: loss diverged at round {r}"
+                );
+            }
+            for (i, (a, b)) in base_theta.iter().zip(&theta).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{algo} S={shards} threaded={threaded}: θ[{i}] diverged"
+                );
+            }
+        }
     }
 }
 
