@@ -3,13 +3,17 @@
 //! PJRT smoke model (gradient-dominated). One bench per Fig. 1 method,
 //! plus a sequential-vs-threaded race of the full worker pipeline
 //! (grad + EF + compress + encode) now that compression runs on worker
-//! threads, and a sharded-server race (the leader's dense update split
-//! across S parallel θ shards).
+//! threads, a sharded-server race (the leader's dense update split
+//! across S parallel θ shards), and a quorum race of the event-driven
+//! runtime (K ∈ {n, n−1, n/2} partial participation).
 
 use comp_ams::algo::{AlgoSpec, RoundCtx, ServerAlgo, ShardedServer};
 use comp_ams::config::TrainConfig;
 use comp_ams::coordinator::cluster::WorkerPool;
+use comp_ams::coordinator::runtime::ClusterRuntime;
 use comp_ams::coordinator::trainer::Trainer;
+use comp_ams::coordinator::transport::InProc;
+use comp_ams::coordinator::CommLedger;
 use comp_ams::grad::quadratic::QuadraticProblem;
 use comp_ams::grad::GradSource;
 use comp_ams::testing::bench::bench_main;
@@ -69,7 +73,7 @@ fn main() {
         let r = b.bench(
             &format!("full-pipeline d={dim} n={n} comp-ams-topk:0.01 {label}"),
             || {
-                let ctx = RoundCtx { round, lr: 0.01 };
+                let ctx = RoundCtx::sync(round, 0.01);
                 let rounds = pool.run_round(&theta, &ctx).unwrap();
                 let msgs: Vec<_> = rounds.into_iter().map(|w| w.payload).collect();
                 server.step(&mut theta, &msgs, &ctx).unwrap();
@@ -89,7 +93,7 @@ fn main() {
     // server step over a fixed set of top-k uplinks — trajectories are
     // bitwise identical across S, so this is pure systems speedup.
     let (mut sh_workers, _) = spec.build(dim, n, 1_000_000);
-    let ctx0 = RoundCtx { round: 0, lr: 0.01 };
+    let ctx0 = RoundCtx::sync(0, 0.01);
     let mut rng = comp_ams::util::rng::Rng::seed(17);
     let uplinks: Vec<_> = sh_workers
         .iter_mut()
@@ -116,7 +120,7 @@ fn main() {
         let r = b.bench(
             &format!("server-step d={dim} n={n} comp-ams-topk:0.01 S={shards} {label}"),
             || {
-                let ctx = RoundCtx { round, lr: 0.01 };
+                let ctx = RoundCtx::sync(round, 0.01);
                 server.step(&mut theta, &uplinks, &ctx).unwrap();
                 round += 1;
             },
@@ -128,6 +132,41 @@ fn main() {
         shard_means[0] / shard_means[1],
         shard_means[0] / shard_means[2],
         shard_means[0] / shard_means[3],
+    ));
+
+    // Quorum race: the event-driven runtime at K ∈ {n, n-1, n/2} on the
+    // threaded pool. K = n is the lockstep-equivalent baseline; smaller
+    // quorums step on the first K arrivals and absorb the stragglers as
+    // stale gradients next round, so the mean round latency tracks the
+    // K-th fastest worker instead of the slowest.
+    let mut quorum_means = Vec::new();
+    for quorum in [n, n - 1, n / 2] {
+        let (workers, mut server) = spec.build(dim, n, 1_000_000);
+        let sources: Vec<Box<dyn GradSource + Send>> = (0..n)
+            .map(|w| Box::new(problem.source_for(w, 11)) as _)
+            .collect();
+        let pool = WorkerPool::threaded(sources, workers).expect("pool");
+        let mut rt = ClusterRuntime::new(Box::new(InProc::new(pool)), quorum, 2)
+            .expect("runtime");
+        let mut ledger = CommLedger::new();
+        let mut theta = vec![0.2f32; dim];
+        let mut round = 0u64;
+        let r = b.bench(
+            &format!("event-round d={dim} n={n} comp-ams-topk:0.01 K={quorum}"),
+            || {
+                rt.run_round(&mut theta, server.as_mut(), round, 0.01, &mut ledger)
+                    .unwrap();
+                round += 1;
+            },
+        );
+        quorum_means.push(r.mean.as_secs_f64());
+    }
+    b.note(&format!(
+        "  -> quorum speedup over K={n}: K={} {:.2}x, K={} {:.2}x",
+        n - 1,
+        quorum_means[0] / quorum_means[1],
+        n / 2,
+        quorum_means[0] / quorum_means[2],
     ));
 
     // PJRT path (artifacts required): full grad + protocol round.

@@ -69,6 +69,16 @@ impl CompAmsServer {
     pub fn new(dim: usize, comp_name: String, label: &'static str) -> Self {
         CompAmsServer { label, comp_name, opt: AmsGrad::default_hp(dim), avg: Vec::new() }
     }
+
+    /// Average the round's decoded payloads into the recycled `avg`
+    /// buffer and hand it out; the caller returns it via `self.avg` when
+    /// done. Shared by the pure-Rust and the fused-kernel step so the
+    /// aggregation semantics cannot diverge between the two backends.
+    fn averaged(&mut self, msgs: &[Payload], dim: usize) -> Result<Vec<f32>> {
+        let mut avg = std::mem::take(&mut self.avg);
+        average_payloads(msgs, dim, &mut avg)?;
+        Ok(avg)
+    }
 }
 
 impl ServerAlgo for CompAmsServer {
@@ -86,8 +96,7 @@ impl ServerAlgo for CompAmsServer {
         msgs: &[Payload],
         ctx: &RoundCtx,
     ) -> Result<()> {
-        let mut avg = std::mem::take(&mut self.avg);
-        average_payloads(msgs, theta.len(), &mut avg)?;
+        let avg = self.averaged(msgs, theta.len())?;
         self.opt.step(theta, &avg, ctx.lr);
         self.avg = avg;
         Ok(())
@@ -121,9 +130,8 @@ impl ServerAlgo for FusedCompAmsServer {
         msgs: &[Payload],
         ctx: &RoundCtx,
     ) -> Result<()> {
+        let avg = self.inner.averaged(msgs, theta.len())?;
         let opt = &mut self.inner.opt;
-        let mut avg = std::mem::take(&mut self.inner.avg);
-        average_payloads(msgs, theta.len(), &mut avg)?;
         let (t2, m2, v2, vh2) =
             self.exe.run(theta, &opt.m, &opt.v, &opt.vhat, &avg, ctx.lr)?;
         theta.copy_from_slice(&t2);
@@ -173,7 +181,7 @@ mod tests {
     use super::*;
 
     fn ctx(round: u64) -> RoundCtx {
-        RoundCtx { round, lr: 0.01 }
+        RoundCtx::sync(round, 0.01)
     }
 
     fn build(

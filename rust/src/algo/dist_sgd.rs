@@ -65,7 +65,7 @@ mod tests {
     fn averaging_two_workers_matches_mean_gradient_step() {
         let mut server = DistSgdServer::new(3, 0.0);
         let mut theta = vec![0.0f32; 3];
-        let ctx = RoundCtx { round: 0, lr: 1.0 };
+        let ctx = RoundCtx::sync(0, 1.0);
         let msgs = vec![
             Payload::Dense(vec![1.0, 0.0, 2.0]),
             Payload::Dense(vec![3.0, 0.0, 0.0]),
@@ -77,7 +77,7 @@ mod tests {
     #[test]
     fn worker_half_is_a_dense_passthrough() {
         let mut w = DistSgdWorker;
-        let ctx = RoundCtx { round: 0, lr: 0.1 };
+        let ctx = RoundCtx::sync(0, 0.1);
         let g = vec![1.0f32, -2.0];
         assert_eq!(w.process(&g, &ctx).unwrap(), Payload::Dense(g.clone()));
         assert_eq!(w.state_bytes(), 0);

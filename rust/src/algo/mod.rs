@@ -62,8 +62,24 @@ use crate::runtime::OptimizerExe;
 /// Per-round context handed to both sides of the protocol.
 #[derive(Clone, Copy, Debug)]
 pub struct RoundCtx {
+    /// The leader's round counter (the round being stepped).
     pub round: u64,
+    /// The round at which the oldest gradient in flight was computed.
+    /// Equal to `round` on the synchronous path; with partial
+    /// participation ([`crate::coordinator::runtime`]) it lags behind by
+    /// up to `max_staleness`, so protocols can observe the staleness of
+    /// the batch they are applying (`round - observed_round`).
+    pub observed_round: u64,
     pub lr: f32,
+}
+
+impl RoundCtx {
+    /// A synchronous-round context: every gradient in the batch was
+    /// computed at `round` (the only case before partial participation,
+    /// and still the K = n default).
+    pub fn sync(round: u64, lr: f32) -> RoundCtx {
+        RoundCtx { round, observed_round: round, lr }
+    }
 }
 
 /// The worker half of a protocol: one instance per worker, owning that

@@ -116,8 +116,8 @@ impl ServerAlgo for OneBitAdamServer {
         ctx: &RoundCtx,
     ) -> Result<()> {
         let mut avg = std::mem::take(&mut self.avg);
-        average_payloads(msgs, theta.len(), &mut avg)?;
         if self.in_warmup(ctx.round) {
+            average_payloads(msgs, theta.len(), &mut avg)?;
             self.adam.step(theta, &avg, ctx.lr);
             if ctx.round + 1 == self.warmup_rounds {
                 self.freeze();
@@ -130,9 +130,36 @@ impl ServerAlgo for OneBitAdamServer {
                 // reachable on purpose for the ablation).
                 self.freeze();
             }
-            let pre = self.precond.as_ref().unwrap();
-            for i in 0..theta.len() {
-                theta[i] -= ctx.lr * avg[i] * pre[i].min(1.0 / EPS);
+            // Partial participation can land warm-up stragglers in a
+            // compressed round (only when ctx.observed_round predates
+            // the warm-up boundary): those are *raw dense gradients*,
+            // and averaging one with (1-β1)-scaled sign momenta would
+            // push it through the frozen-preconditioner momentum step at
+            // the wrong scale. Post-warmup workers only ever uplink sign
+            // payloads, so a dense message here is by construction a
+            // cross-phase straggler — discard it. With full quorum the
+            // batch is all-fresh and this filter never triggers (the
+            // accumulate-then-scale below is then op-for-op identical to
+            // average_payloads).
+            avg.clear();
+            avg.resize(theta.len(), 0.0);
+            let mut kept = 0usize;
+            for m in msgs {
+                if matches!(m, Payload::Dense(_)) {
+                    continue;
+                }
+                m.add_into(&mut avg)?;
+                kept += 1;
+            }
+            if kept > 0 {
+                let inv = 1.0 / kept as f32;
+                for a in avg.iter_mut() {
+                    *a *= inv;
+                }
+                let pre = self.precond.as_ref().unwrap();
+                for i in 0..theta.len() {
+                    theta[i] -= ctx.lr * avg[i] * pre[i].min(1.0 / EPS);
+                }
             }
         }
         self.avg = avg;
@@ -164,7 +191,7 @@ mod tests {
         let (mut w, mut s) = pair(256, 3, 64);
         let g = vec![1.0f32; 256];
         for r in 0..6 {
-            let ctx = RoundCtx { round: r, lr: 0.01 };
+            let ctx = RoundCtx::sync(r, 0.01);
             let msg = w.process(&g, &ctx).unwrap();
             let mut theta = vec![0.0f32; 256];
             let dense = matches!(msg, Payload::Dense(_));
@@ -178,7 +205,7 @@ mod tests {
         let (mut w, mut s) = pair(8, 2, 8);
         let mut theta = vec![1.0f32; 8];
         for r in 0..2 {
-            let ctx = RoundCtx { round: r, lr: 0.01 };
+            let ctx = RoundCtx::sync(r, 0.01);
             let msg = w.process(&theta.clone(), &ctx).unwrap();
             s.step(&mut theta, &[msg], &ctx).unwrap();
         }
@@ -186,7 +213,7 @@ mod tests {
         let frozen = s.precond().unwrap().to_vec();
         // Further rounds must not change the preconditioner.
         for r in 2..10 {
-            let ctx = RoundCtx { round: r, lr: 0.01 };
+            let ctx = RoundCtx::sync(r, 0.01);
             let msg = w.process(&theta.clone(), &ctx).unwrap();
             s.step(&mut theta, &[msg], &ctx).unwrap();
         }
@@ -194,11 +221,45 @@ mod tests {
     }
 
     #[test]
+    fn post_warmup_step_discards_cross_phase_dense_stragglers() {
+        // Under --quorum K < n a warm-up straggler (raw dense gradient)
+        // can arrive in a compressed round; it must not be averaged with
+        // sign momenta. A batch of [signs, dense-straggler] must step θ
+        // exactly like the batch [signs] alone.
+        let dim = 8;
+        let (mut w, mut s1) = pair(dim, 2, 8);
+        let mut s2 = OneBitAdamServer::new(dim, 2);
+        let g = vec![1.0f32; dim];
+        // Drive both servers through warm-up identically.
+        for r in 0..2 {
+            let ctx = RoundCtx::sync(r, 0.01);
+            let msg = w.process(&g, &ctx).unwrap();
+            let mut t1 = vec![0.0f32; dim];
+            s1.step(&mut t1, &[msg.clone()], &ctx).unwrap();
+            let mut t2 = vec![0.0f32; dim];
+            s2.step(&mut t2, &[msg], &ctx).unwrap();
+        }
+        // Round 2: compressed phase. s1 sees the sign payload alone; s2
+        // additionally sees a dense warm-up straggler.
+        let ctx = RoundCtx { round: 2, observed_round: 1, lr: 0.01 };
+        let signs = w.process(&g, &ctx).unwrap();
+        assert!(!matches!(signs, Payload::Dense(_)));
+        let straggler = Payload::Dense(vec![100.0f32; dim]);
+        let mut t1 = vec![0.5f32; dim];
+        let mut t2 = vec![0.5f32; dim];
+        s1.step(&mut t1, &[signs.clone()], &ctx).unwrap();
+        s2.step(&mut t2, &[signs, straggler], &ctx).unwrap();
+        for (a, b) in t1.iter().zip(&t2) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
     fn descends_quadratic_with_reasonable_warmup() {
         let (mut workers, mut server) = protocol(16, 2, 20, 16);
         let mut theta = vec![2.0f32; 16];
         for r in 0..400 {
-            let ctx = RoundCtx { round: r, lr: 0.02 };
+            let ctx = RoundCtx::sync(r, 0.02);
             let g = theta.clone();
             let msgs: Vec<Payload> = workers
                 .iter_mut()

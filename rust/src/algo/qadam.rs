@@ -107,7 +107,7 @@ mod tests {
         // |m/√v| ≤ √(1/(1-β2)) for any gradient sequence; the uplinked
         // ratios should never explode even with huge gradients.
         let mut w = QAdamWorker::new(8, CompressorSpec::Identity.build());
-        let ctx = RoundCtx { round: 0, lr: 0.001 };
+        let ctx = RoundCtx::sync(0, 0.001);
         for r in 0..50 {
             let g = vec![1e6f32; 8];
             let msg = w.process(&g, &ctx).unwrap();
@@ -124,7 +124,7 @@ mod tests {
             protocol(4, 2, CompressorSpec::BlockSign { block: 4 });
         let mut theta = vec![2.0f32; 4];
         for r in 0..400 {
-            let ctx = RoundCtx { round: r, lr: 0.02 };
+            let ctx = RoundCtx::sync(r, 0.02);
             let g: Vec<f32> = theta.clone();
             let msgs: Vec<Payload> = workers
                 .iter_mut()

@@ -134,6 +134,12 @@ pub struct ShardedServer {
     name: String,
     backend: Backend,
     stats: ShardStats,
+    /// Set when a step errored partway (e.g. a shard thread died after
+    /// some shards were already dispatched or updated): θ and the queued
+    /// shard replies are then out of sync with the next round, so every
+    /// later step refuses to run instead of silently pairing a stale
+    /// reply with a fresh dispatch.
+    poisoned: bool,
 }
 
 impl ShardedServer {
@@ -177,7 +183,7 @@ impl ShardedServer {
         } else {
             Backend::Sequential(servers)
         };
-        Ok(ShardedServer { name, backend, stats })
+        Ok(ShardedServer { name, backend, stats, poisoned: false })
     }
 
     pub fn shards(&self) -> usize {
@@ -197,6 +203,29 @@ impl ServerAlgo for ShardedServer {
     }
 
     fn step(
+        &mut self,
+        theta: &mut [f32],
+        msgs: &[Payload],
+        ctx: &RoundCtx,
+    ) -> Result<()> {
+        ensure!(
+            !self.poisoned,
+            "sharded server poisoned by an earlier partial-step error; rebuild it"
+        );
+        let out = self.step_inner(theta, msgs, ctx);
+        if out.is_err() {
+            self.poisoned = true;
+        }
+        out
+    }
+
+    fn shard_stats(&self) -> Option<&ShardStats> {
+        Some(&self.stats)
+    }
+}
+
+impl ShardedServer {
+    fn step_inner(
         &mut self,
         theta: &mut [f32],
         msgs: &[Payload],
@@ -253,10 +282,6 @@ impl ServerAlgo for ShardedServer {
             }
         }
         Ok(())
-    }
-
-    fn shard_stats(&self) -> Option<&ShardStats> {
-        Some(&self.stats)
     }
 }
 
@@ -317,7 +342,7 @@ mod tests {
             };
             let mut theta: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.37).sin()).collect();
             for r in 0..rounds {
-                let ctx = RoundCtx { round: r, lr: 0.02 };
+                let ctx = RoundCtx::sync(r, 0.02);
                 // Deterministic per-worker pseudo-gradients.
                 let msgs: Vec<Payload> = workers
                     .iter_mut()
@@ -369,7 +394,7 @@ mod tests {
         assert!(!server.is_threaded());
         let mut theta = vec![0.1f32; 16];
         for r in 0..3 {
-            let ctx = RoundCtx { round: r, lr: 0.01 };
+            let ctx = RoundCtx::sync(r, 0.01);
             let g = vec![1.0f32; 16];
             let msgs: Vec<Payload> =
                 workers.iter_mut().map(|w| w.process(&g, &ctx).unwrap()).collect();
@@ -383,12 +408,18 @@ mod tests {
     }
 
     #[test]
-    fn wrong_theta_dim_is_rejected() {
+    fn wrong_theta_dim_is_rejected_and_poisons() {
         let spec = AlgoSpec::parse("dist-sgd").unwrap();
         let mut server = ShardedServer::new(&spec, 8, 10, 2, false).unwrap();
-        let ctx = RoundCtx { round: 0, lr: 0.01 };
+        let ctx = RoundCtx::sync(0, 0.01);
         let msgs = vec![Payload::Dense(vec![0.0; 8])];
         let mut theta = vec![0.0f32; 7];
         assert!(server.step(&mut theta, &msgs, &ctx).is_err());
+        // Any step error poisons the server: a partial threaded step
+        // could have left shard replies queued, so later steps must
+        // refuse instead of pairing them with fresh dispatches.
+        let mut theta = vec![0.0f32; 8];
+        let err = server.step(&mut theta, &msgs, &ctx).unwrap_err();
+        assert!(err.to_string().contains("poisoned"), "{err}");
     }
 }

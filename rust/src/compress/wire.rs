@@ -34,6 +34,14 @@
 //!    thread in the threaded backend), so the accounting is identical
 //!    across execution backends.
 //!
+//! Transport framing is layered *on top* of this codec: the event-driven
+//! runtime wraps each message in an
+//! [`Envelope`](crate::coordinator::transport::Envelope) (worker id +
+//! round tag + loss, a fixed 16-byte header ahead of these payload
+//! bytes). The envelope header is surfaced via `Envelope::wire_bits` but
+//! deliberately excluded from the uplink ledger, so the bit accounting
+//! is invariant across transports.
+//!
 //! ## Shard slicing
 //!
 //! [`Payload::slice_range`] restricts a payload to a contiguous

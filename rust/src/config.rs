@@ -67,6 +67,19 @@ pub struct TrainConfig {
     /// Run the shard updates on persistent leader-side shard threads
     /// instead of sequentially (only meaningful with `server_shards > 1`).
     pub server_threaded: bool,
+    /// Leader↔worker transport: `inproc` (in-process channels) or
+    /// `loopback` (every message round-trips the byte-level `Envelope`
+    /// framing — bitwise-identical trajectories, proves process-boundary
+    /// readiness). See [`crate::coordinator::transport`].
+    pub transport: String,
+    /// Partial-participation quorum K: the server steps once K on-time
+    /// uplinks arrive; 0 (default) means full participation (K = n,
+    /// bitwise identical to the lockstep rounds). See
+    /// [`crate::coordinator::runtime`].
+    pub quorum: usize,
+    /// Straggler uplinks older than this many rounds are dropped instead
+    /// of applied as stale gradients (only meaningful with `quorum` < n).
+    pub max_staleness: u64,
     /// Console metric cadence (0 = silent).
     pub log_every: u64,
     /// Rounds per "epoch" for reporting (dataset_size / (batch * workers)).
@@ -91,6 +104,9 @@ impl TrainConfig {
             fused_update: false,
             server_shards: 1,
             server_threaded: false,
+            transport: "inproc".into(),
+            quorum: 0,
+            max_staleness: 2,
             log_every: 0,
             rounds_per_epoch: 100,
         };
@@ -155,6 +171,14 @@ impl TrainConfig {
                  be combined with server_shards > 1"
             );
         }
+        if self.quorum > self.workers {
+            bail!(
+                "quorum {} exceeds worker count {} (0 = full participation)",
+                self.quorum,
+                self.workers
+            );
+        }
+        crate::coordinator::transport::TransportSpec::parse(&self.transport)?;
         crate::algo::AlgoSpec::parse(&self.algo)?;
         crate::data::shard::Sharding::parse(&self.sharding)?;
         Ok(())
@@ -186,6 +210,9 @@ impl TrainConfig {
             ("fused_update", Json::Bool(self.fused_update)),
             ("server_shards", Json::num(self.server_shards as f64)),
             ("server_threaded", Json::Bool(self.server_threaded)),
+            ("transport", Json::str(&self.transport)),
+            ("quorum", Json::num(self.quorum as f64)),
+            ("max_staleness", Json::num(self.max_staleness as f64)),
             ("log_every", Json::num(self.log_every as f64)),
             ("rounds_per_epoch", Json::num(self.rounds_per_epoch as f64)),
         ])
@@ -246,6 +273,15 @@ impl TrainConfig {
         if let Some(v) = j.get("server_threaded") {
             cfg.server_threaded = v.as_bool()?;
         }
+        if let Some(v) = j.get("transport") {
+            cfg.transport = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.get("quorum") {
+            cfg.quorum = v.as_usize()?;
+        }
+        if let Some(v) = j.get("max_staleness") {
+            cfg.max_staleness = v.as_usize()? as u64;
+        }
         if let Some(v) = j.get("log_every") {
             cfg.log_every = v.as_usize()? as u64;
         }
@@ -299,6 +335,26 @@ mod tests {
     }
 
     #[test]
+    fn validate_quorum_and_transport() {
+        let mut cfg = TrainConfig::preset("quadratic", "dist-ams");
+        cfg.workers = 8;
+        cfg.quorum = 0; // full participation sentinel
+        cfg.validate().unwrap();
+        cfg.quorum = 8;
+        cfg.validate().unwrap();
+        cfg.quorum = 5;
+        cfg.max_staleness = 0;
+        cfg.validate().unwrap();
+        cfg.quorum = 9;
+        assert!(cfg.validate().is_err());
+        cfg.quorum = 4;
+        cfg.transport = "loopback".into();
+        cfg.validate().unwrap();
+        cfg.transport = "tcp".into();
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
     fn json_roundtrip() {
         let mut cfg = TrainConfig::preset("cifar_lenet", "comp-ams-blocksign:4096");
         cfg.schedule = LrSchedule::StepDecay { at: vec![3880, 7760], factor: 10.0 };
@@ -306,6 +362,9 @@ mod tests {
         cfg.seed = 7;
         cfg.server_shards = 4;
         cfg.server_threaded = true;
+        cfg.transport = "loopback".into();
+        cfg.quorum = 3;
+        cfg.max_staleness = 5;
         let j = cfg.to_json();
         let back = TrainConfig::from_json(&crate::util::json::parse(
             &j.to_string_pretty(),
@@ -318,5 +377,8 @@ mod tests {
         assert_eq!(back.schedule, cfg.schedule);
         assert_eq!(back.server_shards, 4);
         assert!(back.server_threaded);
+        assert_eq!(back.transport, "loopback");
+        assert_eq!(back.quorum, 3);
+        assert_eq!(back.max_staleness, 5);
     }
 }

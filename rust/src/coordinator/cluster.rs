@@ -5,15 +5,25 @@
 //! gradient → error feedback → compression → wire encoding — as one unit,
 //! returning a [`WorkerRound`] per worker.
 //!
+//! Since the event-driven runtime landed ([`crate::coordinator::runtime`])
+//! the pool speaks a dispatch/arrival protocol instead of a single
+//! lockstep call: [`WorkerPool::send`] starts one worker's round and
+//! [`WorkerPool::recv`] yields the next *completed* round in arrival
+//! order, tagged with the worker id and the round it was dispatched for.
+//! The synchronous [`WorkerPool::run_round`] convenience (dispatch all,
+//! collect all, order by worker id) is kept for benches and tests.
+//!
 //! The sequential backend runs each worker's round on the leader thread
-//! (required for PJRT executables, and the deterministic default). The
-//! threaded backend keeps one persistent OS thread per worker fed over
-//! mpsc channels — the real leader/worker message plumbing — and moves
-//! the worker's compressor/EF/local-optimizer state into that thread, so
-//! compression cost parallelizes with gradient cost. Both yield identical
-//! trajectories because all randomness lives in worker-owned RNG streams,
-//! not in scheduling (asserted by the `threaded_matches_sequential`
-//! integration test and the cross-protocol property test).
+//! at `send` time (required for PJRT executables, and the deterministic
+//! default) and queues the result, so arrivals come back in dispatch
+//! order. The threaded backend keeps one persistent OS thread per worker
+//! fed over mpsc channels — the real leader/worker message plumbing —
+//! with all workers replying on **one shared uplink channel**, so the
+//! leader observes true arrival order (the property partial participation
+//! exploits). Both yield identical trajectories under the K = n default
+//! because all randomness lives in worker-owned RNG streams, not in
+//! scheduling (asserted by the `threaded_matches_sequential` integration
+//! test and the cross-protocol property test).
 //!
 //! The server half is **not** pinned to the leader anymore: the same
 //! sequential/threaded backend pattern is mirrored on the server side by
@@ -22,6 +32,7 @@
 //! Only the Pallas fused-update server (non-`Send` PJRT handles) remains
 //! leader-only.
 
+use std::collections::VecDeque;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -40,10 +51,18 @@ pub struct WorkerRound {
     pub loss: f32,
     /// The encoded uplink message.
     pub payload: Payload,
-    /// Exact wire bits of `payload` — uplink accounting happens at the
-    /// production site, not on the leader.
+    /// Exact wire bits of `payload`, computed at the production site
+    /// (`payload.wire_bits()`). The event runtime re-derives the same
+    /// value from the envelope it consumes — decode is exact — so the
+    /// ledger's charge is identical whichever side counts it; this field
+    /// serves the lockstep [`WorkerPool::run_round`] path (benches,
+    /// tests).
     pub uplink_bits: u64,
 }
+
+/// What travels back on the uplink channel: worker id, the round the
+/// reply answers, and the worker's result.
+type RawReply = (usize, u64, Result<WorkerRound>);
 
 /// Run one worker's full round: gradient, then the protocol's worker half.
 fn worker_round(
@@ -70,13 +89,16 @@ struct SeqWorker {
 
 struct WorkerHandle {
     tx: Sender<Cmd>,
-    rx: Receiver<Result<WorkerRound>>,
     join: Option<JoinHandle<()>>,
 }
 
 enum Backend {
-    Sequential(Vec<SeqWorker>),
-    Threaded(Vec<WorkerHandle>),
+    /// Leader-thread workers plus the queue of completed-but-unconsumed
+    /// rounds (`send` computes eagerly; `recv` pops in dispatch order).
+    Sequential { workers: Vec<SeqWorker>, queue: VecDeque<RawReply> },
+    /// One command channel per worker; replies multiplex onto a single
+    /// shared uplink channel so `recv` sees genuine arrival order.
+    Threaded { handles: Vec<WorkerHandle>, uplink: Receiver<RawReply> },
 }
 
 pub struct WorkerPool {
@@ -100,11 +122,14 @@ impl WorkerPool {
             .zip(algos)
             .map(|(src, algo)| SeqWorker { src, algo })
             .collect();
-        Ok(WorkerPool { backend: Backend::Sequential(workers) })
+        Ok(WorkerPool {
+            backend: Backend::Sequential { workers, queue: VecDeque::new() },
+        })
     }
 
     /// One persistent OS thread per worker; each thread owns its gradient
-    /// source *and* its protocol worker half.
+    /// source *and* its protocol worker half, and replies on the shared
+    /// uplink channel.
     pub fn threaded(
         sources: Vec<Box<dyn GradSource + Send>>,
         algos: Vec<Box<dyn WorkerAlgo>>,
@@ -115,13 +140,14 @@ impl WorkerPool {
             sources.len(),
             algos.len()
         );
+        let (up_tx, up_rx) = channel::<RawReply>();
         let handles = sources
             .into_iter()
             .zip(algos)
             .enumerate()
             .map(|(wid, (mut src, mut algo))| {
                 let (cmd_tx, cmd_rx) = channel::<Cmd>();
-                let (rep_tx, rep_rx) = channel::<Result<WorkerRound>>();
+                let rep_tx = up_tx.clone();
                 let join = std::thread::Builder::new()
                     .name(format!("worker-{wid}"))
                     .spawn(move || {
@@ -134,7 +160,7 @@ impl WorkerPool {
                                         &theta,
                                         &ctx,
                                     );
-                                    if rep_tx.send(reply).is_err() {
+                                    if rep_tx.send((wid, ctx.round, reply)).is_err() {
                                         break;
                                     }
                                 }
@@ -143,16 +169,16 @@ impl WorkerPool {
                         }
                     })
                     .expect("spawn worker thread");
-                WorkerHandle { tx: cmd_tx, rx: rep_rx, join: Some(join) }
+                WorkerHandle { tx: cmd_tx, join: Some(join) }
             })
             .collect();
-        Ok(WorkerPool { backend: Backend::Threaded(handles) })
+        Ok(WorkerPool { backend: Backend::Threaded { handles, uplink: up_rx } })
     }
 
     pub fn len(&self) -> usize {
         match &self.backend {
-            Backend::Sequential(v) => v.len(),
-            Backend::Threaded(v) => v.len(),
+            Backend::Sequential { workers, .. } => workers.len(),
+            Backend::Threaded { handles, .. } => handles.len(),
         }
     }
 
@@ -161,42 +187,82 @@ impl WorkerPool {
     }
 
     pub fn is_threaded(&self) -> bool {
-        matches!(self.backend, Backend::Threaded(_))
+        matches!(self.backend, Backend::Threaded { .. })
+    }
+
+    /// Dispatch one worker's round at θ. Sequential backend: the whole
+    /// pipeline runs here and the result is queued for [`WorkerPool::recv`];
+    /// threaded backend: the command is sent to the worker thread and the
+    /// call returns immediately.
+    pub fn send(&mut self, wid: usize, theta: &Arc<Vec<f32>>, ctx: &RoundCtx) -> Result<()> {
+        match &mut self.backend {
+            Backend::Sequential { workers, queue } => {
+                let w = workers
+                    .get_mut(wid)
+                    .ok_or_else(|| anyhow!("no worker {wid} in pool"))?;
+                let reply = worker_round(w.src.as_mut(), w.algo.as_mut(), theta, ctx);
+                queue.push_back((wid, ctx.round, reply));
+                Ok(())
+            }
+            Backend::Threaded { handles, .. } => handles
+                .get(wid)
+                .ok_or_else(|| anyhow!("no worker {wid} in pool"))?
+                .tx
+                .send(Cmd::Round { theta: Arc::clone(theta), ctx: *ctx })
+                .map_err(|_| anyhow!("worker {wid} thread died")),
+        }
+    }
+
+    /// Next completed round in arrival order: `(wid, round, result)`.
+    /// Outer error = the backend itself died (worker threads gone, or a
+    /// sequential recv with nothing dispatched); the inner result
+    /// carries the worker's own error. Callers must not out-recv their
+    /// dispatches: the sequential backend errors on an empty queue, but
+    /// the threaded backend **blocks** on its open channel until the
+    /// next dispatch replies (the runtime's in-flight bookkeeping is
+    /// what guarantees one recv per outstanding send).
+    fn recv_raw(&mut self) -> Result<RawReply> {
+        match &mut self.backend {
+            Backend::Sequential { queue, .. } => queue
+                .pop_front()
+                .ok_or_else(|| anyhow!("recv with no dispatched worker round")),
+            Backend::Threaded { uplink, .. } => {
+                uplink.recv().map_err(|_| anyhow!("worker thread died"))
+            }
+        }
+    }
+
+    /// Next completed round in arrival order, with worker errors surfaced.
+    pub fn recv(&mut self) -> Result<(usize, u64, WorkerRound)> {
+        let (wid, round, res) = self.recv_raw()?;
+        Ok((wid, round, res?))
     }
 
     /// Run every worker's full round (gradient + EF + compress + encode)
-    /// at θ; results are ordered by worker id in both backends.
+    /// at θ; results are ordered by worker id in both backends. Lockstep
+    /// convenience over [`WorkerPool::send`]/[`WorkerPool::recv`] — the
+    /// event-driven runtime drives the two halves itself.
     pub fn run_round(&mut self, theta: &[f32], ctx: &RoundCtx) -> Result<Vec<WorkerRound>> {
-        match &mut self.backend {
-            Backend::Sequential(workers) => workers
-                .iter_mut()
-                .map(|w| worker_round(w.src.as_mut(), w.algo.as_mut(), theta, ctx))
-                .collect(),
-            Backend::Threaded(handles) => {
-                let shared = Arc::new(theta.to_vec());
-                for h in handles.iter() {
-                    h.tx
-                        .send(Cmd::Round { theta: Arc::clone(&shared), ctx: *ctx })
-                        .map_err(|_| anyhow!("worker thread died"))?;
-                }
-                // Drain every worker's reply before surfacing any error:
-                // a short-circuit would leave this round's remaining
-                // replies queued and silently deliver them next round.
-                let mut replies = Vec::with_capacity(handles.len());
-                for h in handles.iter() {
-                    replies.push(
-                        h.rx.recv().map_err(|_| anyhow!("worker thread died"))?,
-                    );
-                }
-                replies.into_iter().collect()
-            }
+        let n = self.len();
+        let shared = Arc::new(theta.to_vec());
+        for wid in 0..n {
+            self.send(wid, &shared, ctx)?;
         }
+        // Drain every worker's reply before surfacing any error: a
+        // short-circuit would leave this round's remaining replies queued
+        // and silently deliver them next round.
+        let mut raws = Vec::with_capacity(n);
+        for _ in 0..n {
+            raws.push(self.recv_raw()?);
+        }
+        raws.sort_by_key(|(wid, _, _)| *wid);
+        raws.into_iter().map(|(_, _, res)| res).collect()
     }
 }
 
 impl Drop for WorkerPool {
     fn drop(&mut self) {
-        if let Backend::Threaded(handles) = &mut self.backend {
+        if let Backend::Threaded { handles, .. } = &mut self.backend {
             for h in handles.iter() {
                 let _ = h.tx.send(Cmd::Stop);
             }
@@ -239,7 +305,7 @@ mod tests {
             let mut thr = WorkerPool::threaded(sources(4), algos(4, spec)).unwrap();
             let theta = vec![0.2f32; 16];
             for round in 0..5 {
-                let ctx = RoundCtx { round, lr: 0.01 };
+                let ctx = RoundCtx::sync(round, 0.01);
                 let a = seq.run_round(&theta, &ctx).unwrap();
                 let b = thr.run_round(&theta, &ctx).unwrap();
                 for (ra, rb) in a.iter().zip(&b) {
@@ -260,11 +326,55 @@ mod tests {
         let mut pool =
             WorkerPool::sequential(seq_sources, algos(2, "comp-ams-topk:0.2")).unwrap();
         let theta = vec![0.1f32; 16];
-        let ctx = RoundCtx { round: 0, lr: 0.01 };
+        let ctx = RoundCtx::sync(0, 0.01);
         for r in pool.run_round(&theta, &ctx).unwrap() {
             assert_eq!(r.uplink_bits, r.payload.wire_bits());
             assert_eq!(r.uplink_bits, r.payload.encode().len() as u64 * 8);
         }
+    }
+
+    #[test]
+    fn send_recv_yields_tagged_arrivals() {
+        // The dispatch/arrival protocol underneath the event runtime:
+        // partial dispatch, arrival-order recv with (wid, round) tags.
+        let seq_sources: Vec<Box<dyn GradSource>> = sources(3)
+            .into_iter()
+            .map(|b| b as Box<dyn GradSource>)
+            .collect();
+        let mut pool = WorkerPool::sequential(seq_sources, algos(3, "dist-sgd")).unwrap();
+        let theta = Arc::new(vec![0.1f32; 16]);
+        // Dispatch only workers 2 and 0, for different rounds.
+        pool.send(2, &theta, &RoundCtx::sync(7, 0.01)).unwrap();
+        pool.send(0, &theta, &RoundCtx::sync(8, 0.01)).unwrap();
+        let (wid_a, round_a, wr_a) = pool.recv().unwrap();
+        let (wid_b, round_b, wr_b) = pool.recv().unwrap();
+        assert_eq!((wid_a, round_a), (2, 7));
+        assert_eq!((wid_b, round_b), (0, 8));
+        assert_eq!(wr_a.uplink_bits, wr_a.payload.wire_bits());
+        assert_eq!(wr_b.uplink_bits, wr_b.payload.wire_bits());
+        // Nothing else was dispatched: on the sequential backend an
+        // over-recv errors (the threaded backend would block instead).
+        assert!(pool.recv().is_err());
+        // Out-of-range worker id is rejected.
+        assert!(pool.send(9, &theta, &RoundCtx::sync(0, 0.01)).is_err());
+    }
+
+    #[test]
+    fn threaded_send_recv_collects_all_dispatched() {
+        let mut pool = WorkerPool::threaded(sources(4), algos(4, "dist-sgd")).unwrap();
+        let theta = Arc::new(vec![0.2f32; 16]);
+        for wid in 0..4 {
+            pool.send(wid, &theta, &RoundCtx::sync(3, 0.01)).unwrap();
+        }
+        let mut wids: Vec<usize> = (0..4)
+            .map(|_| {
+                let (wid, round, _) = pool.recv().unwrap();
+                assert_eq!(round, 3);
+                wid
+            })
+            .collect();
+        wids.sort_unstable();
+        assert_eq!(wids, vec![0, 1, 2, 3]);
     }
 
     #[test]

@@ -1,13 +1,28 @@
 //! Communication ledger: the exact bit counts behind Figure 2.
 //!
 //! Uplink (worker → server) is charged per encoded payload — the byte
-//! codec's real length, not an estimate. The bits are counted **where the
-//! payload is produced** (the worker thread, in the threaded backend) and
-//! recorded here per worker, so Figure-2-style reporting can break the
-//! uplink bill down by worker. Downlink (server → worker) is the dense θ
-//! broadcast, charged per worker per round. The paper's Figure 2 x-axis
-//! is uplink bits ("bits transmitted to the central server"); both
-//! directions are recorded.
+//! codec's real length ([`Payload::wire_bits`](crate::compress::Payload::wire_bits)
+//! `== 8 × encode().len()`), not an estimate. The runtime charges each
+//! message as the leader consumes its arrival (the same value the worker
+//! computed at the production site, across both transports and both
+//! backends), and straggler uplinks still in flight when the run ends
+//! are drained and billed too, so no transmitted message escapes the
+//! ledger. Bits are recorded per worker, so Figure-2-style reporting can
+//! break the uplink bill down by worker. Downlink (server → worker) is the dense θ
+//! broadcast, charged **per dispatched worker per round** — under partial
+//! participation ([`crate::coordinator::runtime`]) a straggler that sits
+//! a round out is not billed a broadcast it never received. The paper's
+//! Figure 2 x-axis is uplink bits ("bits transmitted to the central
+//! server"); both directions are recorded.
+//!
+//! Envelope framing ([`crate::coordinator::transport::Envelope`]) is
+//! *not* part of the uplink bill: the ledger charges payload wire bits
+//! only, so the accounting is identical across transports (the
+//! per-message header is surfaced separately via `Envelope::wire_bits`).
+//!
+//! Partial participation adds two counters: `stale_uplinks` (straggler
+//! gradients applied late) and `dropped_uplinks` (stragglers past the
+//! staleness bound, transmitted — and charged — but never applied).
 
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct CommLedger {
@@ -22,6 +37,12 @@ pub struct CommLedger {
     /// server is unsharded; kept in sync from
     /// [`ShardStats`](crate::algo::sharded::ShardStats) by the trainer.
     pub uplink_bits_by_shard: Vec<u64>,
+    /// Straggler uplinks applied as stale gradients (staleness ≥ 1,
+    /// within the `max_staleness` bound). Zero under full quorum.
+    pub stale_uplinks: u64,
+    /// Straggler uplinks past the staleness bound: transmitted and
+    /// charged, but discarded by the runtime instead of applied.
+    pub dropped_uplinks: u64,
 }
 
 impl CommLedger {

@@ -28,10 +28,19 @@ pub struct RunResult {
     pub metrics: Vec<RoundMetric>,
     pub final_eval: EvalStats,
     pub total_wall_ms: f64,
-    /// Mean leader-side (non-worker-pipeline) share of round time, 0..1.
+    /// Mean leader-side (non-worker-pipeline) share of round time,
+    /// clamped to [0, 1] (timer jitter must not report a negative or
+    /// super-unit leader share).
     pub coord_overhead: f64,
+    /// Straggler uplinks applied as stale gradients across the run
+    /// (nonzero only with `--quorum` K < n).
+    pub stale_uplinks: u64,
+    /// Straggler uplinks past `--max-staleness`, dropped unapplied.
+    pub dropped_uplinks: u64,
     /// Cumulative uplink bits per worker id — the Figure-2-style
-    /// per-worker communication breakdown.
+    /// per-worker communication breakdown. Includes the end-of-run
+    /// straggler uplinks drained after the last round (K < n only),
+    /// which post-date the final round metric's `uplink_bits`.
     pub uplink_bits_by_worker: Vec<u64>,
     /// Cumulative uplink bits routed to each server shard after payload
     /// slicing (empty for an unsharded server).
@@ -109,6 +118,8 @@ mod tests {
             final_eval: EvalStats { loss: 0.0, accuracy: 0.0 },
             total_wall_ms: 0.0,
             coord_overhead: 0.0,
+            stale_uplinks: 0,
+            dropped_uplinks: 0,
             uplink_bits_by_worker: Vec::new(),
             uplink_bits_by_shard: Vec::new(),
             server_ms_by_shard: Vec::new(),

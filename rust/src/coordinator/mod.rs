@@ -1,37 +1,47 @@
-//! The L3 coordinator: synchronous leader/worker rounds, communication
-//! accounting, metrics, and the training driver.
+//! The L3 coordinator: the event-driven cluster runtime, transports,
+//! communication accounting, metrics, and the training driver.
 //!
 //! One round of the paper's Algorithm 2, with the protocol split into its
-//! worker and server halves:
+//! worker and server halves and the leader running an event loop instead
+//! of a lockstep barrier:
 //!
 //! ```text
-//!   leader ──θ_t──▶ workers (downlink: n dense broadcasts, charged)
+//!   leader ──θ_t──▶ idle workers (downlink envelopes, charged per
+//!                    dispatched worker — stragglers are skipped)
 //!   worker i: g_i  = ∇f_i(θ_t; batch_i)        [grad::GradSource]
 //!             msg_i = worker_algo_i.process(g_i) [EF + compression]
 //!             bits_i = msg_i.wire_bits()          [uplink accounting]
-//!   workers ──(loss_i, msg_i, bits_i)──▶ leader
-//!   leader: server_algo.step(θ, msgs)           [AMSGrad on the server]
+//!   workers ──Event::Uplink{wid, round, envelope}──▶ leader (arrival order)
+//!   leader: once K uplinks for round t are in ([`runtime`]):
+//!           server_algo.step(θ, fresh + stale msgs)  [AMSGrad on the server]
 //!           (sharded: msg slices routed to S parallel θ-shard servers)
 //! ```
 //!
-//! The whole per-worker pipeline — gradient, error feedback, compression,
-//! wire encoding — runs either sequentially on the leader thread
-//! (required for PJRT executables) or inside persistent worker threads
-//! ([`cluster`]), each of which owns its worker's
-//! [`WorkerAlgo`](crate::algo::WorkerAlgo) state. The server update can
-//! likewise be split across parallel θ shards
-//! ([`crate::algo::sharded::ShardedServer`], `--server-shards`). All
-//! backend combinations produce bit-identical trajectories (each worker
-//! owns a seeded RNG stream; server state is per-coordinate), which the
-//! integration and property tests assert across all protocols.
+//! The leader↔worker plumbing is abstracted behind [`transport::Transport`]
+//! (`InProc` channels, or the byte-framing `Loopback` that proves
+//! process-boundary readiness), and the round state machine — quorum
+//! collection, staleness classification, stale-gradient application —
+//! lives in [`runtime::ClusterRuntime`]. The whole per-worker pipeline
+//! runs either sequentially on the leader thread (required for PJRT
+//! executables) or inside persistent worker threads ([`cluster`]); the
+//! server update can likewise be split across parallel θ shards
+//! ([`crate::algo::sharded::ShardedServer`], `--server-shards`). Under the
+//! default full quorum (K = n) every backend × transport combination
+//! produces bit-identical trajectories (each worker owns a seeded RNG
+//! stream; server state is per-coordinate), which the integration and
+//! property tests assert across all protocols.
 
 pub mod cluster;
 pub mod checkpoint;
 pub mod comm;
 pub mod metrics;
+pub mod runtime;
 pub mod trainer;
+pub mod transport;
 
 pub use cluster::{WorkerPool, WorkerRound};
 pub use comm::CommLedger;
 pub use metrics::{RoundMetric, RunResult};
+pub use runtime::{ClusterRuntime, RoundOutcome};
 pub use trainer::{train, Trainer};
+pub use transport::{Envelope, Event, InProc, Loopback, Transport, TransportSpec};

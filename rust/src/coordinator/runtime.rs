@@ -1,0 +1,501 @@
+//! Event-driven cluster runtime: quorum rounds over a [`Transport`].
+//!
+//! The lockstep call graph (`Trainer::step` → `WorkerPool::run_round` →
+//! `ServerAlgo::step`) blocked the leader on the *slowest* worker every
+//! round, which is exactly the regime where COMP-AMS's linear-speedup
+//! claim (paper Thm. 4.2) stops being realizable. [`ClusterRuntime`]
+//! replaces it with a message-driven round state machine:
+//!
+//! ```text
+//!   round t:
+//!     dispatch  θ_t → every idle worker          (downlink, charged per
+//!                                                 dispatched worker)
+//!     collect   Event::Uplink{wid, round, env}   (arrival order) until
+//!               K uplinks tagged `round == t` have arrived
+//!     classify  each arrival by staleness s = t − env.round:
+//!                 s == 0                 fresh   → applied
+//!                 0 < s ≤ max_staleness  stale   → applied, counted
+//!                 s > max_staleness      dropped → counted, not applied
+//!     step      server.step(θ, applied, ctx)     with ctx.observed_round
+//!                                                 = oldest applied round
+//! ```
+//!
+//! **Partial participation** (`--quorum K`, K < n): the server steps as
+//! soon as K on-time uplinks are in; the other workers keep computing and
+//! their uplinks arrive in later rounds as *stale gradients*. A worker
+//! whose uplink has not been consumed yet is a straggler: it is not
+//! re-dispatched (and not billed a θ downlink) until its outstanding
+//! round arrives. When fewer than K workers were dispatched (the rest are
+//! stragglers mid-flight), the round's quorum is the dispatched count —
+//! the liveness floor that keeps in-process transports deadlock-free.
+//!
+//! **Synchronous mode is the default and is bitwise-exact**: with K = n
+//! every round dispatches all n workers, waits for all n uplinks, orders
+//! them by worker id, and steps once — the numerically identical
+//! computation (same summation order, same `1/n` loss weighting, same
+//! ledger charges) the lockstep trainer performed, across both worker
+//! backends and both transports (asserted by the transport/quorum
+//! property test).
+//!
+//! The round train-loss is averaged over the uplinks that actually
+//! arrived this round (`Σ loss_i / arrivals`), not divided by a fixed n —
+//! under partial participation a `/ n` mean would silently mis-weight the
+//! rounds where stragglers sat out.
+//!
+//! [`Transport`]: super::transport::Transport
+
+use std::sync::Arc;
+
+use anyhow::{ensure, Result};
+
+use crate::algo::{RoundCtx, ServerAlgo};
+use crate::compress::Payload;
+use crate::util::timer::Stopwatch;
+
+use super::comm::CommLedger;
+use super::transport::{Event, Transport};
+
+/// What one runtime round produced, for the metrics stream.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundOutcome {
+    pub round: u64,
+    /// Mean worker train loss over the uplinks that arrived this round.
+    pub train_loss: f32,
+    /// On-time uplinks applied (the quorum).
+    pub fresh: usize,
+    /// Straggler uplinks applied as stale gradients this round.
+    pub stale: usize,
+    /// Straggler uplinks past `max_staleness`, dropped unapplied.
+    pub dropped: usize,
+    /// Wall-clock ms from first dispatch until the quorum was collected
+    /// (the worker-side share of the round).
+    pub worker_ms: f64,
+}
+
+/// The leader's event loop: owns the transport and the per-worker
+/// in-flight state, drives one quorum round at a time.
+pub struct ClusterRuntime {
+    transport: Box<dyn Transport>,
+    /// Resolved quorum K, 1 ..= n.
+    quorum: usize,
+    /// Maximum staleness (in rounds) at which a straggler uplink is still
+    /// applied; beyond it the uplink is dropped (and accounted).
+    max_staleness: u64,
+    /// `in_flight[wid]` = the round whose uplink we still owe this worker
+    /// credit for (`None` = idle, eligible for dispatch).
+    in_flight: Vec<Option<u64>>,
+    /// Set when a round or drain errored mid-collection: the in-flight
+    /// bookkeeping can no longer be trusted (e.g. a worker's errored
+    /// reply was consumed without clearing its slot), so further rounds
+    /// would mis-dispatch or deadlock. All entry points refuse to run.
+    poisoned: bool,
+}
+
+impl ClusterRuntime {
+    /// `quorum` = 0 means full participation (K = n).
+    pub fn new(
+        transport: Box<dyn Transport>,
+        quorum: usize,
+        max_staleness: u64,
+    ) -> Result<ClusterRuntime> {
+        let n = transport.n_workers();
+        ensure!(n > 0, "runtime needs at least one worker");
+        let quorum = if quorum == 0 { n } else { quorum };
+        ensure!(
+            quorum <= n,
+            "quorum {quorum} exceeds worker count {n}"
+        );
+        Ok(ClusterRuntime {
+            transport,
+            quorum,
+            max_staleness,
+            in_flight: vec![None; n],
+            poisoned: false,
+        })
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.transport.n_workers()
+    }
+
+    pub fn quorum(&self) -> usize {
+        self.quorum
+    }
+
+    /// Drive one round of the state machine (dispatch → collect →
+    /// classify → server step), mutating θ in place and charging the
+    /// ledger. `round`/`lr` come from the schedule; `server` applies the
+    /// aggregated batch.
+    ///
+    /// An `Err` poisons the runtime: the in-flight bookkeeping may have
+    /// lost a consumed (errored) uplink, so later rounds would silently
+    /// exclude that worker or block forever waiting for it — callers
+    /// that catch a round error must rebuild the runtime, and every
+    /// subsequent call here fails fast instead.
+    pub fn run_round(
+        &mut self,
+        theta: &mut [f32],
+        server: &mut dyn ServerAlgo,
+        round: u64,
+        lr: f32,
+        ledger: &mut CommLedger,
+    ) -> Result<RoundOutcome> {
+        ensure!(
+            !self.poisoned,
+            "cluster runtime poisoned by an earlier round error; rebuild the Trainer"
+        );
+        let out = self.run_round_inner(theta, server, round, lr, ledger);
+        if out.is_err() {
+            self.poisoned = true;
+        }
+        out
+    }
+
+    fn run_round_inner(
+        &mut self,
+        theta: &mut [f32],
+        server: &mut dyn ServerAlgo,
+        round: u64,
+        lr: f32,
+        ledger: &mut CommLedger,
+    ) -> Result<RoundOutcome> {
+        let n = self.n_workers();
+        let ctx = RoundCtx::sync(round, lr);
+        let wsw = Stopwatch::start();
+
+        // Dispatch: θ goes to every idle worker; stragglers still owe an
+        // uplink and are skipped (and not billed a broadcast).
+        let shared = Arc::new(theta.to_vec());
+        let mut dispatched = 0usize;
+        for wid in 0..n {
+            if self.in_flight[wid].is_none() {
+                self.transport.send_downlink(wid, &shared, &ctx)?;
+                self.in_flight[wid] = Some(round);
+                dispatched += 1;
+            }
+        }
+        ensure!(dispatched > 0, "round {round}: no idle worker to dispatch");
+        ledger.charge_downlink_dense(theta.len(), dispatched);
+
+        // Collect: consume arrivals until K uplinks for *this* round are
+        // in. Only `dispatched` workers can produce round-t uplinks, so
+        // the quorum is floored at the dispatched count for liveness.
+        let target = self.quorum.min(dispatched);
+        let mut arrivals: Vec<Arrival> = Vec::with_capacity(dispatched);
+        let mut fresh = 0usize;
+        while fresh < target {
+            let Event::Uplink { wid, round: observed, envelope } =
+                self.transport.recv_event()?;
+            ensure!(wid < n, "uplink from unknown worker {wid}");
+            ensure!(
+                envelope.wid as usize == wid && envelope.round == observed,
+                "transport event (wid {wid}, round {observed}) disagrees with its \
+                 envelope header (wid {}, round {})",
+                envelope.wid,
+                envelope.round
+            );
+            ensure!(
+                self.in_flight[wid] == Some(observed),
+                "worker {wid} uplinked round {observed} but owes {:?}",
+                self.in_flight[wid]
+            );
+            self.in_flight[wid] = None;
+            if observed == round {
+                fresh += 1;
+            }
+            arrivals.push(Arrival {
+                wid,
+                observed,
+                loss: envelope.loss,
+                payload: envelope.payload,
+            });
+        }
+        let worker_ms = wsw.ms();
+
+        // Classify in worker-id order (a deterministic aggregation order;
+        // with K = n this is exactly the lockstep summation).
+        arrivals.sort_by_key(|a| a.wid);
+        let count = arrivals.len() as f32;
+        let mut train_loss = 0.0f32;
+        let mut msgs: Vec<Payload> = Vec::with_capacity(arrivals.len());
+        let mut observed_round = round;
+        let mut stale = 0usize;
+        let mut dropped = 0usize;
+        for a in arrivals {
+            train_loss += a.loss / count;
+            ledger.charge_uplink(a.wid, a.payload.wire_bits());
+            let staleness = round - a.observed;
+            if staleness == 0 {
+                msgs.push(a.payload);
+            } else if staleness <= self.max_staleness {
+                stale += 1;
+                observed_round = observed_round.min(a.observed);
+                msgs.push(a.payload);
+            } else {
+                dropped += 1;
+            }
+        }
+        ledger.stale_uplinks += stale as u64;
+        ledger.dropped_uplinks += dropped as u64;
+
+        // Step: one server update over the applied batch; protocols see
+        // the batch's staleness through ctx.observed_round.
+        let step_ctx = RoundCtx { round, observed_round, lr };
+        server.step(theta, &msgs, &step_ctx)?;
+
+        Ok(RoundOutcome {
+            round,
+            train_loss,
+            fresh,
+            stale,
+            dropped,
+            worker_ms,
+        })
+    }
+
+    /// Consume every still-in-flight uplink. Called once after the last
+    /// round: under K < n the final rounds leave up to n − K straggler
+    /// uplinks in the transport, and those messages were *transmitted*
+    /// even though no round will ever apply them — so their wire bits are
+    /// charged to the ledger (they are not classified as stale/dropped,
+    /// which are per-round application counters). No-op at K = n.
+    /// Returns how many uplinks were drained. Fails fast on a poisoned
+    /// runtime (see [`ClusterRuntime::run_round`]) — the threaded
+    /// backend would otherwise block forever on an uplink that was
+    /// already consumed as an error.
+    pub fn drain_in_flight(&mut self, ledger: &mut CommLedger) -> Result<usize> {
+        ensure!(
+            !self.poisoned,
+            "cluster runtime poisoned by an earlier round error; rebuild the Trainer"
+        );
+        let out = self.drain_inner(ledger);
+        if out.is_err() {
+            self.poisoned = true;
+        }
+        out
+    }
+
+    fn drain_inner(&mut self, ledger: &mut CommLedger) -> Result<usize> {
+        let mut drained = 0usize;
+        while self.in_flight.iter().any(Option::is_some) {
+            let Event::Uplink { wid, round: observed, envelope } =
+                self.transport.recv_event()?;
+            ensure!(wid < self.in_flight.len(), "uplink from unknown worker {wid}");
+            ensure!(
+                self.in_flight[wid] == Some(observed),
+                "worker {wid} uplinked round {observed} but owes {:?}",
+                self.in_flight[wid]
+            );
+            self.in_flight[wid] = None;
+            ledger.charge_uplink(wid, envelope.payload.wire_bits());
+            drained += 1;
+        }
+        Ok(drained)
+    }
+}
+
+/// An arrival after header validation (flattened [`Event::Uplink`]).
+struct Arrival {
+    wid: usize,
+    observed: u64,
+    loss: f32,
+    payload: Payload,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::AlgoSpec;
+    use crate::coordinator::cluster::WorkerPool;
+    use crate::coordinator::transport::{InProc, Loopback};
+    use crate::grad::quadratic::QuadraticProblem;
+    use crate::grad::GradSource;
+
+    fn runtime(
+        n: usize,
+        algo: &str,
+        quorum: usize,
+        max_staleness: u64,
+        loopback: bool,
+    ) -> (ClusterRuntime, Box<dyn ServerAlgo>) {
+        let problem = QuadraticProblem::new(1, 16, n, 4.0, 0.5, 1.0);
+        let sources: Vec<Box<dyn GradSource>> = (0..n)
+            .map(|w| Box::new(problem.source_for(w, 7)) as Box<dyn GradSource>)
+            .collect();
+        let (workers, server) = AlgoSpec::parse(algo).unwrap().build(16, n, 1000);
+        let pool = WorkerPool::sequential(sources, workers).unwrap();
+        let transport: Box<dyn Transport> = if loopback {
+            Box::new(Loopback::new(pool))
+        } else {
+            Box::new(InProc::new(pool))
+        };
+        (ClusterRuntime::new(transport, quorum, max_staleness).unwrap(), server)
+    }
+
+    #[test]
+    fn zero_quorum_resolves_to_full_participation() {
+        let (rt, _) = runtime(4, "dist-sgd", 0, 2, false);
+        assert_eq!(rt.quorum(), 4);
+        assert_eq!(rt.n_workers(), 4);
+        let problem = QuadraticProblem::new(1, 16, 2, 4.0, 0.5, 1.0);
+        let sources: Vec<Box<dyn GradSource>> = (0..2)
+            .map(|w| Box::new(problem.source_for(w, 7)) as Box<dyn GradSource>)
+            .collect();
+        let (workers, _) = AlgoSpec::parse("dist-sgd").unwrap().build(16, 2, 10);
+        let pool = WorkerPool::sequential(sources, workers).unwrap();
+        assert!(ClusterRuntime::new(Box::new(InProc::new(pool)), 3, 0).is_err());
+    }
+
+    #[test]
+    fn full_quorum_round_applies_all_workers_fresh() {
+        let (mut rt, mut server) = runtime(3, "dist-sgd", 0, 2, false);
+        let mut theta = vec![0.5f32; 16];
+        let mut ledger = CommLedger::new();
+        for r in 0..5 {
+            let out = rt
+                .run_round(&mut theta, server.as_mut(), r, 0.01, &mut ledger)
+                .unwrap();
+            assert_eq!(out.fresh, 3);
+            assert_eq!(out.stale, 0);
+            assert_eq!(out.dropped, 0);
+            assert!(out.train_loss.is_finite());
+        }
+        assert_eq!(ledger.stale_uplinks, 0);
+        assert_eq!(ledger.dropped_uplinks, 0);
+        assert_eq!(ledger.uplink_msgs, 15);
+        // Downlink billed to all 3 workers each of the 5 rounds.
+        assert_eq!(ledger.downlink_bits, 5 * 3 * 8 * (5 + 4 * 16));
+    }
+
+    #[test]
+    fn partial_quorum_alternates_stale_application() {
+        // n=4, K=2, sequential transport: round 0 applies workers {0,1}
+        // fresh; round 1 consumes {2,3}'s round-0 uplinks as stale plus
+        // {0,1} fresh; round 2 starts the cycle over.
+        let (mut rt, mut server) = runtime(4, "dist-sgd", 2, 2, false);
+        let mut theta = vec![0.5f32; 16];
+        let mut ledger = CommLedger::new();
+
+        let out0 = rt.run_round(&mut theta, server.as_mut(), 0, 0.01, &mut ledger).unwrap();
+        assert_eq!((out0.fresh, out0.stale, out0.dropped), (2, 0, 0));
+        // Round 0 dispatched all 4 (everyone idle), billed 4 broadcasts.
+        assert_eq!(ledger.downlink_bits, 4 * 8 * (5 + 4 * 16));
+
+        let out1 = rt.run_round(&mut theta, server.as_mut(), 1, 0.01, &mut ledger).unwrap();
+        assert_eq!((out1.fresh, out1.stale, out1.dropped), (2, 2, 0));
+        // Round 1 dispatched only the 2 idle workers — stragglers are not
+        // billed a broadcast for the round they sat out.
+        assert_eq!(ledger.downlink_bits, (4 + 2) * 8 * (5 + 4 * 16));
+
+        let out2 = rt.run_round(&mut theta, server.as_mut(), 2, 0.01, &mut ledger).unwrap();
+        assert_eq!((out2.fresh, out2.stale, out2.dropped), (2, 0, 0));
+
+        assert_eq!(ledger.stale_uplinks, 2);
+        assert_eq!(ledger.dropped_uplinks, 0);
+        // Every consumed uplink is charged, stale or not.
+        assert_eq!(ledger.uplink_msgs, 2 + 4 + 2);
+    }
+
+    #[test]
+    fn staleness_bound_drops_and_accounts() {
+        // max_staleness = 0: the round-1 stale pair is dropped, not applied.
+        let (mut rt, mut server) = runtime(4, "dist-sgd", 2, 0, false);
+        let mut theta = vec![0.5f32; 16];
+        let mut ledger = CommLedger::new();
+        rt.run_round(&mut theta, server.as_mut(), 0, 0.01, &mut ledger).unwrap();
+        let out1 = rt.run_round(&mut theta, server.as_mut(), 1, 0.01, &mut ledger).unwrap();
+        assert_eq!((out1.fresh, out1.stale, out1.dropped), (2, 0, 2));
+        assert_eq!(ledger.dropped_uplinks, 2);
+        assert_eq!(ledger.stale_uplinks, 0);
+        // Dropped uplinks were still transmitted: their bits are charged
+        // and their losses entered the round mean (4 arrivals).
+        assert_eq!(ledger.uplink_msgs, 6);
+    }
+
+    #[test]
+    fn round_error_poisons_the_runtime() {
+        // A worker that errors mid-round consumes its uplink slot as an
+        // Err, so the in-flight bookkeeping is no longer trustworthy:
+        // the runtime must refuse further rounds and drains instead of
+        // mis-dispatching or blocking.
+        struct FailingSource {
+            fail_from: u64,
+        }
+        impl GradSource for FailingSource {
+            fn dim(&self) -> usize {
+                8
+            }
+            fn grad(&mut self, theta: &[f32], round: u64) -> anyhow::Result<(f32, Vec<f32>)> {
+                anyhow::ensure!(round < self.fail_from, "synthetic worker failure");
+                Ok((0.0, vec![0.1f32; theta.len()]))
+            }
+        }
+        let sources: Vec<Box<dyn GradSource>> = (0..2)
+            .map(|_| Box::new(FailingSource { fail_from: 1 }) as Box<dyn GradSource>)
+            .collect();
+        let (workers, mut server) = AlgoSpec::parse("dist-sgd").unwrap().build(8, 2, 10);
+        let pool = WorkerPool::sequential(sources, workers).unwrap();
+        let mut rt =
+            ClusterRuntime::new(Box::new(InProc::new(pool)), 0, 2).unwrap();
+        let mut theta = vec![0.5f32; 8];
+        let mut ledger = CommLedger::new();
+        rt.run_round(&mut theta, server.as_mut(), 0, 0.01, &mut ledger).unwrap();
+        // Round 1 fails inside a worker...
+        assert!(rt.run_round(&mut theta, server.as_mut(), 1, 0.01, &mut ledger).is_err());
+        // ...after which every entry point fails fast instead of running
+        // with corrupted in-flight state.
+        let err = rt
+            .run_round(&mut theta, server.as_mut(), 2, 0.01, &mut ledger)
+            .unwrap_err();
+        assert!(err.to_string().contains("poisoned"), "{err}");
+        assert!(rt.drain_in_flight(&mut ledger).unwrap_err().to_string().contains("poisoned"));
+    }
+
+    #[test]
+    fn drain_bills_end_of_run_stragglers() {
+        // n=4, K=2: after round 0 two uplinks are still in flight; the
+        // end-of-run drain consumes and charges them without touching
+        // the stale/dropped classification counters.
+        let (mut rt, mut server) = runtime(4, "dist-sgd", 2, 2, false);
+        let mut theta = vec![0.5f32; 16];
+        let mut ledger = CommLedger::new();
+        rt.run_round(&mut theta, server.as_mut(), 0, 0.01, &mut ledger).unwrap();
+        assert_eq!(ledger.uplink_msgs, 2);
+        let drained = rt.drain_in_flight(&mut ledger).unwrap();
+        assert_eq!(drained, 2);
+        assert_eq!(ledger.uplink_msgs, 4);
+        assert_eq!(ledger.uplink_bits_by_worker.len(), 4);
+        assert!(ledger.uplink_bits_by_worker.iter().all(|&b| b > 0));
+        assert_eq!(ledger.stale_uplinks, 0);
+        assert_eq!(ledger.dropped_uplinks, 0);
+        // Nothing left: draining again is a no-op.
+        assert_eq!(rt.drain_in_flight(&mut ledger).unwrap(), 0);
+    }
+
+    #[test]
+    fn loopback_full_quorum_matches_inproc_bitwise() {
+        let run = |loopback: bool| {
+            let (mut rt, mut server) = runtime(3, "comp-ams-topk:0.3", 0, 2, loopback);
+            let mut theta = vec![0.5f32; 16];
+            let mut ledger = CommLedger::new();
+            let mut losses = Vec::new();
+            for r in 0..10 {
+                losses.push(
+                    rt.run_round(&mut theta, server.as_mut(), r, 0.01, &mut ledger)
+                        .unwrap()
+                        .train_loss,
+                );
+            }
+            (losses, theta, ledger.uplink_bits)
+        };
+        let (la, ta, ba) = run(false);
+        let (lb, tb, bb) = run(true);
+        assert_eq!(ba, bb);
+        for (a, b) in la.iter().zip(&lb) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in ta.iter().zip(&tb) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

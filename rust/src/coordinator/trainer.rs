@@ -1,22 +1,28 @@
-//! The training driver: assembles workers, protocol, evaluator, and runs
-//! synchronous rounds with communication accounting.
+//! The training driver: config/workload assembly plus a thin loop over
+//! the event-driven [`ClusterRuntime`].
 //!
 //! The protocol is split per Algorithm 2: each worker's
 //! [`WorkerAlgo`](crate::algo::WorkerAlgo) half (compressor + EF + local
-//! optimizer state) lives inside the [`WorkerPool`] next to its gradient
-//! source, so the threaded backend runs the whole per-worker pipeline off
-//! the leader; the [`ServerAlgo`](crate::algo::ServerAlgo) half
-//! (aggregation + server optimizer) runs here — either as one full-θ
-//! server or, with `server_shards > 1`, as a
+//! optimizer state) lives inside the [`WorkerPool`](super::cluster::WorkerPool)
+//! next to its gradient source, behind a [`Transport`]; the
+//! [`ServerAlgo`](crate::algo::ServerAlgo) half (aggregation + server
+//! optimizer) is applied by the runtime's round state machine — either as
+//! one full-θ server or, with `server_shards > 1`, as a
 //! [`ShardedServer`](crate::algo::sharded::ShardedServer) that splits θ
 //! across parallel per-shard optimizers (bitwise-identical trajectories).
+//!
+//! `Trainer` itself only assembles the pieces (datasets, gradient
+//! sources, protocol halves, transport, runtime) and drives one
+//! [`ClusterRuntime::run_round`] per scheduled round, folding each
+//! [`RoundOutcome`](super::runtime::RoundOutcome) into the metrics
+//! stream.
 
 use std::path::Path;
 use std::rc::Rc;
 
 use anyhow::{bail, Context, Result};
 
-use crate::algo::{AlgoSpec, RoundCtx, ServerAlgo, ShardedServer};
+use crate::algo::{AlgoSpec, ServerAlgo, ShardedServer};
 use crate::config::TrainConfig;
 use crate::data::{
     images::SyntheticImages, lm::ByteCorpus, shard::Sharding, text::SyntheticText,
@@ -34,10 +40,12 @@ use crate::util::timer::Stopwatch;
 use super::cluster::WorkerPool;
 use super::comm::CommLedger;
 use super::metrics::{RoundMetric, RunResult};
+use super::runtime::ClusterRuntime;
+use super::transport::{Transport, TransportSpec};
 
 pub struct Trainer {
     cfg: TrainConfig,
-    pool: WorkerPool,
+    runtime: ClusterRuntime,
     server: Box<dyn ServerAlgo>,
     algo_name: String,
     evaluator: Box<dyn Evaluator>,
@@ -75,10 +83,13 @@ impl Trainer {
             )?,
             Sources::LeaderOnly(s) => WorkerPool::sequential(s, workers)?,
         };
+        let transport: Box<dyn Transport> =
+            TransportSpec::parse(&cfg.transport)?.build(pool);
+        let runtime = ClusterRuntime::new(transport, cfg.quorum, cfg.max_staleness)?;
         let algo_name = server.name();
         Ok(Trainer {
             cfg: cfg.clone(),
-            pool,
+            runtime,
             server,
             algo_name,
             evaluator,
@@ -94,38 +105,30 @@ impl Trainer {
         self.algo_name.clone()
     }
 
-    /// Run one synchronous round; returns the mean worker train loss.
+    /// Drive one runtime round; returns the mean train loss over the
+    /// uplinks that arrived.
     pub fn step(&mut self, round: u64) -> Result<f32> {
         let sw = Stopwatch::start();
         let lr = self.cfg.schedule.lr_at(self.cfg.lr, round);
-        let ctx = RoundCtx { round, lr };
 
-        // Downlink: θ broadcast.
-        self.ledger.charge_downlink_dense(self.theta.len(), self.pool.len());
-
-        // Workers: the full per-worker pipeline (gradient + EF +
-        // compression + wire encoding), on worker threads when threaded.
-        let wsw = Stopwatch::start();
-        let rounds = self.pool.run_round(&self.theta, &ctx)?;
-        self.worker_ms_total += wsw.ms();
-
-        let n = rounds.len() as f32;
-        let mut msgs = Vec::with_capacity(rounds.len());
-        let mut train_loss = 0.0f32;
-        for (wid, wr) in rounds.into_iter().enumerate() {
-            train_loss += wr.loss / n;
-            self.ledger.charge_uplink(wid, wr.uplink_bits);
-            msgs.push(wr.payload);
-        }
-
-        // Leader: aggregate + server optimizer (per-shard when sharded).
-        self.server.step(&mut self.theta, &msgs, &ctx)?;
+        // The runtime runs the whole round state machine: downlink
+        // dispatch, quorum collection, staleness classification, and the
+        // server step (per-shard when sharded).
+        let out = self.runtime.run_round(
+            &mut self.theta,
+            self.server.as_mut(),
+            round,
+            lr,
+            &mut self.ledger,
+        )?;
+        self.worker_ms_total += out.worker_ms;
         if let Some(stats) = self.server.shard_stats() {
             self.ledger.sync_shard_routing(&stats.routed_bits);
         }
 
         let wall = sw.ms();
         self.round_ms_total += wall;
+        let train_loss = out.train_loss;
         let eval = if self.cfg.eval_every > 0 && (round + 1) % self.cfg.eval_every == 0 {
             Some(self.evaluator.eval(&self.theta)?)
         } else {
@@ -147,8 +150,13 @@ impl Trainer {
                 .eval
                 .map(|s| format!(" test_acc={:.4} test_loss={:.4}", s.accuracy, s.loss))
                 .unwrap_or_default();
+            let lag = if out.stale > 0 || out.dropped > 0 {
+                format!(" stale {} dropped {}", out.stale, out.dropped)
+            } else {
+                String::new()
+            };
             eprintln!(
-                "[{}] round {:>6} epoch {:>6.2} loss {:.4}{} lr {:.2e} uplink {:.2} MB",
+                "[{}] round {:>6} epoch {:>6.2} loss {:.4}{} lr {:.2e} uplink {:.2} MB{}",
                 self.algo_name,
                 round + 1,
                 e.epoch,
@@ -156,6 +164,7 @@ impl Trainer {
                 acc,
                 lr,
                 e.uplink_bits as f64 / 8e6,
+                lag,
             );
         }
         Ok(train_loss)
@@ -166,6 +175,11 @@ impl Trainer {
         for round in 0..self.cfg.rounds {
             self.step(round)?;
         }
+        // Bill the straggler uplinks still in flight after the last round
+        // (K < n only) — transmitted messages the ledger must not lose.
+        // These post-date the last round metric, so they appear in the
+        // ledger-derived RunResult fields but not in metrics' uplink_bits.
+        self.runtime.drain_in_flight(&mut self.ledger)?;
         let final_eval = self.evaluator.eval(&self.theta)?;
         let server_ms_by_shard = self
             .server
@@ -180,10 +194,14 @@ impl Trainer {
             final_eval,
             total_wall_ms: total.ms(),
             coord_overhead: if self.round_ms_total > 0.0 {
-                1.0 - self.worker_ms_total / self.round_ms_total
+                // Clamped: timer jitter (worker stopwatch vs round
+                // stopwatch) must not report a negative leader share.
+                (1.0 - self.worker_ms_total / self.round_ms_total).clamp(0.0, 1.0)
             } else {
                 0.0
             },
+            stale_uplinks: self.ledger.stale_uplinks,
+            dropped_uplinks: self.ledger.dropped_uplinks,
             uplink_bits_by_worker: self.ledger.uplink_bits_by_worker.clone(),
             uplink_bits_by_shard: self.ledger.uplink_bits_by_shard.clone(),
             server_ms_by_shard,
@@ -356,6 +374,25 @@ mod tests {
     }
 
     #[test]
+    fn loopback_transport_matches_inproc_trajectory() {
+        let mut cfg = TrainConfig::preset("quadratic", "comp-ams-topk:0.1");
+        cfg.workers = 3;
+        cfg.rounds = 40;
+        cfg.eval_every = 0;
+        let a = train(&cfg).unwrap();
+        cfg.transport = "loopback".into();
+        let b = train(&cfg).unwrap();
+        for (ma, mb) in a.metrics.iter().zip(&b.metrics) {
+            assert_eq!(ma.train_loss.to_bits(), mb.train_loss.to_bits());
+            assert_eq!(ma.uplink_bits, mb.uplink_bits);
+        }
+        // Every uplink crossed the byte framing; no staleness under the
+        // full-quorum default.
+        assert_eq!(b.stale_uplinks, 0);
+        assert_eq!(b.dropped_uplinks, 0);
+    }
+
+    #[test]
     fn sharded_server_matches_unsharded_trajectory() {
         let mut cfg = TrainConfig::preset("quadratic", "comp-ams-topk:0.1");
         cfg.workers = 3;
@@ -391,6 +428,20 @@ mod tests {
         cfg.algo = "comp-ams-topk:0.01".into();
         let sparse = train(&cfg).unwrap();
         assert!(sparse.uplink_bits() < dense.uplink_bits() / 10);
+    }
+
+    #[test]
+    fn coord_overhead_is_clamped_to_unit_interval() {
+        let mut cfg = TrainConfig::preset("quadratic", "dist-sgd");
+        cfg.workers = 2;
+        cfg.rounds = 5;
+        cfg.eval_every = 0;
+        let run = train(&cfg).unwrap();
+        assert!(
+            (0.0..=1.0).contains(&run.coord_overhead),
+            "{}",
+            run.coord_overhead
+        );
     }
 
     #[test]

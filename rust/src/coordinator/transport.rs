@@ -1,0 +1,376 @@
+//! Leader↔worker message plumbing behind the event-driven runtime.
+//!
+//! The [`Transport`] trait is the runtime's only view of the cluster: it
+//! pushes a θ downlink at one worker ([`Transport::send_downlink`]) and
+//! pulls the next uplink arrival ([`Transport::recv_event`]) — nothing in
+//! the runtime or the protocols knows whether workers live on the leader
+//! thread, on OS threads, or (eventually) in other processes.
+//!
+//! Two implementations ship:
+//!
+//! - [`InProc`] — the in-process channels of [`WorkerPool`], exactly the
+//!   plumbing the lockstep trainer used: payloads move as Rust values,
+//!   nothing is serialized.
+//! - [`Loopback`] — the same worker pool, but **every** message (the θ
+//!   downlink and each uplink) is round-tripped through the byte-level
+//!   [`Envelope`] framing: `encode` on one side of the notional wire,
+//!   `decode` on the other. This proves process-boundary readiness
+//!   without sockets: a run over `Loopback` is bitwise identical to one
+//!   over `InProc` (asserted by the transport property test), so moving a
+//!   worker behind a real socket is a transport swap, not a protocol
+//!   change.
+//!
+//! ## Envelope wire format
+//!
+//! An [`Envelope`] frames one message with a fixed 16-byte little-endian
+//! header followed by the payload's own self-describing byte layout
+//! ([`Payload::encode`]):
+//!
+//! ```text
+//! | wid u32 | round u64 | loss f32 | payload bytes ... |
+//! ```
+//!
+//! `wid` is the sender (receiver for a downlink), `round` is the round
+//! the message belongs to — the tag partial participation uses to detect
+//! staleness — and the f32 slot is the per-direction scalar: the
+//! worker's batch loss on an uplink, the round's learning rate on a
+//! downlink. That makes each direction self-contained: a remote worker
+//! reconstructs its whole `RoundCtx` from the frame (round + lr, with
+//! `observed_round = round` since a dispatch is always synchronous), and
+//! the leader gets everything it consumes from the uplink frame —
+//! which `Loopback` proves by rebuilding both from decoded bytes alone.
+//! [`Envelope::wire_bits`] counts the full frame, header included; the
+//! communication ledger keeps charging [`Payload::wire_bits`] so that
+//! uplink accounting is identical across transports (the 128-bit header
+//! is framing, not gradient payload).
+
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::algo::RoundCtx;
+use crate::compress::Payload;
+
+use super::cluster::WorkerPool;
+
+/// Fixed frame header: `wid u32 | round u64 | loss f32`.
+pub const ENVELOPE_HEADER_BYTES: usize = 16;
+
+/// One framed leader↔worker message (see the module docs for the byte
+/// layout).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Envelope {
+    /// Sending worker id (receiving worker id for a downlink).
+    pub wid: u32,
+    /// The round this message belongs to. For an uplink this is the round
+    /// the gradient was computed at — the staleness tag.
+    pub round: u64,
+    /// Per-direction scalar: the worker's batch loss on an uplink, the
+    /// round's learning rate on a downlink (so the receiving side can
+    /// rebuild its `RoundCtx` from the frame alone).
+    pub loss: f32,
+    pub payload: Payload,
+}
+
+impl Envelope {
+    /// Serialize to the wire frame: 16-byte header + payload bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let body = self.payload.encode();
+        let mut out = Vec::with_capacity(ENVELOPE_HEADER_BYTES + body.len());
+        out.extend(self.wid.to_le_bytes());
+        out.extend(self.round.to_le_bytes());
+        out.extend(self.loss.to_le_bytes());
+        out.extend_from_slice(&body);
+        out
+    }
+
+    /// Decode a wire frame; exact inverse of [`Envelope::encode`]
+    /// (bitwise, including the loss and every payload kind).
+    pub fn decode(buf: &[u8]) -> Result<Envelope> {
+        if buf.len() < ENVELOPE_HEADER_BYTES {
+            bail!("envelope truncated: {} bytes", buf.len());
+        }
+        let wid = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+        let round = u64::from_le_bytes(buf[4..12].try_into().unwrap());
+        let loss = f32::from_le_bytes(buf[12..16].try_into().unwrap());
+        let payload = Payload::decode(&buf[ENVELOPE_HEADER_BYTES..])?;
+        Ok(Envelope { wid, round, loss, payload })
+    }
+
+    /// Exact frame size in bits: the 16-byte header plus the payload's
+    /// own `wire_bits` (`== 8 * encode().len()`).
+    pub fn wire_bits(&self) -> u64 {
+        (ENVELOPE_HEADER_BYTES as u64) * 8 + self.payload.wire_bits()
+    }
+}
+
+/// One uplink arrival, as the runtime's event loop consumes it.
+#[derive(Debug)]
+pub enum Event {
+    Uplink {
+        /// Sending worker.
+        wid: usize,
+        /// The round the worker computed at (== `envelope.round`).
+        round: u64,
+        envelope: Envelope,
+    },
+}
+
+/// The leader's asynchronous view of the worker cluster.
+///
+/// A transport delivers every dispatched round eventually (in-process
+/// transports never lose messages), but makes **no ordering promise**
+/// across workers: `recv_event` yields genuine arrival order, which is
+/// what lets the runtime take the first K uplinks of a round and treat
+/// the rest as stragglers.
+pub trait Transport {
+    /// Number of workers behind this transport.
+    fn n_workers(&self) -> usize;
+
+    /// Send θ for round `ctx.round` to worker `wid` and start its round.
+    fn send_downlink(
+        &mut self,
+        wid: usize,
+        theta: &Arc<Vec<f32>>,
+        ctx: &RoundCtx,
+    ) -> Result<()>;
+
+    /// Block until the next uplink arrives.
+    fn recv_event(&mut self) -> Result<Event>;
+}
+
+/// In-process transport: messages move as Rust values over the pool's
+/// mpsc channels (or the sequential queue) — today's plumbing, zero
+/// serialization.
+pub struct InProc {
+    pool: WorkerPool,
+}
+
+impl InProc {
+    pub fn new(pool: WorkerPool) -> Self {
+        InProc { pool }
+    }
+}
+
+impl Transport for InProc {
+    fn n_workers(&self) -> usize {
+        self.pool.len()
+    }
+
+    fn send_downlink(
+        &mut self,
+        wid: usize,
+        theta: &Arc<Vec<f32>>,
+        ctx: &RoundCtx,
+    ) -> Result<()> {
+        self.pool.send(wid, theta, ctx)
+    }
+
+    fn recv_event(&mut self) -> Result<Event> {
+        let (wid, round, wr) = self.pool.recv()?;
+        let envelope = Envelope {
+            wid: wid as u32,
+            round,
+            loss: wr.loss,
+            payload: wr.payload,
+        };
+        Ok(Event::Uplink { wid, round, envelope })
+    }
+}
+
+/// Wire-framing transport: every downlink and uplink is encoded to bytes
+/// and decoded back through [`Envelope`], so a run over `Loopback`
+/// exercises exactly the serialization a socket transport would — while
+/// staying bitwise identical to [`InProc`] (f32 values survive the
+/// little-endian round trip exactly).
+pub struct Loopback {
+    pool: WorkerPool,
+}
+
+impl Loopback {
+    pub fn new(pool: WorkerPool) -> Self {
+        Loopback { pool }
+    }
+}
+
+impl Transport for Loopback {
+    fn n_workers(&self) -> usize {
+        self.pool.len()
+    }
+
+    fn send_downlink(
+        &mut self,
+        wid: usize,
+        theta: &Arc<Vec<f32>>,
+        ctx: &RoundCtx,
+    ) -> Result<()> {
+        let frame = Envelope {
+            wid: wid as u32,
+            round: ctx.round,
+            loss: ctx.lr,
+            payload: Payload::Dense(theta.as_ref().clone()),
+        }
+        .encode();
+        let dec = Envelope::decode(&frame)?;
+        ensure!(
+            dec.wid as usize == wid && dec.round == ctx.round,
+            "loopback downlink header corrupted"
+        );
+        let theta = match dec.payload {
+            Payload::Dense(v) => Arc::new(v),
+            other => bail!("loopback downlink decoded to {other:?}, expected dense θ"),
+        };
+        // The worker-side RoundCtx comes entirely off the wire: a
+        // dispatch is always synchronous, so (round, lr) is the whole
+        // context — exactly what a remote worker process would rebuild.
+        let wire_ctx = RoundCtx::sync(dec.round, dec.loss);
+        self.pool.send(wid, &theta, &wire_ctx)
+    }
+
+    fn recv_event(&mut self) -> Result<Event> {
+        let (wid, round, wr) = self.pool.recv()?;
+        let frame = Envelope {
+            wid: wid as u32,
+            round,
+            loss: wr.loss,
+            payload: wr.payload,
+        }
+        .encode();
+        let envelope = Envelope::decode(&frame)?;
+        ensure!(
+            envelope.wid as usize == wid && envelope.round == round,
+            "loopback uplink header corrupted"
+        );
+        Ok(Event::Uplink { wid, round, envelope })
+    }
+}
+
+/// Parsed transport selector (`TrainConfig::transport` / `--transport`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TransportSpec {
+    InProc,
+    Loopback,
+}
+
+impl TransportSpec {
+    pub fn parse(s: &str) -> Result<TransportSpec> {
+        match s {
+            "inproc" => Ok(TransportSpec::InProc),
+            "loopback" => Ok(TransportSpec::Loopback),
+            other => bail!("unknown transport '{other}' (inproc | loopback)"),
+        }
+    }
+
+    /// Wrap a worker pool in this transport.
+    pub fn build(self, pool: WorkerPool) -> Box<dyn Transport> {
+        match self {
+            TransportSpec::InProc => Box::new(InProc::new(pool)),
+            TransportSpec::Loopback => Box::new(Loopback::new(pool)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::wire::{f32_to_f16, pack_signs};
+
+    fn sample_payloads() -> Vec<Payload> {
+        let x = vec![1.0f32, -2.5, 0.0, 3.25, -0.125];
+        vec![
+            Payload::Dense(x.clone()),
+            Payload::Sparse { dim: 9, idx: vec![1, 7], val: vec![0.5, -3.0] },
+            Payload::Signs { dim: 5, block: 2, scales: vec![1.0, 2.0, 0.5], bits: pack_signs(&x) },
+            Payload::LayeredSigns {
+                dim: 5,
+                sizes: vec![2, 3],
+                scales: vec![1.5, 0.25],
+                bits: pack_signs(&x),
+            },
+            Payload::Quantized { dim: 4, norm: 8.0, levels: 4, q: vec![-4, 0, 2, 4] },
+            Payload::SparseF16 {
+                dim: 6,
+                idx: vec![0, 5],
+                val: vec![f32_to_f16(0.5), f32_to_f16(-3.0)],
+            },
+        ]
+    }
+
+    #[test]
+    fn envelope_roundtrips_every_payload_kind() {
+        for (i, p) in sample_payloads().into_iter().enumerate() {
+            let env = Envelope { wid: i as u32, round: 41 + i as u64, loss: -0.75, payload: p };
+            let bytes = env.encode();
+            assert_eq!(bytes.len() as u64 * 8, env.wire_bits(), "kind {i}");
+            assert_eq!(
+                env.wire_bits(),
+                ENVELOPE_HEADER_BYTES as u64 * 8 + env.payload.wire_bits()
+            );
+            let back = Envelope::decode(&bytes).unwrap();
+            assert_eq!(back, env, "kind {i}");
+            assert_eq!(back.loss.to_bits(), env.loss.to_bits());
+        }
+    }
+
+    #[test]
+    fn envelope_decode_rejects_corruption() {
+        let env = Envelope {
+            wid: 3,
+            round: 9,
+            loss: 1.5,
+            payload: Payload::Dense(vec![1.0, 2.0]),
+        };
+        let bytes = env.encode();
+        // Truncated header, truncated body, trailing garbage.
+        assert!(Envelope::decode(&bytes[..8]).is_err());
+        assert!(Envelope::decode(&bytes[..bytes.len() - 1]).is_err());
+        let mut longer = bytes.clone();
+        longer.push(0);
+        assert!(Envelope::decode(&longer).is_err());
+        // Bad payload tag inside an intact header.
+        let mut bad = bytes;
+        bad[ENVELOPE_HEADER_BYTES] = 99;
+        assert!(Envelope::decode(&bad).is_err());
+    }
+
+    #[test]
+    fn transport_spec_parses_and_rejects() {
+        assert_eq!(TransportSpec::parse("inproc").unwrap(), TransportSpec::InProc);
+        assert_eq!(TransportSpec::parse("loopback").unwrap(), TransportSpec::Loopback);
+        assert!(TransportSpec::parse("tcp").is_err());
+    }
+
+    #[test]
+    fn loopback_uplink_survives_framing_bitwise() {
+        use crate::algo::AlgoSpec;
+        use crate::grad::quadratic::QuadraticProblem;
+        use crate::grad::GradSource;
+
+        let n = 3;
+        let problem = QuadraticProblem::new(1, 16, n, 4.0, 0.5, 1.0);
+        let mk_pool = || {
+            let sources: Vec<Box<dyn GradSource>> = (0..n)
+                .map(|w| Box::new(problem.source_for(w, 7)) as Box<dyn GradSource>)
+                .collect();
+            let algos = AlgoSpec::parse("comp-ams-topk:0.3").unwrap().build(16, n, 100).0;
+            WorkerPool::sequential(sources, algos).unwrap()
+        };
+        let mut inproc = InProc::new(mk_pool());
+        let mut loopback = Loopback::new(mk_pool());
+        let theta = Arc::new(vec![0.2f32; 16]);
+        let ctx = RoundCtx::sync(0, 0.01);
+        for wid in 0..n {
+            inproc.send_downlink(wid, &theta, &ctx).unwrap();
+            loopback.send_downlink(wid, &theta, &ctx).unwrap();
+        }
+        for _ in 0..n {
+            let Event::Uplink { wid: wa, round: ra, envelope: ea } =
+                inproc.recv_event().unwrap();
+            let Event::Uplink { wid: wb, round: rb, envelope: eb } =
+                loopback.recv_event().unwrap();
+            assert_eq!((wa, ra), (wb, rb));
+            assert_eq!(ea, eb);
+            assert_eq!(ea.loss.to_bits(), eb.loss.to_bits());
+        }
+    }
+}

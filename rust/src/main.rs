@@ -54,6 +54,12 @@ commands:
            --server-shards S   split the server update across S parallel
                                θ shards (bitwise-identical trajectories)
            --server-threaded t run shard updates on a leader thread pool
+           --transport T       inproc | loopback (byte-framed envelopes,
+                               bitwise-identical trajectories)
+           --quorum K          server steps once K on-time uplinks arrive
+                               (0 = full participation, the default)
+           --max-staleness S   apply straggler uplinks up to S rounds
+                               late; drop (and count) beyond
            --decay-at r1,r2 --decay-factor F
            --config file.json  load a config (flags override)
   exp      regenerate a paper artifact: fig1|fig2|fig3|fig4|table1|ablation
@@ -64,8 +70,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     args.ensure_known(&[
         "model", "algo", "workers", "rounds", "lr", "seed", "sharding",
         "eval-every", "eval-batches", "log-every", "fused", "threaded",
-        "server-shards", "server-threaded", "artifacts", "config", "decay-at",
-        "decay-factor", "rounds-per-epoch",
+        "server-shards", "server-threaded", "transport", "quorum",
+        "max-staleness", "artifacts", "config", "decay-at", "decay-factor",
+        "rounds-per-epoch",
     ])?;
     let mut cfg = match args.get("config") {
         Some(path) => {
@@ -97,6 +104,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.threaded = args.bool_or("threaded", cfg.threaded)?;
     cfg.server_shards = args.usize_or("server-shards", cfg.server_shards)?;
     cfg.server_threaded = args.bool_or("server-threaded", cfg.server_threaded)?;
+    cfg.transport = args.str_or("transport", &cfg.transport);
+    cfg.quorum = args.usize_or("quorum", cfg.quorum)?;
+    cfg.max_staleness = args.u64_or("max-staleness", cfg.max_staleness)?;
     cfg.rounds_per_epoch = args.u64_or("rounds-per-epoch", cfg.rounds_per_epoch)?;
     cfg.artifacts = PathBuf::from(args.str_or("artifacts", &cfg.artifacts.to_string_lossy()));
     if let Some(at) = args.get("decay-at") {
@@ -128,6 +138,12 @@ fn cmd_train(args: &Args) -> Result<()> {
         run.total_wall_ms / 1e3,
         run.coord_overhead * 100.0
     );
+    if run.stale_uplinks > 0 || run.dropped_uplinks > 0 {
+        eprintln!(
+            "quorum: {} stale uplinks applied, {} dropped past --max-staleness",
+            run.stale_uplinks, run.dropped_uplinks
+        );
+    }
     if !run.server_ms_by_shard.is_empty() {
         let ms: Vec<String> =
             run.server_ms_by_shard.iter().map(|m| format!("{m:.0}")).collect();

@@ -130,6 +130,39 @@ fn non_iid_sharding_still_converges() {
 }
 
 #[test]
+fn partial_participation_descends_and_reports_staleness() {
+    // The K < n acceptance bar: with a quorum of half the workers the
+    // quadratic run still descends, straggler uplinks show up in the
+    // stale counter, and nothing is dropped while max_staleness covers
+    // the one-round lag the in-process transport produces.
+    let mut cfg = quad_cfg("comp-ams-topk:0.05");
+    cfg.workers = 8;
+    cfg.quorum = 4;
+    cfg.max_staleness = 2;
+    let run = train(&cfg).unwrap();
+    let first = run.metrics[0].train_loss;
+    let last = run.final_train_loss(20);
+    assert!(last < first - 0.3, "K<n run stalled: {first:.3} -> {last:.3}");
+    assert!(run.stale_uplinks > 0, "no stale uplinks recorded");
+    assert_eq!(run.dropped_uplinks, 0);
+
+    // With max_staleness = 0 the same lag is dropped instead of applied,
+    // and the drops are accounted.
+    cfg.max_staleness = 0;
+    cfg.rounds = 60;
+    let run = train(&cfg).unwrap();
+    assert!(run.dropped_uplinks > 0, "no dropped uplinks recorded");
+    assert_eq!(run.stale_uplinks, 0);
+
+    // Full participation keeps both counters at zero.
+    cfg.quorum = 0;
+    cfg.max_staleness = 2;
+    let run = train(&cfg).unwrap();
+    assert_eq!(run.stale_uplinks, 0);
+    assert_eq!(run.dropped_uplinks, 0);
+}
+
+#[test]
 fn downlink_accounting_is_rounds_times_workers_times_theta() {
     let mut cfg = quad_cfg("dist-ams");
     cfg.rounds = 7;

@@ -381,6 +381,136 @@ fn prop_sharded_server_trajectory_bitwise_identical() {
 }
 
 #[test]
+fn prop_envelope_frames_every_payload_kind_exactly() {
+    // Transport-framing invariant: wrapping any payload any compressor
+    // can emit (plus hand-built layered/quantized/f16 messages) in an
+    // Envelope and round-tripping the bytes is the identity — bitwise,
+    // loss included — and the frame bill is exactly the 16-byte header
+    // plus the payload's own wire bits.
+    use comp_ams::compress::wire::f32_to_f16;
+    use comp_ams::coordinator::transport::{Envelope, ENVELOPE_HEADER_BYTES};
+    check("envelope_roundtrip", 150, |g| {
+        let d = g.size(1, 2000);
+        let x = g.grad_vec(d);
+        let mut payloads: Vec<Payload> = Vec::new();
+        for c in &mut [
+            Box::new(Identity) as Box<dyn Compressor>,
+            Box::new(TopK::new(g.f32_range(0.005, 1.0))),
+            Box::new(TopK::new_fp16(g.f32_range(0.005, 1.0))),
+            Box::new(BlockSign::new(g.size(1, 512))),
+            Box::new(RandomK::new(g.f32_range(0.005, 1.0), g.rng.next_u64())),
+        ] {
+            payloads.push(c.compress(&x));
+        }
+        payloads.push(Payload::LayeredSigns {
+            dim: d as u32,
+            sizes: vec![d as u32],
+            scales: vec![g.f32_range(0.0, 3.0)],
+            bits: comp_ams::compress::wire::pack_signs(&x),
+        });
+        payloads.push(Payload::Quantized {
+            dim: d as u32,
+            norm: g.f32_range(0.1, 10.0),
+            levels: g.size(1, 127) as u8,
+            q: x.iter().map(|&v| (v.clamp(-1.0, 1.0) * 4.0) as i8).collect(),
+        });
+        payloads.push(Payload::SparseF16 {
+            dim: d as u32,
+            idx: (0..d).step_by(2).map(|i| i as u32).collect(),
+            val: (0..d).step_by(2).map(|i| f32_to_f16(x[i])).collect(),
+        });
+        for p in payloads {
+            let env = Envelope {
+                wid: g.size(0, 65_000) as u32,
+                round: g.rng.next_u64() >> 16,
+                loss: g.rng.normal(),
+                payload: p,
+            };
+            let bytes = env.encode();
+            assert_eq!(bytes.len() as u64 * 8, env.wire_bits());
+            assert_eq!(
+                env.wire_bits(),
+                ENVELOPE_HEADER_BYTES as u64 * 8 + env.payload.wire_bits(),
+                "frame bill must be header + payload exactly"
+            );
+            let back = Envelope::decode(&bytes).unwrap();
+            assert_eq!(back, env);
+            assert_eq!(back.loss.to_bits(), env.loss.to_bits());
+        }
+    });
+}
+
+#[test]
+fn prop_full_quorum_is_invariant_across_transports_and_backends() {
+    // The tentpole acceptance bar: under the default full quorum (K = n),
+    // the event-driven runtime reproduces the synchronous trajectory
+    // bitwise — losses, uplink bits, final θ — for every protocol string,
+    // across sequential vs threaded workers, InProc vs Loopback
+    // transports, and quorum spelled 0 (default) or n explicitly.
+    use comp_ams::config::TrainConfig;
+    use comp_ams::coordinator::trainer::Trainer;
+
+    fn run(cfg: &TrainConfig) -> (Vec<f32>, Vec<u64>, Vec<f32>, u64, u64) {
+        let mut t = Trainer::new(cfg).unwrap();
+        let mut losses = Vec::new();
+        for r in 0..cfg.rounds {
+            losses.push(t.step(r).unwrap());
+        }
+        let bits = t.ledger().uplink_bits_by_worker.clone();
+        let stale = t.ledger().stale_uplinks;
+        let dropped = t.ledger().dropped_uplinks;
+        let theta = t.theta;
+        (losses, bits, theta, stale, dropped)
+    }
+
+    // The six protocol strings of the acceptance bar, plus the
+    // compressors whose payload kinds (quantized, random-k sparse, f16
+    // sparse) the six don't emit — so every Payload kind crosses the
+    // Loopback byte framing inside a real training loop.
+    for algo in [
+        "dist-ams",
+        "comp-ams-topk:0.05",
+        "comp-ams-blocksign:64",
+        "qadam",
+        "1bitadam:10",
+        "dist-sgd",
+        "comp-ams-qsgd:4",
+        "comp-ams-randomk:0.1",
+        "comp-ams-topk16:0.05",
+    ] {
+        let mut cfg = TrainConfig::preset("quadratic", algo);
+        cfg.workers = 3;
+        cfg.rounds = 30;
+        cfg.lr = 0.01;
+        cfg.eval_every = 0;
+        let (base_loss, base_bits, base_theta, s0, d0) = run(&cfg);
+        assert_eq!((s0, d0), (0, 0), "{algo}: staleness under full quorum");
+        for (threaded, transport, quorum) in [
+            (false, "loopback", 0),
+            (true, "inproc", 0),
+            (true, "loopback", 0),
+            (false, "inproc", 3),
+            (true, "loopback", 3),
+        ] {
+            cfg.threaded = threaded;
+            cfg.transport = transport.into();
+            cfg.quorum = quorum;
+            let (loss, bits, theta, stale, dropped) = run(&cfg);
+            let label =
+                format!("{algo} threaded={threaded} transport={transport} K={quorum}");
+            assert_eq!((stale, dropped), (0, 0), "{label}");
+            assert_eq!(base_bits, bits, "{label}: per-worker uplink bits");
+            for (r, (a, b)) in base_loss.iter().zip(&loss).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{label}: loss at round {r}");
+            }
+            for (i, (a, b)) in base_theta.iter().zip(&theta).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{label}: θ[{i}]");
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_rng_streams_do_not_collide() {
     check("rng_streams", 40, |g| {
         let mut root = comp_ams::util::rng::Rng::seed(g.rng.next_u64());
