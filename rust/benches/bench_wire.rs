@@ -62,4 +62,19 @@ fn main() {
             r.mean.as_secs_f64() * 1e3
         ));
     }
+
+    // Single-pass routing (the path the sharded server actually takes):
+    // split into all S shards at once. Sorted sparse payloads walk their
+    // k indices once instead of S times — the race above vs. below is
+    // the O(S·k) → O(k) win on the sparse rows.
+    let bounds: Vec<usize> = (0..=shards).map(|s| s * d / shards).collect();
+    for (name, p) in &payloads {
+        let r = b.bench(&format!("slice_into_shards x{shards} {name}"), || {
+            std::hint::black_box(p.slice_into_shards(&bounds).unwrap());
+        });
+        b.note(&format!(
+            "  -> {:.2} ms per n=1 round of S={shards} routing",
+            r.mean.as_secs_f64() * 1e3
+        ));
+    }
 }

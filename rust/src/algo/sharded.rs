@@ -240,15 +240,16 @@ impl ShardedServer {
         );
         let shards = bounds.len() - 1;
 
-        // Route: slice every worker payload down to each shard's range.
-        let mut routed: Vec<Vec<Payload>> = Vec::with_capacity(shards);
-        for s in 0..shards {
-            let sub: Vec<Payload> = msgs
-                .iter()
-                .map(|m| m.slice_range(bounds[s], bounds[s + 1]))
-                .collect::<Result<_>>()?;
-            self.stats.routed_bits[s] += sub.iter().map(|p| p.wire_bits()).sum::<u64>();
-            routed.push(sub);
+        // Route: split every worker payload across all shard ranges in
+        // one pass (`slice_into_shards` — sorted sparse payloads walk
+        // their k indices once instead of once per shard).
+        let mut routed: Vec<Vec<Payload>> =
+            (0..shards).map(|_| Vec::with_capacity(msgs.len())).collect();
+        for m in msgs {
+            for (s, slice) in m.slice_into_shards(&bounds)?.into_iter().enumerate() {
+                self.stats.routed_bits[s] += slice.wire_bits();
+                routed[s].push(slice);
+            }
         }
 
         match &mut self.backend {

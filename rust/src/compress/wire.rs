@@ -265,27 +265,11 @@ impl Payload {
         Ok(match self {
             Payload::Dense(v) => Payload::Dense(v[start..end].to_vec()),
             Payload::Sparse { idx, val, .. } => {
-                let mut si = Vec::new();
-                let mut sv = Vec::new();
-                for (&i, &v) in idx.iter().zip(val) {
-                    let i = i as usize;
-                    if (start..end).contains(&i) {
-                        si.push((i - start) as u32);
-                        sv.push(v);
-                    }
-                }
+                let (si, sv) = slice_sparse(idx, val, start, end);
                 Payload::Sparse { dim: len, idx: si, val: sv }
             }
             Payload::SparseF16 { idx, val, .. } => {
-                let mut si = Vec::new();
-                let mut sv = Vec::new();
-                for (&i, &v) in idx.iter().zip(val) {
-                    let i = i as usize;
-                    if (start..end).contains(&i) {
-                        si.push((i - start) as u32);
-                        sv.push(v);
-                    }
-                }
+                let (si, sv) = slice_sparse(idx, val, start, end);
                 Payload::SparseF16 { dim: len, idx: si, val: sv }
             }
             Payload::Signs { block, scales, bits, .. } => {
@@ -333,6 +317,59 @@ impl Payload {
                 q: q[start..end].to_vec(),
             },
         })
+    }
+
+    /// Split this payload across the contiguous partition described by
+    /// `bounds` (S + 1 strictly ascending fenceposts, `bounds[s]..
+    /// bounds[s+1]` per shard; `bounds.last()` ≤ dim) — the sharded
+    /// server's per-uplink routing step, done in **one pass**.
+    ///
+    /// Equivalent to calling [`Payload::slice_range`] once per shard
+    /// (bitwise — asserted by the slicing property test), but sparse
+    /// payloads walk their k indices once for all S shards instead of
+    /// rescanning per shard (the O(S·k) routing cost this replaces). The
+    /// single pass needs ascending indices, which Top-k/Random-k emit by
+    /// construction; a guarded sortedness check routes hand-built
+    /// unsorted `Sparse` payloads through the per-shard fallback.
+    pub fn slice_into_shards(&self, bounds: &[usize]) -> Result<Vec<Payload>> {
+        let d = self.dim();
+        if bounds.len() < 2
+            || bounds.windows(2).any(|w| w[0] >= w[1])
+            || *bounds.last().unwrap() > d
+        {
+            bail!("bad shard bounds {bounds:?} for payload dim {d}");
+        }
+        match self {
+            Payload::Sparse { idx, val, .. } if is_strictly_ascending(idx) => {
+                Ok(split_sorted_sparse(idx, val, bounds)
+                    .into_iter()
+                    .zip(bounds.windows(2))
+                    .map(|((si, sv), w)| Payload::Sparse {
+                        dim: (w[1] - w[0]) as u32,
+                        idx: si,
+                        val: sv,
+                    })
+                    .collect())
+            }
+            Payload::SparseF16 { idx, val, .. } if is_strictly_ascending(idx) => {
+                Ok(split_sorted_sparse(idx, val, bounds)
+                    .into_iter()
+                    .zip(bounds.windows(2))
+                    .map(|((si, sv), w)| Payload::SparseF16 {
+                        dim: (w[1] - w[0]) as u32,
+                        idx: si,
+                        val: sv,
+                    })
+                    .collect())
+            }
+            // Dense/sign/quantized slices each copy only their own range
+            // (already O(d) total across shards); unsorted sparse falls
+            // back to the rescan.
+            _ => bounds
+                .windows(2)
+                .map(|w| self.slice_range(w[0], w[1]))
+                .collect(),
+        }
     }
 
     /// Exact message size in bits (== 8 * encode().len()).
@@ -528,6 +565,71 @@ fn write_signs_range(out: &mut [f32], global_start: usize, scale: f32, bits: &[u
         let bit = ((bits[i >> 3] >> (i & 7)) & 1) as u32;
         *o = f32::from_bits(sbits | (bit << 31));
     }
+}
+
+/// Strictly ascending (therefore duplicate-free) index stream? The
+/// sortedness guard for the `partition_point`/single-pass sparse slicing
+/// paths — Top-k and Random-k emit ascending indices by construction,
+/// but hand-built `Sparse` payloads are not required to.
+fn is_strictly_ascending(idx: &[u32]) -> bool {
+    idx.windows(2).all(|w| w[0] < w[1])
+}
+
+/// Restrict a sparse (index, value) stream to `[start, end)`, rebasing
+/// indices. Ascending streams locate the kept run with two binary
+/// searches ([`slice::partition_point`]) and copy it; unsorted streams
+/// fall back to the full scan.
+fn slice_sparse<V: Copy>(
+    idx: &[u32],
+    val: &[V],
+    start: usize,
+    end: usize,
+) -> (Vec<u32>, Vec<V>) {
+    if is_strictly_ascending(idx) {
+        let lo = idx.partition_point(|&i| (i as usize) < start);
+        let hi = lo + idx[lo..].partition_point(|&i| (i as usize) < end);
+        let si = idx[lo..hi].iter().map(|&i| (i as usize - start) as u32).collect();
+        (si, val[lo..hi].to_vec())
+    } else {
+        let mut si = Vec::new();
+        let mut sv = Vec::new();
+        for (&i, &v) in idx.iter().zip(val) {
+            let i = i as usize;
+            if (start..end).contains(&i) {
+                si.push((i - start) as u32);
+                sv.push(v);
+            }
+        }
+        (si, sv)
+    }
+}
+
+/// One-pass split of an **ascending** sparse stream across the partition
+/// `bounds`: each index is visited exactly once, the shard cursor only
+/// moves forward. Returns one rebased (idx, val) pair per shard.
+fn split_sorted_sparse<V: Copy>(
+    idx: &[u32],
+    val: &[V],
+    bounds: &[usize],
+) -> Vec<(Vec<u32>, Vec<V>)> {
+    let shards = bounds.len() - 1;
+    let mut out: Vec<(Vec<u32>, Vec<V>)> = (0..shards).map(|_| (Vec::new(), Vec::new())).collect();
+    let mut s = 0usize;
+    for (&i, &v) in idx.iter().zip(val) {
+        let i = i as usize;
+        if i < bounds[0] {
+            continue;
+        }
+        while s < shards && i >= bounds[s + 1] {
+            s += 1;
+        }
+        if s == shards {
+            break; // past the last fencepost (ascending: nothing left)
+        }
+        out[s].0.push((i - bounds[s]) as u32);
+        out[s].1.push(v);
+    }
+    out
 }
 
 /// Repack the sign bits of global coordinates `[start, start + len)`
@@ -885,6 +987,71 @@ mod tests {
         let empty = p.slice_range(8, 10).unwrap();
         assert_eq!(empty, Payload::Sparse { dim: 2, idx: vec![], val: vec![] });
         assert_eq!(empty.to_dense(2).unwrap(), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn unsorted_sparse_slices_via_fallback_identically() {
+        // Hand-built Sparse payloads need not be sorted; the guarded
+        // sortedness check must route them through the rescan and still
+        // produce exactly the filtered+rebased result.
+        let p = Payload::Sparse {
+            dim: 10,
+            idx: vec![7, 1, 4],
+            val: vec![2.0, 0.5, -3.0],
+        };
+        let s = p.slice_range(4, 8).unwrap();
+        assert_eq!(s, Payload::Sparse { dim: 4, idx: vec![3, 0], val: vec![2.0, -3.0] });
+        // slice_into_shards falls back per shard, so concatenated decodes
+        // still reproduce the full decode.
+        let full = p.to_dense(10).unwrap();
+        let mut rebuilt = Vec::new();
+        for sh in p.slice_into_shards(&[0, 4, 8, 10]).unwrap() {
+            let dim = sh.dim();
+            rebuilt.extend(sh.to_dense(dim).unwrap());
+        }
+        assert_eq!(rebuilt, full);
+    }
+
+    #[test]
+    fn slice_into_shards_matches_per_shard_slice_range() {
+        // The one-pass split must agree payload-for-payload with the S
+        // independent slice_range calls (sorted sparse takes the fast
+        // path; everything else delegates).
+        let bounds = [0usize, 4, 8, 11];
+        let x: Vec<f32> = (0..11).map(|i| (i as f32 - 5.0) * 0.5).collect();
+        let ps = [
+            Payload::Dense(x.clone()),
+            Payload::Sparse { dim: 11, idx: vec![0, 3, 4, 10], val: vec![1.0, -2.0, 3.5, 0.25] },
+            Payload::SparseF16 {
+                dim: 11,
+                idx: vec![2, 7, 8],
+                val: vec![f32_to_f16(0.5), f32_to_f16(-3.0), f32_to_f16(1.25)],
+            },
+            Payload::Signs { dim: 11, block: 4, scales: vec![2.0, 0.5, 1.5], bits: pack_signs(&x) },
+            Payload::Quantized {
+                dim: 11,
+                norm: 8.0,
+                levels: 4,
+                q: vec![-4, -3, -2, -1, 0, 1, 2, 3, 4, 0, -4],
+            },
+        ];
+        for p in &ps {
+            let split = p.slice_into_shards(&bounds).unwrap();
+            assert_eq!(split.len(), bounds.len() - 1);
+            for (k, w) in bounds.windows(2).enumerate() {
+                assert_eq!(split[k], p.slice_range(w[0], w[1]).unwrap(), "{p:?} shard {k}");
+            }
+        }
+        // A sparse stream with indices entirely inside one shard.
+        let p = Payload::Sparse { dim: 11, idx: vec![5, 6], val: vec![1.0, 2.0] };
+        let split = p.slice_into_shards(&bounds).unwrap();
+        assert_eq!(split[0], Payload::Sparse { dim: 4, idx: vec![], val: vec![] });
+        assert_eq!(split[1], Payload::Sparse { dim: 4, idx: vec![1, 2], val: vec![1.0, 2.0] });
+        assert_eq!(split[2], Payload::Sparse { dim: 3, idx: vec![], val: vec![] });
+        // Bad bounds are rejected.
+        assert!(p.slice_into_shards(&[0]).is_err());
+        assert!(p.slice_into_shards(&[0, 4, 4, 11]).is_err());
+        assert!(p.slice_into_shards(&[0, 4, 12]).is_err());
     }
 
     #[test]

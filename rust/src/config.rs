@@ -67,11 +67,18 @@ pub struct TrainConfig {
     /// Run the shard updates on persistent leader-side shard threads
     /// instead of sequentially (only meaningful with `server_shards > 1`).
     pub server_threaded: bool,
-    /// Leader↔worker transport: `inproc` (in-process channels) or
+    /// Leader↔worker transport: `inproc` (in-process channels),
     /// `loopback` (every message round-trips the byte-level `Envelope`
     /// framing — bitwise-identical trajectories, proves process-boundary
-    /// readiness). See [`crate::coordinator::transport`].
+    /// readiness), or `tcp[:port]` (real worker processes over localhost
+    /// sockets; port 0/omitted = ephemeral). See
+    /// [`crate::coordinator::transport`] and [`crate::coordinator::net`].
     pub transport: String,
+    /// With `tcp` transport: spawn the worker daemons as child processes
+    /// of this leader (`comp-ams worker` via `current_exe`) instead of
+    /// waiting for externally launched workers. See
+    /// [`crate::coordinator::supervisor`].
+    pub spawn_workers: bool,
     /// Partial-participation quorum K: the server steps once K on-time
     /// uplinks arrive; 0 (default) means full participation (K = n,
     /// bitwise identical to the lockstep rounds). See
@@ -105,6 +112,7 @@ impl TrainConfig {
             server_shards: 1,
             server_threaded: false,
             transport: "inproc".into(),
+            spawn_workers: false,
             quorum: 0,
             max_staleness: 2,
             log_every: 0,
@@ -178,7 +186,29 @@ impl TrainConfig {
                 self.workers
             );
         }
-        crate::coordinator::transport::TransportSpec::parse(&self.transport)?;
+        let tspec = crate::coordinator::transport::TransportSpec::parse(&self.transport)?;
+        if self.spawn_workers && !tspec.is_multiprocess() {
+            bail!(
+                "--spawn-workers spawns worker processes and requires --transport \
+                 tcp[:port] (got '{}'; valid transports: {})",
+                self.transport,
+                crate::coordinator::transport::TRANSPORT_CHOICES
+            );
+        }
+        if tspec.is_multiprocess() && !self.is_analytic() {
+            bail!(
+                "--transport tcp workers rebuild their data shard from the config \
+                 and support the analytic substrates (quadratic | logistic), \
+                 not '{}'",
+                self.model
+            );
+        }
+        if tspec.is_multiprocess() && self.threaded {
+            bail!(
+                "--threaded runs workers on leader-side threads; with --transport \
+                 tcp workers are separate processes — drop one of the two"
+            );
+        }
         crate::algo::AlgoSpec::parse(&self.algo)?;
         crate::data::shard::Sharding::parse(&self.sharding)?;
         Ok(())
@@ -211,6 +241,7 @@ impl TrainConfig {
             ("server_shards", Json::num(self.server_shards as f64)),
             ("server_threaded", Json::Bool(self.server_threaded)),
             ("transport", Json::str(&self.transport)),
+            ("spawn_workers", Json::Bool(self.spawn_workers)),
             ("quorum", Json::num(self.quorum as f64)),
             ("max_staleness", Json::num(self.max_staleness as f64)),
             ("log_every", Json::num(self.log_every as f64)),
@@ -275,6 +306,9 @@ impl TrainConfig {
         }
         if let Some(v) = j.get("transport") {
             cfg.transport = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.get("spawn_workers") {
+            cfg.spawn_workers = v.as_bool()?;
         }
         if let Some(v) = j.get("quorum") {
             cfg.quorum = v.as_usize()?;
@@ -351,6 +385,34 @@ mod tests {
         cfg.transport = "loopback".into();
         cfg.validate().unwrap();
         cfg.transport = "tcp".into();
+        cfg.validate().unwrap();
+        cfg.transport = "tcp:9000".into();
+        cfg.validate().unwrap();
+        cfg.transport = "carrier-pigeon".into();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("inproc | loopback | tcp[:port]"), "{err}");
+    }
+
+    #[test]
+    fn validate_multiprocess_combinations() {
+        // --spawn-workers needs a process-boundary transport.
+        let mut cfg = TrainConfig::preset("quadratic", "dist-ams");
+        cfg.spawn_workers = true;
+        for t in ["inproc", "loopback"] {
+            cfg.transport = t.into();
+            let err = cfg.validate().unwrap_err().to_string();
+            assert!(err.contains("tcp"), "{t}: {err}");
+        }
+        cfg.transport = "tcp".into();
+        cfg.validate().unwrap();
+        // tcp workers rebuild their shard from the config: analytic only.
+        let mut cfg = TrainConfig::preset("mnist_cnn", "comp-ams-topk:0.01");
+        cfg.transport = "tcp".into();
+        assert!(cfg.validate().is_err());
+        // threaded (in-process) workers contradict process workers.
+        let mut cfg = TrainConfig::preset("quadratic", "dist-ams");
+        cfg.transport = "tcp".into();
+        cfg.threaded = true;
         assert!(cfg.validate().is_err());
     }
 
@@ -363,6 +425,7 @@ mod tests {
         cfg.server_shards = 4;
         cfg.server_threaded = true;
         cfg.transport = "loopback".into();
+        cfg.spawn_workers = true;
         cfg.quorum = 3;
         cfg.max_staleness = 5;
         let j = cfg.to_json();
@@ -378,6 +441,7 @@ mod tests {
         assert_eq!(back.server_shards, 4);
         assert!(back.server_threaded);
         assert_eq!(back.transport, "loopback");
+        assert!(back.spawn_workers);
         assert_eq!(back.quorum, 3);
         assert_eq!(back.max_staleness, 5);
     }

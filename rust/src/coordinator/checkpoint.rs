@@ -136,4 +136,127 @@ mod tests {
     fn missing_dir_is_error() {
         assert!(Checkpoint::load(Path::new("/nonexistent/ckpt")).is_err());
     }
+
+    /// A θ/optimizer state whose bytes exercise the awkward f32 corners:
+    /// signed zeros, subnormals, extremes, and values that differ only in
+    /// the sign bit.
+    fn awkward_checkpoint() -> Checkpoint {
+        let theta = vec![
+            0.0f32,
+            -0.0,
+            f32::MIN_POSITIVE,
+            -f32::MIN_POSITIVE,
+            1.0e-40, // subnormal
+            f32::MAX,
+            -f32::MAX,
+            1.5,
+        ];
+        let m: Vec<f32> = theta.iter().map(|x| x * 0.5).collect();
+        let v: Vec<f32> = theta.iter().map(|x| x.abs()).collect();
+        let vhat = v.clone();
+        Checkpoint {
+            round: 1_234_567,
+            model: "quadratic".into(),
+            algo: "comp-ams-blocksign:64".into(),
+            theta,
+            opt_state: vec![m, v, vhat],
+        }
+    }
+
+    #[test]
+    fn roundtrip_is_bitwise_on_theta_and_optimizer_state() {
+        // PartialEq on f32 conflates 0.0 == -0.0; the resume guarantee is
+        // stronger — every byte of θ and every optimizer vector survives.
+        let dir = tmp();
+        let ck = awkward_checkpoint();
+        ck.save(&dir).unwrap();
+        let back = Checkpoint::load(&dir).unwrap();
+        assert_eq!(back.round, ck.round);
+        assert_eq!(back.model, "quadratic");
+        assert_eq!(back.algo, "comp-ams-blocksign:64");
+        for (i, (a, b)) in ck.theta.iter().zip(&back.theta).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "θ[{i}]");
+        }
+        assert_eq!(back.opt_state.len(), ck.opt_state.len());
+        for (k, (va, vb)) in ck.opt_state.iter().zip(&back.opt_state).enumerate() {
+            for (i, (a, b)) in va.iter().zip(vb).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "opt[{k}][{i}]");
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn truncated_and_padded_opt_state_rejected() {
+        let dir = tmp();
+        let ck = awkward_checkpoint();
+        ck.save(&dir).unwrap();
+        let raw = std::fs::read(dir.join("opt.bin")).unwrap();
+        // Whole missing vector, non-multiple-of-4 tail, trailing garbage.
+        std::fs::write(dir.join("opt.bin"), &raw[..raw.len() - 4 * ck.theta.len()]).unwrap();
+        assert!(Checkpoint::load(&dir).is_err());
+        std::fs::write(dir.join("opt.bin"), &raw[..raw.len() - 3]).unwrap();
+        assert!(Checkpoint::load(&dir).is_err());
+        let mut padded = raw.clone();
+        padded.extend_from_slice(&[0u8; 4]);
+        std::fs::write(dir.join("opt.bin"), &padded).unwrap();
+        assert!(Checkpoint::load(&dir).is_err());
+        // Restoring the original bytes loads cleanly again.
+        std::fs::write(dir.join("opt.bin"), &raw).unwrap();
+        Checkpoint::load(&dir).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn corrupted_metadata_rejected() {
+        let dir = tmp();
+        let ck = awkward_checkpoint();
+        ck.save(&dir).unwrap();
+        let meta = std::fs::read_to_string(dir.join("state.json")).unwrap();
+        // Unparseable JSON.
+        std::fs::write(dir.join("state.json"), &meta[..meta.len() / 2]).unwrap();
+        assert!(Checkpoint::load(&dir).is_err());
+        // Unsupported version.
+        std::fs::write(dir.join("state.json"), meta.replace("\"version\": 1", "\"version\": 9"))
+            .unwrap();
+        assert!(Checkpoint::load(&dir).is_err());
+        // p disagreeing with theta.bin.
+        std::fs::write(
+            dir.join("state.json"),
+            meta.replace(
+                &format!("\"p\": {}", ck.theta.len()),
+                &format!("\"p\": {}", ck.theta.len() + 1),
+            ),
+        )
+        .unwrap();
+        assert!(Checkpoint::load(&dir).is_err());
+        // opt_vectors disagreeing with opt.bin.
+        std::fs::write(
+            dir.join("state.json"),
+            meta.replace("\"opt_vectors\": 3", "\"opt_vectors\": 2"),
+        )
+        .unwrap();
+        assert!(Checkpoint::load(&dir).is_err());
+        // Missing required key.
+        std::fs::write(dir.join("state.json"), meta.replace("\"round\"", "\"wrong\"")).unwrap();
+        assert!(Checkpoint::load(&dir).is_err());
+        // Original metadata still loads.
+        std::fs::write(dir.join("state.json"), &meta).unwrap();
+        Checkpoint::load(&dir).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn save_rejects_mismatched_opt_vector_dims() {
+        let dir = tmp();
+        let ck = Checkpoint {
+            round: 0,
+            model: "m".into(),
+            algo: "a".into(),
+            theta: vec![1.0; 4],
+            opt_state: vec![vec![0.0; 3]],
+        };
+        assert!(ck.save(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
 }

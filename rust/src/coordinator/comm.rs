@@ -41,8 +41,17 @@ pub struct CommLedger {
     /// within the `max_staleness` bound). Zero under full quorum.
     pub stale_uplinks: u64,
     /// Straggler uplinks past the staleness bound: transmitted and
-    /// charged, but discarded by the runtime instead of applied.
+    /// charged, but discarded by the runtime instead of applied. A
+    /// crashed worker's never-to-arrive uplink is also counted here (but
+    /// its bits are not, since nothing crossed the wire).
     pub dropped_uplinks: u64,
+    /// Transport framing bits: per-message overhead on top of the
+    /// payload bill (the 16-byte `Envelope` header, plus the socket
+    /// frame header on TCP), billed per consumed uplink and per
+    /// dispatched downlink. Kept out of `uplink_bits` so the gradient
+    /// bit accounting stays identical across transports; zero for
+    /// `InProc`.
+    pub framing_bits: u64,
 }
 
 impl CommLedger {
@@ -67,6 +76,12 @@ impl CommLedger {
     pub fn sync_shard_routing(&mut self, routed_bits: &[u64]) {
         self.uplink_bits_by_shard.clear();
         self.uplink_bits_by_shard.extend_from_slice(routed_bits);
+    }
+
+    /// Record per-message transport framing overhead (see
+    /// [`CommLedger::framing_bits`]).
+    pub fn charge_framing(&mut self, bits: u64) {
+        self.framing_bits += bits;
     }
 
     /// Dense f32 broadcast of a d-vector to `n` workers.
@@ -124,5 +139,17 @@ mod tests {
         l.charge_downlink_dense(100, 4);
         assert_eq!(l.downlink_bits, 4 * 8 * 405);
         assert_eq!(l.total_bits(), l.downlink_bits);
+    }
+
+    #[test]
+    fn framing_is_billed_separately_from_payload_bits() {
+        let mut l = CommLedger::new();
+        l.charge_uplink(0, 1000);
+        l.charge_framing(128);
+        l.charge_framing(200);
+        assert_eq!(l.framing_bits, 328);
+        assert_eq!(l.uplink_bits, 1000);
+        // Framing never leaks into the uplink/downlink totals.
+        assert_eq!(l.total_bits(), 1000);
     }
 }

@@ -35,8 +35,13 @@ pub struct RunResult {
     /// Straggler uplinks applied as stale gradients across the run
     /// (nonzero only with `--quorum` K < n).
     pub stale_uplinks: u64,
-    /// Straggler uplinks past `--max-staleness`, dropped unapplied.
+    /// Straggler uplinks past `--max-staleness`, dropped unapplied —
+    /// including a crashed worker's never-to-arrive uplinks.
     pub dropped_uplinks: u64,
+    /// Transport framing overhead in bits (envelope + socket frame
+    /// headers), billed separately so `uplink_bits` stays
+    /// transport-invariant. Zero for `inproc`.
+    pub framing_bits: u64,
     /// Cumulative uplink bits per worker id — the Figure-2-style
     /// per-worker communication breakdown. Includes the end-of-run
     /// straggler uplinks drained after the last round (K < n only),
@@ -120,6 +125,7 @@ mod tests {
             coord_overhead: 0.0,
             stale_uplinks: 0,
             dropped_uplinks: 0,
+            framing_bits: 0,
             uplink_bits_by_worker: Vec::new(),
             uplink_bits_by_shard: Vec::new(),
             server_ms_by_shard: Vec::new(),

@@ -18,12 +18,15 @@
 //! ```
 //!
 //! The leader↔worker plumbing is abstracted behind [`transport::Transport`]
-//! (`InProc` channels, or the byte-framing `Loopback` that proves
-//! process-boundary readiness), and the round state machine — quorum
-//! collection, staleness classification, stale-gradient application —
-//! lives in [`runtime::ClusterRuntime`]. The whole per-worker pipeline
+//! (`InProc` channels, the byte-framing `Loopback`, or real worker
+//! *processes* over sockets — [`net::Tcp`], spawned and reaped by the
+//! [`supervisor`], each running the [`worker`] daemon loop), and the
+//! round state machine — quorum collection, staleness classification,
+//! stale-gradient application, dead-worker exclusion — lives in
+//! [`runtime::ClusterRuntime`]. The whole per-worker pipeline
 //! runs either sequentially on the leader thread (required for PJRT
-//! executables) or inside persistent worker threads ([`cluster`]); the
+//! executables), inside persistent worker threads ([`cluster`]), or in
+//! separate worker processes (`--transport tcp --spawn-workers`); the
 //! server update can likewise be split across parallel θ shards
 //! ([`crate::algo::sharded::ShardedServer`], `--server-shards`). Under the
 //! default full quorum (K = n) every backend × transport combination
@@ -35,13 +38,18 @@ pub mod cluster;
 pub mod checkpoint;
 pub mod comm;
 pub mod metrics;
+pub mod net;
 pub mod runtime;
+pub mod supervisor;
 pub mod trainer;
 pub mod transport;
+pub mod worker;
 
 pub use cluster::{WorkerPool, WorkerRound};
 pub use comm::CommLedger;
 pub use metrics::{RoundMetric, RunResult};
+pub use net::{Tcp, TcpLeader};
 pub use runtime::{ClusterRuntime, RoundOutcome};
+pub use supervisor::Supervisor;
 pub use trainer::{train, Trainer};
 pub use transport::{Envelope, Event, InProc, Loopback, Transport, TransportSpec};

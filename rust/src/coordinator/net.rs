@@ -1,0 +1,438 @@
+//! TCP transport: real worker processes behind the [`Transport`] trait.
+//!
+//! This is the socket step the ROADMAP promised after PR 4: the protocol
+//! and runtime layers are untouched — the leader still dispatches
+//! [`Envelope`] downlinks and consumes [`Event::Uplink`] arrivals — but
+//! the workers now live in **other OS processes** (spawned by the
+//! [`supervisor`](super::supervisor), or launched by hand with
+//! `comp-ams worker --leader ADDR`).
+//!
+//! ## Wire frame
+//!
+//! Every message on a leader↔worker socket is one length-prefixed frame
+//! (little-endian):
+//!
+//! ```text
+//! | magic u32 = "CAM1" | kind u8 | len u32 | body: len bytes |
+//! ```
+//!
+//! The magic doubles as a protocol version (`CAM1` → bump the trailing
+//! byte on an incompatible change). Kinds:
+//!
+//! | kind       | direction       | body                                   |
+//! |------------|-----------------|----------------------------------------|
+//! | `HELLO`    | worker → leader | empty (the magic carries the version)  |
+//! | `ASSIGN`   | leader → worker | `wid u32 \| TrainConfig JSON`          |
+//! | `DOWNLINK` | leader → worker | [`Envelope`] bytes (dense θ, lr slot)  |
+//! | `UPLINK`   | worker → leader | [`Envelope`] bytes (payload, loss slot)|
+//! | `SHUTDOWN` | leader → worker | empty                                  |
+//!
+//! The handshake assigns worker ids in accept order: a connecting worker
+//! sends `HELLO`, the leader replies `ASSIGN{wid, config}`, and the
+//! worker rebuilds its gradient shard and protocol half from exactly the
+//! constructors the in-process pool uses
+//! ([`build_worker_parts`](super::trainer::build_worker_parts)) — which
+//! is why a TCP run with K = n is bitwise identical to `InProc`.
+//!
+//! ## Failure model
+//!
+//! Each accepted worker gets one leader-side reader thread that
+//! multiplexes its uplinks into the shared event channel. Malformed
+//! frames and short reads surface as `Err` from
+//! [`Transport::recv_event`] — poisoning the runtime like any transport
+//! error —
+//! while a **clean disconnect** (worker process died) becomes
+//! [`Event::Exit`], which the runtime maps onto the partial-participation
+//! machinery: the worker is a permanent straggler, the quorum keeps
+//! stepping, and its unfulfilled uplink lands in `dropped_uplinks`.
+
+use std::io::{ErrorKind, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::algo::RoundCtx;
+use crate::compress::Payload;
+use crate::config::TrainConfig;
+
+use super::transport::{Envelope, Event, Transport, ENVELOPE_HEADER_BYTES};
+
+/// Wire magic, doubling as the protocol version ("CAM1").
+pub const FRAME_MAGIC: u32 = u32::from_le_bytes(*b"CAM1");
+
+/// Frame header: `magic u32 | kind u8 | len u32`.
+pub const FRAME_HEADER_BYTES: usize = 9;
+
+/// Frames larger than this are rejected as garbage before allocating.
+const MAX_FRAME_BYTES: u32 = 1 << 30;
+
+/// Handshake/connect patience (accepting workers, reading ASSIGN).
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(60);
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameKind {
+    Hello = 1,
+    Assign = 2,
+    Downlink = 3,
+    Uplink = 4,
+    Shutdown = 5,
+}
+
+impl FrameKind {
+    fn from_u8(b: u8) -> Result<FrameKind> {
+        Ok(match b {
+            1 => FrameKind::Hello,
+            2 => FrameKind::Assign,
+            3 => FrameKind::Downlink,
+            4 => FrameKind::Uplink,
+            5 => FrameKind::Shutdown,
+            other => bail!("bad frame kind {other}"),
+        })
+    }
+}
+
+/// Write one frame (header + body) and flush it onto the wire.
+pub fn write_frame(w: &mut impl Write, kind: FrameKind, body: &[u8]) -> Result<()> {
+    let mut hdr = [0u8; FRAME_HEADER_BYTES];
+    hdr[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
+    hdr[4] = kind as u8;
+    hdr[5..9].copy_from_slice(&(body.len() as u32).to_le_bytes());
+    w.write_all(&hdr)?;
+    w.write_all(body)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame; `Ok(None)` on a clean EOF at a frame boundary, `Err`
+/// on a short read mid-frame, a bad magic/version word, an unknown kind,
+/// or an absurd length.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<(FrameKind, Vec<u8>)>> {
+    let mut hdr = [0u8; FRAME_HEADER_BYTES];
+    // First byte decides EOF-at-boundary vs short read.
+    let mut got = 0usize;
+    while got < hdr.len() {
+        match r.read(&mut hdr[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => bail!("short read: {got} of {FRAME_HEADER_BYTES} header bytes"),
+            Ok(n) => got += n,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let magic = u32::from_le_bytes(hdr[0..4].try_into().unwrap());
+    ensure!(
+        magic == FRAME_MAGIC,
+        "bad frame magic {magic:#010x} (expected {FRAME_MAGIC:#010x} \"CAM1\" — \
+         peer speaks another protocol or version)"
+    );
+    let kind = FrameKind::from_u8(hdr[4])?;
+    let len = u32::from_le_bytes(hdr[5..9].try_into().unwrap());
+    ensure!(len <= MAX_FRAME_BYTES, "frame length {len} exceeds the 1 GiB cap");
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)
+        .with_context(|| format!("short read in a {len}-byte {kind:?} body"))?;
+    Ok(Some((kind, body)))
+}
+
+/// A bound-but-not-yet-connected leader endpoint. Two-phase so the
+/// caller can learn the ephemeral port (and spawn workers at it) before
+/// blocking in [`TcpLeader::accept_workers`].
+pub struct TcpLeader {
+    listener: TcpListener,
+}
+
+impl TcpLeader {
+    /// Bind `127.0.0.1:port` (`port` 0 = ephemeral). Loopback only, on
+    /// purpose: the frame protocol is unauthenticated, so cross-host
+    /// clusters need an explicit (future) bind-address knob rather than
+    /// a silent 0.0.0.0 default.
+    pub fn bind(port: u16) -> Result<TcpLeader> {
+        let listener = TcpListener::bind(("127.0.0.1", port))
+            .with_context(|| format!("binding tcp leader on 127.0.0.1:{port}"))?;
+        Ok(TcpLeader { listener })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Accept and handshake `cfg.workers` worker connections, assigning
+    /// `wid` 0.. in accept order, then start one reader thread per
+    /// worker. Fails if the cluster has not formed within the handshake
+    /// timeout.
+    pub fn accept_workers(self, cfg: &TrainConfig) -> Result<Tcp> {
+        let n = cfg.workers;
+        let cfg_json = cfg.to_json().to_string_pretty();
+        let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
+        self.listener.set_nonblocking(true)?;
+        let (event_tx, events) = channel::<Result<Event>>();
+        let mut links = Vec::with_capacity(n);
+        let mut readers = Vec::with_capacity(n);
+        for wid in 0..n {
+            let mut stream = loop {
+                match self.listener.accept() {
+                    Ok((s, _peer)) => break s,
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                        ensure!(
+                            Instant::now() < deadline,
+                            "timed out waiting for worker {wid}/{n} to connect"
+                        );
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    Err(e) => return Err(e).context("accepting worker connection"),
+                }
+            };
+            stream.set_nonblocking(false)?;
+            stream.set_nodelay(true)?;
+            stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT))?;
+            match read_frame(&mut stream)? {
+                Some((FrameKind::Hello, _)) => {}
+                Some((kind, _)) => bail!("worker {wid} opened with {kind:?}, not HELLO"),
+                None => bail!("worker {wid} disconnected before HELLO"),
+            }
+            let mut assign = Vec::with_capacity(4 + cfg_json.len());
+            assign.extend((wid as u32).to_le_bytes());
+            assign.extend_from_slice(cfg_json.as_bytes());
+            write_frame(&mut stream, FrameKind::Assign, &assign)?;
+            stream.set_read_timeout(None)?;
+            links.push(WorkerLink { stream: stream.try_clone()?, alive: true });
+            readers.push(spawn_reader(wid, stream, event_tx.clone()));
+        }
+        Ok(Tcp { links, events, readers, shut_down: false, downlink_cache: None })
+    }
+}
+
+/// One leader-side reader thread: multiplex worker `wid`'s uplinks into
+/// the shared event channel; a clean EOF becomes [`Event::Exit`], a
+/// protocol violation becomes an `Err` event (runtime poisoning path).
+fn spawn_reader(
+    wid: usize,
+    mut stream: TcpStream,
+    tx: Sender<Result<Event>>,
+) -> JoinHandle<()> {
+    // A reset/abort is a worker-death signal like a clean EOF (the OS
+    // closes a crashed process's sockets either way); short reads and
+    // malformed frames stay hard errors.
+    fn is_disconnect(e: &anyhow::Error) -> bool {
+        e.downcast_ref::<std::io::Error>().is_some_and(|io| {
+            matches!(
+                io.kind(),
+                ErrorKind::ConnectionReset
+                    | ErrorKind::ConnectionAborted
+                    | ErrorKind::BrokenPipe
+            )
+        })
+    }
+    std::thread::Builder::new()
+        .name(format!("tcp-reader-{wid}"))
+        .spawn(move || loop {
+            match read_frame(&mut stream) {
+                Ok(Some((FrameKind::Uplink, body))) => match Envelope::decode(&body) {
+                    Ok(envelope) => {
+                        let ev = Event::Uplink { wid, round: envelope.round, envelope };
+                        if tx.send(Ok(ev)).is_err() {
+                            return; // leader gone
+                        }
+                    }
+                    Err(e) => {
+                        let ctx = format!("decoding worker {wid} uplink");
+                        let _ = tx.send(Err(e.context(ctx)));
+                        return;
+                    }
+                },
+                Ok(Some((kind, _))) => {
+                    let _ = tx.send(Err(anyhow::anyhow!(
+                        "worker {wid} sent a {kind:?} frame on the uplink stream"
+                    )));
+                    return;
+                }
+                // Worker process is gone (crash, post-SHUTDOWN close), or
+                // the leader shut the socket down itself.
+                Ok(None) => {
+                    let _ = tx.send(Ok(Event::Exit { wid }));
+                    return;
+                }
+                Err(e) if is_disconnect(&e) => {
+                    let _ = tx.send(Ok(Event::Exit { wid }));
+                    return;
+                }
+                Err(e) => {
+                    let ctx = format!("reading worker {wid} uplink stream");
+                    let _ = tx.send(Err(e.context(ctx)));
+                    return;
+                }
+            }
+        })
+        .expect("spawn tcp reader thread")
+}
+
+struct WorkerLink {
+    stream: TcpStream,
+    alive: bool,
+}
+
+/// Multi-process transport: one socket per worker process, one reader
+/// thread per socket, all uplinks multiplexed into a single event
+/// channel (true arrival order — the property partial participation
+/// exploits, now with real network scheduling).
+pub struct Tcp {
+    links: Vec<WorkerLink>,
+    events: Receiver<Result<Event>>,
+    readers: Vec<JoinHandle<()>>,
+    shut_down: bool,
+    /// Encoded downlink envelope for the current `(round, lr)`, reused
+    /// across the round's dispatch fan-out: the n per-worker frames
+    /// differ only in the 4-byte wid header, so θ is cloned + encoded
+    /// once per round instead of once per worker.
+    downlink_cache: Option<(u64, u32, Vec<u8>)>,
+}
+
+impl Transport for Tcp {
+    fn n_workers(&self) -> usize {
+        self.links.len()
+    }
+
+    fn send_downlink(
+        &mut self,
+        wid: usize,
+        theta: &Arc<Vec<f32>>,
+        ctx: &RoundCtx,
+    ) -> Result<bool> {
+        ensure!(wid < self.links.len(), "no worker {wid} behind tcp transport");
+        if !self.links[wid].alive {
+            return Ok(false);
+        }
+        let lr_bits = ctx.lr.to_bits();
+        let cached = matches!(
+            &self.downlink_cache,
+            Some((r, l, _)) if *r == ctx.round && *l == lr_bits
+        );
+        if !cached {
+            let frame = Envelope {
+                wid: 0,
+                round: ctx.round,
+                loss: ctx.lr,
+                payload: Payload::Dense(theta.as_ref().clone()),
+            }
+            .encode();
+            self.downlink_cache = Some((ctx.round, lr_bits, frame));
+        }
+        let frame = {
+            let (_, _, f) = self.downlink_cache.as_mut().unwrap();
+            // Per-worker patch: wid is the first 4 bytes of the envelope.
+            f[0..4].copy_from_slice(&(wid as u32).to_le_bytes());
+            &*f
+        };
+        let link = &mut self.links[wid];
+        match write_frame(&mut link.stream, FrameKind::Downlink, frame) {
+            Ok(()) => Ok(true),
+            // A write failure means the worker process died under us; its
+            // Event::Exit is already in (or on its way into) the channel.
+            // Report "not dispatched" instead of killing the run.
+            Err(_) => {
+                link.alive = false;
+                Ok(false)
+            }
+        }
+    }
+
+    fn recv_event(&mut self) -> Result<Event> {
+        let ev = self
+            .events
+            .recv()
+            .map_err(|_| anyhow::anyhow!("all tcp reader threads are gone"))??;
+        if let Event::Exit { wid } = ev {
+            if let Some(link) = self.links.get_mut(wid) {
+                link.alive = false;
+            }
+        }
+        Ok(ev)
+    }
+
+    fn frame_overhead_bits(&self) -> u64 {
+        ((FRAME_HEADER_BYTES + ENVELOPE_HEADER_BYTES) as u64) * 8
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        if self.shut_down {
+            return Ok(());
+        }
+        self.shut_down = true;
+        for link in &mut self.links {
+            if link.alive {
+                // Best effort: the worker may have died since we checked.
+                let _ = write_frame(&mut link.stream, FrameKind::Shutdown, &[]);
+            }
+            // Closing both directions unblocks this worker's reader
+            // thread even if the worker never closes its end.
+            let _ = link.stream.shutdown(Shutdown::Both);
+            link.alive = false;
+        }
+        for j in self.readers.drain(..) {
+            let _ = j.join();
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Tcp {
+    fn drop(&mut self) {
+        let _ = self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrips_and_reports_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Uplink, b"hello-bytes").unwrap();
+        write_frame(&mut buf, FrameKind::Shutdown, &[]).unwrap();
+        let mut r = &buf[..];
+        let (k, body) = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(k, FrameKind::Uplink);
+        assert_eq!(body, b"hello-bytes");
+        let (k, body) = read_frame(&mut r).unwrap().unwrap();
+        assert_eq!(k, FrameKind::Shutdown);
+        assert!(body.is_empty());
+        // Clean EOF at a frame boundary is None, not an error.
+        assert!(read_frame(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn frame_rejects_bad_magic_kind_and_short_reads() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, FrameKind::Downlink, &[1, 2, 3]).unwrap();
+        // Corrupt the magic.
+        let mut bad = buf.clone();
+        bad[0] ^= 0xFF;
+        let err = read_frame(&mut &bad[..]).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+        // Unknown kind byte.
+        let mut bad = buf.clone();
+        bad[4] = 99;
+        assert!(read_frame(&mut &bad[..]).is_err());
+        // Short header and short body are errors, not EOF.
+        assert!(read_frame(&mut &buf[..4]).is_err());
+        assert!(read_frame(&mut &buf[..buf.len() - 1]).is_err());
+        // Absurd length is rejected before allocation.
+        let mut bad = buf;
+        bad[5..9].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(read_frame(&mut &bad[..]).is_err());
+    }
+
+    #[test]
+    fn leader_binds_ephemeral_port() {
+        let leader = TcpLeader::bind(0).unwrap();
+        let addr = leader.local_addr().unwrap();
+        assert!(addr.port() != 0);
+        assert!(addr.ip().is_loopback());
+    }
+}

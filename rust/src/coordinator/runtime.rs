@@ -29,6 +29,13 @@
 //! stragglers mid-flight), the round's quorum is the dispatched count —
 //! the liveness floor that keeps in-process transports deadlock-free.
 //!
+//! **Worker death** (multi-process transports only): a worker whose
+//! connection drops ([`Event::Exit`], or a failed downlink write) is a
+//! *permanent straggler* — never dispatched again, any uplink it still
+//! owed counted in `dropped_uplinks`, and the collect loop's target
+//! shrinks so the quorum keeps stepping on the survivors. The run only
+//! errors once no live worker is left to dispatch.
+//!
 //! **Synchronous mode is the default and is bitwise-exact**: with K = n
 //! every round dispatches all n workers, waits for all n uplinks, orders
 //! them by worker id, and steps once — the numerically identical
@@ -84,6 +91,9 @@ pub struct ClusterRuntime {
     /// `in_flight[wid]` = the round whose uplink we still owe this worker
     /// credit for (`None` = idle, eligible for dispatch).
     in_flight: Vec<Option<u64>>,
+    /// Workers whose process/connection is gone — permanent stragglers:
+    /// skipped at dispatch, excluded from quorum targets.
+    dead: Vec<bool>,
     /// Set when a round or drain errored mid-collection: the in-flight
     /// bookkeeping can no longer be trusted (e.g. a worker's errored
     /// reply was consumed without clearing its slot), so further rounds
@@ -110,6 +120,7 @@ impl ClusterRuntime {
             quorum,
             max_staleness,
             in_flight: vec![None; n],
+            dead: vec![false; n],
             poisoned: false,
         })
     }
@@ -120,6 +131,27 @@ impl ClusterRuntime {
 
     pub fn quorum(&self) -> usize {
         self.quorum
+    }
+
+    /// Worker ids whose process/connection is gone (permanent
+    /// stragglers). Empty for in-process transports.
+    pub fn dead_workers(&self) -> Vec<usize> {
+        (0..self.dead.len()).filter(|&w| self.dead[w]).collect()
+    }
+
+    /// Worker ids with an uplink still in flight (useful between rounds
+    /// for ops introspection and fault-injection tests).
+    pub fn straggling_workers(&self) -> Vec<usize> {
+        (0..self.in_flight.len())
+            .filter(|&w| self.in_flight[w].is_some())
+            .collect()
+    }
+
+    /// Broadcast end-of-run to the cluster (SHUTDOWN frames on socket
+    /// transports; no-op in process). Deliberately allowed on a poisoned
+    /// runtime — child processes must still be told to exit.
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.transport.shutdown()
     }
 
     /// Drive one round of the state machine (dispatch → collect →
@@ -163,53 +195,89 @@ impl ClusterRuntime {
         let ctx = RoundCtx::sync(round, lr);
         let wsw = Stopwatch::start();
 
-        // Dispatch: θ goes to every idle worker; stragglers still owe an
-        // uplink and are skipped (and not billed a broadcast).
+        // Dispatch: θ goes to every live idle worker; stragglers still
+        // owe an uplink and are skipped (and not billed a broadcast); a
+        // failed downlink write means the worker process died under us —
+        // mark it dead rather than dispatched.
         let shared = Arc::new(theta.to_vec());
         let mut dispatched = 0usize;
         for wid in 0..n {
-            if self.in_flight[wid].is_none() {
-                self.transport.send_downlink(wid, &shared, &ctx)?;
+            if self.dead[wid] || self.in_flight[wid].is_some() {
+                continue;
+            }
+            if self.transport.send_downlink(wid, &shared, &ctx)? {
                 self.in_flight[wid] = Some(round);
                 dispatched += 1;
+            } else {
+                self.dead[wid] = true;
             }
         }
-        ensure!(dispatched > 0, "round {round}: no idle worker to dispatch");
+        ensure!(
+            dispatched > 0,
+            "round {round}: no live idle worker to dispatch ({} of {n} workers dead)",
+            self.dead.iter().filter(|&&d| d).count()
+        );
         ledger.charge_downlink_dense(theta.len(), dispatched);
+        ledger.charge_framing(dispatched as u64 * self.transport.frame_overhead_bits());
 
         // Collect: consume arrivals until K uplinks for *this* round are
         // in. Only `dispatched` workers can produce round-t uplinks, so
-        // the quorum is floored at the dispatched count for liveness.
+        // the quorum is floored at the dispatched count for liveness —
+        // and shrinks further as dispatched workers die (`pending` is how
+        // many round-t uplinks can still arrive).
         let target = self.quorum.min(dispatched);
+        let mut pending = dispatched;
         let mut arrivals: Vec<Arrival> = Vec::with_capacity(dispatched);
         let mut fresh = 0usize;
-        while fresh < target {
-            let Event::Uplink { wid, round: observed, envelope } =
-                self.transport.recv_event()?;
-            ensure!(wid < n, "uplink from unknown worker {wid}");
-            ensure!(
-                envelope.wid as usize == wid && envelope.round == observed,
-                "transport event (wid {wid}, round {observed}) disagrees with its \
-                 envelope header (wid {}, round {})",
-                envelope.wid,
-                envelope.round
-            );
-            ensure!(
-                self.in_flight[wid] == Some(observed),
-                "worker {wid} uplinked round {observed} but owes {:?}",
-                self.in_flight[wid]
-            );
-            self.in_flight[wid] = None;
-            if observed == round {
-                fresh += 1;
+        while fresh < target && pending > 0 {
+            match self.transport.recv_event()? {
+                Event::Uplink { wid, round: observed, envelope } => {
+                    ensure!(wid < n, "uplink from unknown worker {wid}");
+                    ensure!(
+                        envelope.wid as usize == wid && envelope.round == observed,
+                        "transport event (wid {wid}, round {observed}) disagrees with its \
+                         envelope header (wid {}, round {})",
+                        envelope.wid,
+                        envelope.round
+                    );
+                    ensure!(
+                        self.in_flight[wid] == Some(observed),
+                        "worker {wid} uplinked round {observed} but owes {:?}",
+                        self.in_flight[wid]
+                    );
+                    self.in_flight[wid] = None;
+                    if observed == round {
+                        fresh += 1;
+                        pending -= 1;
+                    }
+                    ledger.charge_framing(self.transport.frame_overhead_bits());
+                    arrivals.push(Arrival {
+                        wid,
+                        observed,
+                        loss: envelope.loss,
+                        payload: envelope.payload,
+                    });
+                }
+                Event::Exit { wid } => {
+                    ensure!(wid < n, "exit event from unknown worker {wid}");
+                    if !self.dead[wid] {
+                        self.dead[wid] = true;
+                        if let Some(owed) = self.in_flight[wid].take() {
+                            // The uplink this worker owed will never
+                            // arrive: account the absence.
+                            ledger.dropped_uplinks += 1;
+                            if owed == round {
+                                pending -= 1;
+                            }
+                        }
+                    }
+                }
             }
-            arrivals.push(Arrival {
-                wid,
-                observed,
-                loss: envelope.loss,
-                payload: envelope.payload,
-            });
         }
+        ensure!(
+            !arrivals.is_empty(),
+            "round {round}: every dispatched worker died before uplinking"
+        );
         let worker_ms = wsw.ms();
 
         // Classify in worker-id order (a deterministic aggregation order;
@@ -239,9 +307,14 @@ impl ClusterRuntime {
         ledger.dropped_uplinks += dropped as u64;
 
         // Step: one server update over the applied batch; protocols see
-        // the batch's staleness through ctx.observed_round.
-        let step_ctx = RoundCtx { round, observed_round, lr };
-        server.step(theta, &msgs, &step_ctx)?;
+        // the batch's staleness through ctx.observed_round. The batch can
+        // be empty when worker deaths left only past-staleness arrivals
+        // this round — then θ simply doesn't move (a 0-message "average"
+        // would be 0/0).
+        if !msgs.is_empty() {
+            let step_ctx = RoundCtx { round, observed_round, lr };
+            server.step(theta, &msgs, &step_ctx)?;
+        }
 
         Ok(RoundOutcome {
             round,
@@ -278,17 +351,37 @@ impl ClusterRuntime {
     fn drain_inner(&mut self, ledger: &mut CommLedger) -> Result<usize> {
         let mut drained = 0usize;
         while self.in_flight.iter().any(Option::is_some) {
-            let Event::Uplink { wid, round: observed, envelope } =
-                self.transport.recv_event()?;
-            ensure!(wid < self.in_flight.len(), "uplink from unknown worker {wid}");
-            ensure!(
-                self.in_flight[wid] == Some(observed),
-                "worker {wid} uplinked round {observed} but owes {:?}",
-                self.in_flight[wid]
-            );
-            self.in_flight[wid] = None;
-            ledger.charge_uplink(wid, envelope.payload.wire_bits());
-            drained += 1;
+            match self.transport.recv_event()? {
+                Event::Uplink { wid, round: observed, envelope } => {
+                    ensure!(
+                        wid < self.in_flight.len(),
+                        "uplink from unknown worker {wid}"
+                    );
+                    ensure!(
+                        self.in_flight[wid] == Some(observed),
+                        "worker {wid} uplinked round {observed} but owes {:?}",
+                        self.in_flight[wid]
+                    );
+                    self.in_flight[wid] = None;
+                    ledger.charge_uplink(wid, envelope.payload.wire_bits());
+                    ledger.charge_framing(self.transport.frame_overhead_bits());
+                    drained += 1;
+                }
+                Event::Exit { wid } => {
+                    ensure!(
+                        wid < self.in_flight.len(),
+                        "exit event from unknown worker {wid}"
+                    );
+                    if !self.dead[wid] {
+                        self.dead[wid] = true;
+                        if self.in_flight[wid].take().is_some() {
+                            // Never transmitted: accounted as dropped, no
+                            // wire bits charged.
+                            ledger.dropped_uplinks += 1;
+                        }
+                    }
+                }
+            }
         }
         Ok(drained)
     }
@@ -470,6 +563,163 @@ mod tests {
         assert_eq!(ledger.dropped_uplinks, 0);
         // Nothing left: draining again is a no-op.
         assert_eq!(rt.drain_in_flight(&mut ledger).unwrap(), 0);
+    }
+
+    /// Scripted in-process stand-in for a process-boundary transport:
+    /// each dispatched worker "replies" instantly with a dense uplink —
+    /// unless scripted to die at that round (dispatch succeeds, an
+    /// `Event::Exit` lands instead of the uplink: the crashed-mid-round
+    /// case) or to be already unreachable (send fails: the crashed-while-
+    /// idle case).
+    struct ScriptedTransport {
+        n: usize,
+        queue: std::collections::VecDeque<Event>,
+        /// `Some(r)`: die on receiving the round-r (or later) downlink.
+        die_at: Vec<Option<u64>>,
+        /// Connection already gone: send_downlink returns Ok(false).
+        unreachable: Vec<bool>,
+    }
+
+    impl ScriptedTransport {
+        fn new(n: usize) -> Self {
+            ScriptedTransport {
+                n,
+                queue: Default::default(),
+                die_at: vec![None; n],
+                unreachable: vec![false; n],
+            }
+        }
+    }
+
+    impl Transport for ScriptedTransport {
+        fn n_workers(&self) -> usize {
+            self.n
+        }
+
+        fn send_downlink(
+            &mut self,
+            wid: usize,
+            theta: &Arc<Vec<f32>>,
+            ctx: &RoundCtx,
+        ) -> Result<bool> {
+            if self.unreachable[wid] {
+                return Ok(false);
+            }
+            if self.die_at[wid].is_some_and(|r| ctx.round >= r) {
+                self.unreachable[wid] = true;
+                self.queue.push_back(Event::Exit { wid });
+                return Ok(true); // the downlink write itself succeeded
+            }
+            self.queue.push_back(Event::Uplink {
+                wid,
+                round: ctx.round,
+                envelope: super::super::transport::Envelope {
+                    wid: wid as u32,
+                    round: ctx.round,
+                    loss: 1.0,
+                    payload: Payload::Dense(vec![0.1f32; theta.len()]),
+                },
+            });
+            Ok(true)
+        }
+
+        fn recv_event(&mut self) -> Result<Event> {
+            self.queue
+                .pop_front()
+                .ok_or_else(|| anyhow::anyhow!("scripted transport drained dry"))
+        }
+
+        fn frame_overhead_bits(&self) -> u64 {
+            200
+        }
+    }
+
+    #[test]
+    fn mid_round_death_becomes_permanent_straggler() {
+        let mut t = ScriptedTransport::new(3);
+        t.die_at[2] = Some(2);
+        let mut rt = ClusterRuntime::new(Box::new(t), 2, 2).unwrap();
+        let (_, mut server) = AlgoSpec::parse("dist-sgd").unwrap().build(4, 3, 100);
+        let mut theta = vec![0.5f32; 4];
+        let mut ledger = CommLedger::new();
+        for r in 0..6 {
+            let out = rt
+                .run_round(&mut theta, server.as_mut(), r, 0.01, &mut ledger)
+                .unwrap_or_else(|e| panic!("round {r}: {e:#}"));
+            assert!(out.fresh >= 1, "round {r} stepped on nothing");
+        }
+        assert_eq!(rt.dead_workers(), vec![2]);
+        // Worker 2's round-2 uplink never arrived: dropped, no bits.
+        assert_eq!(ledger.dropped_uplinks, 1);
+        // From round 3 on, only workers 0 and 1 are dispatched or billed.
+        assert_eq!(ledger.uplink_bits_by_worker.len(), 3);
+        assert!(ledger.uplink_bits_by_worker[2] < ledger.uplink_bits_by_worker[0]);
+        // Framing: 200 bits per dispatched downlink and consumed uplink.
+        assert!(ledger.framing_bits > 0);
+        // Nothing left in flight: the drain is a no-op.
+        assert_eq!(rt.drain_in_flight(&mut ledger).unwrap(), 0);
+        assert!(rt.straggling_workers().is_empty());
+    }
+
+    #[test]
+    fn unreachable_worker_is_skipped_not_fatal() {
+        let mut t = ScriptedTransport::new(2);
+        t.unreachable[1] = true;
+        let mut rt = ClusterRuntime::new(Box::new(t), 0, 2).unwrap();
+        let (_, mut server) = AlgoSpec::parse("dist-sgd").unwrap().build(4, 2, 100);
+        let mut theta = vec![0.5f32; 4];
+        let mut ledger = CommLedger::new();
+        let out = rt.run_round(&mut theta, server.as_mut(), 0, 0.01, &mut ledger).unwrap();
+        // Full participation resolved to the one live worker.
+        assert_eq!((out.fresh, out.stale, out.dropped), (1, 0, 0));
+        assert_eq!(rt.dead_workers(), vec![1]);
+        // It never received a dispatch, so nothing was owed or dropped.
+        assert_eq!(ledger.dropped_uplinks, 0);
+        // Downlink billed only for the worker actually dispatched.
+        assert_eq!(ledger.downlink_bits, 8 * (5 + 4 * 4));
+    }
+
+    #[test]
+    fn losing_every_worker_errors_and_poisons() {
+        let mut t = ScriptedTransport::new(1);
+        t.die_at[0] = Some(0);
+        let mut rt = ClusterRuntime::new(Box::new(t), 0, 2).unwrap();
+        let (_, mut server) = AlgoSpec::parse("dist-sgd").unwrap().build(4, 1, 100);
+        let mut theta = vec![0.5f32; 4];
+        let mut ledger = CommLedger::new();
+        let err = rt
+            .run_round(&mut theta, server.as_mut(), 0, 0.01, &mut ledger)
+            .unwrap_err();
+        assert!(err.to_string().contains("died before uplinking"), "{err}");
+        // And the next round fails fast on the poison flag.
+        let err = rt
+            .run_round(&mut theta, server.as_mut(), 1, 0.01, &mut ledger)
+            .unwrap_err();
+        assert!(err.to_string().contains("poisoned"), "{err}");
+    }
+
+    #[test]
+    fn drain_absorbs_exit_of_an_in_flight_worker() {
+        // Worker 1 dies on its round-2 dispatch and the run stops right
+        // there: its Exit is still queued when the drain runs — the
+        // drain must clear the in-flight slot and count the drop instead
+        // of blocking.
+        let mut t = ScriptedTransport::new(2);
+        t.die_at[1] = Some(1);
+        let mut rt = ClusterRuntime::new(Box::new(t), 1, 2).unwrap();
+        let (_, mut server) = AlgoSpec::parse("dist-sgd").unwrap().build(4, 2, 100);
+        let mut theta = vec![0.5f32; 4];
+        let mut ledger = CommLedger::new();
+        for r in 0..3 {
+            rt.run_round(&mut theta, server.as_mut(), r, 0.01, &mut ledger).unwrap();
+        }
+        let before = ledger.dropped_uplinks;
+        let drained = rt.drain_in_flight(&mut ledger).unwrap();
+        // Whatever was still owed is now resolved: either consumed as a
+        // transmitted straggler (drained) or dropped at the Exit.
+        assert!(rt.straggling_workers().is_empty());
+        assert!(drained > 0 || ledger.dropped_uplinks > before);
+        assert_eq!(rt.dead_workers(), vec![1]);
     }
 
     #[test]

@@ -1,0 +1,200 @@
+//! Process supervisor: spawn, monitor, and reap worker daemons.
+//!
+//! `--spawn-workers` turns the leader into a one-command cluster: the
+//! supervisor launches `cfg.workers` copies of this binary's `worker`
+//! subcommand (`std::process::Command::new(current_exe)`), each of which
+//! connects back to the leader's TCP listener, handshakes, and runs the
+//! decode → `process` → encode loop ([`super::worker`]).
+//!
+//! Failure handling is deliberately thin, because the runtime already
+//! has the right machinery: a dead child's socket closes, the TCP reader
+//! surfaces [`Event::Exit`](super::transport::Event::Exit), and the
+//! [`ClusterRuntime`](super::runtime::ClusterRuntime) turns the worker
+//! into a *permanent straggler* — the quorum keeps stepping and the
+//! absence is accounted in `dropped_uplinks`. The supervisor's jobs are
+//! the process-table ones: spawn with the right argv, report exits
+//! ([`Supervisor::poll_exits`]), kill on demand (fault injection /
+//! abort), and reap everything at end of run so no zombies outlive the
+//! leader.
+//!
+//! Tests (whose `current_exe` is the test harness, not `comp-ams`) point
+//! the supervisor at the real launcher via the `COMP_AMS_WORKER_BIN`
+//! environment variable.
+
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Context, Result};
+
+/// Environment variable overriding the spawned worker binary (defaults
+/// to `current_exe`; needed by integration tests).
+pub const WORKER_BIN_ENV: &str = "COMP_AMS_WORKER_BIN";
+
+/// The program to spawn workers from.
+fn worker_program() -> Result<PathBuf> {
+    match std::env::var_os(WORKER_BIN_ENV) {
+        Some(p) => Ok(PathBuf::from(p)),
+        None => std::env::current_exe().context("resolving current_exe for worker spawn"),
+    }
+}
+
+struct Slot {
+    child: Child,
+    /// Set once the exit has been observed (by poll/kill/reap).
+    exited: bool,
+}
+
+/// Owns the worker child processes for one training run.
+pub struct Supervisor {
+    children: Vec<Slot>,
+}
+
+impl Supervisor {
+    /// Spawn `n` workers pointed at `leader` (`HOST:PORT`).
+    pub fn spawn(n: usize, leader: &str) -> Result<Supervisor> {
+        Self::spawn_with(n, leader, |_| Vec::new())
+    }
+
+    /// Like [`Supervisor::spawn`], with per-child extra argv (fault
+    /// injection in tests, e.g. `--exit-after R`). `extra(i)` is keyed by
+    /// spawn index — note a child's `wid` is assigned by the leader in
+    /// *accept* order, which need not match spawn order.
+    pub fn spawn_with(
+        n: usize,
+        leader: &str,
+        extra: impl Fn(usize) -> Vec<String>,
+    ) -> Result<Supervisor> {
+        ensure!(n > 0, "supervisor needs at least one worker to spawn");
+        let program = worker_program()?;
+        let mut children = Vec::with_capacity(n);
+        for i in 0..n {
+            let child = Command::new(&program)
+                .arg("worker")
+                .arg("--leader")
+                .arg(leader)
+                .args(extra(i))
+                .stdin(Stdio::null())
+                .stdout(Stdio::null())
+                // stderr is inherited: worker panics/errors stay visible.
+                .spawn()
+                .with_context(|| {
+                    format!("spawning worker {i} from {}", program.display())
+                })?;
+            children.push(Slot { child, exited: false });
+        }
+        Ok(Supervisor { children })
+    }
+
+    pub fn len(&self) -> usize {
+        self.children.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.children.is_empty()
+    }
+
+    /// Spawn indexes of children newly observed to have exited since the
+    /// last poll (crashed or finished).
+    pub fn poll_exits(&mut self) -> Result<Vec<usize>> {
+        let mut out = Vec::new();
+        for (i, slot) in self.children.iter_mut().enumerate() {
+            if slot.exited {
+                continue;
+            }
+            if slot.child.try_wait()?.is_some() {
+                slot.exited = true;
+                out.push(i);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Children not yet observed to have exited.
+    pub fn alive(&mut self) -> Result<usize> {
+        self.poll_exits()?;
+        Ok(self.children.iter().filter(|s| !s.exited).count())
+    }
+
+    /// Kill child `i` (fault injection, or aborting a hung worker).
+    pub fn kill(&mut self, i: usize) -> Result<()> {
+        let slot = self
+            .children
+            .get_mut(i)
+            .with_context(|| format!("no child {i} to kill"))?;
+        if !slot.exited {
+            slot.child.kill().ok(); // already-dead is fine
+            slot.child.wait()?;
+            slot.exited = true;
+        }
+        Ok(())
+    }
+
+    /// Wait up to `grace` for every child to exit on its own (they do,
+    /// once the leader broadcasts SHUTDOWN), then kill and wait the
+    /// stragglers. Returns how many exited with a non-zero status (a
+    /// crashed-then-restarted-as-straggler worker is *expected* to be
+    /// non-zero; the caller decides whether that matters).
+    pub fn reap(&mut self, grace: Duration) -> Result<usize> {
+        let deadline = Instant::now() + grace;
+        loop {
+            self.poll_exits()?;
+            if self.children.iter().all(|s| s.exited) || Instant::now() >= deadline {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        let mut nonzero = 0usize;
+        for slot in self.children.iter_mut() {
+            if !slot.exited {
+                slot.child.kill().ok();
+            }
+            // wait() reaps; for already-exited children it returns the
+            // recorded status without blocking.
+            let status = slot.child.wait()?;
+            slot.exited = true;
+            if !status.success() {
+                nonzero += 1;
+            }
+        }
+        Ok(nonzero)
+    }
+}
+
+impl Drop for Supervisor {
+    fn drop(&mut self) {
+        // Never leave orphaned worker processes behind, whatever path
+        // dropped us (including a poisoned-runtime error unwind).
+        for slot in self.children.iter_mut() {
+            if !slot.exited {
+                slot.child.kill().ok();
+                let _ = slot.child.wait();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_workers_rejected() {
+        assert!(Supervisor::spawn(0, "127.0.0.1:1").is_err());
+    }
+
+    #[test]
+    fn spawn_kill_and_reap_leave_no_zombies() {
+        // `current_exe` here is the unit-test binary; give it an argv that
+        // makes it exit quickly (the test harness treats "worker" as a
+        // filter matching nothing). This only exercises the process
+        // table, not the worker protocol — tests/multiprocess.rs does that
+        // against the real launcher.
+        let mut sup = Supervisor::spawn(2, "127.0.0.1:1").unwrap();
+        assert_eq!(sup.len(), 2);
+        sup.kill(0).unwrap();
+        let nonzero = sup.reap(Duration::from_secs(10)).unwrap();
+        assert!(nonzero <= 2);
+        assert_eq!(sup.alive().unwrap(), 0);
+    }
+}

@@ -19,10 +19,11 @@
 
 use std::path::Path;
 use std::rc::Rc;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use crate::algo::{AlgoSpec, ServerAlgo, ShardedServer};
+use crate::algo::{AlgoSpec, ServerAlgo, ShardedServer, WorkerAlgo};
 use crate::config::TrainConfig;
 use crate::data::{
     images::SyntheticImages, lm::ByteCorpus, shard::Sharding, text::SyntheticText,
@@ -40,7 +41,9 @@ use crate::util::timer::Stopwatch;
 use super::cluster::WorkerPool;
 use super::comm::CommLedger;
 use super::metrics::{RoundMetric, RunResult};
+use super::net::TcpLeader;
 use super::runtime::ClusterRuntime;
+use super::supervisor::Supervisor;
 use super::transport::{Transport, TransportSpec};
 
 pub struct Trainer {
@@ -54,16 +57,25 @@ pub struct Trainer {
     metrics: Vec<RoundMetric>,
     worker_ms_total: f64,
     round_ms_total: f64,
+    /// Child worker processes when `--spawn-workers` assembled the
+    /// cluster; reaped at end of run (and killed on any error unwind).
+    supervisor: Option<Supervisor>,
 }
 
 impl Trainer {
     pub fn new(cfg: &TrainConfig) -> Result<Trainer> {
         cfg.validate()?;
         let spec = AlgoSpec::parse(&cfg.algo)?;
-        let (sources, evaluator, theta, fused) = build_workload(cfg)?;
+        let tspec = TransportSpec::parse(&cfg.transport)?;
+        // Remote (tcp) workers rebuild their own gradient sources and
+        // protocol halves from the ASSIGN config (build_worker_parts),
+        // so don't construct n unused local pipelines for them. Server
+        // construction is independent of the worker count.
+        let local_workers = if tspec.is_multiprocess() { 0 } else { cfg.workers };
+        let (sources, evaluator, theta, fused) = build_workload(cfg, local_workers)?;
         let fused = if cfg.fused_update { fused } else { None };
         let (workers, mut server) =
-            spec.build_fused(theta.len(), cfg.workers, cfg.rounds, fused);
+            spec.build_fused(theta.len(), local_workers, cfg.rounds, fused);
         if cfg.server_shards > 1 {
             // Replace the full-θ server with S per-shard servers (the
             // validate() above already rejected the fused combination).
@@ -75,16 +87,39 @@ impl Trainer {
                 cfg.server_threaded,
             )?);
         }
-        let pool = match sources {
-            Sources::Threadable(s) if cfg.threaded => WorkerPool::threaded(s, workers)?,
-            Sources::Threadable(s) => WorkerPool::sequential(
-                s.into_iter().map(|b| b as Box<dyn GradSource>).collect(),
-                workers,
-            )?,
-            Sources::LeaderOnly(s) => WorkerPool::sequential(s, workers)?,
+        let (transport, supervisor): (Box<dyn Transport>, Option<Supervisor>) = match tspec {
+            TransportSpec::Tcp { port } => {
+                // Workers are remote processes (local_workers == 0: the
+                // pool pieces above are empty).
+                drop(workers);
+                drop(sources);
+                let leader = TcpLeader::bind(port)?;
+                let addr = leader.local_addr()?;
+                let sup = if cfg.spawn_workers {
+                    Some(Supervisor::spawn(cfg.workers, &addr.to_string())?)
+                } else {
+                    eprintln!(
+                        "waiting for {} worker(s): comp-ams worker --leader {addr}",
+                        cfg.workers
+                    );
+                    None
+                };
+                (Box::new(leader.accept_workers(cfg)?), sup)
+            }
+            in_proc => {
+                let pool = match sources {
+                    Sources::Threadable(s) if cfg.threaded => {
+                        WorkerPool::threaded(s, workers)?
+                    }
+                    Sources::Threadable(s) => WorkerPool::sequential(
+                        s.into_iter().map(|b| b as Box<dyn GradSource>).collect(),
+                        workers,
+                    )?,
+                    Sources::LeaderOnly(s) => WorkerPool::sequential(s, workers)?,
+                };
+                (in_proc.build(pool)?, None)
+            }
         };
-        let transport: Box<dyn Transport> =
-            TransportSpec::parse(&cfg.transport)?.build(pool);
         let runtime = ClusterRuntime::new(transport, cfg.quorum, cfg.max_staleness)?;
         let algo_name = server.name();
         Ok(Trainer {
@@ -98,6 +133,7 @@ impl Trainer {
             metrics: Vec::new(),
             worker_ms_total: 0.0,
             round_ms_total: 0.0,
+            supervisor,
         })
     }
 
@@ -170,16 +206,38 @@ impl Trainer {
         Ok(train_loss)
     }
 
+    /// End-of-run teardown: bill the straggler uplinks still in flight
+    /// (K < n only — transmitted messages the ledger must not lose;
+    /// these post-date the last round metric, so they appear in the
+    /// ledger-derived `RunResult` fields but not in metrics'
+    /// `uplink_bits`), broadcast SHUTDOWN to remote workers, and reap
+    /// any supervisor-spawned child processes. [`Trainer::run`] calls
+    /// this after its last round; drive it yourself when stepping rounds
+    /// manually over a tcp cluster, or the children only go away on
+    /// drop.
+    pub fn finish(&mut self) -> Result<()> {
+        self.runtime.drain_in_flight(&mut self.ledger)?;
+        self.runtime.shutdown()?;
+        if let Some(sup) = self.supervisor.as_mut() {
+            let nonzero = sup.reap(Duration::from_secs(10))?;
+            let dead = self.runtime.dead_workers();
+            if nonzero > dead.len() {
+                eprintln!(
+                    "warning: {nonzero} worker process(es) exited non-zero \
+                     ({} accounted as dead mid-run)",
+                    dead.len()
+                );
+            }
+        }
+        Ok(())
+    }
+
     pub fn run(mut self) -> Result<RunResult> {
         let total = Stopwatch::start();
         for round in 0..self.cfg.rounds {
             self.step(round)?;
         }
-        // Bill the straggler uplinks still in flight after the last round
-        // (K < n only) — transmitted messages the ledger must not lose.
-        // These post-date the last round metric, so they appear in the
-        // ledger-derived RunResult fields but not in metrics' uplink_bits.
-        self.runtime.drain_in_flight(&mut self.ledger)?;
+        self.finish()?;
         let final_eval = self.evaluator.eval(&self.theta)?;
         let server_ms_by_shard = self
             .server
@@ -202,6 +260,7 @@ impl Trainer {
             },
             stale_uplinks: self.ledger.stale_uplinks,
             dropped_uplinks: self.ledger.dropped_uplinks,
+            framing_bits: self.ledger.framing_bits,
             uplink_bits_by_worker: self.ledger.uplink_bits_by_worker.clone(),
             uplink_bits_by_shard: self.ledger.uplink_bits_by_shard.clone(),
             server_ms_by_shard,
@@ -239,17 +298,67 @@ type Workload = (
     Option<Rc<OptimizerExe>>,
 );
 
-fn build_workload(cfg: &TrainConfig) -> Result<Workload> {
+/// The quadratic substrate for this config — one construction shared by
+/// the leader's workload assembly and the remote worker daemon, so both
+/// sides build bitwise-identical shards.
+fn quadratic_problem(cfg: &TrainConfig) -> Result<QuadraticProblem> {
+    // Dirichlet sharding has no labels here; non-iid is expressed
+    // through σ_g > 0 instead.
+    let sigma_g = match Sharding::parse(&cfg.sharding)? {
+        Sharding::Iid => 0.0,
+        Sharding::Dirichlet { alpha } => (1.0 / alpha).min(10.0),
+    };
+    Ok(QuadraticProblem::new(cfg.seed, 256, cfg.workers, 20.0, 1.0, sigma_g))
+}
+
+/// The logistic substrate for this config (see [`quadratic_problem`]).
+fn logistic_problem(cfg: &TrainConfig) -> LogisticProblem {
+    LogisticProblem::new(cfg.seed, 64, 10, 32, 0.5)
+}
+
+/// Build worker `wid`'s gradient source and protocol worker half from a
+/// config — the remote half of the TCP handshake: a `comp-ams worker`
+/// daemon calls this with the `(wid, TrainConfig)` the leader ASSIGNed,
+/// and gets exactly the objects the leader's in-process pool would have
+/// built for that worker (same constructors, same seeds, same per-worker
+/// compressor salting), which is what makes a K = n TCP run bitwise
+/// identical to `InProc`.
+///
+/// Only the analytic substrates are supported: PJRT sources need the
+/// artifact bundle and are leader-pinned.
+pub fn build_worker_parts(
+    cfg: &TrainConfig,
+    wid: usize,
+) -> Result<(Box<dyn GradSource>, Box<dyn WorkerAlgo>)> {
+    anyhow::ensure!(
+        wid < cfg.workers,
+        "wid {wid} out of range for {} workers",
+        cfg.workers
+    );
+    let src: Box<dyn GradSource> = match cfg.model.as_str() {
+        "quadratic" => Box::new(quadratic_problem(cfg)?.source_for(wid, cfg.seed)),
+        "logistic" => Box::new(logistic_problem(cfg).source_for(wid, cfg.seed)),
+        other => bail!(
+            "multi-process workers support the analytic substrates \
+             (quadratic | logistic), not '{other}'"
+        ),
+    };
+    // Build the full worker-half set and keep ours: stochastic
+    // compressors are salted by worker index, so construction must go
+    // through the same path as the leader's.
+    let spec = AlgoSpec::parse(&cfg.algo)?;
+    let mut workers = spec.build(src.dim(), cfg.workers, cfg.rounds).0;
+    Ok((src, workers.swap_remove(wid)))
+}
+
+/// `n_sources` is how many *leader-side* gradient sources to build:
+/// `cfg.workers` for the in-process transports, 0 for tcp (remote worker
+/// processes own their sources). θ and the evaluator never depend on it.
+fn build_workload(cfg: &TrainConfig, n_sources: usize) -> Result<Workload> {
     match cfg.model.as_str() {
         "quadratic" => {
-            // Dirichlet sharding has no labels here; non-iid is expressed
-            // through σ_g > 0 instead.
-            let sigma_g = match Sharding::parse(&cfg.sharding)? {
-                Sharding::Iid => 0.0,
-                Sharding::Dirichlet { alpha } => (1.0 / alpha).min(10.0),
-            };
-            let p = QuadraticProblem::new(cfg.seed, 256, cfg.workers, 20.0, 1.0, sigma_g);
-            let sources: Vec<Box<dyn GradSource + Send>> = (0..cfg.workers)
+            let p = quadratic_problem(cfg)?;
+            let sources: Vec<Box<dyn GradSource + Send>> = (0..n_sources)
                 .map(|w| Box::new(p.source_for(w, cfg.seed)) as _)
                 .collect();
             let theta = vec![0.0f32; p.dim()];
@@ -257,8 +366,8 @@ fn build_workload(cfg: &TrainConfig) -> Result<Workload> {
             Ok((Sources::Threadable(sources), eval, theta, None))
         }
         "logistic" => {
-            let p = LogisticProblem::new(cfg.seed, 64, 10, 32, 0.5);
-            let sources: Vec<Box<dyn GradSource + Send>> = (0..cfg.workers)
+            let p = logistic_problem(cfg);
+            let sources: Vec<Box<dyn GradSource + Send>> = (0..n_sources)
                 .map(|w| Box::new(p.source_for(w, cfg.seed)) as _)
                 .collect();
             let theta = vec![0.0f32; p.p()];
@@ -266,6 +375,8 @@ fn build_workload(cfg: &TrainConfig) -> Result<Workload> {
                 Box::new(LogisticEvaluator { problem: p, seed: cfg.seed ^ 0xE0, n: 2000 });
             Ok((Sources::Threadable(sources), eval, theta, None))
         }
+        // PJRT models are never multi-process (validate() rejects tcp for
+        // them), so n_sources == cfg.workers here.
         name => build_pjrt_workload(cfg, name),
     }
 }

@@ -6,7 +6,7 @@
 //! the runtime or the protocols knows whether workers live on the leader
 //! thread, on OS threads, or (eventually) in other processes.
 //!
-//! Two implementations ship:
+//! Three implementations ship:
 //!
 //! - [`InProc`] — the in-process channels of [`WorkerPool`], exactly the
 //!   plumbing the lockstep trainer used: payloads move as Rust values,
@@ -19,6 +19,13 @@
 //!   over `InProc` (asserted by the transport property test), so moving a
 //!   worker behind a real socket is a transport swap, not a protocol
 //!   change.
+//! - [`Tcp`](super::net::Tcp) — real worker **processes** over localhost
+//!   sockets, speaking the same `Envelope` frames wrapped in the
+//!   length-prefixed wire framing of [`super::net`]. Workers are separate
+//!   OS processes (spawned by the [`supervisor`](super::supervisor) or
+//!   launched by hand with `comp-ams worker --leader ADDR`); a worker
+//!   whose connection drops surfaces as [`Event::Exit`] and becomes a
+//!   permanent straggler under partial participation.
 //!
 //! ## Envelope wire format
 //!
@@ -104,7 +111,7 @@ impl Envelope {
     }
 }
 
-/// One uplink arrival, as the runtime's event loop consumes it.
+/// One transport arrival, as the runtime's event loop consumes it.
 #[derive(Debug)]
 pub enum Event {
     Uplink {
@@ -113,6 +120,13 @@ pub enum Event {
         /// The round the worker computed at (== `envelope.round`).
         round: u64,
         envelope: Envelope,
+    },
+    /// Worker `wid`'s connection is gone (process crashed or socket
+    /// dropped). Only process-boundary transports emit this; the runtime
+    /// turns the worker into a *permanent straggler*: never re-dispatched,
+    /// and any uplink it still owed is counted in `dropped_uplinks`.
+    Exit {
+        wid: usize,
     },
 }
 
@@ -128,15 +142,35 @@ pub trait Transport {
     fn n_workers(&self) -> usize;
 
     /// Send θ for round `ctx.round` to worker `wid` and start its round.
+    /// Returns `Ok(false)` when the worker's connection is already gone
+    /// (a crashed remote process) — the caller must treat the worker as
+    /// dead rather than dispatched. In-process transports always return
+    /// `Ok(true)`; a hard `Err` still means the transport itself broke.
     fn send_downlink(
         &mut self,
         wid: usize,
         theta: &Arc<Vec<f32>>,
         ctx: &RoundCtx,
-    ) -> Result<()>;
+    ) -> Result<bool>;
 
-    /// Block until the next uplink arrives.
+    /// Block until the next uplink (or worker exit) arrives.
     fn recv_event(&mut self) -> Result<Event>;
+
+    /// Per-message framing overhead in bits, on top of
+    /// [`Payload::wire_bits`]: what the ledger bills as `framing_bits`
+    /// for every consumed uplink and dispatched downlink. Zero for
+    /// [`InProc`] (no serialization), the 16-byte [`Envelope`] header for
+    /// [`Loopback`], envelope + socket frame header for TCP.
+    fn frame_overhead_bits(&self) -> u64 {
+        0
+    }
+
+    /// Tell every live worker the run is over (a SHUTDOWN broadcast for
+    /// socket transports; no-op in process). Called once after the final
+    /// drain; must be idempotent.
+    fn shutdown(&mut self) -> Result<()> {
+        Ok(())
+    }
 }
 
 /// In-process transport: messages move as Rust values over the pool's
@@ -162,8 +196,9 @@ impl Transport for InProc {
         wid: usize,
         theta: &Arc<Vec<f32>>,
         ctx: &RoundCtx,
-    ) -> Result<()> {
-        self.pool.send(wid, theta, ctx)
+    ) -> Result<bool> {
+        self.pool.send(wid, theta, ctx)?;
+        Ok(true)
     }
 
     fn recv_event(&mut self) -> Result<Event> {
@@ -203,7 +238,7 @@ impl Transport for Loopback {
         wid: usize,
         theta: &Arc<Vec<f32>>,
         ctx: &RoundCtx,
-    ) -> Result<()> {
+    ) -> Result<bool> {
         let frame = Envelope {
             wid: wid as u32,
             round: ctx.round,
@@ -224,7 +259,8 @@ impl Transport for Loopback {
         // dispatch is always synchronous, so (round, lr) is the whole
         // context — exactly what a remote worker process would rebuild.
         let wire_ctx = RoundCtx::sync(dec.round, dec.loss);
-        self.pool.send(wid, &theta, &wire_ctx)
+        self.pool.send(wid, &theta, &wire_ctx)?;
+        Ok(true)
     }
 
     fn recv_event(&mut self) -> Result<Event> {
@@ -243,13 +279,27 @@ impl Transport for Loopback {
         );
         Ok(Event::Uplink { wid, round, envelope })
     }
+
+    fn frame_overhead_bits(&self) -> u64 {
+        (ENVELOPE_HEADER_BYTES as u64) * 8
+    }
 }
+
+/// The valid `--transport` spellings, for every error message that has
+/// to enumerate them.
+pub const TRANSPORT_CHOICES: &str = "inproc | loopback | tcp[:port]";
 
 /// Parsed transport selector (`TrainConfig::transport` / `--transport`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TransportSpec {
     InProc,
     Loopback,
+    /// Multi-process workers over localhost sockets
+    /// ([`super::net::Tcp`]; the listener deliberately binds loopback
+    /// only — cross-host clusters would need an authenticated bind
+    /// address first). `port` 0 (the bare `tcp` spelling) binds an
+    /// ephemeral port.
+    Tcp { port: u16 },
 }
 
 impl TransportSpec {
@@ -257,15 +307,39 @@ impl TransportSpec {
         match s {
             "inproc" => Ok(TransportSpec::InProc),
             "loopback" => Ok(TransportSpec::Loopback),
-            other => bail!("unknown transport '{other}' (inproc | loopback)"),
+            "tcp" => Ok(TransportSpec::Tcp { port: 0 }),
+            other => {
+                if let Some(port) = other.strip_prefix("tcp:") {
+                    let port: u16 = port.parse().map_err(|_| {
+                        anyhow::anyhow!(
+                            "bad tcp port '{port}' in transport '{other}' \
+                             (valid transports: {TRANSPORT_CHOICES})"
+                        )
+                    })?;
+                    return Ok(TransportSpec::Tcp { port });
+                }
+                bail!("unknown transport '{other}' (valid transports: {TRANSPORT_CHOICES})")
+            }
         }
     }
 
-    /// Wrap a worker pool in this transport.
-    pub fn build(self, pool: WorkerPool) -> Box<dyn Transport> {
+    /// True for transports whose workers live in other processes (and
+    /// therefore need no leader-side worker pool).
+    pub fn is_multiprocess(self) -> bool {
+        matches!(self, TransportSpec::Tcp { .. })
+    }
+
+    /// Wrap a worker pool in this transport. Multi-process transports
+    /// have no pool to wrap — the trainer assembles
+    /// [`super::net::Tcp`] directly (listener + handshake + optional
+    /// supervisor), so building them here is an error.
+    pub fn build(self, pool: WorkerPool) -> Result<Box<dyn Transport>> {
         match self {
-            TransportSpec::InProc => Box::new(InProc::new(pool)),
-            TransportSpec::Loopback => Box::new(Loopback::new(pool)),
+            TransportSpec::InProc => Ok(Box::new(InProc::new(pool))),
+            TransportSpec::Loopback => Ok(Box::new(Loopback::new(pool))),
+            TransportSpec::Tcp { .. } => {
+                bail!("tcp transport is assembled by the trainer, not from a worker pool")
+            }
         }
     }
 }
@@ -337,7 +411,18 @@ mod tests {
     fn transport_spec_parses_and_rejects() {
         assert_eq!(TransportSpec::parse("inproc").unwrap(), TransportSpec::InProc);
         assert_eq!(TransportSpec::parse("loopback").unwrap(), TransportSpec::Loopback);
-        assert!(TransportSpec::parse("tcp").is_err());
+        assert_eq!(TransportSpec::parse("tcp").unwrap(), TransportSpec::Tcp { port: 0 });
+        assert_eq!(
+            TransportSpec::parse("tcp:7001").unwrap(),
+            TransportSpec::Tcp { port: 7001 }
+        );
+        assert!(TransportSpec::Tcp { port: 0 }.is_multiprocess());
+        assert!(!TransportSpec::InProc.is_multiprocess());
+        // Unknown spellings and bad ports enumerate the valid choices.
+        for bad in ["udp", "tcp:notaport", "tcp:70000"] {
+            let err = TransportSpec::parse(bad).unwrap_err().to_string();
+            assert!(err.contains("inproc | loopback | tcp[:port]"), "{bad}: {err}");
+        }
     }
 
     #[test]
@@ -365,12 +450,25 @@ mod tests {
         }
         for _ in 0..n {
             let Event::Uplink { wid: wa, round: ra, envelope: ea } =
-                inproc.recv_event().unwrap();
+                inproc.recv_event().unwrap()
+            else {
+                panic!("inproc emitted a non-uplink event")
+            };
             let Event::Uplink { wid: wb, round: rb, envelope: eb } =
-                loopback.recv_event().unwrap();
+                loopback.recv_event().unwrap()
+            else {
+                panic!("loopback emitted a non-uplink event")
+            };
             assert_eq!((wa, ra), (wb, rb));
             assert_eq!(ea, eb);
             assert_eq!(ea.loss.to_bits(), eb.loss.to_bits());
         }
+        // Framing overhead: none in-process, the envelope header when
+        // every message crosses the byte framing.
+        assert_eq!(inproc.frame_overhead_bits(), 0);
+        assert_eq!(
+            loopback.frame_overhead_bits(),
+            ENVELOPE_HEADER_BYTES as u64 * 8
+        );
     }
 }

@@ -1,0 +1,180 @@
+//! The worker daemon: one remote worker process of a TCP cluster.
+//!
+//! `comp-ams worker --leader HOST:PORT` runs this loop. The daemon
+//! connects to the leader, handshakes (HELLO → ASSIGN, which carries its
+//! `wid` and the full serialized [`TrainConfig`]), rebuilds its gradient
+//! shard and protocol worker half from exactly the constructors the
+//! in-process pool uses ([`build_worker_parts`]), and then services
+//! rounds until SHUTDOWN:
+//!
+//! ```text
+//!   DOWNLINK frame → Envelope::decode → (θ, RoundCtx::sync(round, lr))
+//!     → src.grad(θ) → algo.process(grad)            [the worker pipeline]
+//!     → Envelope{wid, round, loss, payload} → UPLINK frame
+//! ```
+//!
+//! The worker-side `RoundCtx` comes entirely off the wire — the same
+//! `RoundCtx::sync`-from-frame path the `Loopback` transport proved —
+//! so a K = n TCP run is bitwise identical to `InProc`.
+//!
+//! `exit_after` is fault injection for the crash tests: the daemon exits
+//! (status 17) on receiving the downlink for that round, *before*
+//! uplinking — dying with an uplink in flight, exactly the permanent-
+//! straggler case the supervisor/runtime pair must absorb.
+
+use std::io::ErrorKind;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::algo::RoundCtx;
+use crate::compress::Payload;
+use crate::config::TrainConfig;
+
+use super::net::{read_frame, write_frame, FrameKind};
+use super::transport::Envelope;
+use super::trainer::build_worker_parts;
+
+/// Exit status of an `--exit-after` fault-injected death (distinguishes
+/// the injected crash from real failures in test assertions).
+pub const INJECTED_EXIT_STATUS: i32 = 17;
+
+/// How long the daemon keeps retrying the initial connect (covers the
+/// two-terminal case where the worker is started before the leader).
+const CONNECT_PATIENCE: Duration = Duration::from_secs(10);
+
+fn connect_with_retry(leader: &str, patience: Duration) -> Result<TcpStream> {
+    let deadline = Instant::now() + patience;
+    loop {
+        match TcpStream::connect(leader) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                // Only keep retrying the transient not-up-yet kinds; a
+                // bad/unresolvable address should fail fast, not spin out
+                // the whole patience window.
+                let transient = matches!(
+                    e.kind(),
+                    ErrorKind::ConnectionRefused
+                        | ErrorKind::ConnectionReset
+                        | ErrorKind::TimedOut
+                        | ErrorKind::AddrNotAvailable
+                );
+                if !transient || Instant::now() >= deadline {
+                    return Err(e).with_context(|| format!("connecting to leader {leader}"));
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+}
+
+/// Run the worker daemon until the leader says SHUTDOWN. Returns `Ok`
+/// only on a clean shutdown; a leader that vanishes mid-run is an error
+/// (non-zero exit, so a supervisor — or a human — can tell).
+pub fn run_worker(leader: &str, exit_after: Option<u64>) -> Result<()> {
+    let mut stream = connect_with_retry(leader, CONNECT_PATIENCE)?;
+    stream.set_nodelay(true)?;
+    write_frame(&mut stream, FrameKind::Hello, &[])?;
+    let (wid, cfg) = match read_frame(&mut stream)? {
+        Some((FrameKind::Assign, body)) => decode_assign(&body)?,
+        Some((kind, _)) => bail!("expected ASSIGN after HELLO, got {kind:?}"),
+        None => bail!("leader closed the connection during the handshake"),
+    };
+    let (mut src, mut algo) = build_worker_parts(&cfg, wid as usize)?;
+    eprintln!(
+        "[worker {wid}] connected to {leader}: model={} algo={} dim={}",
+        cfg.model,
+        cfg.algo,
+        src.dim()
+    );
+    loop {
+        match read_frame(&mut stream)? {
+            Some((FrameKind::Downlink, body)) => {
+                let env = Envelope::decode(&body)?;
+                ensure!(
+                    env.wid == wid,
+                    "downlink addressed to wid {} arrived at worker {wid}",
+                    env.wid
+                );
+                let theta = match env.payload {
+                    Payload::Dense(v) => v,
+                    other => bail!("downlink decoded to {other:?}, expected dense θ"),
+                };
+                if exit_after.is_some_and(|r| env.round >= r) {
+                    // Injected crash: die mid-round, uplink owed.
+                    eprintln!("[worker {wid}] fault injection: exiting at round {}", env.round);
+                    std::process::exit(INJECTED_EXIT_STATUS);
+                }
+                // The whole RoundCtx comes off the wire (lr rides the
+                // envelope's scalar slot on downlinks).
+                let ctx = RoundCtx::sync(env.round, env.loss);
+                let (loss, grad) = src.grad(&theta, ctx.round)?;
+                let payload = algo.process(&grad, &ctx)?;
+                let up = Envelope { wid, round: env.round, loss, payload };
+                write_frame(&mut stream, FrameKind::Uplink, &up.encode())?;
+            }
+            Some((FrameKind::Shutdown, _)) => {
+                eprintln!("[worker {wid}] shutdown received, exiting");
+                return Ok(());
+            }
+            Some((kind, _)) => bail!("unexpected {kind:?} frame on the downlink stream"),
+            None => bail!("leader closed the connection mid-run"),
+        }
+    }
+}
+
+fn decode_assign(body: &[u8]) -> Result<(u32, TrainConfig)> {
+    ensure!(body.len() > 4, "ASSIGN body truncated: {} bytes", body.len());
+    let wid = u32::from_le_bytes(body[0..4].try_into().unwrap());
+    let json = std::str::from_utf8(&body[4..]).context("ASSIGN config is not UTF-8")?;
+    let cfg = TrainConfig::from_json(&crate::util::json::parse(json)?)
+        .context("parsing the ASSIGN TrainConfig")?;
+    ensure!(
+        (wid as usize) < cfg.workers,
+        "assigned wid {wid} out of range for {} workers",
+        cfg.workers
+    );
+    Ok((wid, cfg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn assign_roundtrip_decodes_wid_and_config() {
+        let cfg = TrainConfig::preset("quadratic", "comp-ams-topk:0.1");
+        let mut body = Vec::new();
+        body.extend(3u32.to_le_bytes());
+        body.extend_from_slice(cfg.to_json().to_string_pretty().as_bytes());
+        let (wid, back) = decode_assign(&body).unwrap();
+        assert_eq!(wid, 3);
+        assert_eq!(back.model, "quadratic");
+        assert_eq!(back.algo, "comp-ams-topk:0.1");
+        assert_eq!(back.workers, cfg.workers);
+    }
+
+    #[test]
+    fn assign_rejects_garbage() {
+        assert!(decode_assign(&[1, 2]).is_err());
+        let mut body = Vec::new();
+        body.extend(99u32.to_le_bytes()); // wid out of range
+        let cfg = TrainConfig::preset("quadratic", "dist-sgd");
+        body.extend_from_slice(cfg.to_json().to_string_pretty().as_bytes());
+        assert!(decode_assign(&body).is_err());
+        let mut body = Vec::new();
+        body.extend(0u32.to_le_bytes());
+        body.extend_from_slice(b"not json at all");
+        assert!(decode_assign(&body).is_err());
+    }
+
+    #[test]
+    fn connect_to_dead_leader_errors_out() {
+        // Port 1 is never listening; the retry loop must give up with a
+        // context-ful error rather than hang forever.
+        let t = Instant::now();
+        assert!(connect_with_retry("127.0.0.1:1", Duration::from_millis(200)).is_err());
+        assert!(t.elapsed() < Duration::from_secs(30));
+    }
+}

@@ -26,7 +26,7 @@
 //! | [`algo`]        | the two-sided protocols ([`algo::WorkerAlgo`] / [`algo::ServerAlgo`]), [`algo::AlgoSpec`] parsing, and the sharded server ([`algo::sharded`]) |
 //! | [`compress`]    | Top-k / Random-k / Block-Sign / QSGD compressors, error feedback, and the exact wire codec ([`compress::wire`]) |
 //! | [`config`]      | [`TrainConfig`]: presets, validation, JSON round-trip               |
-//! | [`coordinator`] | event-driven cluster runtime ([`coordinator::runtime`]), transports ([`coordinator::transport`]), worker pool backends, trainer, communication ledger, run metrics |
+//! | [`coordinator`] | event-driven cluster runtime ([`coordinator::runtime`]), transports ([`coordinator::transport`], TCP sockets in [`coordinator::net`]), worker daemon ([`coordinator::worker`]) + process supervisor ([`coordinator::supervisor`]), worker pool backends, trainer, communication ledger, run metrics |
 //! | [`data`]        | synthetic datasets + label-skew sharding (Dirichlet)                |
 //! | [`exp`]         | drivers regenerating the paper's figures and tables                 |
 //! | [`grad`]        | gradient sources: analytic substrates + the PJRT model path         |
@@ -37,12 +37,15 @@
 //!
 //! Execution is parallel on both sides of the wire while staying
 //! bit-deterministic: worker pipelines run on per-worker threads
-//! ([`coordinator::cluster::WorkerPool`]), the server update can be
+//! ([`coordinator::cluster::WorkerPool`]) or in separate worker
+//! *processes* over TCP (`--transport tcp --spawn-workers`,
+//! [`coordinator::net`]), the server update can be
 //! partitioned across θ shards ([`algo::sharded::ShardedServer`]), and
 //! the leader drives rounds as an event loop over a message transport
 //! ([`coordinator::runtime::ClusterRuntime`]) — with optional partial
 //! participation (`--quorum K`) where stragglers land as stale
-//! gradients instead of blocking the round.
+//! gradients instead of blocking the round, and a crashed worker
+//! process becomes a permanent straggler instead of killing the run.
 //!
 //! ## Quick start
 //! ```no_run

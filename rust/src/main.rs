@@ -4,6 +4,8 @@
 //! comp-ams train --model mnist_cnn --algo comp-ams-topk:0.01 --workers 16 \
 //!                --rounds 200 --lr 0.001 [--sharding dirichlet:0.5]
 //! comp-ams train --config run.json
+//! comp-ams train --model quadratic --transport tcp --spawn-workers
+//! comp-ams worker --leader 127.0.0.1:7000
 //! comp-ams exp fig1|fig2|fig3|fig4|table1|ablation [--fast]
 //! comp-ams inspect [--artifacts artifacts]
 //! ```
@@ -29,9 +31,10 @@ fn real_main() -> Result<()> {
     let args = Args::from_env()?;
     match args.positional.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
+        Some("worker") => cmd_worker(&args),
         Some("exp") => cmd_exp(&args),
         Some("inspect") => cmd_inspect(&args),
-        Some(other) => bail!("unknown command '{other}' (train | exp | inspect)"),
+        Some(other) => bail!("unknown command '{other}' (train | worker | exp | inspect)"),
         None => {
             eprintln!("{}", USAGE);
             Ok(())
@@ -55,13 +58,22 @@ commands:
                                θ shards (bitwise-identical trajectories)
            --server-threaded t run shard updates on a leader thread pool
            --transport T       inproc | loopback (byte-framed envelopes,
-                               bitwise-identical trajectories)
+                               bitwise-identical trajectories) | tcp[:port]
+                               (real worker processes over localhost
+                               sockets; port 0/omitted = ephemeral)
+           --spawn-workers t   with tcp: spawn the worker daemons as child
+                               processes (otherwise the leader waits for
+                               `comp-ams worker` processes to connect)
            --quorum K          server steps once K on-time uplinks arrive
                                (0 = full participation, the default)
            --max-staleness S   apply straggler uplinks up to S rounds
                                late; drop (and count) beyond
            --decay-at r1,r2 --decay-factor F
            --config file.json  load a config (flags override)
+  worker   run one worker daemon of a tcp cluster
+           --leader HOST:PORT  the leader's listener address
+           --exit-after N      fault injection: crash at round N before
+                               uplinking (tests the straggler machinery)
   exp      regenerate a paper artifact: fig1|fig2|fig3|fig4|table1|ablation
            [--fast] [--seed N] [--artifacts DIR] [--results DIR] [--verbose]
   inspect  print the artifact manifest";
@@ -70,9 +82,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     args.ensure_known(&[
         "model", "algo", "workers", "rounds", "lr", "seed", "sharding",
         "eval-every", "eval-batches", "log-every", "fused", "threaded",
-        "server-shards", "server-threaded", "transport", "quorum",
-        "max-staleness", "artifacts", "config", "decay-at", "decay-factor",
-        "rounds-per-epoch",
+        "server-shards", "server-threaded", "transport", "spawn-workers",
+        "quorum", "max-staleness", "artifacts", "config", "decay-at",
+        "decay-factor", "rounds-per-epoch",
     ])?;
     let mut cfg = match args.get("config") {
         Some(path) => {
@@ -105,6 +117,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     cfg.server_shards = args.usize_or("server-shards", cfg.server_shards)?;
     cfg.server_threaded = args.bool_or("server-threaded", cfg.server_threaded)?;
     cfg.transport = args.str_or("transport", &cfg.transport);
+    cfg.spawn_workers = args.bool_or("spawn-workers", cfg.spawn_workers)?;
     cfg.quorum = args.usize_or("quorum", cfg.quorum)?;
     cfg.max_staleness = args.u64_or("max-staleness", cfg.max_staleness)?;
     cfg.rounds_per_epoch = args.u64_or("rounds-per-epoch", cfg.rounds_per_epoch)?;
@@ -138,6 +151,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         run.total_wall_ms / 1e3,
         run.coord_overhead * 100.0
     );
+    if run.framing_bits > 0 {
+        eprintln!(
+            "framing: {:.3} MB transport overhead (envelope + frame headers, \
+             billed outside the uplink ledger)",
+            run.framing_bits as f64 / 8e6
+        );
+    }
     if run.stale_uplinks > 0 || run.dropped_uplinks > 0 {
         eprintln!(
             "quorum: {} stale uplinks applied, {} dropped past --max-staleness",
@@ -154,6 +174,18 @@ fn cmd_train(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    args.ensure_known(&["leader", "exit-after"])?;
+    let leader = args
+        .get("leader")
+        .context("usage: comp-ams worker --leader HOST:PORT [--exit-after N]")?;
+    let exit_after = match args.get("exit-after") {
+        Some(v) => Some(v.parse::<u64>().context("bad --exit-after")?),
+        None => None,
+    };
+    comp_ams::coordinator::worker::run_worker(leader, exit_after)
 }
 
 fn cmd_exp(args: &Args) -> Result<()> {

@@ -1,0 +1,199 @@
+//! Multi-process cluster integration tests: real spawned worker
+//! processes talking to the leader over localhost TCP.
+//!
+//! These are the acceptance tests of the socket transport:
+//!
+//! 1. with K = n, a `--transport tcp --spawn-workers` run is **bitwise
+//!    identical** in loss and θ trajectories to `InProc`, across all six
+//!    protocol strings;
+//! 2. killing one worker mid-run under `--quorum K < n` keeps the loss
+//!    descending, with the dead worker accounted in `dropped_uplinks`.
+//!
+//! The spawned program is the real `comp-ams` launcher: integration
+//! tests run inside the test harness binary, so the supervisor is
+//! pointed at the launcher via `COMP_AMS_WORKER_BIN`
+//! (cargo builds and exposes it as `CARGO_BIN_EXE_comp-ams`).
+
+use std::time::Duration;
+
+use comp_ams::algo::AlgoSpec;
+use comp_ams::config::TrainConfig;
+use comp_ams::coordinator::runtime::ClusterRuntime;
+use comp_ams::coordinator::supervisor::{Supervisor, WORKER_BIN_ENV};
+use comp_ams::coordinator::trainer::Trainer;
+use comp_ams::coordinator::{CommLedger, TcpLeader};
+
+/// Point the supervisor at the real launcher binary (the default,
+/// `current_exe`, is this test harness).
+fn use_real_worker_bin() {
+    std::env::set_var(WORKER_BIN_ENV, env!("CARGO_BIN_EXE_comp-ams"));
+}
+
+fn quad_cfg(algo: &str) -> TrainConfig {
+    let mut cfg = TrainConfig::preset("quadratic", algo);
+    cfg.workers = 3;
+    cfg.rounds = 20;
+    cfg.lr = 0.02;
+    cfg.eval_every = 0;
+    cfg
+}
+
+/// Step every round through a `Trainer`, tear the cluster down cleanly,
+/// and return (losses, θ, per-worker uplink bits, framing bits).
+fn run_to_end(cfg: &TrainConfig) -> (Vec<f32>, Vec<f32>, Vec<u64>, u64) {
+    let mut t = Trainer::new(cfg).unwrap();
+    let mut losses = Vec::new();
+    for r in 0..cfg.rounds {
+        losses.push(t.step(r).unwrap());
+    }
+    t.finish().unwrap();
+    let bits = t.ledger().uplink_bits_by_worker.clone();
+    let framing = t.ledger().framing_bits;
+    (losses, t.theta, bits, framing)
+}
+
+#[test]
+fn spawned_tcp_cluster_is_bitwise_identical_to_inproc() {
+    use_real_worker_bin();
+    for algo in [
+        "dist-ams",
+        "comp-ams-topk:0.05",
+        "comp-ams-blocksign:64",
+        "qadam",
+        "1bitadam:10",
+        "dist-sgd",
+    ] {
+        let cfg = quad_cfg(algo);
+        let (base_loss, base_theta, base_bits, base_framing) = run_to_end(&cfg);
+        assert_eq!(base_framing, 0, "{algo}: inproc bills no framing");
+
+        let mut cfg = quad_cfg(algo);
+        cfg.transport = "tcp".into();
+        cfg.spawn_workers = true;
+        let (loss, theta, bits, framing) = run_to_end(&cfg);
+
+        assert_eq!(base_bits, bits, "{algo}: per-worker uplink bits");
+        // Framing is billed per message (uplinks + downlinks), never in
+        // the uplink ledger: 25 bytes per frame, 2n messages per round.
+        assert_eq!(
+            framing,
+            cfg.rounds * cfg.workers as u64 * 2 * 25 * 8,
+            "{algo}: framing bill"
+        );
+        for (r, (a, b)) in base_loss.iter().zip(&loss).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{algo}: loss diverged at round {r}");
+        }
+        for (i, (a, b)) in base_theta.iter().zip(&theta).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{algo}: θ[{i}] diverged");
+        }
+    }
+}
+
+#[test]
+fn killed_worker_becomes_permanent_straggler_under_partial_quorum() {
+    use_real_worker_bin();
+    let mut cfg = quad_cfg("comp-ams-topk:0.05");
+    cfg.workers = 4;
+    cfg.quorum = 3;
+    cfg.max_staleness = 2;
+    cfg.rounds = 40;
+    cfg.lr = 0.05;
+    cfg.transport = "tcp".into();
+
+    // Assemble the cluster by hand so one worker can be fault-injected:
+    // `--exit-after 5` makes it crash on receiving the round-5 downlink,
+    // *before* uplinking — it dies owing the leader an uplink.
+    let leader = TcpLeader::bind(0).unwrap();
+    let addr = leader.local_addr().unwrap().to_string();
+    let mut sup = Supervisor::spawn_with(cfg.workers, &addr, |i| {
+        if i == 0 {
+            vec!["--exit-after".into(), "5".into()]
+        } else {
+            Vec::new()
+        }
+    })
+    .unwrap();
+    let tcp = leader.accept_workers(&cfg).unwrap();
+    let mut rt = ClusterRuntime::new(Box::new(tcp), cfg.quorum, cfg.max_staleness).unwrap();
+    let spec = AlgoSpec::parse(&cfg.algo).unwrap();
+    let (_, mut server) = spec.build(256, cfg.workers, cfg.rounds);
+    let mut theta = vec![0.0f32; 256];
+    let mut ledger = CommLedger::new();
+
+    let mut losses = Vec::new();
+    for r in 0..cfg.rounds {
+        let out = rt
+            .run_round(&mut theta, server.as_mut(), r, cfg.lr, &mut ledger)
+            .unwrap_or_else(|e| panic!("round {r}: {e:#}"));
+        losses.push(out.train_loss);
+    }
+    rt.drain_in_flight(&mut ledger).unwrap();
+    rt.shutdown().unwrap();
+
+    // The crash was absorbed: exactly one permanent straggler, its owed
+    // uplink accounted as dropped, and the surviving quorum kept
+    // descending.
+    assert_eq!(rt.dead_workers().len(), 1, "one worker should be dead");
+    assert!(
+        ledger.dropped_uplinks >= 1,
+        "dead worker's owed uplink must land in dropped_uplinks"
+    );
+    let first = losses[0];
+    let last = losses[losses.len() - 10..].iter().sum::<f32>() / 10.0;
+    assert!(last < first - 0.3, "no descent after the crash: {first:.3} -> {last:.3}");
+
+    // Reap: the injected crash exits non-zero, everyone else exits zero
+    // on SHUTDOWN; nobody is left running.
+    let nonzero = sup.reap(Duration::from_secs(10)).unwrap();
+    assert_eq!(nonzero, 1, "exactly the fault-injected worker exits non-zero");
+    assert_eq!(sup.alive().unwrap(), 0);
+}
+
+#[test]
+fn externally_launched_workers_form_the_same_cluster() {
+    // No supervisor: launch the daemons ourselves (the two-terminal
+    // workflow from the README) and check the run still descends.
+    use_real_worker_bin();
+    let mut cfg = quad_cfg("comp-ams-blocksign:64");
+    cfg.workers = 2;
+    cfg.rounds = 30;
+    cfg.lr = 0.05;
+    cfg.transport = "tcp".into();
+
+    let leader = TcpLeader::bind(0).unwrap();
+    let addr = leader.local_addr().unwrap().to_string();
+    let mut children: Vec<std::process::Child> = (0..cfg.workers)
+        .map(|_| {
+            std::process::Command::new(env!("CARGO_BIN_EXE_comp-ams"))
+                .args(["worker", "--leader", &addr])
+                .stdin(std::process::Stdio::null())
+                .stdout(std::process::Stdio::null())
+                .spawn()
+                .unwrap()
+        })
+        .collect();
+    let tcp = leader.accept_workers(&cfg).unwrap();
+    let mut rt = ClusterRuntime::new(Box::new(tcp), 0, cfg.max_staleness).unwrap();
+    let spec = AlgoSpec::parse(&cfg.algo).unwrap();
+    let (_, mut server) = spec.build(256, cfg.workers, cfg.rounds);
+    let mut theta = vec![0.0f32; 256];
+    let mut ledger = CommLedger::new();
+    let mut losses = Vec::new();
+    for r in 0..cfg.rounds {
+        losses.push(
+            rt.run_round(&mut theta, server.as_mut(), r, cfg.lr, &mut ledger)
+                .unwrap()
+                .train_loss,
+        );
+    }
+    rt.drain_in_flight(&mut ledger).unwrap();
+    rt.shutdown().unwrap();
+    assert!(losses[losses.len() - 1] < losses[0] - 0.3);
+    assert_eq!(ledger.stale_uplinks, 0);
+    assert_eq!(ledger.dropped_uplinks, 0);
+    // The daemons exit 0 on SHUTDOWN.
+    for c in children.iter_mut() {
+        let status = c.wait().unwrap();
+        assert!(status.success(), "worker exited {status:?}");
+    }
+}

@@ -305,9 +305,13 @@ fn prop_payload_slice_concat_reproduces_full_decode() {
 
         for p in &payloads {
             let full = p.to_dense(d).unwrap();
+            // The one-pass split (the sharded server's routing path) must
+            // agree payload-for-payload with per-shard slice_range.
+            let split = p.slice_into_shards(&bounds).unwrap();
             let mut rebuilt: Vec<f32> = Vec::with_capacity(d);
-            for w in bounds.windows(2) {
+            for (k, w) in bounds.windows(2).enumerate() {
                 let s = p.slice_range(w[0], w[1]).unwrap();
+                assert_eq!(split[k], s, "slice_into_shards shard {k} of {p:?}");
                 // Slices must survive the byte codec like any payload.
                 let rt = Payload::decode(&s.encode()).unwrap();
                 assert_eq!(rt, s);
