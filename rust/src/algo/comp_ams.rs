@@ -52,6 +52,22 @@ impl WorkerAlgo for CompAmsWorker {
     fn process(&mut self, grad: &[f32], _ctx: &RoundCtx) -> Result<Payload> {
         self.ef.compress(grad, self.compressor.as_mut())
     }
+
+    fn export_state(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        crate::util::bytes::put_bytes(&mut out, &self.compressor.export_state());
+        crate::util::bytes::put_bytes(&mut out, &self.ef.export_state());
+        out
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut c = crate::util::bytes::Cursor::new(bytes);
+        let comp = c.bytes()?.to_vec();
+        let ef = c.bytes()?.to_vec();
+        c.finish()?;
+        self.compressor.import_state(&comp)?;
+        self.ef.import_state(&ef)
+    }
 }
 
 /// Server half: AMSGrad with all moment state on the leader. Pure-Rust
@@ -101,6 +117,32 @@ impl ServerAlgo for CompAmsServer {
         self.avg = avg;
         Ok(())
     }
+
+    fn export_state(&self) -> Result<Vec<u8>> {
+        let mut out = Vec::new();
+        crate::util::bytes::put_f32s(&mut out, &self.opt.m);
+        crate::util::bytes::put_f32s(&mut out, &self.opt.v);
+        crate::util::bytes::put_f32s(&mut out, &self.opt.vhat);
+        Ok(out)
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut c = crate::util::bytes::Cursor::new(bytes);
+        let m = c.f32s()?;
+        let v = c.f32s()?;
+        let vhat = c.f32s()?;
+        c.finish()?;
+        anyhow::ensure!(
+            m.len() == self.opt.dim() && v.len() == self.opt.dim() && vhat.len() == self.opt.dim(),
+            "amsgrad state dim mismatch: blob {} vs {}",
+            m.len(),
+            self.opt.dim()
+        );
+        self.opt.m = m;
+        self.opt.v = v;
+        self.opt.vhat = vhat;
+        Ok(())
+    }
 }
 
 /// [`CompAmsServer`] with the update routed through the Pallas
@@ -140,6 +182,14 @@ impl ServerAlgo for FusedCompAmsServer {
         opt.vhat = vh2;
         self.inner.avg = avg;
         Ok(())
+    }
+
+    fn export_state(&self) -> Result<Vec<u8>> {
+        self.inner.export_state()
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> Result<()> {
+        self.inner.import_state(bytes)
     }
 }
 

@@ -48,6 +48,26 @@ impl ServerAlgo for DistSgdServer {
         self.avg = avg;
         Ok(())
     }
+
+    fn export_state(&self) -> Result<Vec<u8>> {
+        let mut out = Vec::new();
+        crate::util::bytes::put_f32s(&mut out, &self.opt.buf);
+        Ok(out)
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut c = crate::util::bytes::Cursor::new(bytes);
+        let buf = c.f32s()?;
+        c.finish()?;
+        anyhow::ensure!(
+            buf.len() == self.opt.buf.len(),
+            "dist-sgd velocity dim mismatch: blob {} vs {}",
+            buf.len(),
+            self.opt.buf.len()
+        );
+        self.opt.buf = buf;
+        Ok(())
+    }
 }
 
 /// Build the full Dist-SGD protocol: n worker halves + the server half.

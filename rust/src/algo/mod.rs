@@ -96,6 +96,25 @@ pub trait WorkerAlgo: Send {
     fn state_bytes(&self) -> usize {
         0
     }
+
+    /// Serialize this worker half's trajectory state (EF residual,
+    /// compressor RNG, local moments) for suspend/resume. A resumed
+    /// worker built from the same config with this blob imported
+    /// continues the trajectory bitwise. Stateless halves return empty.
+    fn export_state(&self) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Restore a blob produced by [`WorkerAlgo::export_state`].
+    fn import_state(&mut self, bytes: &[u8]) -> Result<()> {
+        if !bytes.is_empty() {
+            bail!(
+                "stateless worker half got a {}-byte state blob",
+                bytes.len()
+            );
+        }
+        Ok(())
+    }
 }
 
 /// The server half of a protocol: consumes all n uplink messages and
@@ -116,6 +135,26 @@ pub trait ServerAlgo {
     /// `None` for single-shard servers.
     fn shard_stats(&self) -> Option<&ShardStats> {
         None
+    }
+
+    /// Serialize the server optimizer's trajectory state (moments,
+    /// preconditioners, step counters) for suspend/resume. Stateless
+    /// servers return empty; [`sharded::ShardedServer`] concatenates its
+    /// per-shard blobs.
+    fn export_state(&self) -> Result<Vec<u8>> {
+        Ok(Vec::new())
+    }
+
+    /// Restore a blob produced by [`ServerAlgo::export_state`].
+    fn import_state(&mut self, bytes: &[u8]) -> Result<()> {
+        if !bytes.is_empty() {
+            bail!(
+                "server '{}' is stateless but got a {}-byte state blob",
+                self.name(),
+                bytes.len()
+            );
+        }
+        Ok(())
     }
 }
 

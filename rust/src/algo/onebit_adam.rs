@@ -65,6 +65,28 @@ impl WorkerAlgo for OneBitAdamWorker {
         // local momentum per worker (paper §3.2: "extra tensors for m").
         self.m.len() * std::mem::size_of::<f32>()
     }
+
+    fn export_state(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        crate::util::bytes::put_f32s(&mut out, &self.m);
+        crate::util::bytes::put_bytes(&mut out, &self.ef.export_state());
+        out
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut c = crate::util::bytes::Cursor::new(bytes);
+        let m = c.f32s()?;
+        let ef = c.bytes()?.to_vec();
+        c.finish()?;
+        anyhow::ensure!(
+            m.len() == self.m.len(),
+            "1bitadam momentum dim mismatch: blob {} vs {}",
+            m.len(),
+            self.m.len()
+        );
+        self.m = m;
+        self.ef.import_state(&ef)
+    }
 }
 
 /// Server half: Adam during warm-up, frozen-preconditioner momentum after.
@@ -163,6 +185,46 @@ impl ServerAlgo for OneBitAdamServer {
             }
         }
         self.avg = avg;
+        Ok(())
+    }
+
+    fn export_state(&self) -> Result<Vec<u8>> {
+        use crate::util::bytes::{put_f32s, put_u32, put_u64};
+        let mut out = Vec::new();
+        put_f32s(&mut out, &self.adam.m);
+        put_f32s(&mut out, &self.adam.v);
+        put_u64(&mut out, self.adam.step_count());
+        match &self.precond {
+            Some(p) => {
+                put_u32(&mut out, 1);
+                put_f32s(&mut out, p);
+            }
+            None => put_u32(&mut out, 0),
+        }
+        Ok(out)
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut c = crate::util::bytes::Cursor::new(bytes);
+        let m = c.f32s()?;
+        let v = c.f32s()?;
+        let t = c.u64()?;
+        let precond = match c.u32()? {
+            0 => None,
+            1 => Some(c.f32s()?),
+            k => anyhow::bail!("bad 1bitadam precond flag {k}"),
+        };
+        c.finish()?;
+        anyhow::ensure!(
+            m.len() == self.adam.m.len() && v.len() == self.adam.v.len(),
+            "1bitadam server state dim mismatch: blob {} vs {}",
+            m.len(),
+            self.adam.m.len()
+        );
+        self.adam.m = m;
+        self.adam.v = v;
+        self.adam.set_step_count(t);
+        self.precond = precond;
         Ok(())
     }
 }

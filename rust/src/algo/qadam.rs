@@ -51,6 +51,35 @@ impl WorkerAlgo for QAdamWorker {
         // m + v per worker — the §3.2 memory argument.
         2 * self.m.len() * std::mem::size_of::<f32>()
     }
+
+    fn export_state(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        crate::util::bytes::put_bytes(&mut out, &self.compressor.export_state());
+        crate::util::bytes::put_bytes(&mut out, &self.ef.export_state());
+        crate::util::bytes::put_f32s(&mut out, &self.m);
+        crate::util::bytes::put_f32s(&mut out, &self.v);
+        out
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut c = crate::util::bytes::Cursor::new(bytes);
+        let comp = c.bytes()?.to_vec();
+        let ef = c.bytes()?.to_vec();
+        let m = c.f32s()?;
+        let v = c.f32s()?;
+        c.finish()?;
+        anyhow::ensure!(
+            m.len() == self.m.len() && v.len() == self.v.len(),
+            "qadam moment dim mismatch: blob {} vs {}",
+            m.len(),
+            self.m.len()
+        );
+        self.compressor.import_state(&comp)?;
+        self.ef.import_state(&ef)?;
+        self.m = m;
+        self.v = v;
+        Ok(())
+    }
 }
 
 /// Server half: stateless averaging + lr step over the decoded ratios.

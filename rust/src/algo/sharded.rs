@@ -80,6 +80,8 @@ impl ShardStats {
 
 enum Cmd {
     Step { theta: Vec<f32>, msgs: Vec<Payload>, ctx: RoundCtx },
+    Export { reply: Sender<Result<Vec<u8>>> },
+    Import { bytes: Vec<u8>, reply: Sender<Result<()>> },
     Stop,
 }
 
@@ -110,6 +112,16 @@ fn spawn_shard(sid: usize, mut server: Box<dyn ServerAlgo + Send>) -> ShardHandl
                         let res = server.step(&mut theta, &msgs, &ctx);
                         let reply = res.map(|()| Reply { theta, ms: sw.ms() });
                         if rep_tx.send(reply).is_err() {
+                            break;
+                        }
+                    }
+                    Cmd::Export { reply } => {
+                        if reply.send(server.export_state()).is_err() {
+                            break;
+                        }
+                    }
+                    Cmd::Import { bytes, reply } => {
+                        if reply.send(server.import_state(&bytes)).is_err() {
                             break;
                         }
                     }
@@ -221,6 +233,73 @@ impl ServerAlgo for ShardedServer {
 
     fn shard_stats(&self) -> Option<&ShardStats> {
         Some(&self.stats)
+    }
+
+    /// Concatenate every shard's state blob (length-prefixed, in shard
+    /// order). Importing into a sharded server with the same partition
+    /// restores each shard exactly; the partition itself is rebuilt from
+    /// the config, so only per-shard optimizer state travels.
+    fn export_state(&self) -> Result<Vec<u8>> {
+        ensure!(
+            !self.poisoned,
+            "sharded server poisoned by an earlier partial-step error; refusing to export"
+        );
+        let mut out = Vec::new();
+        match &self.backend {
+            Backend::Sequential(servers) => {
+                for s in servers {
+                    crate::util::bytes::put_bytes(&mut out, &s.export_state()?);
+                }
+            }
+            Backend::Threaded(handles) => {
+                // Dispatch to all shards first, then collect, so export
+                // runs in parallel like a step.
+                let mut rxs = Vec::with_capacity(handles.len());
+                for h in handles {
+                    let (tx, rx) = channel();
+                    h.tx
+                        .send(Cmd::Export { reply: tx })
+                        .map_err(|_| anyhow!("shard thread died"))?;
+                    rxs.push(rx);
+                }
+                for rx in rxs {
+                    let blob = rx.recv().map_err(|_| anyhow!("shard thread died"))??;
+                    crate::util::bytes::put_bytes(&mut out, &blob);
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> Result<()> {
+        let shards = self.stats.shards();
+        let mut c = crate::util::bytes::Cursor::new(bytes);
+        let mut blobs = Vec::with_capacity(shards);
+        for _ in 0..shards {
+            blobs.push(c.bytes()?.to_vec());
+        }
+        c.finish()?;
+        match &mut self.backend {
+            Backend::Sequential(servers) => {
+                for (s, blob) in servers.iter_mut().zip(blobs) {
+                    s.import_state(&blob)?;
+                }
+            }
+            Backend::Threaded(handles) => {
+                let mut rxs = Vec::with_capacity(handles.len());
+                for (h, blob) in handles.iter().zip(blobs) {
+                    let (tx, rx) = channel();
+                    h.tx
+                        .send(Cmd::Import { bytes: blob, reply: tx })
+                        .map_err(|_| anyhow!("shard thread died"))?;
+                    rxs.push(rx);
+                }
+                for rx in rxs {
+                    rx.recv().map_err(|_| anyhow!("shard thread died"))??;
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -406,6 +485,48 @@ mod tests {
         assert_eq!(stats.shards(), 4);
         assert!(stats.routed_bits.iter().all(|&b| b > 0));
         assert_eq!(stats.step_ms.len(), 4);
+    }
+
+    #[test]
+    fn export_import_resumes_bitwise() {
+        // Step 10 rounds, export, import into a fresh sharded server,
+        // step 10 more; the trajectory must match an uninterrupted run.
+        let dim = 19;
+        let spec = AlgoSpec::parse("dist-ams").unwrap();
+        let msgs_at = |r: u64| -> Vec<Payload> {
+            (0..2usize)
+                .map(|w| {
+                    Payload::Dense(
+                        (0..dim)
+                            .map(|i| ((r as usize * 13 + w * 5 + i) as f32 * 0.17).sin())
+                            .collect(),
+                    )
+                })
+                .collect()
+        };
+        for threaded in [false, true] {
+            let mut solo = ShardedServer::new(&spec, dim, 20, 3, threaded).unwrap();
+            let mut t_solo: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.29).cos()).collect();
+            let mut first = ShardedServer::new(&spec, dim, 20, 3, threaded).unwrap();
+            let mut t_resume = t_solo.clone();
+            for r in 0..10 {
+                let ctx = RoundCtx::sync(r, 0.02);
+                solo.step(&mut t_solo, &msgs_at(r), &ctx).unwrap();
+                first.step(&mut t_resume, &msgs_at(r), &ctx).unwrap();
+            }
+            let blob = first.export_state().unwrap();
+            drop(first);
+            let mut second = ShardedServer::new(&spec, dim, 20, 3, threaded).unwrap();
+            second.import_state(&blob).unwrap();
+            for r in 10..20 {
+                let ctx = RoundCtx::sync(r, 0.02);
+                solo.step(&mut t_solo, &msgs_at(r), &ctx).unwrap();
+                second.step(&mut t_resume, &msgs_at(r), &ctx).unwrap();
+            }
+            for (x, y) in t_solo.iter().zip(&t_resume) {
+                assert_eq!(x.to_bits(), y.to_bits(), "threaded={threaded}");
+            }
+        }
     }
 
     #[test]

@@ -38,6 +38,30 @@ impl ErrorFeedback {
         crate::util::math::norm2(&self.e)
     }
 
+    /// Serialize the residual for suspend/resume (the `enabled` flag and
+    /// dimension are rebuilt from the config; only `e` is trajectory
+    /// state).
+    pub fn export_state(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(4 + 4 * self.e.len());
+        crate::util::bytes::put_f32s(&mut out, &self.e);
+        out
+    }
+
+    /// Restore a blob produced by [`ErrorFeedback::export_state`].
+    pub fn import_state(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut c = crate::util::bytes::Cursor::new(bytes);
+        let e = c.f32s()?;
+        c.finish()?;
+        anyhow::ensure!(
+            e.len() == self.e.len(),
+            "error-feedback residual dim mismatch: blob {} vs {}",
+            e.len(),
+            self.e.len()
+        );
+        self.e = e;
+        Ok(())
+    }
+
     /// Compress `g` with residual correction; updates the residual.
     pub fn compress(&mut self, g: &[f32], c: &mut dyn Compressor) -> Result<Payload> {
         assert_eq!(g.len(), self.e.len());

@@ -33,6 +33,59 @@ pub trait Compressor: Send {
     /// The deviate factor `q` for dimension `d` (paper Remark 1);
     /// used by analysis-side diagnostics, not by the protocol itself.
     fn q(&self, d: usize) -> f32;
+
+    /// Serialize compressor state for suspend/resume. Stateless
+    /// compressors (Top-k, Block-Sign, identity) have nothing to save;
+    /// the stochastic ones (Random-k, QSGD) snapshot their RNG stream so
+    /// a resumed run draws the exact same coordinates/roundings as an
+    /// uninterrupted one.
+    fn export_state(&self) -> Vec<u8> {
+        Vec::new()
+    }
+
+    /// Restore a blob produced by [`Compressor::export_state`].
+    fn import_state(&mut self, bytes: &[u8]) -> Result<()> {
+        if !bytes.is_empty() {
+            bail!(
+                "compressor '{}' is stateless but got a {}-byte state blob",
+                self.name(),
+                bytes.len()
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Serialize an [`Rng`](crate::util::rng::Rng) stream for suspend/resume
+/// (shared by the stochastic compressors and the gradient sources).
+pub(crate) fn export_rng(rng: &crate::util::rng::Rng) -> Vec<u8> {
+    use crate::util::bytes::{put_f32, put_u32, put_u64};
+    let (s, spare) = rng.state();
+    let mut out = Vec::with_capacity(4 * 8 + 4 + 4);
+    for lane in s {
+        put_u64(&mut out, lane);
+    }
+    match spare {
+        Some(x) => {
+            put_u32(&mut out, 1);
+            put_f32(&mut out, x);
+        }
+        None => put_u32(&mut out, 0),
+    }
+    out
+}
+
+/// Inverse of [`export_rng`].
+pub(crate) fn import_rng(bytes: &[u8]) -> Result<crate::util::rng::Rng> {
+    let mut c = crate::util::bytes::Cursor::new(bytes);
+    let s = [c.u64()?, c.u64()?, c.u64()?, c.u64()?];
+    let spare = match c.u32()? {
+        0 => None,
+        1 => Some(c.f32()?),
+        k => bail!("bad rng spare flag {k}"),
+    };
+    c.finish()?;
+    Ok(crate::util::rng::Rng::restore(s, spare))
 }
 
 /// The identity "compressor": dense f32 payload (full-precision baseline).

@@ -64,6 +64,15 @@ impl Compressor for Qsgd {
         let v = (d as f32 / (s * s)).min((d as f32).sqrt() / s);
         v.sqrt().min(0.999)
     }
+
+    fn export_state(&self) -> Vec<u8> {
+        super::export_rng(&self.rng)
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        self.rng = super::import_rng(bytes)?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

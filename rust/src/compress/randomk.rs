@@ -49,6 +49,15 @@ impl Compressor for RandomK {
     fn q(&self, d: usize) -> f32 {
         (1.0 - self.k_for(d) as f32 / d as f32).max(0.0).sqrt()
     }
+
+    fn export_state(&self) -> Vec<u8> {
+        super::export_rng(&self.rng)
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> anyhow::Result<()> {
+        self.rng = super::import_rng(bytes)?;
+        Ok(())
+    }
 }
 
 #[cfg(test)]

@@ -5,16 +5,28 @@
 //!   `theta.bin`  — little-endian f32 parameters
 //!   `opt.bin`    — concatenated optimizer state vectors (m | v | v̂)
 //!
-//! Worker error-feedback residuals are *not* persisted: Algorithm 2's
-//! residuals are bounded (Lemma 2) and re-warm within ~1/(1-β1) rounds;
-//! restarting with e=0 is the standard practical choice (documented so
-//! resumed curves are reproducible given the same seeds).
+//! Worker error-feedback residuals are *not* persisted in the on-disk
+//! [`Checkpoint`]: Algorithm 2's residuals are bounded (Lemma 2) and
+//! re-warm within ~1/(1-β1) rounds; restarting with e=0 is the standard
+//! practical choice (documented so resumed curves are reproducible given
+//! the same seeds).
+//!
+//! The in-memory [`JobCheckpoint`] used by the scheduler
+//! ([`crate::coordinator::scheduler`]) is stronger: it carries the full
+//! per-worker state blobs (error-feedback residuals, compressor RNGs,
+//! mini-batch streams) plus the server optimizer state and the job's
+//! accounting so far, so a preempted job resumes **bitwise identically**
+//! to an uninterrupted run — property-tested across every protocol.
 
 use std::path::Path;
 
 use anyhow::{ensure, Context, Result};
 
+use crate::config::TrainConfig;
 use crate::util::json::{self, Json};
+
+use super::comm::CommLedger;
+use super::metrics::RoundMetric;
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct Checkpoint {
@@ -69,6 +81,40 @@ impl Checkpoint {
             opt_state,
         })
     }
+}
+
+/// Full in-memory snapshot of a suspended training job.
+///
+/// Produced by [`Trainer::suspend`](super::trainer::Trainer::suspend) and
+/// consumed by [`Trainer::resume`](super::trainer::Trainer::resume) (or
+/// [`Trainer::with_transport`](super::trainer::Trainer::with_transport)
+/// when the scheduler re-assigns a pooled fleet). Unlike the on-disk
+/// [`Checkpoint`], this captures *everything* the trajectory depends on:
+/// worker error-feedback residuals, compressor RNG streams, mini-batch
+/// RNG streams, and the server optimizer moments — so resuming at round
+/// `round` replays the exact bytes an uninterrupted run would have
+/// produced. It also carries the job's ledger and metrics so far, so the
+/// final [`RunResult`](super::metrics::RunResult) of a
+/// preempted-then-resumed job accounts for the whole job, not just the
+/// post-resume tail.
+#[derive(Clone, Debug)]
+pub struct JobCheckpoint {
+    /// Next round to run (rounds `0..round` are already accounted in
+    /// `metrics`).
+    pub round: u64,
+    pub cfg: TrainConfig,
+    pub theta: Vec<f32>,
+    /// Server optimizer blob ([`ServerAlgo::export_state`](crate::algo::ServerAlgo::export_state)).
+    pub server: Vec<u8>,
+    /// Per-worker state blobs, indexed by wid
+    /// ([`export_worker_blob`](super::cluster::export_worker_blob)).
+    pub workers: Vec<Vec<u8>>,
+    /// Communication accounting up to the suspension point.
+    pub ledger: CommLedger,
+    /// Round metrics up to the suspension point.
+    pub metrics: Vec<RoundMetric>,
+    pub worker_ms_total: f64,
+    pub round_ms_total: f64,
 }
 
 fn f32s_to_bytes(v: &[f32]) -> Vec<u8> {

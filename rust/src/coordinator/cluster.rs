@@ -79,7 +79,33 @@ fn worker_round(
 
 enum Cmd {
     Round { theta: Arc<Vec<f32>>, ctx: RoundCtx },
+    Export { reply: Sender<Result<Vec<u8>>> },
     Stop,
+}
+
+/// Serialize one worker's full resumable state — gradient-source stream +
+/// protocol worker half — into the blob that travels in checkpoints and,
+/// for remote workers, in DETACH/ASSIGN frames.
+pub fn export_worker_blob(src: &dyn GradSource, algo: &dyn WorkerAlgo) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    crate::util::bytes::put_bytes(&mut out, &src.export_state()?);
+    crate::util::bytes::put_bytes(&mut out, &algo.export_state());
+    Ok(out)
+}
+
+/// Restore a blob produced by [`export_worker_blob`] into a freshly-built
+/// source/algo pair.
+pub fn import_worker_blob(
+    src: &mut dyn GradSource,
+    algo: &mut dyn WorkerAlgo,
+    bytes: &[u8],
+) -> Result<()> {
+    let mut c = crate::util::bytes::Cursor::new(bytes);
+    let src_blob = c.bytes()?.to_vec();
+    let algo_blob = c.bytes()?.to_vec();
+    c.finish()?;
+    src.import_state(&src_blob)?;
+    algo.import_state(&algo_blob)
 }
 
 struct SeqWorker {
@@ -161,6 +187,13 @@ impl WorkerPool {
                                         &ctx,
                                     );
                                     if rep_tx.send((wid, ctx.round, reply)).is_err() {
+                                        break;
+                                    }
+                                }
+                                Cmd::Export { reply } => {
+                                    let blob =
+                                        export_worker_blob(src.as_ref(), algo.as_ref());
+                                    if reply.send(blob).is_err() {
                                         break;
                                     }
                                 }
@@ -257,6 +290,67 @@ impl WorkerPool {
         }
         raws.sort_by_key(|(wid, _, _)| *wid);
         raws.into_iter().map(|(_, _, res)| res).collect()
+    }
+
+    /// Snapshot every worker's resumable state ([`export_worker_blob`]),
+    /// ordered by worker id. Must only be called with no rounds in flight
+    /// (the runtime drains first); a threaded worker answers the export
+    /// command from its own thread, so the blobs are taken from the
+    /// authoritative copies wherever they live.
+    pub fn export_states(&mut self) -> Result<Vec<Vec<u8>>> {
+        match &mut self.backend {
+            Backend::Sequential { workers, queue } => {
+                ensure!(
+                    queue.is_empty(),
+                    "export_states with {} undelivered worker rounds queued",
+                    queue.len()
+                );
+                workers
+                    .iter()
+                    .map(|w| export_worker_blob(w.src.as_ref(), w.algo.as_ref()))
+                    .collect()
+            }
+            Backend::Threaded { handles, .. } => {
+                let mut rxs = Vec::with_capacity(handles.len());
+                for (wid, h) in handles.iter().enumerate() {
+                    let (tx, rx) = channel();
+                    h.tx
+                        .send(Cmd::Export { reply: tx })
+                        .map_err(|_| anyhow!("worker {wid} thread died"))?;
+                    rxs.push(rx);
+                }
+                rxs.into_iter()
+                    .enumerate()
+                    .map(|(wid, rx)| {
+                        rx.recv().map_err(|_| anyhow!("worker {wid} thread died"))?
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Restore per-worker blobs produced by [`WorkerPool::export_states`]
+    /// into a freshly-built sequential pool. Threaded pools import before
+    /// spawning (the builder path hands state in ahead of construction),
+    /// so only the sequential backend needs in-place import.
+    pub fn import_states(&mut self, blobs: &[Vec<u8>]) -> Result<()> {
+        ensure!(
+            blobs.len() == self.len(),
+            "state blob count {} vs {} pool workers",
+            blobs.len(),
+            self.len()
+        );
+        match &mut self.backend {
+            Backend::Sequential { workers, .. } => {
+                for (w, blob) in workers.iter_mut().zip(blobs) {
+                    import_worker_blob(w.src.as_mut(), w.algo.as_mut(), blob)?;
+                }
+                Ok(())
+            }
+            Backend::Threaded { .. } => {
+                anyhow::bail!("import_states on a threaded pool: import before spawning")
+            }
+        }
     }
 }
 

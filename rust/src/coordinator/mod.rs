@@ -40,6 +40,7 @@ pub mod comm;
 pub mod metrics;
 pub mod net;
 pub mod runtime;
+pub mod scheduler;
 pub mod supervisor;
 pub mod trainer;
 pub mod transport;
@@ -48,8 +49,10 @@ pub mod worker;
 pub use cluster::{WorkerPool, WorkerRound};
 pub use comm::CommLedger;
 pub use metrics::{RoundMetric, RunResult};
+pub use checkpoint::JobCheckpoint;
 pub use net::{Tcp, TcpLeader};
 pub use runtime::{ClusterRuntime, RoundOutcome};
+pub use scheduler::{Job, JobId, JobQueue, JobState, Scheduler};
 pub use supervisor::Supervisor;
 pub use trainer::{train, Trainer};
 pub use transport::{Envelope, Event, InProc, Loopback, Transport, TransportSpec};

@@ -19,20 +19,40 @@
 //! The magic doubles as a protocol version (`CAM1` → bump the trailing
 //! byte on an incompatible change). Kinds:
 //!
-//! | kind       | direction       | body                                   |
-//! |------------|-----------------|----------------------------------------|
-//! | `HELLO`    | worker → leader | empty (the magic carries the version)  |
-//! | `ASSIGN`   | leader → worker | `wid u32 \| TrainConfig JSON`          |
-//! | `DOWNLINK` | leader → worker | [`Envelope`] bytes (dense θ, lr slot)  |
-//! | `UPLINK`   | worker → leader | [`Envelope`] bytes (payload, loss slot)|
-//! | `SHUTDOWN` | leader → worker | empty                                  |
+//! | kind       | direction       | body                                        |
+//! |------------|-----------------|---------------------------------------------|
+//! | `HELLO`    | worker → leader | empty (the magic carries the version)       |
+//! | `ASSIGN`   | leader → worker | `wid u32 \| resume_len u32 \| resume bytes \| TrainConfig JSON` |
+//! | `DOWNLINK` | leader → worker | [`Envelope`] bytes (dense θ, lr slot)       |
+//! | `UPLINK`   | worker → leader | [`Envelope`] bytes (payload, loss slot)     |
+//! | `SHUTDOWN` | leader → worker | empty                                       |
+//! | `DETACH`   | leader → worker | `want_state u8` (job over; daemon stays)    |
+//! | `STATE`    | worker → leader | worker suspend blob (empty unless wanted)   |
 //!
 //! The handshake assigns worker ids in accept order: a connecting worker
-//! sends `HELLO`, the leader replies `ASSIGN{wid, config}`, and the
-//! worker rebuilds its gradient shard and protocol half from exactly the
-//! constructors the in-process pool uses
+//! sends `HELLO`, the leader replies `ASSIGN{wid, resume, config}`, and
+//! the worker rebuilds its gradient shard and protocol half from exactly
+//! the constructors the in-process pool uses
 //! ([`build_worker_parts`](super::trainer::build_worker_parts)) — which
-//! is why a TCP run with K = n is bitwise identical to `InProc`.
+//! is why a TCP run with K = n is bitwise identical to `InProc`. A
+//! non-empty `resume` blob restores the worker half's suspended state
+//! ([`import_worker_blob`](super::cluster::import_worker_blob)) so a
+//! resumed job continues bitwise-identically.
+//!
+//! ## Pooled fleets
+//!
+//! `DETACH`/`STATE` exist for the resident scheduler
+//! ([`super::scheduler`]): a worker daemon serves **many jobs** over one
+//! connection. The leader ends a job with `DETACH{want_state}`; the
+//! worker always answers with one `STATE` frame (its suspend blob when
+//! wanted, empty otherwise — the reply doubles as a quiesce fence) and
+//! returns to idle, waiting for the next `ASSIGN` or a final `SHUTDOWN`.
+//! A pooled [`Tcp`] (built by [`assign_streams`] with `pooled = true`)
+//! therefore detaches instead of closing sockets on shutdown, leaving
+//! the fleet connected for the next job. `HELLO`/`ASSIGN`/`DETACH`/
+//! `STATE` frames are control-plane and — like the handshake before
+//! them — are *not* billed to the framing ledger, which stays exactly
+//! `(downlinks + uplinks) × (frame + envelope headers)`.
 //!
 //! ## Failure model
 //!
@@ -81,6 +101,13 @@ pub enum FrameKind {
     Downlink = 3,
     Uplink = 4,
     Shutdown = 5,
+    /// Leader → worker: the current job is over, but the daemon should
+    /// stay connected for the next ASSIGN. Body: `want_state u8` (1 =
+    /// reply with the suspend blob, 0 = reply with an empty STATE).
+    Detach = 6,
+    /// Worker → leader: the detach acknowledgement carrying the worker's
+    /// suspend blob (empty when not requested).
+    State = 7,
 }
 
 impl FrameKind {
@@ -91,9 +118,24 @@ impl FrameKind {
             3 => FrameKind::Downlink,
             4 => FrameKind::Uplink,
             5 => FrameKind::Shutdown,
+            6 => FrameKind::Detach,
+            7 => FrameKind::State,
             other => bail!("bad frame kind {other}"),
         })
     }
+}
+
+/// Encode an ASSIGN body:
+/// `wid u32 | resume_len u32 | resume bytes | TrainConfig JSON`.
+/// An empty `resume` means a fresh start; non-empty restores the worker
+/// half's suspended state before the first round.
+pub fn encode_assign(wid: u32, resume: &[u8], cfg_json: &str) -> Vec<u8> {
+    let mut body = Vec::with_capacity(8 + resume.len() + cfg_json.len());
+    body.extend(wid.to_le_bytes());
+    body.extend((resume.len() as u32).to_le_bytes());
+    body.extend_from_slice(resume);
+    body.extend_from_slice(cfg_json.as_bytes());
+    body
 }
 
 /// Write one frame (header + body) and flush it onto the wire.
@@ -164,15 +206,21 @@ impl TcpLeader {
     /// Accept and handshake `cfg.workers` worker connections, assigning
     /// `wid` 0.. in accept order, then start one reader thread per
     /// worker. Fails if the cluster has not formed within the handshake
-    /// timeout.
+    /// timeout. One-job ownership: the resulting [`Tcp`] sends SHUTDOWN
+    /// and closes the sockets when the run ends.
     pub fn accept_workers(self, cfg: &TrainConfig) -> Result<Tcp> {
-        let n = cfg.workers;
-        let cfg_json = cfg.to_json().to_string_pretty();
+        let streams = self.accept_hellos(cfg.workers)?;
+        assign_streams(&streams, cfg, None, false)
+    }
+
+    /// Accept `n` connections and consume each one's HELLO, in accept
+    /// order, without assigning them to any job. The scheduler uses this
+    /// to form a resident fleet once, then re-ASSIGNs the same streams
+    /// job after job ([`assign_streams`]).
+    pub fn accept_hellos(&self, n: usize) -> Result<Vec<TcpStream>> {
         let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
         self.listener.set_nonblocking(true)?;
-        let (event_tx, events) = channel::<Result<Event>>();
-        let mut links = Vec::with_capacity(n);
-        let mut readers = Vec::with_capacity(n);
+        let mut streams = Vec::with_capacity(n);
         for wid in 0..n {
             let mut stream = loop {
                 match self.listener.accept() {
@@ -195,26 +243,79 @@ impl TcpLeader {
                 Some((kind, _)) => bail!("worker {wid} opened with {kind:?}, not HELLO"),
                 None => bail!("worker {wid} disconnected before HELLO"),
             }
-            let mut assign = Vec::with_capacity(4 + cfg_json.len());
-            assign.extend((wid as u32).to_le_bytes());
-            assign.extend_from_slice(cfg_json.as_bytes());
-            write_frame(&mut stream, FrameKind::Assign, &assign)?;
             stream.set_read_timeout(None)?;
-            links.push(WorkerLink { stream: stream.try_clone()?, alive: true });
-            readers.push(spawn_reader(wid, stream, event_tx.clone()));
+            streams.push(stream);
         }
-        Ok(Tcp { links, events, readers, shut_down: false, downlink_cache: None })
+        Ok(streams)
     }
+}
+
+/// ASSIGN a job to already-HELLO'd worker connections and build the
+/// [`Tcp`] transport that runs it. `streams[i]` becomes worker `wid = i`
+/// for this job. `resume` (one blob per worker) restores a suspended
+/// job's worker state; `None` starts fresh. With `pooled = true` the
+/// transport belongs to a resident fleet: ending the job DETACHes the
+/// workers (daemons stay connected, sockets stay open) instead of
+/// shutting them down — the caller keeps the original `TcpStream`s and
+/// can re-assign them to the next job.
+pub fn assign_streams(
+    streams: &[TcpStream],
+    cfg: &TrainConfig,
+    resume: Option<&[Vec<u8>]>,
+    pooled: bool,
+) -> Result<Tcp> {
+    ensure!(
+        streams.len() == cfg.workers,
+        "assigning {} workers onto {} connections",
+        cfg.workers,
+        streams.len()
+    );
+    if let Some(blobs) = resume {
+        ensure!(
+            blobs.len() == streams.len(),
+            "resume carries {} worker blobs for {} workers",
+            blobs.len(),
+            streams.len()
+        );
+    }
+    let cfg_json = cfg.to_json().to_string_pretty();
+    let (event_tx, events) = channel::<Result<Event>>();
+    let mut links = Vec::with_capacity(streams.len());
+    let mut readers = Vec::with_capacity(streams.len());
+    for (wid, stream) in streams.iter().enumerate() {
+        let mut writer = stream.try_clone()?;
+        let blob = resume.map_or(&[][..], |b| b[wid].as_slice());
+        write_frame(
+            &mut writer,
+            FrameKind::Assign,
+            &encode_assign(wid as u32, blob, &cfg_json),
+        )
+        .with_context(|| format!("assigning job to worker {wid}"))?;
+        links.push(WorkerLink { stream: writer, alive: true });
+        readers.push(spawn_reader(wid, stream.try_clone()?, event_tx.clone()));
+    }
+    Ok(Tcp {
+        links,
+        events,
+        readers,
+        shut_down: false,
+        pooled,
+        detached: false,
+        downlink_cache: None,
+    })
 }
 
 /// One leader-side reader thread: multiplex worker `wid`'s uplinks into
 /// the shared event channel; a clean EOF becomes [`Event::Exit`], a
 /// protocol violation becomes an `Err` event (runtime poisoning path).
+/// The thread's return value is the detach handshake: a STATE frame ends
+/// the thread with `Some(blob)` (collected by [`Tcp::detach`] via join),
+/// every other exit path returns `None`.
 fn spawn_reader(
     wid: usize,
     mut stream: TcpStream,
     tx: Sender<Result<Event>>,
-) -> JoinHandle<()> {
+) -> JoinHandle<Option<Vec<u8>>> {
     // A reset/abort is a worker-death signal like a clean EOF (the OS
     // closes a crashed process's sockets either way); short reads and
     // malformed frames stay hard errors.
@@ -236,35 +337,39 @@ fn spawn_reader(
                     Ok(envelope) => {
                         let ev = Event::Uplink { wid, round: envelope.round, envelope };
                         if tx.send(Ok(ev)).is_err() {
-                            return; // leader gone
+                            return None; // leader gone
                         }
                     }
                     Err(e) => {
                         let ctx = format!("decoding worker {wid} uplink");
                         let _ = tx.send(Err(e.context(ctx)));
-                        return;
+                        return None;
                     }
                 },
+                // The worker acknowledged a DETACH: end of this job's
+                // stream. No event — the joining detach call consumes the
+                // blob directly.
+                Ok(Some((FrameKind::State, body))) => return Some(body),
                 Ok(Some((kind, _))) => {
                     let _ = tx.send(Err(anyhow::anyhow!(
                         "worker {wid} sent a {kind:?} frame on the uplink stream"
                     )));
-                    return;
+                    return None;
                 }
                 // Worker process is gone (crash, post-SHUTDOWN close), or
                 // the leader shut the socket down itself.
                 Ok(None) => {
                     let _ = tx.send(Ok(Event::Exit { wid }));
-                    return;
+                    return None;
                 }
                 Err(e) if is_disconnect(&e) => {
                     let _ = tx.send(Ok(Event::Exit { wid }));
-                    return;
+                    return None;
                 }
                 Err(e) => {
                     let ctx = format!("reading worker {wid} uplink stream");
                     let _ = tx.send(Err(e.context(ctx)));
-                    return;
+                    return None;
                 }
             }
         })
@@ -283,13 +388,56 @@ struct WorkerLink {
 pub struct Tcp {
     links: Vec<WorkerLink>,
     events: Receiver<Result<Event>>,
-    readers: Vec<JoinHandle<()>>,
+    readers: Vec<JoinHandle<Option<Vec<u8>>>>,
     shut_down: bool,
+    /// Fleet mode ([`assign_streams`]): end-of-job releases the workers
+    /// with DETACH instead of SHUTDOWN and leaves the sockets open for
+    /// the next ASSIGN.
+    pooled: bool,
+    /// Set once the workers have been DETACHed (the transport is spent).
+    detached: bool,
     /// Encoded downlink envelope for the current `(round, lr)`, reused
     /// across the round's dispatch fan-out: the n per-worker frames
     /// differ only in the 4-byte wid header, so θ is cloned + encoded
     /// once per round instead of once per worker.
     downlink_cache: Option<(u64, u32, Vec<u8>)>,
+}
+
+impl Tcp {
+    /// Release every worker from the current job: send DETACH
+    /// (`want_state` selects blob vs empty acknowledgement), then join
+    /// the reader threads, each of which ends on the worker's STATE
+    /// reply. Returns one entry per worker — `Some(blob)` from a worker
+    /// that acknowledged, `None` for one that died first. After a detach
+    /// the transport is spent; on a pooled fleet the underlying sockets
+    /// stay open for the next [`assign_streams`].
+    fn detach_inner(&mut self, want_state: bool) -> Result<Vec<Option<Vec<u8>>>> {
+        ensure!(!self.detached, "tcp transport already detached");
+        self.detached = true;
+        let body = [want_state as u8];
+        for link in &mut self.links {
+            if link.alive {
+                // A failed write means the worker died under us; its
+                // reader exits on EOF and joins as None below.
+                if write_frame(&mut link.stream, FrameKind::Detach, &body).is_err() {
+                    link.alive = false;
+                }
+            }
+        }
+        let mut out = Vec::with_capacity(self.readers.len());
+        for (wid, reader) in self.readers.drain(..).enumerate() {
+            let blob = reader
+                .join()
+                .map_err(|_| anyhow::anyhow!("tcp reader {wid} panicked"))?;
+            if blob.is_none() {
+                if let Some(link) = self.links.get_mut(wid) {
+                    link.alive = false;
+                }
+            }
+            out.push(blob);
+        }
+        Ok(out)
+    }
 }
 
 impl Transport for Tcp {
@@ -363,6 +511,16 @@ impl Transport for Tcp {
             return Ok(());
         }
         self.shut_down = true;
+        if self.pooled {
+            // The fleet outlives this job: release the workers back to
+            // idle instead of terminating them, and leave the sockets
+            // open for the next ASSIGN. The scheduler sends the real
+            // SHUTDOWN when it drains the whole fleet.
+            if !self.detached {
+                let _ = self.detach_inner(false);
+            }
+            return Ok(());
+        }
         for link in &mut self.links {
             if link.alive {
                 // Best effort: the worker may have died since we checked.
@@ -377,6 +535,10 @@ impl Transport for Tcp {
             let _ = j.join();
         }
         Ok(())
+    }
+
+    fn detach(&mut self, want_state: bool) -> Result<Vec<Option<Vec<u8>>>> {
+        self.detach_inner(want_state)
     }
 }
 

@@ -385,6 +385,25 @@ impl ClusterRuntime {
         }
         Ok(drained)
     }
+
+    /// Release the workers from this runtime's job without terminating
+    /// them, collecting each worker's suspend blob when `want_state` —
+    /// the transport-level half of [`Trainer::suspend`](super::trainer::Trainer::suspend).
+    /// Requires a clean runtime with no uplinks in flight (call
+    /// [`ClusterRuntime::drain_in_flight`] first); after a detach the
+    /// runtime is spent and no further rounds can run.
+    pub fn detach_workers(&mut self, want_state: bool) -> Result<Vec<Option<Vec<u8>>>> {
+        ensure!(
+            !self.poisoned,
+            "cluster runtime poisoned by an earlier round error; rebuild the Trainer"
+        );
+        ensure!(
+            self.in_flight.iter().all(Option::is_none),
+            "detach with {} uplinks still in flight; drain first",
+            self.in_flight.iter().filter(|f| f.is_some()).count()
+        );
+        self.transport.detach(want_state)
+    }
 }
 
 /// An arrival after header validation (flattened [`Event::Uplink`]).

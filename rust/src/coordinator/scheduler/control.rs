@@ -1,0 +1,299 @@
+//! The control protocol: line-delimited JSON over a second TCP listener.
+//!
+//! Each request is one JSON object on one line; the daemon answers with
+//! one JSON object on one line and keeps the connection open for the
+//! next request. Verbs:
+//!
+//! ```text
+//! {"cmd":"submit","config":{...TrainConfig...},"priority":2,"name":"sweep-a"}
+//!     → {"ok":true,"id":1}
+//! {"cmd":"status"}
+//!     → {"ok":true,"draining":false,"fleet_workers":4,"jobs":[{...},...]}
+//! {"cmd":"cancel","id":1}
+//!     → {"ok":true}
+//! {"cmd":"drain"}              (finish queued work, then exit)
+//!     → {"ok":true}
+//! ```
+//!
+//! Every error is `{"ok":false,"error":"..."}` — the connection stays
+//! usable. Submitted configs are normalized for fleet execution
+//! ([`parse_submit`]): `transport` is forced to `tcp`, leader-side
+//! threading and worker spawning are disabled (the fleet already runs),
+//! and only the analytic substrates are accepted (remote daemons rebuild
+//! their data shard from the config).
+//!
+//! Two representation choices keep the protocol lossless over JSON:
+//! non-finite floats (the quadratic substrate has no accuracy, so it
+//! reports NaN) map to `null` ([`finite`]), and a finished job's θ is
+//! shipped as `theta_hex` — eight lowercase hex digits per `f32` bit
+//! pattern ([`theta_to_hex`]) — so clients can verify *bitwise* equality
+//! of resumed trajectories, which a decimal float print could not
+//! guarantee.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::TrainConfig;
+use crate::util::json::{parse, Json};
+
+use super::queue::Job;
+
+/// Map a float into JSON, turning non-finite values (NaN accuracy on
+/// substrates without one, ±Inf) into `null` — the parser on the other
+/// end rejects bare `NaN`/`Infinity` tokens, as JSON requires.
+pub fn finite(x: f64) -> Json {
+    if x.is_finite() {
+        Json::num(x)
+    } else {
+        Json::Null
+    }
+}
+
+/// Render θ as a hex string, 8 lowercase hex digits per coordinate
+/// (the `f32`'s bit pattern, big-endian digit order). Bit-exact by
+/// construction — the reason this exists instead of a JSON number array.
+pub fn theta_to_hex(theta: &[f32]) -> String {
+    let mut s = String::with_capacity(theta.len() * 8);
+    for x in theta {
+        s.push_str(&format!("{:08x}", x.to_bits()));
+    }
+    s
+}
+
+/// Invert [`theta_to_hex`].
+pub fn theta_from_hex(s: &str) -> Result<Vec<f32>> {
+    ensure!(
+        s.len() % 8 == 0 && s.is_ascii(),
+        "theta hex length {} is not a multiple of 8 ascii chars",
+        s.len()
+    );
+    s.as_bytes()
+        .chunks(8)
+        .map(|c| {
+            let chunk = std::str::from_utf8(c).expect("ascii checked above");
+            let bits = u32::from_str_radix(chunk, 16)
+                .with_context(|| format!("bad theta hex chunk '{chunk}'"))?;
+            Ok(f32::from_bits(bits))
+        })
+        .collect()
+}
+
+/// Parse and normalize a `submit` request into `(name, priority, cfg)`.
+/// `fleet_size` bounds the job's worker count — a job can use a prefix
+/// of the fleet, never more than it.
+pub fn parse_submit(req: &Json, fleet_size: usize) -> Result<(String, i64, TrainConfig)> {
+    let mut cfg = TrainConfig::from_json(req.req("config")?)
+        .context("parsing submit config")?;
+    // Normalize for fleet execution: jobs always run over the resident
+    // TCP fleet, whatever the submitted config said.
+    cfg.transport = "tcp".into();
+    cfg.spawn_workers = false;
+    cfg.threaded = false;
+    ensure!(
+        cfg.is_analytic(),
+        "scheduled jobs run on remote workers, which rebuild their data \
+         shard from the config: analytic substrates only (quadratic | \
+         logistic), not '{}'",
+        cfg.model
+    );
+    ensure!(
+        cfg.workers <= fleet_size,
+        "job wants {} workers but the fleet has {}",
+        cfg.workers,
+        fleet_size
+    );
+    cfg.validate()?;
+    let priority = match req.get("priority") {
+        Some(v) => {
+            let p = v.as_f64()?;
+            ensure!(p.fract() == 0.0, "priority must be an integer, got {p}");
+            p as i64
+        }
+        None => 0,
+    };
+    let name = match req.get("name") {
+        Some(v) => v.as_str()?.to_string(),
+        None => String::new(),
+    };
+    Ok((name, priority, cfg))
+}
+
+/// One job's row in a `status` response.
+pub fn job_to_json(job: &Job) -> Json {
+    let mut pairs = vec![
+        ("id", Json::num(job.id as f64)),
+        ("name", Json::str(&job.name)),
+        ("state", Json::str(job.state.as_str())),
+        ("priority", Json::num(job.priority as f64)),
+        ("model", Json::str(&job.cfg.model)),
+        ("algo", Json::str(&job.cfg.algo)),
+        ("workers", Json::num(job.cfg.workers as f64)),
+        ("rounds_total", Json::num(job.cfg.rounds as f64)),
+        ("rounds_done", Json::num(job.rounds_done as f64)),
+        ("preemptions", Json::num(job.preemptions as f64)),
+    ];
+    if let Some(e) = &job.error {
+        pairs.push(("error", Json::str(e)));
+    }
+    if let Some(r) = &job.result {
+        pairs.push((
+            "result",
+            Json::obj(vec![
+                ("final_train_loss", finite(f64::from(r.final_train_loss(10)))),
+                ("final_eval_loss", finite(f64::from(r.final_eval.loss))),
+                ("final_eval_acc", finite(f64::from(r.final_eval.accuracy))),
+                ("rounds", Json::num(r.metrics.len() as f64)),
+                ("uplink_bits", Json::num(r.uplink_bits() as f64)),
+                ("framing_bits", Json::num(r.framing_bits as f64)),
+                ("stale_uplinks", Json::num(r.stale_uplinks as f64)),
+                ("dropped_uplinks", Json::num(r.dropped_uplinks as f64)),
+                (
+                    "uplink_bits_by_worker",
+                    Json::Arr(
+                        r.uplink_bits_by_worker
+                            .iter()
+                            .map(|&b| Json::num(b as f64))
+                            .collect(),
+                    ),
+                ),
+                ("total_wall_ms", finite(r.total_wall_ms)),
+            ]),
+        ));
+    }
+    if let Some(t) = &job.final_theta {
+        pairs.push(("theta_hex", Json::Str(theta_to_hex(t))));
+    }
+    Json::obj(pairs)
+}
+
+/// Client half: send one request line to the daemon's control address,
+/// read one response line, fail on `{"ok":false}`.
+pub fn request(addr: &str, req: &Json) -> Result<Json> {
+    let mut stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to the control socket at {addr}"))?;
+    stream.set_nodelay(true)?;
+    let mut line = req.to_string_compact();
+    line.push('\n');
+    stream.write_all(line.as_bytes())?;
+    stream.flush()?;
+    let mut resp = String::new();
+    BufReader::new(stream)
+        .read_line(&mut resp)
+        .context("reading the control response")?;
+    ensure!(!resp.is_empty(), "control connection closed without a response");
+    let json = parse(resp.trim_end()).context("parsing the control response")?;
+    if !json.req("ok")?.as_bool()? {
+        let err = json
+            .get("error")
+            .and_then(|e| e.as_str().ok().map(str::to_string))
+            .unwrap_or_else(|| "unknown control error".into());
+        bail!("control request failed: {err}");
+    }
+    Ok(json)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::queue::{JobQueue, JobState};
+    use super::*;
+
+    #[test]
+    fn theta_hex_is_bit_exact_even_for_nonfinite() {
+        let theta =
+            vec![0.0f32, -0.0, 1.5e-38, f32::NAN, f32::INFINITY, -123.456, f32::MIN];
+        let hex = theta_to_hex(&theta);
+        assert_eq!(hex.len(), theta.len() * 8);
+        let back = theta_from_hex(&hex).unwrap();
+        let a: Vec<u32> = theta.iter().map(|x| x.to_bits()).collect();
+        let b: Vec<u32> = back.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(a, b);
+        assert!(theta_from_hex("0123456").is_err()); // not %8
+        assert!(theta_from_hex("zzzzzzzz").is_err()); // not hex
+    }
+
+    #[test]
+    fn finite_maps_nan_to_null() {
+        assert_eq!(finite(1.25), Json::num(1.25));
+        assert_eq!(finite(f64::NAN), Json::Null);
+        assert_eq!(finite(f64::INFINITY), Json::Null);
+    }
+
+    #[test]
+    fn submit_normalizes_and_validates() {
+        let mut cfg = TrainConfig::preset("quadratic", "comp-ams-topk:0.1");
+        cfg.workers = 3;
+        // Whatever the client claims about transport/threading, the
+        // scheduler runs the job over its fleet.
+        cfg.transport = "inproc".into();
+        cfg.threaded = true;
+        cfg.spawn_workers = false;
+        let req = Json::obj(vec![
+            ("cmd", Json::str("submit")),
+            ("config", cfg.to_json()),
+            ("priority", Json::num(2.0)),
+            ("name", Json::str("sweep")),
+        ]);
+        let (name, priority, parsed) = parse_submit(&req, 4).unwrap();
+        assert_eq!(name, "sweep");
+        assert_eq!(priority, 2);
+        assert_eq!(parsed.transport, "tcp");
+        assert!(!parsed.threaded);
+        assert!(!parsed.spawn_workers);
+        assert_eq!(parsed.workers, 3);
+        // Defaults: no name, priority 0.
+        let req = Json::obj(vec![("config", cfg.to_json())]);
+        let (name, priority, _) = parse_submit(&req, 4).unwrap();
+        assert!(name.is_empty());
+        assert_eq!(priority, 0);
+    }
+
+    #[test]
+    fn submit_rejects_bad_jobs() {
+        let cfg = TrainConfig::preset("quadratic", "comp-ams-topk:0.1");
+        let ok = Json::obj(vec![("config", cfg.to_json())]);
+        // More workers than the fleet has.
+        assert!(parse_submit(&ok, 2).is_err());
+        assert!(parse_submit(&ok, cfg.workers).is_ok());
+        // Non-analytic model.
+        let mut bad = cfg.clone();
+        bad.model = "mnist_cnn".into();
+        let req = Json::obj(vec![("config", bad.to_json())]);
+        assert!(parse_submit(&req, 64).is_err());
+        // Bogus algo caught by validate().
+        let mut bad = cfg.clone();
+        bad.algo = "carrier-pigeon".into();
+        let req = Json::obj(vec![("config", bad.to_json())]);
+        assert!(parse_submit(&req, 64).is_err());
+        // Missing config key entirely.
+        assert!(parse_submit(&Json::obj(vec![("cmd", Json::str("submit"))]), 4).is_err());
+        // Fractional priority.
+        let req = Json::obj(vec![
+            ("config", cfg.to_json()),
+            ("priority", Json::num(1.5)),
+        ]);
+        assert!(parse_submit(&req, 64).is_err());
+    }
+
+    #[test]
+    fn job_json_reports_state_and_omits_missing_fields() {
+        let mut q = JobQueue::new();
+        let id = q.submit("probe", 1, TrainConfig::preset("quadratic", "dist-sgd"));
+        let j = job_to_json(q.job(id).unwrap());
+        assert_eq!(j.req("state").unwrap().as_str().unwrap(), "queued");
+        assert_eq!(j.req("id").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(j.req("name").unwrap().as_str().unwrap(), "probe");
+        assert!(j.get("result").is_none());
+        assert!(j.get("error").is_none());
+        assert!(j.get("theta_hex").is_none());
+        q.job_mut(id).unwrap().state = JobState::Failed;
+        q.job_mut(id).unwrap().error = Some("boom".into());
+        let j = job_to_json(q.job(id).unwrap());
+        assert_eq!(j.req("state").unwrap().as_str().unwrap(), "failed");
+        assert_eq!(j.req("error").unwrap().as_str().unwrap(), "boom");
+        // The whole row must survive a compact-print → parse round trip
+        // (that is how it travels on the wire).
+        assert_eq!(parse(&j.to_string_compact()).unwrap(), j);
+    }
+}

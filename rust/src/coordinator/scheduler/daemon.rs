@@ -1,0 +1,572 @@
+//! The resident leader daemon: one worker fleet, many jobs.
+//!
+//! `comp-ams serve` promotes the leader from a single-run driver to a
+//! long-lived scheduler:
+//!
+//! ```text
+//!   fleet listener (tcp)      control listener (tcp, line-JSON)
+//!        │ HELLO ×N                 │ submit / status / cancel / drain
+//!        ▼                          ▼
+//!   Fleet{streams} ◀──────── Scheduler loop:
+//!        │   ASSIGN(cfg, resume)    pick highest-priority runnable job
+//!        │   rounds…                step it round by round
+//!        │   DETACH(want_state)     (checking cancel / preempt / SIGINT
+//!        ▼                           between rounds)
+//!   workers back to idle, next job re-ASSIGNs the same sockets
+//! ```
+//!
+//! Worker daemons HELLO once and become a pooled resource: each job gets
+//! a fresh pooled [`Tcp`](super::super::net::Tcp) transport over
+//! `try_clone`s of the fleet's sockets ([`assign_streams`]), wrapped in
+//! a per-job [`Trainer`] ([`Trainer::with_transport`]), so per-job
+//! [`RunResult`](super::super::metrics::RunResult)s and
+//! [`CommLedger`](super::super::comm::CommLedger)s can never bleed into
+//! each other — the accounting lives in the per-job value, not the
+//! resident daemon.
+//!
+//! One job runs at a time (the fleet is one resource). A submission with
+//! *strictly* higher priority preempts the running job at the next round
+//! boundary: the job is [`Trainer::suspend`]ed into a
+//! [`JobCheckpoint`] (θ + server optimizer + every worker's compressor/
+//! EF/data-stream state) and later resumed bitwise-identically — the
+//! workers re-enter their state from the ASSIGN frame's resume blob.
+//! SIGINT takes the same path: checkpoint the active job, mark it
+//! suspended, SHUTDOWN the fleet, reap any spawned children, exit.
+//! `drain` finishes everything already queued, then exits.
+//!
+//! The daemon prints `fleet-addr HOST:PORT` / `control-addr HOST:PORT`
+//! lines on stdout (flushed) as each listener binds — with ephemeral
+//! ports (`tcp:0`, the default) this is how tests and CI find it.
+//!
+//! Known v1 limitation: the fleet does not heal. A worker daemon that
+//! dies stays dead; jobs assigned onto its socket fail (the error is
+//! recorded on the job, the daemon keeps serving).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::config::TrainConfig;
+use crate::util::json::{parse, Json};
+
+use super::super::checkpoint::JobCheckpoint;
+use super::super::net::{assign_streams, write_frame, FrameKind, Tcp, TcpLeader};
+use super::super::supervisor::Supervisor;
+use super::super::trainer::Trainer;
+use super::control::{job_to_json, parse_submit};
+use super::queue::{JobId, JobQueue, JobState};
+
+/// How the daemon is launched (`comp-ams serve` flags).
+pub struct ServeOpts {
+    /// Fleet size: how many worker daemons to wait for (or spawn).
+    pub workers: usize,
+    /// Spawn the fleet as child processes instead of waiting for
+    /// externally launched `comp-ams worker`s.
+    pub spawn_workers: bool,
+    /// Fleet listener port (0 = ephemeral, announced on stdout).
+    pub fleet_port: u16,
+    /// Control listener port (0 = ephemeral, announced on stdout).
+    pub control_port: u16,
+}
+
+/// Entry point for `comp-ams serve`: install the SIGINT handler, form
+/// the fleet, start the control listener, and run jobs until drained or
+/// interrupted.
+pub fn serve(opts: &ServeOpts) -> Result<()> {
+    install_sigint();
+    Scheduler::start(opts)?.run()
+}
+
+// ---------------------------------------------------------------------------
+// SIGINT: a flag the serve loop polls between rounds (and while idle).
+
+static SIGINT: AtomicBool = AtomicBool::new(false);
+
+fn sigint_received() -> bool {
+    SIGINT.load(Ordering::Relaxed)
+}
+
+/// Install a handler that flips [`SIGINT`]. Pure std: libc's `signal`
+/// is already linked; storing to an `AtomicBool` is async-signal-safe.
+#[cfg(unix)]
+fn install_sigint() {
+    extern "C" fn on_sigint(_sig: i32) {
+        SIGINT.store(true, Ordering::Relaxed);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    unsafe {
+        signal(2 /* SIGINT */, on_sigint as extern "C" fn(i32) as usize);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_sigint() {}
+
+/// Print one machine-parseable `key value` line on stdout and flush it
+/// (stdout is block-buffered under a pipe — tests and CI read these).
+fn announce(key: &str, value: impl std::fmt::Display) -> Result<()> {
+    let mut out = std::io::stdout();
+    writeln!(out, "{key} {value}")?;
+    out.flush()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// The fleet: HELLO'd sockets, pooled across jobs.
+
+/// The resident worker fleet: one connected, idle socket per worker
+/// daemon (plus the supervisor when the daemon spawned them itself).
+struct Fleet {
+    streams: Vec<TcpStream>,
+    supervisor: Option<Supervisor>,
+}
+
+impl Fleet {
+    /// Bind the fleet listener, announce its address, and collect the
+    /// fleet's HELLOs (spawning the workers first if asked to).
+    fn form(opts: &ServeOpts) -> Result<Fleet> {
+        ensure!(opts.workers >= 1, "serve needs a fleet of at least one worker");
+        let leader = TcpLeader::bind(opts.fleet_port)?;
+        let addr = leader.local_addr()?;
+        announce("fleet-addr", addr)?;
+        let supervisor = if opts.spawn_workers {
+            Some(Supervisor::spawn(opts.workers, &addr.to_string())?)
+        } else {
+            eprintln!(
+                "[serve] waiting for {} worker(s): comp-ams worker --leader {addr}",
+                opts.workers
+            );
+            None
+        };
+        let streams = leader.accept_hellos(opts.workers)?;
+        eprintln!("[serve] fleet of {} worker(s) connected", streams.len());
+        Ok(Fleet { streams, supervisor })
+    }
+
+    /// ASSIGN a job onto the first `cfg.workers` fleet members (pooled:
+    /// end-of-job DETACHes them back to idle instead of closing them).
+    fn assign(&self, cfg: &TrainConfig, resume: Option<&[Vec<u8>]>) -> Result<Tcp> {
+        ensure!(
+            cfg.workers <= self.streams.len(),
+            "job wants {} workers but the fleet has {}",
+            cfg.workers,
+            self.streams.len()
+        );
+        assign_streams(&self.streams[..cfg.workers], cfg, resume, true)
+    }
+
+    /// End of service: SHUTDOWN every (idle) worker daemon, close the
+    /// sockets, and reap any children we spawned.
+    fn shutdown(mut self) -> Result<()> {
+        for stream in &mut self.streams {
+            // Best effort per worker — one that died mid-service must not
+            // keep the rest from shutting down cleanly.
+            let _ = write_frame(stream, FrameKind::Shutdown, &[]);
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+        if let Some(sup) = self.supervisor.as_mut() {
+            let nonzero = sup.reap(Duration::from_secs(10))?;
+            if nonzero > 0 {
+                eprintln!(
+                    "[serve] warning: {nonzero} worker process(es) exited non-zero"
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared state between the scheduler loop and control handler threads.
+
+struct SchedState {
+    queue: JobQueue,
+    draining: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<SchedState>,
+    /// Wakes the scheduler loop on submit/cancel/drain.
+    cvar: Condvar,
+    fleet_size: usize,
+}
+
+/// How one job's drive ended.
+enum Outcome {
+    Done(Vec<f32>, crate::coordinator::metrics::RunResult),
+    Suspended { ckpt: JobCheckpoint, preempted: bool },
+    Cancelled,
+}
+
+// ---------------------------------------------------------------------------
+// The scheduler.
+
+/// The resident multi-job scheduler: owns the fleet and the shared job
+/// queue; [`Scheduler::run`] drives jobs until drained or interrupted.
+pub struct Scheduler {
+    fleet: Fleet,
+    shared: Arc<Shared>,
+    control: TcpListener,
+}
+
+impl Scheduler {
+    /// Form the fleet, bind + announce the control listener, and start
+    /// the control accept thread. Does not run any job yet.
+    pub fn start(opts: &ServeOpts) -> Result<Scheduler> {
+        let fleet = Fleet::form(opts)?;
+        let shared = Arc::new(Shared {
+            state: Mutex::new(SchedState {
+                queue: JobQueue::new(),
+                draining: false,
+                shutdown: false,
+            }),
+            cvar: Condvar::new(),
+            fleet_size: fleet.streams.len(),
+        });
+        let control = TcpListener::bind(("127.0.0.1", opts.control_port))
+            .with_context(|| {
+                format!("binding the control listener on 127.0.0.1:{}", opts.control_port)
+            })?;
+        announce("control-addr", control.local_addr()?)?;
+        let acceptor = control.try_clone()?;
+        let accept_shared = Arc::clone(&shared);
+        std::thread::Builder::new()
+            .name("control-accept".into())
+            .spawn(move || {
+                for conn in acceptor.incoming() {
+                    let Ok(stream) = conn else { continue };
+                    let conn_shared = Arc::clone(&accept_shared);
+                    let _ = std::thread::Builder::new()
+                        .name("control-conn".into())
+                        .spawn(move || handle_conn(stream, conn_shared));
+                }
+            })
+            .context("spawning the control accept thread")?;
+        Ok(Scheduler { fleet, shared, control })
+    }
+
+    pub fn control_addr(&self) -> Result<SocketAddr> {
+        Ok(self.control.local_addr()?)
+    }
+
+    /// Serve jobs until the queue is drained (after a `drain` request)
+    /// or SIGINT arrives, then release the fleet.
+    pub fn run(mut self) -> Result<()> {
+        loop {
+            let next = {
+                let mut st = self.shared.state.lock().unwrap();
+                loop {
+                    if st.shutdown || sigint_received() {
+                        st.shutdown = true;
+                        break None;
+                    }
+                    if let Some(id) = st.queue.next_runnable() {
+                        break Some(id);
+                    }
+                    if st.draining {
+                        break None;
+                    }
+                    // Timed wait so an idle daemon still notices SIGINT.
+                    let (guard, _) = self
+                        .shared
+                        .cvar
+                        .wait_timeout(st, Duration::from_millis(200))
+                        .unwrap();
+                    st = guard;
+                }
+            };
+            match next {
+                Some(id) => self.run_one(id),
+                None => break,
+            }
+        }
+        eprintln!("[serve] releasing the fleet");
+        self.fleet.shutdown()
+    }
+
+    /// Run one scheduled job to completion, suspension, cancellation, or
+    /// failure, recording the outcome on the job.
+    fn run_one(&mut self, id: JobId) {
+        let (name, cfg, ckpt, priority) = {
+            let mut st = self.shared.state.lock().unwrap();
+            let job = st.queue.job_mut(id).expect("scheduled job exists");
+            job.state = JobState::Running;
+            (job.name.clone(), job.cfg.clone(), job.checkpoint.take(), job.priority)
+        };
+        eprintln!(
+            "[serve] job {id} ({name}): {} {} on {} worker(s), rounds {}..{}",
+            cfg.model,
+            cfg.algo,
+            cfg.workers,
+            ckpt.as_ref().map_or(0, |c| c.round),
+            cfg.rounds
+        );
+        let outcome = self.drive(id, priority, &cfg, ckpt);
+        let mut st = self.shared.state.lock().unwrap();
+        let job = st.queue.job_mut(id).expect("scheduled job exists");
+        match outcome {
+            Ok(Outcome::Done(theta, result)) => {
+                job.rounds_done = cfg.rounds;
+                job.final_theta = Some(theta);
+                job.result = Some(result);
+                job.state = JobState::Done;
+                eprintln!("[serve] job {id} ({name}): done");
+            }
+            Ok(Outcome::Suspended { ckpt, preempted }) => {
+                job.rounds_done = ckpt.round;
+                if preempted {
+                    job.preemptions += 1;
+                }
+                job.checkpoint = Some(ckpt);
+                job.state = JobState::Suspended;
+                eprintln!(
+                    "[serve] job {id} ({name}): suspended at round {} ({})",
+                    job.rounds_done,
+                    if preempted { "preempted" } else { "shutdown" }
+                );
+            }
+            Ok(Outcome::Cancelled) => {
+                job.state = JobState::Cancelled;
+                job.checkpoint = None;
+                eprintln!("[serve] job {id} ({name}): cancelled");
+            }
+            Err(e) => {
+                job.error = Some(format!("{e:#}"));
+                job.state = JobState::Failed;
+                eprintln!("[serve] job {id} ({name}): failed: {e:#}");
+            }
+        }
+    }
+
+    /// The per-job round loop: a fresh pooled transport + trainer, with
+    /// cancel / preemption / shutdown checks at every round boundary.
+    fn drive(
+        &mut self,
+        id: JobId,
+        priority: i64,
+        cfg: &TrainConfig,
+        ckpt: Option<JobCheckpoint>,
+    ) -> Result<Outcome> {
+        let tcp = self.fleet.assign(cfg, ckpt.as_ref().map(|c| c.workers.as_slice()))?;
+        let mut trainer = Trainer::with_transport(cfg, Box::new(tcp), ckpt.as_ref())?;
+        while trainer.next_round() < cfg.rounds {
+            enum Act {
+                Continue,
+                Cancel,
+                Suspend { preempted: bool },
+            }
+            let act = {
+                let st = self.shared.state.lock().unwrap();
+                let job = st.queue.job(id).expect("running job exists");
+                if job.cancel_requested {
+                    Act::Cancel
+                } else if st.shutdown || sigint_received() {
+                    Act::Suspend { preempted: false }
+                } else if st.queue.best_waiting_priority().is_some_and(|p| p > priority)
+                {
+                    Act::Suspend { preempted: true }
+                } else {
+                    Act::Continue
+                }
+            };
+            match act {
+                Act::Continue => {}
+                Act::Cancel => {
+                    // Dropping the trainer detaches the fleet back to
+                    // idle (pooled transport) without collecting state.
+                    drop(trainer);
+                    return Ok(Outcome::Cancelled);
+                }
+                Act::Suspend { preempted } => {
+                    let ckpt = trainer.suspend().context("suspending the job")?;
+                    return Ok(Outcome::Suspended { ckpt, preempted });
+                }
+            }
+            let round = trainer.next_round();
+            trainer.step(round)?;
+            self.shared
+                .state
+                .lock()
+                .unwrap()
+                .queue
+                .job_mut(id)
+                .expect("running job exists")
+                .rounds_done = trainer.next_round();
+        }
+        // Grab θ before finalize consumes the trainer: it travels to
+        // clients as theta_hex for bitwise trajectory verification.
+        let theta = trainer.theta.clone();
+        let result = trainer.finalize()?;
+        Ok(Outcome::Done(theta, result))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Control protocol server half.
+
+/// Serve one control connection: one JSON request per line, one JSON
+/// response per line, until the client hangs up.
+fn handle_conn(stream: TcpStream, shared: Arc<Shared>) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let reader = BufReader::new(read_half);
+    let mut writer = stream;
+    let _ = writer.set_nodelay(true);
+    for line in reader.lines() {
+        let Ok(line) = line else { return };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match handle_request(&shared, &line) {
+            Ok(j) => j,
+            Err(e) => Json::obj(vec![
+                ("ok", Json::Bool(false)),
+                ("error", Json::str(&format!("{e:#}"))),
+            ]),
+        };
+        let mut out = resp.to_string_compact();
+        out.push('\n');
+        if writer.write_all(out.as_bytes()).and_then(|_| writer.flush()).is_err() {
+            return;
+        }
+    }
+}
+
+fn ok_true() -> Json {
+    Json::obj(vec![("ok", Json::Bool(true))])
+}
+
+fn handle_request(shared: &Shared, line: &str) -> Result<Json> {
+    let req = parse(line).context("parsing control request")?;
+    let cmd = req.req("cmd")?.as_str()?;
+    match cmd {
+        "submit" => {
+            let (name, priority, cfg) = parse_submit(&req, shared.fleet_size)?;
+            let mut st = shared.state.lock().unwrap();
+            ensure!(!st.draining, "scheduler is draining; not accepting new jobs");
+            ensure!(!st.shutdown, "scheduler is shutting down");
+            let id = st.queue.submit(&name, priority, cfg);
+            shared.cvar.notify_all();
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("id", Json::num(id as f64)),
+            ]))
+        }
+        "status" => {
+            let st = shared.state.lock().unwrap();
+            let jobs: Vec<Json> = st.queue.jobs().iter().map(job_to_json).collect();
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("draining", Json::Bool(st.draining)),
+                ("fleet_workers", Json::num(shared.fleet_size as f64)),
+                ("jobs", Json::Arr(jobs)),
+            ]))
+        }
+        "cancel" => {
+            let id = req.req("id")?.as_usize()? as JobId;
+            let mut st = shared.state.lock().unwrap();
+            let job = st
+                .queue
+                .job_mut(id)
+                .with_context(|| format!("no job {id}"))?;
+            match job.state {
+                JobState::Queued | JobState::Suspended => {
+                    job.state = JobState::Cancelled;
+                    job.checkpoint = None;
+                }
+                JobState::Running => job.cancel_requested = true,
+                s => bail!("job {id} is already {}", s.as_str()),
+            }
+            shared.cvar.notify_all();
+            Ok(ok_true())
+        }
+        "drain" => {
+            let mut st = shared.state.lock().unwrap();
+            st.draining = true;
+            shared.cvar.notify_all();
+            Ok(ok_true())
+        }
+        other => bail!("unknown command '{other}' (submit | status | cancel | drain)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shared(fleet_size: usize) -> Shared {
+        Shared {
+            state: Mutex::new(SchedState {
+                queue: JobQueue::new(),
+                draining: false,
+                shutdown: false,
+            }),
+            cvar: Condvar::new(),
+            fleet_size,
+        }
+    }
+
+    fn submit_req(workers: usize, priority: f64) -> String {
+        let mut cfg = TrainConfig::preset("quadratic", "dist-sgd");
+        cfg.workers = workers;
+        Json::obj(vec![
+            ("cmd", Json::str("submit")),
+            ("config", cfg.to_json()),
+            ("priority", Json::num(priority)),
+        ])
+        .to_string_compact()
+    }
+
+    #[test]
+    fn submit_status_cancel_lifecycle() {
+        let sh = shared(4);
+        let resp = handle_request(&sh, &submit_req(2, 0.0)).unwrap();
+        assert_eq!(resp.req("id").unwrap().as_usize().unwrap(), 1);
+        handle_request(&sh, &submit_req(4, 5.0)).unwrap();
+        let status = handle_request(&sh, r#"{"cmd":"status"}"#).unwrap();
+        let jobs = status.req("jobs").unwrap().as_arr().unwrap();
+        assert_eq!(jobs.len(), 2);
+        assert_eq!(status.req("fleet_workers").unwrap().as_usize().unwrap(), 4);
+        // The queue scheduling sees priority 5 first.
+        assert_eq!(sh.state.lock().unwrap().queue.next_runnable(), Some(2));
+        handle_request(&sh, r#"{"cmd":"cancel","id":2}"#).unwrap();
+        assert_eq!(sh.state.lock().unwrap().queue.next_runnable(), Some(1));
+        // Cancelling a cancelled job is an error.
+        assert!(handle_request(&sh, r#"{"cmd":"cancel","id":2}"#).is_err());
+        assert!(handle_request(&sh, r#"{"cmd":"cancel","id":99}"#).is_err());
+    }
+
+    #[test]
+    fn drain_refuses_new_submissions() {
+        let sh = shared(4);
+        handle_request(&sh, r#"{"cmd":"drain"}"#).unwrap();
+        assert!(sh.state.lock().unwrap().draining);
+        let err = handle_request(&sh, &submit_req(2, 0.0)).unwrap_err().to_string();
+        assert!(err.contains("draining"), "{err}");
+        // status still answers.
+        let status = handle_request(&sh, r#"{"cmd":"status"}"#).unwrap();
+        assert!(status.req("draining").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn oversubscribed_and_unknown_commands_rejected() {
+        let sh = shared(2);
+        assert!(handle_request(&sh, &submit_req(3, 0.0)).is_err());
+        assert!(handle_request(&sh, r#"{"cmd":"gibberish"}"#).is_err());
+        assert!(handle_request(&sh, "not json").is_err());
+        // A running job is cancelled via the flag, not a state flip.
+        handle_request(&sh, &submit_req(2, 0.0)).unwrap();
+        sh.state.lock().unwrap().queue.job_mut(1).unwrap().state = JobState::Running;
+        handle_request(&sh, r#"{"cmd":"cancel","id":1}"#).unwrap();
+        let st = sh.state.lock().unwrap();
+        let job = st.queue.job(1).unwrap();
+        assert_eq!(job.state, JobState::Running);
+        assert!(job.cancel_requested);
+    }
+}

@@ -1,0 +1,31 @@
+//! The multi-job scheduler: a resident leader serving many training
+//! jobs over one persistent worker fleet.
+//!
+//! `comp-ams serve` turns the leader into a daemon. Worker daemons
+//! HELLO once and become a pooled resource; each submitted job is
+//! re-ASSIGNed onto the fleet, driven round by round through a per-job
+//! [`Trainer`](super::trainer::Trainer), and DETACHed back to the pool
+//! when it finishes — or is suspended into a
+//! [`JobCheckpoint`](super::checkpoint::JobCheckpoint) when a strictly
+//! higher-priority job arrives, to be resumed bitwise-identically later.
+//!
+//! Three layers, one file each:
+//!
+//! | module     | role |
+//! |------------|------|
+//! | [`queue`]  | plain-data [`JobQueue`]: priorities, FIFO tie-break, lifecycle states |
+//! | [`daemon`] | the [`Scheduler`]: fleet ownership, job driving, preemption, SIGINT/drain |
+//! | [`control`]| line-delimited JSON protocol (`submit`/`status`/`cancel`/`drain`), client helper |
+//!
+//! Because every job runs through its own `Trainer` value over a fresh
+//! pooled transport, per-job [`RunResult`](super::metrics::RunResult)s
+//! and bit ledgers are disjoint by construction — the daemon holds no
+//! cross-job accounting state.
+
+pub mod control;
+pub mod daemon;
+pub mod queue;
+
+pub use control::{job_to_json, parse_submit, request, theta_from_hex, theta_to_hex};
+pub use daemon::{serve, Scheduler, ServeOpts};
+pub use queue::{Job, JobId, JobQueue, JobState};

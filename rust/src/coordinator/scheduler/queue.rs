@@ -1,0 +1,227 @@
+//! The job queue: priorities, FIFO tie-break, and job lifecycle state.
+//!
+//! The queue is plain data (configs, checkpoints, results — no live
+//! transports or trainers), so it sits behind the scheduler's mutex and
+//! is safely shared between the job-driving thread and the control
+//! protocol handlers. The scheduling policy is deliberately simple and
+//! fully deterministic: among the runnable jobs (queued or suspended),
+//! the highest `priority` wins, and the lowest `id` — submission order —
+//! breaks ties.
+
+use crate::config::TrainConfig;
+
+use super::super::checkpoint::JobCheckpoint;
+use super::super::metrics::RunResult;
+
+/// Monotonic job identifier, assigned at submit time starting from 1.
+pub type JobId = u64;
+
+/// Lifecycle of a scheduled job.
+///
+/// ```text
+///   Queued ──▶ Running ──▶ Done | Failed | Cancelled
+///                 │ ▲
+///                 ▼ │  (preemption / graceful shutdown)
+///              Suspended ──▶ Cancelled
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    /// Submitted, never run.
+    Queued,
+    /// Currently owning the fleet.
+    Running,
+    /// Preempted (or interrupted by shutdown) with a checkpoint; eligible
+    /// to run again.
+    Suspended,
+    /// Ran to completion; `result` holds its [`RunResult`].
+    Done,
+    /// Aborted with an error; `error` holds the rendered cause.
+    Failed,
+    /// Cancelled before completion (checkpoint, if any, discarded).
+    Cancelled,
+}
+
+impl JobState {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Suspended => "suspended",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    /// Terminal states never run (again).
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
+}
+
+/// One submitted training job and everything the scheduler knows about
+/// it. `checkpoint` is present exactly while the job is [`Suspended`]
+/// (`JobState::Suspended`); `result` and `final_theta` exactly once it
+/// is [`Done`](JobState::Done).
+pub struct Job {
+    pub id: JobId,
+    pub name: String,
+    /// Higher runs first; a strictly higher-priority submission preempts
+    /// the running job between rounds.
+    pub priority: i64,
+    pub cfg: TrainConfig,
+    pub state: JobState,
+    pub checkpoint: Option<JobCheckpoint>,
+    pub result: Option<RunResult>,
+    /// Final θ (bit-exact), surfaced over the control protocol so
+    /// clients can verify resumed trajectories.
+    pub final_theta: Option<Vec<f32>>,
+    pub error: Option<String>,
+    /// Rounds completed so far (across suspensions).
+    pub rounds_done: u64,
+    /// How many times this job was preempted by a higher-priority one.
+    pub preemptions: u64,
+    /// Set by the control protocol to cancel a *running* job; the
+    /// scheduler honours it at the next round boundary.
+    pub cancel_requested: bool,
+}
+
+/// All jobs ever submitted to this daemon (terminal jobs stay, so
+/// `status` can report them), plus the id counter.
+pub struct JobQueue {
+    jobs: Vec<Job>,
+    next_id: JobId,
+}
+
+impl JobQueue {
+    pub fn new() -> JobQueue {
+        JobQueue { jobs: Vec::new(), next_id: 1 }
+    }
+
+    /// Enqueue a job; an empty `name` gets the default `job-<id>`.
+    pub fn submit(&mut self, name: &str, priority: i64, cfg: TrainConfig) -> JobId {
+        let id = self.next_id;
+        self.next_id += 1;
+        let name =
+            if name.is_empty() { format!("job-{id}") } else { name.to_string() };
+        self.jobs.push(Job {
+            id,
+            name,
+            priority,
+            cfg,
+            state: JobState::Queued,
+            checkpoint: None,
+            result: None,
+            final_theta: None,
+            error: None,
+            rounds_done: 0,
+            preemptions: 0,
+            cancel_requested: false,
+        });
+        id
+    }
+
+    pub fn job(&self, id: JobId) -> Option<&Job> {
+        self.jobs.iter().find(|j| j.id == id)
+    }
+
+    pub fn job_mut(&mut self, id: JobId) -> Option<&mut Job> {
+        self.jobs.iter_mut().find(|j| j.id == id)
+    }
+
+    pub fn jobs(&self) -> &[Job] {
+        &self.jobs
+    }
+
+    fn runnable(&self) -> impl Iterator<Item = &Job> {
+        self.jobs
+            .iter()
+            .filter(|j| matches!(j.state, JobState::Queued | JobState::Suspended))
+    }
+
+    /// The job the scheduler should run next: highest priority, FIFO
+    /// (lowest id) among equals. Suspended jobs compete on the same
+    /// terms as queued ones.
+    pub fn next_runnable(&self) -> Option<JobId> {
+        self.runnable()
+            .max_by(|a, b| a.priority.cmp(&b.priority).then(b.id.cmp(&a.id)))
+            .map(|j| j.id)
+    }
+
+    /// Highest priority waiting to run — the preemption check: a running
+    /// job yields when this is *strictly* above its own priority.
+    pub fn best_waiting_priority(&self) -> Option<i64> {
+        self.runnable().map(|j| j.priority).max()
+    }
+
+    /// Any job still queued, suspended, or running?
+    pub fn has_unfinished(&self) -> bool {
+        self.jobs.iter().any(|j| !j.state.is_terminal())
+    }
+}
+
+impl Default for JobQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> TrainConfig {
+        TrainConfig::preset("quadratic", "dist-sgd")
+    }
+
+    #[test]
+    fn fifo_within_equal_priority() {
+        let mut q = JobQueue::new();
+        let a = q.submit("a", 0, cfg());
+        let b = q.submit("b", 0, cfg());
+        assert_eq!(q.next_runnable(), Some(a));
+        q.job_mut(a).unwrap().state = JobState::Done;
+        assert_eq!(q.next_runnable(), Some(b));
+        q.job_mut(b).unwrap().state = JobState::Cancelled;
+        assert_eq!(q.next_runnable(), None);
+        assert!(!q.has_unfinished());
+    }
+
+    #[test]
+    fn priority_beats_submission_order() {
+        let mut q = JobQueue::new();
+        let low = q.submit("low", -1, cfg());
+        let mid = q.submit("", 0, cfg());
+        let high = q.submit("high", 3, cfg());
+        assert_eq!(q.next_runnable(), Some(high));
+        assert_eq!(q.best_waiting_priority(), Some(3));
+        q.job_mut(high).unwrap().state = JobState::Running;
+        // Running jobs are not "waiting": only queued/suspended compete.
+        assert_eq!(q.next_runnable(), Some(mid));
+        assert_eq!(q.best_waiting_priority(), Some(0));
+        assert_eq!(q.job(mid).unwrap().name, "job-2");
+        q.job_mut(mid).unwrap().state = JobState::Failed;
+        assert_eq!(q.next_runnable(), Some(low));
+    }
+
+    #[test]
+    fn suspended_jobs_compete_again() {
+        let mut q = JobQueue::new();
+        let a = q.submit("a", 5, cfg());
+        let b = q.submit("b", 1, cfg());
+        q.job_mut(a).unwrap().state = JobState::Suspended;
+        // Suspended-but-higher-priority beats queued-but-lower.
+        assert_eq!(q.next_runnable(), Some(a));
+        q.job_mut(a).unwrap().state = JobState::Cancelled;
+        assert_eq!(q.next_runnable(), Some(b));
+    }
+
+    #[test]
+    fn ids_are_monotonic_from_one()  {
+        let mut q = JobQueue::new();
+        assert_eq!(q.submit("", 0, cfg()), 1);
+        assert_eq!(q.submit("", 9, cfg()), 2);
+        assert_eq!(q.submit("", -9, cfg()), 3);
+        assert!(q.job(4).is_none());
+    }
+}

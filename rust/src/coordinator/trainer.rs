@@ -21,7 +21,7 @@ use std::path::Path;
 use std::rc::Rc;
 use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::algo::{AlgoSpec, ServerAlgo, ShardedServer, WorkerAlgo};
 use crate::config::TrainConfig;
@@ -38,10 +38,11 @@ use crate::grad::{
 use crate::runtime::{ModelBundle, OptimizerExe, Runtime};
 use crate::util::timer::Stopwatch;
 
-use super::cluster::WorkerPool;
+use super::checkpoint::JobCheckpoint;
+use super::cluster::{import_worker_blob, WorkerPool};
 use super::comm::CommLedger;
 use super::metrics::{RoundMetric, RunResult};
-use super::net::TcpLeader;
+use super::net::{assign_streams, TcpLeader};
 use super::runtime::ClusterRuntime;
 use super::supervisor::Supervisor;
 use super::transport::{Transport, TransportSpec};
@@ -57,6 +58,9 @@ pub struct Trainer {
     metrics: Vec<RoundMetric>,
     worker_ms_total: f64,
     round_ms_total: f64,
+    /// The next round [`Trainer::run`] (or a manual [`Trainer::step`]
+    /// loop) will execute; restored from the checkpoint on resume.
+    next_round: u64,
     /// Child worker processes when `--spawn-workers` assembled the
     /// cluster; reaped at end of run (and killed on any error unwind).
     supervisor: Option<Supervisor>,
@@ -64,7 +68,35 @@ pub struct Trainer {
 
 impl Trainer {
     pub fn new(cfg: &TrainConfig) -> Result<Trainer> {
+        Self::build(cfg, None)
+    }
+
+    /// Rebuild a trainer from a [`JobCheckpoint`] and continue bitwise
+    /// where [`Trainer::suspend`] left off. The checkpoint carries its
+    /// own config; worker state re-enters through the same constructors
+    /// the original run used — imported into the rebuilt in-process
+    /// pool, or shipped to remote daemons in the ASSIGN frame's resume
+    /// blob.
+    pub fn resume(ckpt: &JobCheckpoint) -> Result<Trainer> {
+        Self::build(&ckpt.cfg, Some(ckpt))
+    }
+
+    fn build(cfg: &TrainConfig, ckpt: Option<&JobCheckpoint>) -> Result<Trainer> {
         cfg.validate()?;
+        if let Some(ck) = ckpt {
+            ensure!(
+                ck.workers.len() == cfg.workers,
+                "checkpoint holds {} worker state blob(s) for a {}-worker config",
+                ck.workers.len(),
+                cfg.workers
+            );
+            ensure!(
+                ck.round <= cfg.rounds,
+                "checkpoint round {} past the configured {} rounds",
+                ck.round,
+                cfg.rounds
+            );
+        }
         let spec = AlgoSpec::parse(&cfg.algo)?;
         let tspec = TransportSpec::parse(&cfg.transport)?;
         // Remote (tcp) workers rebuild their own gradient sources and
@@ -72,9 +104,9 @@ impl Trainer {
         // so don't construct n unused local pipelines for them. Server
         // construction is independent of the worker count.
         let local_workers = if tspec.is_multiprocess() { 0 } else { cfg.workers };
-        let (sources, evaluator, theta, fused) = build_workload(cfg, local_workers)?;
+        let (sources, evaluator, mut theta, fused) = build_workload(cfg, local_workers)?;
         let fused = if cfg.fused_update { fused } else { None };
-        let (workers, mut server) =
+        let (mut workers, mut server) =
             spec.build_fused(theta.len(), local_workers, cfg.rounds, fused);
         if cfg.server_shards > 1 {
             // Replace the full-θ server with S per-shard servers (the
@@ -87,10 +119,23 @@ impl Trainer {
                 cfg.server_threaded,
             )?);
         }
+        if let Some(ck) = ckpt {
+            ensure!(
+                ck.theta.len() == theta.len(),
+                "checkpoint θ has {} coordinates, model has {}",
+                ck.theta.len(),
+                theta.len()
+            );
+            theta = ck.theta.clone();
+            server
+                .import_state(&ck.server)
+                .context("restoring the server optimizer state")?;
+        }
         let (transport, supervisor): (Box<dyn Transport>, Option<Supervisor>) = match tspec {
             TransportSpec::Tcp { port } => {
                 // Workers are remote processes (local_workers == 0: the
-                // pool pieces above are empty).
+                // pool pieces above are empty). Any resume blobs ride
+                // the ASSIGN frames.
                 drop(workers);
                 drop(sources);
                 let leader = TcpLeader::bind(port)?;
@@ -104,18 +149,42 @@ impl Trainer {
                     );
                     None
                 };
-                (Box::new(leader.accept_workers(cfg)?), sup)
+                let streams = leader.accept_hellos(cfg.workers)?;
+                let tcp =
+                    assign_streams(&streams, cfg, ckpt.map(|c| c.workers.as_slice()), false)?;
+                (Box::new(tcp), sup)
             }
             in_proc => {
+                // On resume, worker state goes back into the freshly
+                // built (source, algo) pairs *before* they move into the
+                // pool — the two Sources variants hold different trait-
+                // object types, so each arm restores its own.
                 let pool = match sources {
-                    Sources::Threadable(s) if cfg.threaded => {
-                        WorkerPool::threaded(s, workers)?
+                    Sources::Threadable(mut s) => {
+                        if let Some(ck) = ckpt {
+                            for (w, blob) in ck.workers.iter().enumerate() {
+                                import_worker_blob(s[w].as_mut(), workers[w].as_mut(), blob)
+                                    .with_context(|| format!("restoring worker {w} state"))?;
+                            }
+                        }
+                        if cfg.threaded {
+                            WorkerPool::threaded(s, workers)?
+                        } else {
+                            WorkerPool::sequential(
+                                s.into_iter().map(|b| b as Box<dyn GradSource>).collect(),
+                                workers,
+                            )?
+                        }
                     }
-                    Sources::Threadable(s) => WorkerPool::sequential(
-                        s.into_iter().map(|b| b as Box<dyn GradSource>).collect(),
-                        workers,
-                    )?,
-                    Sources::LeaderOnly(s) => WorkerPool::sequential(s, workers)?,
+                    Sources::LeaderOnly(mut s) => {
+                        if let Some(ck) = ckpt {
+                            for (w, blob) in ck.workers.iter().enumerate() {
+                                import_worker_blob(s[w].as_mut(), workers[w].as_mut(), blob)
+                                    .with_context(|| format!("restoring worker {w} state"))?;
+                            }
+                        }
+                        WorkerPool::sequential(s, workers)?
+                    }
                 };
                 (in_proc.build(pool)?, None)
             }
@@ -129,11 +198,79 @@ impl Trainer {
             algo_name,
             evaluator,
             theta,
-            ledger: CommLedger::new(),
-            metrics: Vec::new(),
-            worker_ms_total: 0.0,
-            round_ms_total: 0.0,
+            ledger: ckpt.map(|c| c.ledger.clone()).unwrap_or_default(),
+            metrics: ckpt.map(|c| c.metrics.clone()).unwrap_or_default(),
+            worker_ms_total: ckpt.map_or(0.0, |c| c.worker_ms_total),
+            round_ms_total: ckpt.map_or(0.0, |c| c.round_ms_total),
+            next_round: ckpt.map_or(0, |c| c.round),
             supervisor,
+        })
+    }
+
+    /// Assemble a trainer over a transport the caller already owns — the
+    /// resident scheduler's path, where the fleet's sockets were
+    /// ASSIGNed via [`assign_streams`](super::net::assign_streams) and
+    /// the worker resume state rode those frames. Only the leader half —
+    /// θ, the server optimizer, the ledger/metrics tail — is restored
+    /// from `ckpt` here. Analytic substrates only (the evaluator is
+    /// rebuilt leader-side from the config); no supervisor is attached —
+    /// whoever owns the fleet owns its processes.
+    pub fn with_transport(
+        cfg: &TrainConfig,
+        transport: Box<dyn Transport>,
+        ckpt: Option<&JobCheckpoint>,
+    ) -> Result<Trainer> {
+        cfg.validate()?;
+        ensure!(
+            cfg.is_analytic(),
+            "with_transport serves the analytic substrates, not '{}'",
+            cfg.model
+        );
+        let spec = AlgoSpec::parse(&cfg.algo)?;
+        let (_sources, evaluator, mut theta, _fused) = build_workload(cfg, 0)?;
+        let (_workers, mut server) = spec.build_fused(theta.len(), 0, cfg.rounds, None);
+        if cfg.server_shards > 1 {
+            server = Box::new(ShardedServer::new(
+                &spec,
+                theta.len(),
+                cfg.rounds,
+                cfg.server_shards,
+                cfg.server_threaded,
+            )?);
+        }
+        if let Some(ck) = ckpt {
+            ensure!(
+                ck.round <= cfg.rounds,
+                "checkpoint round {} past the configured {} rounds",
+                ck.round,
+                cfg.rounds
+            );
+            ensure!(
+                ck.theta.len() == theta.len(),
+                "checkpoint θ has {} coordinates, model has {}",
+                ck.theta.len(),
+                theta.len()
+            );
+            theta = ck.theta.clone();
+            server
+                .import_state(&ck.server)
+                .context("restoring the server optimizer state")?;
+        }
+        let runtime = ClusterRuntime::new(transport, cfg.quorum, cfg.max_staleness)?;
+        let algo_name = server.name();
+        Ok(Trainer {
+            cfg: cfg.clone(),
+            runtime,
+            server,
+            algo_name,
+            evaluator,
+            theta,
+            ledger: ckpt.map(|c| c.ledger.clone()).unwrap_or_default(),
+            metrics: ckpt.map(|c| c.metrics.clone()).unwrap_or_default(),
+            worker_ms_total: ckpt.map_or(0.0, |c| c.worker_ms_total),
+            round_ms_total: ckpt.map_or(0.0, |c| c.round_ms_total),
+            next_round: ckpt.map_or(0, |c| c.round),
+            supervisor: None,
         })
     }
 
@@ -203,7 +340,57 @@ impl Trainer {
                 lag,
             );
         }
+        self.next_round = round + 1;
         Ok(train_loss)
+    }
+
+    /// The next round [`Trainer::run`] would execute — equal to the
+    /// number of rounds completed so far (suspension included).
+    pub fn next_round(&self) -> u64 {
+        self.next_round
+    }
+
+    /// Quiesce the run and capture everything needed to continue it
+    /// bitwise later: drain the in-flight uplinks (they stay billed),
+    /// DETACH every worker collecting its suspend blob (compressor RNG,
+    /// error feedback, batch stream), and export the server optimizer.
+    /// Requires every worker alive — a dead worker's accumulated error
+    /// feedback is unrecoverable, so a checkpoint claiming to carry it
+    /// would be a lie. Consumes the trainer; remote fleets are released
+    /// back to idle (pooled transports keep their sockets open for the
+    /// next ASSIGN), and any supervisor-spawned children are reaped.
+    pub fn suspend(mut self) -> Result<JobCheckpoint> {
+        self.runtime.drain_in_flight(&mut self.ledger)?;
+        let blobs = self.runtime.detach_workers(true)?;
+        let mut workers = Vec::with_capacity(blobs.len());
+        for (w, blob) in blobs.into_iter().enumerate() {
+            workers.push(blob.ok_or_else(|| {
+                anyhow::anyhow!("worker {w} died; cannot checkpoint its state")
+            })?);
+        }
+        let server = self
+            .server
+            .export_state()
+            .context("exporting the server optimizer state")?;
+        // Dedicated (non-pooled) clusters are done with their workers:
+        // send SHUTDOWN so detached daemons exit instead of idling
+        // forever, then reap any children we spawned. On a pooled fleet
+        // transport this is a no-op — the scheduler keeps the sockets.
+        self.runtime.shutdown()?;
+        if let Some(sup) = self.supervisor.as_mut() {
+            sup.reap(Duration::from_secs(10))?;
+        }
+        Ok(JobCheckpoint {
+            round: self.next_round,
+            cfg: self.cfg.clone(),
+            theta: self.theta,
+            server,
+            workers,
+            ledger: self.ledger,
+            metrics: self.metrics,
+            worker_ms_total: self.worker_ms_total,
+            round_ms_total: self.round_ms_total,
+        })
     }
 
     /// End-of-run teardown: bill the straggler uplinks still in flight
@@ -232,11 +419,20 @@ impl Trainer {
         Ok(())
     }
 
+    /// Run every remaining round (`next_round..rounds`) and finalize —
+    /// the whole job for a fresh trainer, the tail for a resumed one.
     pub fn run(mut self) -> Result<RunResult> {
-        let total = Stopwatch::start();
-        for round in 0..self.cfg.rounds {
-            self.step(round)?;
+        while self.next_round < self.cfg.rounds {
+            self.step(self.next_round)?;
         }
+        self.finalize()
+    }
+
+    /// Teardown plus final evaluation: fold the run into its
+    /// [`RunResult`]. `total_wall_ms` is the accumulated in-round wall
+    /// time — carried through [`JobCheckpoint`]s, so a preempted job's
+    /// result covers the whole job, not just its last segment.
+    pub fn finalize(mut self) -> Result<RunResult> {
         self.finish()?;
         let final_eval = self.evaluator.eval(&self.theta)?;
         let server_ms_by_shard = self
@@ -250,7 +446,7 @@ impl Trainer {
             workers: self.cfg.workers,
             metrics: self.metrics,
             final_eval,
-            total_wall_ms: total.ms(),
+            total_wall_ms: self.round_ms_total,
             coord_overhead: if self.round_ms_total > 0.0 {
                 // Clamped: timer jitter (worker stopwatch vs round
                 // stopwatch) must not report a negative leader share.
@@ -553,6 +749,65 @@ mod tests {
             "{}",
             run.coord_overhead
         );
+    }
+
+    #[test]
+    fn suspend_resume_matches_uninterrupted_run() {
+        for algo in
+            ["comp-ams-topk:0.1", "comp-ams-randomk:0.1", "qadam", "1bitadam:10", "dist-sgd"]
+        {
+            let mut cfg = TrainConfig::preset("quadratic", algo);
+            cfg.workers = 3;
+            cfg.rounds = 30;
+            cfg.eval_every = 0;
+            let solo = train(&cfg).unwrap();
+            let mut t = Trainer::new(&cfg).unwrap();
+            for r in 0..17 {
+                t.step(r).unwrap();
+            }
+            let ckpt = t.suspend().unwrap();
+            assert_eq!(ckpt.round, 17, "{algo}");
+            assert_eq!(ckpt.metrics.len(), 17, "{algo}");
+            let resumed = Trainer::resume(&ckpt).unwrap().run().unwrap();
+            assert_eq!(solo.metrics.len(), resumed.metrics.len(), "{algo}");
+            for (a, b) in solo.metrics.iter().zip(&resumed.metrics) {
+                assert_eq!(
+                    a.train_loss.to_bits(),
+                    b.train_loss.to_bits(),
+                    "{algo} diverged at round {}",
+                    a.round
+                );
+                assert_eq!(a.uplink_bits, b.uplink_bits, "{algo} round {}", a.round);
+            }
+            assert_eq!(
+                solo.final_eval.loss.to_bits(),
+                resumed.final_eval.loss.to_bits(),
+                "{algo}: final loss differs after resume"
+            );
+            assert_eq!(solo.uplink_bits_by_worker, resumed.uplink_bits_by_worker, "{algo}");
+        }
+    }
+
+    #[test]
+    fn suspend_resume_preserves_threaded_and_sharded_runs() {
+        // The pool's threaded backend and the sharded server both carry
+        // their own state machinery through export/import.
+        let mut cfg = TrainConfig::preset("quadratic", "comp-ams-topk:0.1");
+        cfg.workers = 3;
+        cfg.rounds = 24;
+        cfg.eval_every = 0;
+        cfg.threaded = true;
+        cfg.server_shards = 4;
+        let solo = train(&cfg).unwrap();
+        let mut t = Trainer::new(&cfg).unwrap();
+        for r in 0..11 {
+            t.step(r).unwrap();
+        }
+        let resumed = Trainer::resume(&t.suspend().unwrap()).unwrap().run().unwrap();
+        for (a, b) in solo.metrics.iter().zip(&resumed.metrics) {
+            assert_eq!(a.train_loss.to_bits(), b.train_loss.to_bits(), "round {}", a.round);
+        }
+        assert_eq!(solo.uplink_bits_by_shard, resumed.uplink_bits_by_shard);
     }
 
     #[test]

@@ -171,6 +171,19 @@ pub trait Transport {
     fn shutdown(&mut self) -> Result<()> {
         Ok(())
     }
+
+    /// Release the workers from this job without terminating them, and —
+    /// when `want_state` — collect each worker's suspend blob
+    /// ([`export_worker_blob`](super::cluster::export_worker_blob)) so
+    /// the job can later resume bitwise-identically. One entry per
+    /// worker: `Some(blob)` for a worker that answered, `None` for a dead
+    /// worker (or when its state was not requested). Only callable with
+    /// no uplinks in flight; after a detach the transport is spent. The
+    /// scheduler uses this to hand a pooled fleet from one job to the
+    /// next ([`crate::coordinator::scheduler`]).
+    fn detach(&mut self, _want_state: bool) -> Result<Vec<Option<Vec<u8>>>> {
+        bail!("transport does not support detach")
+    }
 }
 
 /// In-process transport: messages move as Rust values over the pool's
@@ -211,6 +224,20 @@ impl Transport for InProc {
         };
         Ok(Event::Uplink { wid, round, envelope })
     }
+
+    fn detach(&mut self, want_state: bool) -> Result<Vec<Option<Vec<u8>>>> {
+        detach_pool(&mut self.pool, want_state)
+    }
+}
+
+/// Shared detach path for the two pool-backed transports: in process
+/// there is nothing to release, so a detach is just the optional state
+/// export.
+fn detach_pool(pool: &mut WorkerPool, want_state: bool) -> Result<Vec<Option<Vec<u8>>>> {
+    if !want_state {
+        return Ok(vec![None; pool.len()]);
+    }
+    Ok(pool.export_states()?.into_iter().map(Some).collect())
 }
 
 /// Wire-framing transport: every downlink and uplink is encoded to bytes
@@ -282,6 +309,10 @@ impl Transport for Loopback {
 
     fn frame_overhead_bits(&self) -> u64 {
         (ENVELOPE_HEADER_BYTES as u64) * 8
+    }
+
+    fn detach(&mut self, want_state: bool) -> Result<Vec<Option<Vec<u8>>>> {
+        detach_pool(&mut self.pool, want_state)
     }
 }
 

@@ -2,10 +2,10 @@
 //!
 //! `comp-ams worker --leader HOST:PORT` runs this loop. The daemon
 //! connects to the leader, handshakes (HELLO → ASSIGN, which carries its
-//! `wid` and the full serialized [`TrainConfig`]), rebuilds its gradient
-//! shard and protocol worker half from exactly the constructors the
-//! in-process pool uses ([`build_worker_parts`]), and then services
-//! rounds until SHUTDOWN:
+//! `wid`, an optional resume blob, and the full serialized
+//! [`TrainConfig`]), rebuilds its gradient shard and protocol worker
+//! half from exactly the constructors the in-process pool uses
+//! ([`build_worker_parts`]), and then services rounds:
 //!
 //! ```text
 //!   DOWNLINK frame → Envelope::decode → (θ, RoundCtx::sync(round, lr))
@@ -16,6 +16,19 @@
 //! The worker-side `RoundCtx` comes entirely off the wire — the same
 //! `RoundCtx::sync`-from-frame path the `Loopback` transport proved —
 //! so a K = n TCP run is bitwise identical to `InProc`.
+//!
+//! ## Multi-job service
+//!
+//! The daemon outlives a single job. A DETACH frame ends the current job:
+//! the worker answers with one STATE frame (its suspend blob — error
+//! feedback, compressor RNG, batch stream — when `want_state` is set,
+//! empty otherwise) and returns to **idle**, awaiting the next ASSIGN.
+//! This is what lets the resident scheduler ([`super::scheduler`]) run
+//! many jobs over one worker fleet without re-handshaking. A SHUTDOWN
+//! (either mid-idle or mid-job) or a leader that closes the socket while
+//! the worker is idle ends the daemon cleanly; a leader that vanishes
+//! *mid-job* is an error (non-zero exit, so a supervisor — or a human —
+//! can tell).
 //!
 //! `exit_after` is fault injection for the crash tests: the daemon exits
 //! (status 17) on receiving the downlink for that round, *before*
@@ -32,6 +45,7 @@ use crate::algo::RoundCtx;
 use crate::compress::Payload;
 use crate::config::TrainConfig;
 
+use super::cluster::{export_worker_blob, import_worker_blob};
 use super::net::{read_frame, write_frame, FrameKind};
 use super::transport::Envelope;
 use super::trainer::build_worker_parts;
@@ -69,27 +83,59 @@ fn connect_with_retry(leader: &str, patience: Duration) -> Result<TcpStream> {
     }
 }
 
-/// Run the worker daemon until the leader says SHUTDOWN. Returns `Ok`
-/// only on a clean shutdown; a leader that vanishes mid-run is an error
-/// (non-zero exit, so a supervisor — or a human — can tell).
+/// Run the worker daemon: HELLO once, then serve ASSIGN→rounds→DETACH
+/// cycles until SHUTDOWN (or until the leader closes the socket while
+/// the daemon is idle).
 pub fn run_worker(leader: &str, exit_after: Option<u64>) -> Result<()> {
     let mut stream = connect_with_retry(leader, CONNECT_PATIENCE)?;
     stream.set_nodelay(true)?;
     write_frame(&mut stream, FrameKind::Hello, &[])?;
-    let (wid, cfg) = match read_frame(&mut stream)? {
-        Some((FrameKind::Assign, body)) => decode_assign(&body)?,
-        Some((kind, _)) => bail!("expected ASSIGN after HELLO, got {kind:?}"),
-        None => bail!("leader closed the connection during the handshake"),
-    };
-    let (mut src, mut algo) = build_worker_parts(&cfg, wid as usize)?;
+    loop {
+        // Idle: waiting for the next job.
+        let (wid, resume, cfg) = match read_frame(&mut stream)? {
+            Some((FrameKind::Assign, body)) => decode_assign(&body)?,
+            Some((FrameKind::Shutdown, _)) => {
+                eprintln!("[worker] shutdown received while idle, exiting");
+                return Ok(());
+            }
+            Some((kind, _)) => bail!("expected ASSIGN while idle, got {kind:?}"),
+            // An idle worker belongs to no job: the leader closing the
+            // socket here is a legitimate end of service, not a crash.
+            None => {
+                eprintln!("[worker] leader closed the connection while idle, exiting");
+                return Ok(());
+            }
+        };
+        if serve_job(&mut stream, wid, resume, &cfg, exit_after)? {
+            return Ok(());
+        }
+    }
+}
+
+/// Serve one assigned job to completion. Returns `Ok(true)` when the job
+/// ended with SHUTDOWN (daemon should exit) and `Ok(false)` when it
+/// ended with DETACH (daemon goes back to idle for the next ASSIGN).
+fn serve_job(
+    stream: &mut TcpStream,
+    wid: u32,
+    resume: Vec<u8>,
+    cfg: &TrainConfig,
+    exit_after: Option<u64>,
+) -> Result<bool> {
+    let (mut src, mut algo) = build_worker_parts(cfg, wid as usize)?;
+    if !resume.is_empty() {
+        import_worker_blob(src.as_mut(), algo.as_mut(), &resume)
+            .context("restoring suspended worker state from ASSIGN")?;
+    }
     eprintln!(
-        "[worker {wid}] connected to {leader}: model={} algo={} dim={}",
+        "[worker {wid}] assigned: model={} algo={} dim={}{}",
         cfg.model,
         cfg.algo,
-        src.dim()
+        src.dim(),
+        if resume.is_empty() { "" } else { " (resumed)" }
     );
     loop {
-        match read_frame(&mut stream)? {
+        match read_frame(stream)? {
             Some((FrameKind::Downlink, body)) => {
                 let env = Envelope::decode(&body)?;
                 ensure!(
@@ -112,11 +158,23 @@ pub fn run_worker(leader: &str, exit_after: Option<u64>) -> Result<()> {
                 let (loss, grad) = src.grad(&theta, ctx.round)?;
                 let payload = algo.process(&grad, &ctx)?;
                 let up = Envelope { wid, round: env.round, loss, payload };
-                write_frame(&mut stream, FrameKind::Uplink, &up.encode())?;
+                write_frame(stream, FrameKind::Uplink, &up.encode())?;
+            }
+            Some((FrameKind::Detach, body)) => {
+                let want_state = body.first().copied().unwrap_or(0) != 0;
+                let blob = if want_state {
+                    export_worker_blob(src.as_ref(), algo.as_ref())
+                        .context("exporting worker state for DETACH")?
+                } else {
+                    Vec::new()
+                };
+                write_frame(stream, FrameKind::State, &blob)?;
+                eprintln!("[worker {wid}] detached, back to idle");
+                return Ok(false);
             }
             Some((FrameKind::Shutdown, _)) => {
                 eprintln!("[worker {wid}] shutdown received, exiting");
-                return Ok(());
+                return Ok(true);
             }
             Some((kind, _)) => bail!("unexpected {kind:?} frame on the downlink stream"),
             None => bail!("leader closed the connection mid-run"),
@@ -124,10 +182,18 @@ pub fn run_worker(leader: &str, exit_after: Option<u64>) -> Result<()> {
     }
 }
 
-fn decode_assign(body: &[u8]) -> Result<(u32, TrainConfig)> {
-    ensure!(body.len() > 4, "ASSIGN body truncated: {} bytes", body.len());
+fn decode_assign(body: &[u8]) -> Result<(u32, Vec<u8>, TrainConfig)> {
+    ensure!(body.len() >= 8, "ASSIGN body truncated: {} bytes", body.len());
     let wid = u32::from_le_bytes(body[0..4].try_into().unwrap());
-    let json = std::str::from_utf8(&body[4..]).context("ASSIGN config is not UTF-8")?;
+    let resume_len = u32::from_le_bytes(body[4..8].try_into().unwrap()) as usize;
+    ensure!(
+        body.len() >= 8 + resume_len,
+        "ASSIGN resume blob truncated: {} of {resume_len} bytes",
+        body.len().saturating_sub(8)
+    );
+    let resume = body[8..8 + resume_len].to_vec();
+    let json =
+        std::str::from_utf8(&body[8 + resume_len..]).context("ASSIGN config is not UTF-8")?;
     let cfg = TrainConfig::from_json(&crate::util::json::parse(json)?)
         .context("parsing the ASSIGN TrainConfig")?;
     ensure!(
@@ -135,37 +201,48 @@ fn decode_assign(body: &[u8]) -> Result<(u32, TrainConfig)> {
         "assigned wid {wid} out of range for {} workers",
         cfg.workers
     );
-    Ok((wid, cfg))
+    Ok((wid, resume, cfg))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::net::encode_assign;
 
     #[test]
-    fn assign_roundtrip_decodes_wid_and_config() {
+    fn assign_roundtrip_decodes_wid_blob_and_config() {
         let cfg = TrainConfig::preset("quadratic", "comp-ams-topk:0.1");
-        let mut body = Vec::new();
-        body.extend(3u32.to_le_bytes());
-        body.extend_from_slice(cfg.to_json().to_string_pretty().as_bytes());
-        let (wid, back) = decode_assign(&body).unwrap();
+        let json = cfg.to_json().to_string_pretty();
+        let (wid, resume, back) =
+            decode_assign(&encode_assign(3, &[], &json)).unwrap();
         assert_eq!(wid, 3);
+        assert!(resume.is_empty());
         assert_eq!(back.model, "quadratic");
         assert_eq!(back.algo, "comp-ams-topk:0.1");
         assert_eq!(back.workers, cfg.workers);
+        // Resume blobs survive byte-exactly, config intact after them.
+        let blob = vec![0u8, 255, 7, 42];
+        let (wid, resume, back) =
+            decode_assign(&encode_assign(1, &blob, &json)).unwrap();
+        assert_eq!(wid, 1);
+        assert_eq!(resume, blob);
+        assert_eq!(back.algo, cfg.algo);
     }
 
     #[test]
     fn assign_rejects_garbage() {
         assert!(decode_assign(&[1, 2]).is_err());
-        let mut body = Vec::new();
-        body.extend(99u32.to_le_bytes()); // wid out of range
         let cfg = TrainConfig::preset("quadratic", "dist-sgd");
-        body.extend_from_slice(cfg.to_json().to_string_pretty().as_bytes());
-        assert!(decode_assign(&body).is_err());
+        let json = cfg.to_json().to_string_pretty();
+        // wid out of range.
+        assert!(decode_assign(&encode_assign(99, &[], &json)).is_err());
+        // Not JSON after the blob.
+        assert!(decode_assign(&encode_assign(0, &[], "not json at all")).is_err());
+        // Resume length pointing past the end of the body.
         let mut body = Vec::new();
         body.extend(0u32.to_le_bytes());
-        body.extend_from_slice(b"not json at all");
+        body.extend(1000u32.to_le_bytes());
+        body.extend_from_slice(json.as_bytes());
         assert!(decode_assign(&body).is_err());
     }
 

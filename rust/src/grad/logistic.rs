@@ -137,6 +137,15 @@ impl GradSource for LogisticSource {
         let b = self.problem.batch;
         Ok(self.problem.loss_grad(theta, &mut self.rng, b))
     }
+
+    fn export_state(&self) -> Result<Vec<u8>> {
+        Ok(crate::compress::export_rng(&self.rng))
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> Result<()> {
+        self.rng = crate::compress::import_rng(bytes)?;
+        Ok(())
+    }
 }
 
 pub struct LogisticEvaluator {

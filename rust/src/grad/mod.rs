@@ -29,6 +29,20 @@ pub trait GradSource {
     /// mini-batch, evaluated at `theta`. `round` seeds per-round
     /// randomness (dropout) deterministically.
     fn grad(&mut self, theta: &[f32], round: u64) -> Result<(f32, Vec<f32>)>;
+
+    /// Serialize mini-batch stream state for suspend/resume. The analytic
+    /// sources snapshot their RNG so a resumed run draws the exact batches
+    /// an uninterrupted one would; sources without capturable stream state
+    /// (PJRT) keep the default and fail loudly instead of silently
+    /// resuming on a diverged batch stream.
+    fn export_state(&self) -> Result<Vec<u8>> {
+        anyhow::bail!("gradient source does not support suspend/resume")
+    }
+
+    /// Restore a blob produced by [`GradSource::export_state`].
+    fn import_state(&mut self, _bytes: &[u8]) -> Result<()> {
+        anyhow::bail!("gradient source does not support suspend/resume")
+    }
 }
 
 /// Test-set statistics.

@@ -131,6 +131,15 @@ impl GradSource for QuadraticSource {
         }
         Ok((loss as f32, g))
     }
+
+    fn export_state(&self) -> Result<Vec<u8>> {
+        Ok(crate::compress::export_rng(&self.rng))
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> Result<()> {
+        self.rng = crate::compress::import_rng(bytes)?;
+        Ok(())
+    }
 }
 
 /// Evaluator: exact global loss (no accuracy notion).

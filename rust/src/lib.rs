@@ -26,7 +26,7 @@
 //! | [`algo`]        | the two-sided protocols ([`algo::WorkerAlgo`] / [`algo::ServerAlgo`]), [`algo::AlgoSpec`] parsing, and the sharded server ([`algo::sharded`]) |
 //! | [`compress`]    | Top-k / Random-k / Block-Sign / QSGD compressors, error feedback, and the exact wire codec ([`compress::wire`]) |
 //! | [`config`]      | [`TrainConfig`]: presets, validation, JSON round-trip               |
-//! | [`coordinator`] | event-driven cluster runtime ([`coordinator::runtime`]), transports ([`coordinator::transport`], TCP sockets in [`coordinator::net`]), worker daemon ([`coordinator::worker`]) + process supervisor ([`coordinator::supervisor`]), worker pool backends, trainer, communication ledger, run metrics |
+//! | [`coordinator`] | event-driven cluster runtime ([`coordinator::runtime`]), transports ([`coordinator::transport`], TCP sockets in [`coordinator::net`]), worker daemon ([`coordinator::worker`]) + process supervisor ([`coordinator::supervisor`]), worker pool backends, trainer + job checkpoints ([`coordinator::checkpoint`]), the resident multi-job scheduler ([`coordinator::scheduler`]), communication ledger, run metrics |
 //! | [`data`]        | synthetic datasets + label-skew sharding (Dirichlet)                |
 //! | [`exp`]         | drivers regenerating the paper's figures and tables                 |
 //! | [`grad`]        | gradient sources: analytic substrates + the PJRT model path         |

@@ -6,6 +6,9 @@
 //! comp-ams train --config run.json
 //! comp-ams train --model quadratic --transport tcp --spawn-workers
 //! comp-ams worker --leader 127.0.0.1:7000
+//! comp-ams serve --workers 4 --spawn-workers --transport tcp:0
+//! comp-ams submit --control 127.0.0.1:7100 --model quadratic --algo qadam
+//! comp-ams status --control 127.0.0.1:7100 [--json]
 //! comp-ams exp fig1|fig2|fig3|fig4|table1|ablation [--fast]
 //! comp-ams inspect [--artifacts artifacts]
 //! ```
@@ -15,10 +18,13 @@ use std::path::PathBuf;
 use anyhow::{bail, Context, Result};
 
 use comp_ams::config::{LrSchedule, TrainConfig};
+use comp_ams::coordinator::scheduler::{self, ServeOpts};
 use comp_ams::coordinator::trainer::train;
+use comp_ams::coordinator::transport::TransportSpec;
 use comp_ams::exp::{self, ExpOpts};
 use comp_ams::runtime::Manifest;
 use comp_ams::util::cli::Args;
+use comp_ams::util::json::Json;
 
 fn main() {
     if let Err(e) = real_main() {
@@ -32,9 +38,17 @@ fn real_main() -> Result<()> {
     match args.positional.first().map(|s| s.as_str()) {
         Some("train") => cmd_train(&args),
         Some("worker") => cmd_worker(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("submit") => cmd_submit(&args),
+        Some("status") => cmd_status(&args),
+        Some("cancel") => cmd_cancel(&args),
+        Some("drain") => cmd_drain(&args),
         Some("exp") => cmd_exp(&args),
         Some("inspect") => cmd_inspect(&args),
-        Some(other) => bail!("unknown command '{other}' (train | worker | exp | inspect)"),
+        Some(other) => bail!(
+            "unknown command '{other}' (train | worker | serve | submit | \
+             status | cancel | drain | exp | inspect)"
+        ),
         None => {
             eprintln!("{}", USAGE);
             Ok(())
@@ -74,18 +88,42 @@ commands:
            --leader HOST:PORT  the leader's listener address
            --exit-after N      fault injection: crash at round N before
                                uplinking (tests the straggler machinery)
+  serve    run the resident leader daemon: one worker fleet, many jobs
+           --workers N         fleet size (default 4)
+           --spawn-workers t   spawn the fleet as child processes
+           --transport tcp[:port]  fleet listener (default tcp, ephemeral;
+                               the bound address is announced on stdout
+                               as `fleet-addr HOST:PORT`)
+           --control PORT      control listener port (default 0 =
+                               ephemeral, announced as `control-addr`)
+           SIGINT checkpoints the active job and releases the fleet.
+  submit   queue a job on a serve daemon (accepts the train flags above,
+           analytic models only)
+           --control HOST:PORT the daemon's control address (required)
+           --priority N        higher runs first; strictly higher
+                               preempts the running job (default 0)
+           --name S            label shown in status
+  status   show a serve daemon's jobs   --control HOST:PORT [--json]
+  cancel   cancel a job                 --control HOST:PORT --id N
+  drain    finish queued jobs, then let the daemon exit
+           --control HOST:PORT
   exp      regenerate a paper artifact: fig1|fig2|fig3|fig4|table1|ablation
            [--fast] [--seed N] [--artifacts DIR] [--results DIR] [--verbose]
   inspect  print the artifact manifest";
 
-fn cmd_train(args: &Args) -> Result<()> {
-    args.ensure_known(&[
-        "model", "algo", "workers", "rounds", "lr", "seed", "sharding",
-        "eval-every", "eval-batches", "log-every", "fused", "threaded",
-        "server-shards", "server-threaded", "transport", "spawn-workers",
-        "quorum", "max-staleness", "artifacts", "config", "decay-at",
-        "decay-factor", "rounds-per-epoch",
-    ])?;
+/// The `train`-style config flags, shared verbatim by `submit` (a job is
+/// just a config shipped to the daemon instead of run in-process).
+const CFG_FLAGS: &[&str] = &[
+    "model", "algo", "workers", "rounds", "lr", "seed", "sharding",
+    "eval-every", "eval-batches", "log-every", "fused", "threaded",
+    "server-shards", "server-threaded", "transport", "spawn-workers",
+    "quorum", "max-staleness", "artifacts", "config", "decay-at",
+    "decay-factor", "rounds-per-epoch",
+];
+
+/// Build a [`TrainConfig`] from `--config` (if given) plus flag
+/// overrides — the common front half of `train` and `submit`.
+fn cfg_from_args(args: &Args) -> Result<TrainConfig> {
     let mut cfg = match args.get("config") {
         Some(path) => {
             let text = std::fs::read_to_string(path)
@@ -132,6 +170,12 @@ fn cmd_train(args: &Args) -> Result<()> {
             factor: args.f32_or("decay-factor", 10.0)?,
         };
     }
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    args.ensure_known(CFG_FLAGS)?;
+    let cfg = cfg_from_args(args)?;
 
     eprintln!(
         "training {} with {} on {} workers, {} rounds (seed {})",
@@ -186,6 +230,126 @@ fn cmd_worker(args: &Args) -> Result<()> {
         None => None,
     };
     comp_ams::coordinator::worker::run_worker(leader, exit_after)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    args.ensure_known(&["workers", "spawn-workers", "transport", "control"])?;
+    let spec = TransportSpec::parse(args.str_or("transport", "tcp").as_str())?;
+    let TransportSpec::Tcp { port } = spec else {
+        bail!("serve drives a worker fleet over sockets: --transport tcp[:port] only")
+    };
+    let opts = ServeOpts {
+        workers: args.usize_or("workers", 4)?,
+        spawn_workers: args.bool_or("spawn-workers", false)?,
+        fleet_port: port,
+        control_port: match args.get("control") {
+            Some(v) => v.parse::<u16>().context("bad --control port")?,
+            None => 0,
+        },
+    };
+    scheduler::serve(&opts)
+}
+
+/// `--control HOST:PORT`, shared by every client subcommand.
+fn control_addr(args: &Args) -> Result<String> {
+    Ok(args
+        .get("control")
+        .context("--control HOST:PORT (printed by `comp-ams serve` as `control-addr`)")?
+        .to_string())
+}
+
+fn cmd_submit(args: &Args) -> Result<()> {
+    let mut known = CFG_FLAGS.to_vec();
+    known.extend(["control", "priority", "name"]);
+    args.ensure_known(&known)?;
+    let addr = control_addr(args)?;
+    let cfg = cfg_from_args(args)?;
+    let priority: i64 = match args.get("priority") {
+        Some(v) => v.parse().context("bad --priority (integer)")?,
+        None => 0,
+    };
+    let mut pairs = vec![
+        ("cmd", Json::str("submit")),
+        ("config", cfg.to_json()),
+        ("priority", Json::num(priority as f64)),
+    ];
+    if let Some(name) = args.get("name") {
+        pairs.push(("name", Json::str(name)));
+    }
+    let resp = scheduler::request(&addr, &Json::obj(pairs))?;
+    let id = resp.req("id")?.as_usize()?;
+    println!("{id}");
+    eprintln!("submitted job {id}: {} {} (priority {priority})", cfg.model, cfg.algo);
+    Ok(())
+}
+
+fn cmd_status(args: &Args) -> Result<()> {
+    args.ensure_known(&["control", "json"])?;
+    let addr = control_addr(args)?;
+    let resp = scheduler::request(&addr, &Json::obj(vec![("cmd", Json::str("status"))]))?;
+    if args.bool_or("json", false)? {
+        println!("{}", resp.to_string_compact());
+        return Ok(());
+    }
+    let draining = resp.req("draining")?.as_bool()?;
+    let fleet = resp.req("fleet_workers")?.as_usize()?;
+    println!(
+        "fleet: {fleet} worker(s){}",
+        if draining { " [draining]" } else { "" }
+    );
+    println!(
+        "{:>4}  {:<16} {:<10} {:>4}  {:<26} {:>11} {:>5}",
+        "id", "name", "state", "prio", "model/algo", "rounds", "pre"
+    );
+    for job in resp.req("jobs")?.as_arr()? {
+        let note = if let Some(e) = job.get("error") {
+            format!("  error: {}", e.as_str()?)
+        } else if let Some(r) = job.get("result") {
+            format!(
+                "  uplink {:.2} MB",
+                r.req("uplink_bits")?.as_f64()? / 8e6
+            )
+        } else {
+            String::new()
+        };
+        println!(
+            "{:>4}  {:<16} {:<10} {:>4}  {:<26} {:>5}/{:<5} {:>5}{}",
+            job.req("id")?.as_usize()?,
+            job.req("name")?.as_str()?,
+            job.req("state")?.as_str()?,
+            job.req("priority")?.as_f64()?,
+            format!(
+                "{}/{}",
+                job.req("model")?.as_str()?,
+                job.req("algo")?.as_str()?
+            ),
+            job.req("rounds_done")?.as_usize()?,
+            job.req("rounds_total")?.as_usize()?,
+            job.req("preemptions")?.as_usize()?,
+            note
+        );
+    }
+    Ok(())
+}
+
+fn cmd_cancel(args: &Args) -> Result<()> {
+    args.ensure_known(&["control", "id"])?;
+    let addr = control_addr(args)?;
+    let id = args.get("id").context("--id N")?.parse::<u64>().context("bad --id")?;
+    scheduler::request(
+        &addr,
+        &Json::obj(vec![("cmd", Json::str("cancel")), ("id", Json::num(id as f64))]),
+    )?;
+    eprintln!("cancelled job {id}");
+    Ok(())
+}
+
+fn cmd_drain(args: &Args) -> Result<()> {
+    args.ensure_known(&["control"])?;
+    let addr = control_addr(args)?;
+    scheduler::request(&addr, &Json::obj(vec![("cmd", Json::str("drain"))]))?;
+    eprintln!("draining: the daemon will exit once queued jobs finish");
+    Ok(())
 }
 
 fn cmd_exp(args: &Args) -> Result<()> {

@@ -27,6 +27,17 @@ impl Adam {
     pub fn freeze_v(&self) -> Vec<f32> {
         self.v.clone()
     }
+
+    /// Bias-correction step counter (number of [`ServerOpt::step`] calls
+    /// applied so far) — part of the resumable optimizer state.
+    pub fn step_count(&self) -> u64 {
+        self.t
+    }
+
+    /// Restore the bias-correction step counter (suspend/resume).
+    pub fn set_step_count(&mut self, t: u64) {
+        self.t = t;
+    }
 }
 
 impl ServerOpt for Adam {

@@ -5,8 +5,20 @@
 //! report median / mean / p95 of per-iteration times plus derived
 //! throughput. Deterministic enough for before/after comparisons in
 //! EXPERIMENTS.md §Perf on an otherwise idle box.
+//!
+//! Set `COMP_AMS_BENCH_JSON=<path>` to additionally dump the suite's
+//! results as a machine-readable JSON file when the bench exits
+//! (schema `comp-ams-bench-v1`, written by [`Bencher::write_json`]) —
+//! this is how the committed `BENCH_wire.json` / `BENCH_step.json`
+//! snapshots at the repo root are produced:
+//!
+//! ```text
+//! COMP_AMS_BENCH_JSON=BENCH_wire.json cargo bench --bench bench_wire
+//! ```
 
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 #[derive(Clone)]
 pub struct BenchResult {
@@ -29,6 +41,8 @@ impl BenchResult {
 }
 
 pub struct Bencher {
+    title: String,
+    fast: bool,
     target: Duration,
     warmup: Duration,
     results: Vec<BenchResult>,
@@ -42,9 +56,15 @@ impl Default for Bencher {
 
 impl Bencher {
     pub fn new() -> Self {
+        Self::titled("bench")
+    }
+
+    pub fn titled(title: &str) -> Self {
         // `cargo bench -- --fast` style control via env var.
         let fast = std::env::var("COMP_AMS_BENCH_FAST").is_ok();
         Bencher {
+            title: title.to_string(),
+            fast,
             target: if fast { Duration::from_millis(200) } else { Duration::from_secs(1) },
             warmup: if fast { Duration::from_millis(50) } else { Duration::from_millis(250) },
             results: Vec::new(),
@@ -95,6 +115,55 @@ impl Bencher {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// The suite's results in the `comp-ams-bench-v1` JSON schema: suite
+    /// metadata plus one row per bench with nanosecond-resolution stats.
+    pub fn results_json(&self) -> Json {
+        let benches: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::str(&r.name)),
+                    ("iters", Json::num(r.iters as f64)),
+                    ("median_ns", Json::num(r.median.as_nanos() as f64)),
+                    ("mean_ns", Json::num(r.mean.as_nanos() as f64)),
+                    ("p95_ns", Json::num(r.p95.as_nanos() as f64)),
+                    ("per_sec", Json::num(r.per_sec())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::str("comp-ams-bench-v1")),
+            ("suite", Json::str(&self.title)),
+            ("fast", Json::Bool(self.fast)),
+            ("measured", Json::Bool(true)),
+            ("benches", Json::Arr(benches)),
+        ])
+    }
+
+    /// Dump [`Bencher::results_json`] to `path` (pretty-printed).
+    pub fn write_json(&self, path: &str) -> std::io::Result<()> {
+        let mut text = self.results_json().to_string_pretty();
+        text.push('\n');
+        std::fs::write(path, text)
+    }
+}
+
+impl Drop for Bencher {
+    /// Honor `COMP_AMS_BENCH_JSON` when the bench binary finishes — a
+    /// drop hook because `harness = false` benches are plain `main`s
+    /// with no epilogue to call.
+    fn drop(&mut self) {
+        let Ok(path) = std::env::var("COMP_AMS_BENCH_JSON") else { return };
+        if path.is_empty() || self.results.is_empty() {
+            return;
+        }
+        match self.write_json(&path) {
+            Ok(()) => println!("wrote {} bench results to {path}", self.results.len()),
+            Err(e) => eprintln!("failed to write bench JSON {path}: {e}"),
+        }
+    }
 }
 
 /// Standard bench-main prologue: print header, honor --fast.
@@ -105,7 +174,7 @@ pub fn bench_main(title: &str) -> Bencher {
         }
     }
     println!("=== {title} ===");
-    Bencher::new()
+    Bencher::titled(title)
 }
 
 #[cfg(test)]
@@ -122,5 +191,25 @@ mod tests {
         assert!(r.iters >= 10);
         assert!(r.median <= r.p95);
         assert!(r.per_sec() > 0.0);
+    }
+
+    #[test]
+    fn json_dump_round_trips() {
+        std::env::set_var("COMP_AMS_BENCH_FAST", "1");
+        let mut b = Bencher::titled("suite-x");
+        b.bench("unit", || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        let j = b.results_json();
+        assert_eq!(j.req("schema").unwrap().as_str().unwrap(), "comp-ams-bench-v1");
+        assert_eq!(j.req("suite").unwrap().as_str().unwrap(), "suite-x");
+        assert!(j.req("measured").unwrap().as_bool().unwrap());
+        let rows = j.req("benches").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].req("name").unwrap().as_str().unwrap(), "unit");
+        assert!(rows[0].req("mean_ns").unwrap().as_f64().unwrap() > 0.0);
+        // The dump must parse back (it is a committed artifact).
+        let parsed = crate::util::json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed, j);
     }
 }

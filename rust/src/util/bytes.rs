@@ -1,0 +1,146 @@
+//! Tiny length-prefixed binary codec for opaque state blobs.
+//!
+//! Suspend/resume serializes component state (RNG streams, error-feedback
+//! residuals, optimizer moments) into self-describing byte blobs that can
+//! be nested: each field is written with a fixed-width little-endian
+//! encoding, and variable-length fields carry a `u32` length prefix. The
+//! reader is a cursor that validates every read against the remaining
+//! buffer, so a truncated or mismatched blob surfaces as an error instead
+//! of garbage state.
+
+use anyhow::{bail, Result};
+
+/// Append a `u32` (little-endian).
+pub fn put_u32(out: &mut Vec<u8>, x: u32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+/// Append a `u64` (little-endian).
+pub fn put_u64(out: &mut Vec<u8>, x: u64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+/// Append an `f32` (little-endian bit pattern — exact).
+pub fn put_f32(out: &mut Vec<u8>, x: f32) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+/// Append a length-prefixed `f32` vector.
+pub fn put_f32s(out: &mut Vec<u8>, xs: &[f32]) {
+    put_u32(out, xs.len() as u32);
+    for &x in xs {
+        put_f32(out, x);
+    }
+}
+
+/// Append a length-prefixed byte blob.
+pub fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    put_u32(out, b.len() as u32);
+    out.extend_from_slice(b);
+}
+
+/// Bounds-checked reader over a state blob.
+pub struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(b: &'a [u8]) -> Self {
+        Cursor { b, i: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!(
+                "state blob truncated: need {n} bytes at offset {}, have {}",
+                self.i,
+                self.b.len() - self.i
+            );
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.f32()?);
+        }
+        Ok(out)
+    }
+
+    pub fn bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.u32()? as usize;
+        self.take(n)
+    }
+
+    /// Error unless the whole blob has been consumed (catches blobs from
+    /// a component with a different state layout).
+    pub fn finish(self) -> Result<()> {
+        if self.i != self.b.len() {
+            bail!(
+                "state blob has {} trailing bytes (layout mismatch?)",
+                self.b.len() - self.i
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_field_kinds() {
+        let mut b = Vec::new();
+        put_u32(&mut b, 7);
+        put_u64(&mut b, u64::MAX - 3);
+        put_f32(&mut b, -0.0);
+        put_f32s(&mut b, &[1.5, f32::MIN_POSITIVE, -3.25]);
+        put_bytes(&mut b, &[9, 8, 7]);
+        let mut c = Cursor::new(&b);
+        assert_eq!(c.u32().unwrap(), 7);
+        assert_eq!(c.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(c.f32().unwrap().to_bits(), (-0.0f32).to_bits());
+        let xs = c.f32s().unwrap();
+        assert_eq!(xs.len(), 3);
+        assert_eq!(xs[1].to_bits(), f32::MIN_POSITIVE.to_bits());
+        assert_eq!(c.bytes().unwrap(), &[9, 8, 7]);
+        c.finish().unwrap();
+    }
+
+    #[test]
+    fn truncated_and_trailing_blobs_error() {
+        let mut b = Vec::new();
+        put_u64(&mut b, 1);
+        let mut c = Cursor::new(&b[..6]);
+        assert!(c.u64().is_err());
+        let mut c = Cursor::new(&b);
+        c.u32().unwrap();
+        assert!(c.finish().is_err());
+    }
+
+    #[test]
+    fn length_prefix_is_validated() {
+        let mut b = Vec::new();
+        put_u32(&mut b, 100); // claims 100 f32s, delivers none
+        let mut c = Cursor::new(&b);
+        assert!(c.f32s().is_err());
+    }
+}

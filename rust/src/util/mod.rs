@@ -4,6 +4,7 @@
 //! closure, so everything a framework usually pulls from crates.io (RNG,
 //! JSON, CSV, CLI parsing, timers) is implemented here (DESIGN.md §2).
 
+pub mod bytes;
 pub mod cli;
 pub mod csv;
 pub mod json;

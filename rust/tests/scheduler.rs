@@ -1,0 +1,308 @@
+//! Scheduler integration tests: a real `comp-ams serve` daemon driving
+//! real worker processes over localhost TCP, exercised through the
+//! line-JSON control protocol.
+//!
+//! These are the acceptance tests of the resident-leader subsystem:
+//!
+//! 1. one fleet serves **many queued jobs** with different configs, and
+//!    each job's trajectory, per-worker uplink-bit ledger, and final θ
+//!    are **bitwise identical** to the same config run solo — per-job
+//!    accounting never bleeds across jobs sharing the fleet;
+//! 2. a higher-priority submission **preempts** the running job, which
+//!    is checkpointed, later resumed, and still finishes bitwise
+//!    identical to an uninterrupted run;
+//! 3. `cancel` stops a running job at a round boundary; `drain` lets the
+//!    daemon finish queued work and exit 0; SIGINT checkpoints the
+//!    active job and also exits 0 (fleet released, children reaped).
+//!
+//! The daemon's ephemeral fleet/control ports are discovered from its
+//! `fleet-addr` / `control-addr` stdout announcements — the same
+//! mechanism CI's smoke job uses.
+
+use std::io::{BufRead, BufReader};
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use comp_ams::config::TrainConfig;
+use comp_ams::coordinator::metrics::RunResult;
+use comp_ams::coordinator::scheduler::{request, theta_to_hex};
+use comp_ams::coordinator::trainer::Trainer;
+use comp_ams::util::json::Json;
+
+/// Launch `comp-ams serve` with an ephemeral control port and a spawned
+/// fleet; returns the child and its announced control address.
+fn start_daemon(workers: usize) -> (Child, String) {
+    let mut child = Command::new(env!("CARGO_BIN_EXE_comp-ams"))
+        .args([
+            "serve",
+            "--workers",
+            &workers.to_string(),
+            "--spawn-workers",
+            "true",
+            "--transport",
+            "tcp",
+            "--control",
+            "0",
+        ])
+        .stdin(Stdio::null())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .unwrap();
+    let mut reader = BufReader::new(child.stdout.take().unwrap());
+    let (mut fleet, mut control) = (None, None);
+    while fleet.is_none() || control.is_none() {
+        let mut line = String::new();
+        assert!(
+            reader.read_line(&mut line).unwrap() > 0,
+            "serve exited before announcing its addresses"
+        );
+        if let Some(rest) = line.trim().strip_prefix("fleet-addr ") {
+            fleet = Some(rest.to_string());
+        } else if let Some(rest) = line.trim().strip_prefix("control-addr ") {
+            control = Some(rest.to_string());
+        }
+    }
+    (child, control.unwrap())
+}
+
+fn submit(addr: &str, name: &str, priority: i64, cfg: &TrainConfig) -> u64 {
+    let resp = request(
+        addr,
+        &Json::obj(vec![
+            ("cmd", Json::str("submit")),
+            ("name", Json::str(name)),
+            ("priority", Json::num(priority as f64)),
+            ("config", cfg.to_json()),
+        ]),
+    )
+    .unwrap();
+    resp.req("id").unwrap().as_usize().unwrap() as u64
+}
+
+/// Fetch one job's row from a `status` response.
+fn job_row(addr: &str, id: u64) -> Json {
+    let resp =
+        request(addr, &Json::obj(vec![("cmd", Json::str("status"))])).unwrap();
+    resp.req("jobs")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .find(|j| j.req("id").unwrap().as_usize().unwrap() as u64 == id)
+        .unwrap_or_else(|| panic!("job {id} missing from status"))
+        .clone()
+}
+
+/// Poll `status` until the job reaches `want` (or fail after 120 s — the
+/// fleet is real processes, CI machines are slow).
+fn wait_for_state(addr: &str, id: u64, want: &str) -> Json {
+    let start = Instant::now();
+    loop {
+        let job = job_row(addr, id);
+        let state = job.req("state").unwrap().as_str().unwrap().to_string();
+        if state == want {
+            return job;
+        }
+        assert!(
+            !matches!(state.as_str(), "failed" | "cancelled" | "done"),
+            "job {id} ended as {state} (wanted {want}): {}",
+            job.to_string_compact()
+        );
+        assert!(
+            start.elapsed() < Duration::from_secs(120),
+            "job {id} stuck in {state} (wanted {want})"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Run the same config solo (in-process transport) and return its final
+/// θ and `RunResult` — the bitwise reference for a scheduled job.
+fn solo(cfg: &TrainConfig) -> (Vec<f32>, RunResult) {
+    let mut cfg = cfg.clone();
+    cfg.transport = "inproc".into();
+    cfg.spawn_workers = false;
+    let mut t = Trainer::new(&cfg).unwrap();
+    for r in 0..cfg.rounds {
+        t.step(r).unwrap();
+    }
+    let theta = t.theta.clone();
+    (theta, t.finalize().unwrap())
+}
+
+fn quad_cfg(algo: &str, workers: usize, rounds: u64, seed: u64) -> TrainConfig {
+    let mut cfg = TrainConfig::preset("quadratic", algo);
+    cfg.workers = workers;
+    cfg.rounds = rounds;
+    cfg.lr = 0.02;
+    cfg.seed = seed;
+    cfg.eval_every = 0;
+    cfg
+}
+
+/// Assert a done job's control-protocol row matches its solo reference
+/// bitwise: θ, per-worker uplink bits, final losses — plus the framing
+/// bill the fleet transport must have charged for exactly this job's
+/// messages (25-byte headers, 2 per worker per round).
+fn assert_matches_solo(job: &Json, cfg: &TrainConfig, theta: &[f32], run: &RunResult) {
+    assert_eq!(
+        job.req("theta_hex").unwrap().as_str().unwrap(),
+        theta_to_hex(theta),
+        "final θ diverged from the solo run"
+    );
+    let result = job.req("result").unwrap();
+    let bits: Vec<u64> = result
+        .req("uplink_bits_by_worker")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|b| b.as_f64().unwrap() as u64)
+        .collect();
+    assert_eq!(bits, run.uplink_bits_by_worker, "per-worker uplink ledger");
+    assert_eq!(
+        result.req("uplink_bits").unwrap().as_f64().unwrap() as u64,
+        run.uplink_bits()
+    );
+    assert_eq!(
+        result.req("rounds").unwrap().as_usize().unwrap() as u64,
+        cfg.rounds
+    );
+    assert_eq!(
+        result.req("final_train_loss").unwrap().as_f64().unwrap(),
+        f64::from(run.final_train_loss(10)),
+        "final train loss diverged"
+    );
+    assert_eq!(
+        result.req("final_eval_loss").unwrap().as_f64().unwrap(),
+        f64::from(run.final_eval.loss)
+    );
+    // The fleet bills framing for this job's own messages only.
+    assert_eq!(
+        result.req("framing_bits").unwrap().as_f64().unwrap() as u64,
+        cfg.rounds * cfg.workers as u64 * 2 * 25 * 8,
+        "framing bill"
+    );
+    assert_eq!(result.req("stale_uplinks").unwrap().as_f64().unwrap(), 0.0);
+    assert_eq!(result.req("dropped_uplinks").unwrap().as_f64().unwrap(), 0.0);
+}
+
+#[test]
+fn one_fleet_serves_many_jobs_with_disjoint_bitwise_ledgers() {
+    let (mut child, addr) = start_daemon(3);
+
+    // Two jobs with different algos, worker counts, rounds, and seeds —
+    // queued together, run back-to-back over the same fleet.
+    let cfg_a = quad_cfg("dist-sgd", 3, 25, 42);
+    let cfg_b = quad_cfg("comp-ams-topk:0.1", 2, 40, 7);
+    let (theta_a, run_a) = solo(&cfg_a);
+    let (theta_b, run_b) = solo(&cfg_b);
+
+    let id_a = submit(&addr, "job-a", 0, &cfg_a);
+    let id_b = submit(&addr, "job-b", 0, &cfg_b);
+    let job_a = wait_for_state(&addr, id_a, "done");
+    let job_b = wait_for_state(&addr, id_b, "done");
+
+    assert_matches_solo(&job_a, &cfg_a, &theta_a, &run_a);
+    assert_matches_solo(&job_b, &cfg_b, &theta_b, &run_b);
+    // Ledger disjointness, stated directly: each job's bill is exactly
+    // its own solo bill, and the two differ (different configs), so no
+    // bits leaked from one job's accounting into the other's.
+    assert_ne!(run_a.uplink_bits(), run_b.uplink_bits());
+    assert_eq!(job_a.req("name").unwrap().as_str().unwrap(), "job-a");
+
+    // Cancel path: a long job gets cancelled at a round boundary.
+    let id_c = submit(&addr, "doomed", 0, &quad_cfg("dist-sgd", 2, 1_000_000, 1));
+    request(
+        &addr,
+        &Json::obj(vec![("cmd", Json::str("cancel")), ("id", Json::num(id_c as f64))]),
+    )
+    .unwrap();
+    let start = Instant::now();
+    loop {
+        let state = job_row(&addr, id_c);
+        if state.req("state").unwrap().as_str().unwrap() == "cancelled" {
+            break;
+        }
+        assert!(start.elapsed() < Duration::from_secs(120), "cancel never landed");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // Drain: the daemon finishes (nothing runnable remains) and exits 0,
+    // releasing the fleet and reaping its spawned workers.
+    request(&addr, &Json::obj(vec![("cmd", Json::str("drain"))])).unwrap();
+    let status = child.wait().unwrap();
+    assert!(status.success(), "serve exited {status:?}");
+}
+
+#[test]
+fn preempted_job_resumes_bitwise_identical_to_uninterrupted() {
+    let (mut child, addr) = start_daemon(2);
+
+    // A long low-priority job (EF-carrying compressor, so suspended
+    // state actually matters) and a short high-priority one.
+    let cfg_low = quad_cfg("comp-ams-topk:0.1", 2, 1000, 3);
+    let cfg_high = quad_cfg("qadam", 2, 10, 9);
+    let (theta_low, run_low) = solo(&cfg_low);
+    let (theta_high, run_high) = solo(&cfg_high);
+
+    let id_low = submit(&addr, "background", 0, &cfg_low);
+    // Wait until it is actually running (and has made some progress) so
+    // the high-priority submission lands mid-job.
+    let start = Instant::now();
+    loop {
+        let job = job_row(&addr, id_low);
+        if job.req("state").unwrap().as_str().unwrap() == "running"
+            && job.req("rounds_done").unwrap().as_usize().unwrap() >= 1
+        {
+            break;
+        }
+        assert!(start.elapsed() < Duration::from_secs(120), "job never started");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let id_high = submit(&addr, "urgent", 5, &cfg_high);
+
+    let job_high = wait_for_state(&addr, id_high, "done");
+    let job_low = wait_for_state(&addr, id_low, "done");
+
+    // The background job was preempted at least once, checkpointed, and
+    // resumed — and its whole trajectory is still bitwise identical to
+    // an uninterrupted solo run, ledger included.
+    assert!(
+        job_low.req("preemptions").unwrap().as_usize().unwrap() >= 1,
+        "the high-priority job should have preempted the background job: {}",
+        job_low.to_string_compact()
+    );
+    assert_matches_solo(&job_low, &cfg_low, &theta_low, &run_low);
+    assert_matches_solo(&job_high, &cfg_high, &theta_high, &run_high);
+
+    request(&addr, &Json::obj(vec![("cmd", Json::str("drain"))])).unwrap();
+    assert!(child.wait().unwrap().success());
+}
+
+#[test]
+fn sigint_checkpoints_the_active_job_and_exits_cleanly() {
+    let (mut child, addr) = start_daemon(2);
+    let id = submit(&addr, "interrupted", 0, &quad_cfg("dist-sgd", 2, 1_000_000, 5));
+    let start = Instant::now();
+    loop {
+        let job = job_row(&addr, id);
+        if job.req("rounds_done").unwrap().as_usize().unwrap() >= 1 {
+            break;
+        }
+        assert!(start.elapsed() < Duration::from_secs(120), "job never started");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    extern "C" {
+        fn kill(pid: i32, sig: i32) -> i32;
+    }
+    assert_eq!(unsafe { kill(child.id() as i32, 2 /* SIGINT */) }, 0);
+
+    // Graceful shutdown: the active job is suspended (drained uplinks,
+    // checkpointed state), the fleet is released, children are reaped,
+    // and the daemon exits 0 — not killed by the signal.
+    let status = child.wait().unwrap();
+    assert!(status.success(), "serve exited {status:?} on SIGINT");
+}
