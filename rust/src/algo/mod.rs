@@ -287,6 +287,24 @@ impl AlgoSpec {
             }
         }
     }
+
+    /// Size in bits of one worker's error-feedback accumulator (a dense
+    /// f32 `e ∈ R^dim`) under this protocol — the state that is
+    /// irrecoverably lost when a worker process dies and a replacement
+    /// rejoins with `e = 0`. Zero for protocols that keep no worker-side
+    /// residual (dist-ams, dist-sgd, comp-ams with `:noef`). The cluster
+    /// runtime charges this to [`CommLedger::ef_residual_lost_bits`]
+    /// (crate::coordinator::comm::CommLedger) per death so runs with
+    /// crashes report the dropped gradient mass instead of hiding it.
+    pub fn ef_state_bits(&self, dim: usize) -> u64 {
+        let has_ef = match self {
+            AlgoSpec::DistAms | AlgoSpec::DistSgd { .. } => false,
+            AlgoSpec::CompAms { error_feedback, .. } => *error_feedback,
+            // QAdam and 1BitAdam always run error feedback.
+            AlgoSpec::QAdam { .. } | AlgoSpec::OneBitAdam { .. } => true,
+        };
+        if has_ef { 32 * dim as u64 } else { 0 }
+    }
 }
 
 /// 1BitAdam warm-up horizon: the spec value, or — when the spec says 0 —
@@ -356,6 +374,25 @@ mod tests {
             AlgoSpec::OneBitAdam { warmup_rounds: 50, block: 4096 }
         );
         assert!(AlgoSpec::parse("nope").is_err());
+    }
+
+    #[test]
+    fn ef_state_bits_tracks_error_feedback() {
+        let d = 256;
+        for (algo, bits) in [
+            ("dist-ams", 0),
+            ("dist-sgd", 0),
+            ("comp-ams-topk:0.01", 32 * 256),
+            ("comp-ams-topk:0.01:noef", 0),
+            ("qadam", 32 * 256),
+            ("1bitadam:50", 32 * 256),
+        ] {
+            assert_eq!(
+                AlgoSpec::parse(algo).unwrap().ef_state_bits(d),
+                bits,
+                "{algo}"
+            );
+        }
     }
 
     #[test]

@@ -52,6 +52,23 @@ pub struct CommLedger {
     /// bit accounting stays identical across transports; zero for
     /// `InProc`.
     pub framing_bits: u64,
+    /// Dead workers re-admitted into the run: a replacement process
+    /// HELLO'd the leader's listen socket mid-run and was re-ASSIGNed the
+    /// dead wid (elastic fleet). Each rejoin restores the quorum target
+    /// on the next dispatch.
+    pub rejoins: u64,
+    /// Worker deaths that zeroed a *live* error-feedback accumulator:
+    /// the EF residual `e ∈ R^d` lives in the worker process and dies
+    /// with it, so a rejoined replacement restarts from `e = 0`. Zero
+    /// for protocols without worker-side EF (dist-sgd, dist-ams,
+    /// `:noef`), and for runs without deaths.
+    pub ef_resets: u64,
+    /// Size of the EF accumulator state lost to those deaths, in bits
+    /// (32·d per reset — `e` is a dense f32 d-vector). This is dropped
+    /// *gradient mass the ledger can still measure*: the residual's
+    /// values are unknowable post-mortem, but its extent is not, so runs
+    /// with deaths report the bias instead of hiding it.
+    pub ef_residual_lost_bits: u64,
 }
 
 impl CommLedger {
@@ -139,6 +156,20 @@ mod tests {
         l.charge_downlink_dense(100, 4);
         assert_eq!(l.downlink_bits, 4 * 8 * 405);
         assert_eq!(l.total_bits(), l.downlink_bits);
+    }
+
+    #[test]
+    fn ef_loss_and_rejoin_counters_stay_out_of_the_bit_totals() {
+        let mut l = CommLedger::new();
+        l.charge_uplink(0, 1000);
+        l.ef_resets += 1;
+        l.ef_residual_lost_bits += 32 * 256;
+        l.rejoins += 1;
+        // Lost EF state was never transmitted: it must not leak into the
+        // uplink/downlink accounting the figures are drawn from.
+        assert_eq!(l.total_bits(), 1000);
+        assert_eq!(l.uplink_bits, 1000);
+        assert_eq!(l.ef_residual_lost_bits, 8192);
     }
 
     #[test]

@@ -42,6 +42,16 @@ pub struct RunResult {
     /// headers), billed separately so `uplink_bits` stays
     /// transport-invariant. Zero for `inproc`.
     pub framing_bits: u64,
+    /// Dead workers re-admitted mid-run (replacement processes that
+    /// HELLO'd back into a dead wid). Zero for a run without deaths.
+    pub rejoins: u64,
+    /// Worker deaths that zeroed a live error-feedback accumulator (the
+    /// residual dies with the worker process; a rejoiner restarts from
+    /// `e = 0`). Zero for EF-free protocols.
+    pub ef_resets: u64,
+    /// Bits of EF accumulator state lost to those deaths (32·d per
+    /// reset) — dropped gradient mass the run reports instead of hiding.
+    pub ef_residual_lost_bits: u64,
     /// Cumulative uplink bits per worker id — the Figure-2-style
     /// per-worker communication breakdown. Includes the end-of-run
     /// straggler uplinks drained after the last round (K < n only),
@@ -126,6 +136,9 @@ mod tests {
             stale_uplinks: 0,
             dropped_uplinks: 0,
             framing_bits: 0,
+            rejoins: 0,
+            ef_resets: 0,
+            ef_residual_lost_bits: 0,
             uplink_bits_by_worker: Vec::new(),
             uplink_bits_by_shard: Vec::new(),
             server_ms_by_shard: Vec::new(),

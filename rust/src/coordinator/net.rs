@@ -63,8 +63,21 @@
 //! error —
 //! while a **clean disconnect** (worker process died) becomes
 //! [`Event::Exit`], which the runtime maps onto the partial-participation
-//! machinery: the worker is a permanent straggler, the quorum keeps
-//! stepping, and its unfulfilled uplink lands in `dropped_uplinks`.
+//! machinery: the worker is a straggler, the quorum keeps stepping, and
+//! its unfulfilled uplink lands in `dropped_uplinks`.
+//!
+//! ## Rejoin
+//!
+//! Death is no longer permanent. A [`Tcp`] that kept its listen socket
+//! ([`Tcp::adopt_listener`] — [`TcpLeader::accept_workers`] does this
+//! automatically) re-admits replacements mid-run: a late `HELLO` is
+//! matched to a dead wid and answered with a fresh `ASSIGN` (empty
+//! resume blob — the dead incarnation's error-feedback accumulator died
+//! with its process; the runtime accounts the loss), and the wid's link
+//! is rebuilt around the new socket. Each link carries a **generation**
+//! number so events still queued from the dead incarnation's reader
+//! (its `Event::Exit`, a straggling uplink) are recognized as ghosts
+//! and dropped instead of being charged to the replacement.
 
 use std::io::{ErrorKind, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -92,6 +105,11 @@ const MAX_FRAME_BYTES: u32 = 1 << 30;
 
 /// Handshake/connect patience (accepting workers, reading ASSIGN).
 const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Patience for a rejoiner's HELLO after its connect: short — the
+/// connection is already up, only the first frame is outstanding, and a
+/// rejoin probe must not stall a running round for long.
+const REJOIN_HELLO_TIMEOUT: Duration = Duration::from_secs(5);
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 #[repr(u8)]
@@ -207,10 +225,14 @@ impl TcpLeader {
     /// `wid` 0.. in accept order, then start one reader thread per
     /// worker. Fails if the cluster has not formed within the handshake
     /// timeout. One-job ownership: the resulting [`Tcp`] sends SHUTDOWN
-    /// and closes the sockets when the run ends.
+    /// and closes the sockets when the run ends. The listen socket stays
+    /// with the transport, so a crashed worker's replacement can HELLO
+    /// back into its wid mid-run ([`Transport::try_rejoin`]).
     pub fn accept_workers(self, cfg: &TrainConfig) -> Result<Tcp> {
         let streams = self.accept_hellos(cfg.workers)?;
-        assign_streams(&streams, cfg, None, false)
+        let mut tcp = assign_streams(&streams, cfg, None, false)?;
+        tcp.adopt_listener(self)?;
+        Ok(tcp)
     }
 
     /// Accept `n` connections and consume each one's HELLO, in accept
@@ -248,6 +270,38 @@ impl TcpLeader {
         }
         Ok(streams)
     }
+
+    /// Accept at most one pending connection and consume its HELLO,
+    /// without blocking when nobody is waiting. The scheduler's fleet
+    /// healing uses this to re-admit worker daemons between jobs.
+    pub fn try_accept_hello(&self) -> Result<Option<TcpStream>> {
+        self.listener.set_nonblocking(true)?;
+        try_accept_hello(&self.listener, REJOIN_HELLO_TIMEOUT)
+    }
+}
+
+/// Accept at most one pending connection on a **nonblocking** listener
+/// and consume its HELLO. `Ok(None)` when nobody is waiting — or when
+/// the connection flunks the handshake (a non-HELLO opener is dropped,
+/// not fatal: mid-run the listen socket can receive strays, and an
+/// optional rejoin must never poison a healthy run).
+fn try_accept_hello(
+    listener: &TcpListener,
+    hello_timeout: Duration,
+) -> Result<Option<TcpStream>> {
+    let mut stream = match listener.accept() {
+        Ok((s, _peer)) => s,
+        Err(e) if e.kind() == ErrorKind::WouldBlock => return Ok(None),
+        Err(e) => return Err(e).context("accepting a rejoining worker"),
+    };
+    stream.set_nonblocking(false)?;
+    stream.set_nodelay(true)?;
+    stream.set_read_timeout(Some(hello_timeout))?;
+    if !matches!(read_frame(&mut stream), Ok(Some((FrameKind::Hello, _)))) {
+        return Ok(None);
+    }
+    stream.set_read_timeout(None)?;
+    Ok(Some(stream))
 }
 
 /// ASSIGN a job to already-HELLO'd worker connections and build the
@@ -279,9 +333,8 @@ pub fn assign_streams(
         );
     }
     let cfg_json = cfg.to_json().to_string_pretty();
-    let (event_tx, events) = channel::<Result<Event>>();
+    let (event_tx, events) = channel::<ReaderEvent>();
     let mut links = Vec::with_capacity(streams.len());
-    let mut readers = Vec::with_capacity(streams.len());
     for (wid, stream) in streams.iter().enumerate() {
         let mut writer = stream.try_clone()?;
         let blob = resume.map_or(&[][..], |b| b[wid].as_slice());
@@ -291,19 +344,32 @@ pub fn assign_streams(
             &encode_assign(wid as u32, blob, &cfg_json),
         )
         .with_context(|| format!("assigning job to worker {wid}"))?;
-        links.push(WorkerLink { stream: writer, alive: true });
-        readers.push(spawn_reader(wid, stream.try_clone()?, event_tx.clone()));
+        let reader = spawn_reader(wid, 0, stream.try_clone()?, event_tx.clone());
+        links.push(WorkerLink {
+            stream: writer,
+            alive: true,
+            gen: 0,
+            reader: Some(reader),
+        });
     }
     Ok(Tcp {
         links,
         events,
-        readers,
+        event_tx,
+        cfg_json,
+        listener: None,
         shut_down: false,
         pooled,
         detached: false,
         downlink_cache: None,
     })
 }
+
+/// What a reader thread emits: the wid and link generation it was
+/// spawned for, plus the event itself. The generation lets
+/// [`Tcp::recv_event`] drop ghost events from a replaced (rejoined)
+/// link's old reader.
+type ReaderEvent = (usize, u64, Result<Event>);
 
 /// One leader-side reader thread: multiplex worker `wid`'s uplinks into
 /// the shared event channel; a clean EOF becomes [`Event::Exit`], a
@@ -313,8 +379,9 @@ pub fn assign_streams(
 /// every other exit path returns `None`.
 fn spawn_reader(
     wid: usize,
+    gen: u64,
     mut stream: TcpStream,
-    tx: Sender<Result<Event>>,
+    tx: Sender<ReaderEvent>,
 ) -> JoinHandle<Option<Vec<u8>>> {
     // A reset/abort is a worker-death signal like a clean EOF (the OS
     // closes a crashed process's sockets either way); short reads and
@@ -336,13 +403,13 @@ fn spawn_reader(
                 Ok(Some((FrameKind::Uplink, body))) => match Envelope::decode(&body) {
                     Ok(envelope) => {
                         let ev = Event::Uplink { wid, round: envelope.round, envelope };
-                        if tx.send(Ok(ev)).is_err() {
+                        if tx.send((wid, gen, Ok(ev))).is_err() {
                             return None; // leader gone
                         }
                     }
                     Err(e) => {
                         let ctx = format!("decoding worker {wid} uplink");
-                        let _ = tx.send(Err(e.context(ctx)));
+                        let _ = tx.send((wid, gen, Err(e.context(ctx))));
                         return None;
                     }
                 },
@@ -351,24 +418,28 @@ fn spawn_reader(
                 // blob directly.
                 Ok(Some((FrameKind::State, body))) => return Some(body),
                 Ok(Some((kind, _))) => {
-                    let _ = tx.send(Err(anyhow::anyhow!(
-                        "worker {wid} sent a {kind:?} frame on the uplink stream"
-                    )));
+                    let _ = tx.send((
+                        wid,
+                        gen,
+                        Err(anyhow::anyhow!(
+                            "worker {wid} sent a {kind:?} frame on the uplink stream"
+                        )),
+                    ));
                     return None;
                 }
                 // Worker process is gone (crash, post-SHUTDOWN close), or
                 // the leader shut the socket down itself.
                 Ok(None) => {
-                    let _ = tx.send(Ok(Event::Exit { wid }));
+                    let _ = tx.send((wid, gen, Ok(Event::Exit { wid })));
                     return None;
                 }
                 Err(e) if is_disconnect(&e) => {
-                    let _ = tx.send(Ok(Event::Exit { wid }));
+                    let _ = tx.send((wid, gen, Ok(Event::Exit { wid })));
                     return None;
                 }
                 Err(e) => {
                     let ctx = format!("reading worker {wid} uplink stream");
-                    let _ = tx.send(Err(e.context(ctx)));
+                    let _ = tx.send((wid, gen, Err(e.context(ctx))));
                     return None;
                 }
             }
@@ -379,6 +450,13 @@ fn spawn_reader(
 struct WorkerLink {
     stream: TcpStream,
     alive: bool,
+    /// Incarnation counter, bumped on every rejoin. Events stamped with
+    /// an older generation belong to a dead predecessor on this wid and
+    /// are dropped by [`Tcp::recv_event`].
+    gen: u64,
+    /// This incarnation's reader thread; taken at detach/shutdown (and
+    /// when retiring a dead incarnation on rejoin) to join it.
+    reader: Option<JoinHandle<Option<Vec<u8>>>>,
 }
 
 /// Multi-process transport: one socket per worker process, one reader
@@ -387,8 +465,16 @@ struct WorkerLink {
 /// exploits, now with real network scheduling).
 pub struct Tcp {
     links: Vec<WorkerLink>,
-    events: Receiver<Result<Event>>,
-    readers: Vec<JoinHandle<Option<Vec<u8>>>>,
+    events: Receiver<ReaderEvent>,
+    /// Kept so rejoin can arm replacement readers onto the same channel.
+    event_tx: Sender<ReaderEvent>,
+    /// The job's ASSIGN config, kept verbatim so a rejoiner's ASSIGN is
+    /// byte-identical to the original cluster's.
+    cfg_json: String,
+    /// The leader's listen socket (nonblocking), when mid-run rejoin is
+    /// armed ([`Tcp::adopt_listener`]). `None` on pooled fleets — there
+    /// the scheduler owns the listener and heals between jobs instead.
+    listener: Option<TcpListener>,
     shut_down: bool,
     /// Fleet mode ([`assign_streams`]): end-of-job releases the workers
     /// with DETACH instead of SHUTDOWN and leaves the sockets open for
@@ -424,19 +510,29 @@ impl Tcp {
                 }
             }
         }
-        let mut out = Vec::with_capacity(self.readers.len());
-        for (wid, reader) in self.readers.drain(..).enumerate() {
-            let blob = reader
-                .join()
-                .map_err(|_| anyhow::anyhow!("tcp reader {wid} panicked"))?;
+        let mut out = Vec::with_capacity(self.links.len());
+        for (wid, link) in self.links.iter_mut().enumerate() {
+            let blob = match link.reader.take() {
+                Some(reader) => reader
+                    .join()
+                    .map_err(|_| anyhow::anyhow!("tcp reader {wid} panicked"))?,
+                None => None,
+            };
             if blob.is_none() {
-                if let Some(link) = self.links.get_mut(wid) {
-                    link.alive = false;
-                }
+                link.alive = false;
             }
             out.push(blob);
         }
         Ok(out)
+    }
+
+    /// Arm mid-run rejoin: keep the leader's listen socket so a
+    /// replacement worker process can HELLO back into a dead wid
+    /// ([`Transport::try_rejoin`]).
+    pub fn adopt_listener(&mut self, leader: TcpLeader) -> Result<()> {
+        leader.listener.set_nonblocking(true)?;
+        self.listener = Some(leader.listener);
+        Ok(())
     }
 }
 
@@ -490,16 +586,24 @@ impl Transport for Tcp {
     }
 
     fn recv_event(&mut self) -> Result<Event> {
-        let ev = self
-            .events
-            .recv()
-            .map_err(|_| anyhow::anyhow!("all tcp reader threads are gone"))??;
-        if let Event::Exit { wid } = ev {
-            if let Some(link) = self.links.get_mut(wid) {
-                link.alive = false;
+        loop {
+            let (wid, gen, ev) = self
+                .events
+                .recv()
+                .map_err(|_| anyhow::anyhow!("all tcp reader threads are gone"))?;
+            // A stale generation is a ghost of a dead incarnation whose
+            // wid has since been rejoined (its Exit, a straggling uplink,
+            // or its reader's error): drop it rather than charge it to
+            // the replacement.
+            if self.links.get(wid).is_none_or(|l| l.gen != gen) {
+                continue;
             }
+            let ev = ev?;
+            if let Event::Exit { wid } = ev {
+                self.links[wid].alive = false;
+            }
+            return Ok(ev);
         }
-        Ok(ev)
     }
 
     fn frame_overhead_bits(&self) -> u64 {
@@ -531,14 +635,64 @@ impl Transport for Tcp {
             let _ = link.stream.shutdown(Shutdown::Both);
             link.alive = false;
         }
-        for j in self.readers.drain(..) {
-            let _ = j.join();
+        for link in &mut self.links {
+            if let Some(j) = link.reader.take() {
+                let _ = j.join();
+            }
         }
         Ok(())
     }
 
     fn detach(&mut self, want_state: bool) -> Result<Vec<Option<Vec<u8>>>> {
         self.detach_inner(want_state)
+    }
+
+    fn try_rejoin(&mut self) -> Result<Vec<usize>> {
+        let Some(listener) = self.listener.as_ref() else {
+            return Ok(Vec::new());
+        };
+        let mut revived = Vec::new();
+        for wid in 0..self.links.len() {
+            if self.links[wid].alive {
+                continue;
+            }
+            let Some(stream) = try_accept_hello(listener, REJOIN_HELLO_TIMEOUT)?
+            else {
+                break; // nobody is knocking; retry on a later dispatch
+            };
+            let mut writer = stream.try_clone()?;
+            // Fresh ASSIGN, empty resume: the dead incarnation's EF
+            // accumulator is gone (the runtime has already charged the
+            // loss when it marked the wid dead).
+            if write_frame(
+                &mut writer,
+                FrameKind::Assign,
+                &encode_assign(wid as u32, &[], &self.cfg_json),
+            )
+            .is_err()
+            {
+                continue; // rejoiner vanished mid-handshake
+            }
+            let link = &mut self.links[wid];
+            // Retire the dead incarnation: force its reader (possibly
+            // still blocked on a half-dead socket) off with a hard
+            // close, then join it so the thread is gone before the
+            // replacement takes the slot.
+            let _ = link.stream.shutdown(Shutdown::Both);
+            if let Some(old) = link.reader.take() {
+                let _ = old.join();
+            }
+            let gen = link.gen + 1;
+            let reader = spawn_reader(wid, gen, stream, self.event_tx.clone());
+            *link = WorkerLink {
+                stream: writer,
+                alive: true,
+                gen,
+                reader: Some(reader),
+            };
+            revived.push(wid);
+        }
+        Ok(revived)
     }
 }
 

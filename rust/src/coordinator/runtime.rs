@@ -31,10 +31,22 @@
 //!
 //! **Worker death** (multi-process transports only): a worker whose
 //! connection drops ([`Event::Exit`], or a failed downlink write) is a
-//! *permanent straggler* — never dispatched again, any uplink it still
-//! owed counted in `dropped_uplinks`, and the collect loop's target
-//! shrinks so the quorum keeps stepping on the survivors. The run only
-//! errors once no live worker is left to dispatch.
+//! *dead straggler* — not dispatched again, any uplink it still owed
+//! counted in `dropped_uplinks`, and the collect loop's target shrinks
+//! so the quorum keeps stepping on the survivors. The run only errors
+//! once no live worker is left to dispatch. Death also zeroes the
+//! worker's error-feedback accumulator (it lived in the dead process):
+//! the runtime charges that loss to `CommLedger::{ef_resets,
+//! ef_residual_lost_bits}` (sized by [`ClusterRuntime::set_ef_state_bits`])
+//! so the dropped gradient mass is reported, not hidden.
+//!
+//! **Rejoin**: death is not permanent. While any wid is dead, each
+//! dispatch first offers the transport a [`Transport::try_rejoin`] —
+//! on socket transports a replacement process that HELLO'd the leader's
+//! listen socket is re-ASSIGNed the dead wid — and every revived wid is
+//! flipped live again (`CommLedger::rejoins`), restoring the quorum
+//! target on this very dispatch. The replacement starts from the
+//! current θ (next downlink) with a fresh EF accumulator.
 //!
 //! **Synchronous mode is the default and is bitwise-exact**: with K = n
 //! every round dispatches all n workers, waits for all n uplinks, orders
@@ -91,9 +103,15 @@ pub struct ClusterRuntime {
     /// `in_flight[wid]` = the round whose uplink we still owe this worker
     /// credit for (`None` = idle, eligible for dispatch).
     in_flight: Vec<Option<u64>>,
-    /// Workers whose process/connection is gone — permanent stragglers:
-    /// skipped at dispatch, excluded from quorum targets.
+    /// Workers whose process/connection is gone — dead stragglers:
+    /// skipped at dispatch, excluded from quorum targets, revivable via
+    /// [`Transport::try_rejoin`].
     dead: Vec<bool>,
+    /// Per-worker error-feedback accumulator size in bits
+    /// ([`AlgoSpec::ef_state_bits`](crate::algo::AlgoSpec::ef_state_bits));
+    /// charged to the ledger when a worker dies with live EF state. Zero
+    /// (the default) for EF-free protocols.
+    ef_state_bits: u64,
     /// Set when a round or drain errored mid-collection: the in-flight
     /// bookkeeping can no longer be trusted (e.g. a worker's errored
     /// reply was consumed without clearing its slot), so further rounds
@@ -121,8 +139,31 @@ impl ClusterRuntime {
             max_staleness,
             in_flight: vec![None; n],
             dead: vec![false; n],
+            ef_state_bits: 0,
             poisoned: false,
         })
+    }
+
+    /// Declare how many bits of error-feedback state each worker holds
+    /// (see [`AlgoSpec::ef_state_bits`](crate::algo::AlgoSpec::ef_state_bits)),
+    /// so worker deaths charge the lost residual to
+    /// [`CommLedger::ef_residual_lost_bits`]. Leave at 0 for EF-free
+    /// protocols.
+    pub fn set_ef_state_bits(&mut self, bits: u64) {
+        self.ef_state_bits = bits;
+    }
+
+    /// Centralized death transition: flip `dead[wid]` and — exactly once
+    /// per death — account the EF accumulator that died with the process.
+    fn mark_dead(&mut self, wid: usize, ledger: &mut CommLedger) {
+        if self.dead[wid] {
+            return;
+        }
+        self.dead[wid] = true;
+        if self.ef_state_bits > 0 {
+            ledger.ef_resets += 1;
+            ledger.ef_residual_lost_bits += self.ef_state_bits;
+        }
     }
 
     pub fn n_workers(&self) -> usize {
@@ -133,8 +174,8 @@ impl ClusterRuntime {
         self.quorum
     }
 
-    /// Worker ids whose process/connection is gone (permanent
-    /// stragglers). Empty for in-process transports.
+    /// Worker ids whose process/connection is gone (dead stragglers,
+    /// until a replacement rejoins). Empty for in-process transports.
     pub fn dead_workers(&self) -> Vec<usize> {
         (0..self.dead.len()).filter(|&w| self.dead[w]).collect()
     }
@@ -195,6 +236,21 @@ impl ClusterRuntime {
         let ctx = RoundCtx::sync(round, lr);
         let wsw = Stopwatch::start();
 
+        // Rejoin: while any wid is dead, offer the transport a chance to
+        // re-admit replacements before dispatching — a revived wid gets
+        // this very round's downlink, so the quorum target recovers
+        // immediately. (A dead wid never has an uplink in flight: both
+        // death paths below clear or never set its slot.)
+        if self.dead.iter().any(|&d| d) {
+            for wid in self.transport.try_rejoin()? {
+                ensure!(wid < n, "transport rejoined unknown worker {wid}");
+                if self.dead[wid] && self.in_flight[wid].is_none() {
+                    self.dead[wid] = false;
+                    ledger.rejoins += 1;
+                }
+            }
+        }
+
         // Dispatch: θ goes to every live idle worker; stragglers still
         // owe an uplink and are skipped (and not billed a broadcast); a
         // failed downlink write means the worker process died under us —
@@ -209,7 +265,7 @@ impl ClusterRuntime {
                 self.in_flight[wid] = Some(round);
                 dispatched += 1;
             } else {
-                self.dead[wid] = true;
+                self.mark_dead(wid, ledger);
             }
         }
         ensure!(
@@ -261,7 +317,7 @@ impl ClusterRuntime {
                 Event::Exit { wid } => {
                     ensure!(wid < n, "exit event from unknown worker {wid}");
                     if !self.dead[wid] {
-                        self.dead[wid] = true;
+                        self.mark_dead(wid, ledger);
                         if let Some(owed) = self.in_flight[wid].take() {
                             // The uplink this worker owed will never
                             // arrive: account the absence.
@@ -373,7 +429,7 @@ impl ClusterRuntime {
                         "exit event from unknown worker {wid}"
                     );
                     if !self.dead[wid] {
-                        self.dead[wid] = true;
+                        self.mark_dead(wid, ledger);
                         if self.in_flight[wid].take().is_some() {
                             // Never transmitted: accounted as dropped, no
                             // wire bits charged.
@@ -597,6 +653,10 @@ mod tests {
         die_at: Vec<Option<u64>>,
         /// Connection already gone: send_downlink returns Ok(false).
         unreachable: Vec<bool>,
+        /// Replacement processes "knocking on the listen socket": wids
+        /// pushed here (from test code, between rounds) are revived by
+        /// the next `try_rejoin`. Shared so the test keeps a handle.
+        rejoin_requests: std::sync::Arc<std::sync::Mutex<Vec<usize>>>,
     }
 
     impl ScriptedTransport {
@@ -606,6 +666,7 @@ mod tests {
                 queue: Default::default(),
                 die_at: vec![None; n],
                 unreachable: vec![false; n],
+                rejoin_requests: Default::default(),
             }
         }
     }
@@ -650,6 +711,18 @@ mod tests {
 
         fn frame_overhead_bits(&self) -> u64 {
             200
+        }
+
+        fn try_rejoin(&mut self) -> Result<Vec<usize>> {
+            let mut revived = Vec::new();
+            for wid in self.rejoin_requests.lock().unwrap().drain(..) {
+                // A fresh process replaces the dead one: reachable again,
+                // and its crash script does not carry over.
+                self.unreachable[wid] = false;
+                self.die_at[wid] = None;
+                revived.push(wid);
+            }
+            Ok(revived)
         }
     }
 
@@ -739,6 +812,101 @@ mod tests {
         assert!(rt.straggling_workers().is_empty());
         assert!(drained > 0 || ledger.dropped_uplinks > before);
         assert_eq!(rt.dead_workers(), vec![1]);
+    }
+
+    #[test]
+    fn rejoin_revives_a_dead_worker_and_accounts_the_lost_ef_state() {
+        // n=3, K=2: worker 2 dies on its round-2 dispatch, a replacement
+        // knocks before round 5. The wid must come back into the
+        // dispatch/quorum rotation, the death must charge the lost EF
+        // accumulator exactly once, and dropped_uplinks must stop
+        // growing after the rejoin.
+        let mut t = ScriptedTransport::new(3);
+        t.die_at[2] = Some(2);
+        let knocking = t.rejoin_requests.clone();
+        let mut rt = ClusterRuntime::new(Box::new(t), 2, 2).unwrap();
+        rt.set_ef_state_bits(32 * 4);
+        let (_, mut server) = AlgoSpec::parse("dist-sgd").unwrap().build(4, 3, 100);
+        let mut theta = vec![0.5f32; 4];
+        let mut ledger = CommLedger::new();
+        for r in 0..5 {
+            rt.run_round(&mut theta, server.as_mut(), r, 0.01, &mut ledger).unwrap();
+        }
+        assert_eq!(rt.dead_workers(), vec![2]);
+        assert_eq!(ledger.ef_resets, 1);
+        assert_eq!(ledger.ef_residual_lost_bits, 32 * 4);
+        assert_eq!(ledger.dropped_uplinks, 1);
+        let bits_at_death = ledger.uplink_bits_by_worker[2];
+
+        knocking.lock().unwrap().push(2);
+        for r in 5..10 {
+            let out = rt
+                .run_round(&mut theta, server.as_mut(), r, 0.01, &mut ledger)
+                .unwrap();
+            assert!(out.fresh >= 1);
+        }
+        assert!(rt.dead_workers().is_empty());
+        assert_eq!(ledger.rejoins, 1);
+        // The replacement is uplinking again...
+        assert!(ledger.uplink_bits_by_worker[2] > bits_at_death);
+        // ...and no further uplinks were dropped, nor EF charged again.
+        assert_eq!(ledger.dropped_uplinks, 1);
+        assert_eq!(ledger.ef_resets, 1);
+        assert_eq!(ledger.ef_residual_lost_bits, 32 * 4);
+    }
+
+    #[test]
+    fn ef_loss_is_charged_once_per_death_even_across_rejoin_cycles() {
+        // Die → rejoin → die again: two distinct processes died holding
+        // EF state, so two resets are charged; the rejoin itself charges
+        // nothing.
+        let mut t = ScriptedTransport::new(2);
+        t.unreachable[1] = true;
+        let knocking = t.rejoin_requests.clone();
+        let mut rt = ClusterRuntime::new(Box::new(t), 1, 2).unwrap();
+        rt.set_ef_state_bits(128);
+        let (_, mut server) = AlgoSpec::parse("dist-sgd").unwrap().build(4, 2, 100);
+        let mut theta = vec![0.5f32; 4];
+        let mut ledger = CommLedger::new();
+        rt.run_round(&mut theta, server.as_mut(), 0, 0.01, &mut ledger).unwrap();
+        assert_eq!(rt.dead_workers(), vec![1]);
+        assert_eq!(ledger.ef_resets, 1);
+
+        knocking.lock().unwrap().push(1);
+        rt.run_round(&mut theta, server.as_mut(), 1, 0.01, &mut ledger).unwrap();
+        assert!(rt.dead_workers().is_empty());
+        assert_eq!(ledger.rejoins, 1);
+        assert_eq!(ledger.ef_resets, 1);
+
+        // Second incarnation dies too (unreachable again from round 2).
+        // We can't reach into the boxed transport, so script it via a
+        // queued Exit: kill it right after its round-2 dispatch.
+        // (die_at was cleared by the rejoin; use a fresh runtime check
+        // instead — mark_dead is what's under test and Exit drives it.)
+        rt.run_round(&mut theta, server.as_mut(), 2, 0.01, &mut ledger).unwrap();
+        rt.mark_dead(1, &mut ledger);
+        assert_eq!(ledger.ef_resets, 2);
+        assert_eq!(ledger.ef_residual_lost_bits, 256);
+        // Re-marking an already-dead wid must not double charge.
+        rt.mark_dead(1, &mut ledger);
+        assert_eq!(ledger.ef_resets, 2);
+    }
+
+    #[test]
+    fn ef_free_protocols_charge_no_residual_loss_on_death() {
+        let mut t = ScriptedTransport::new(2);
+        t.die_at[1] = Some(0);
+        let mut rt = ClusterRuntime::new(Box::new(t), 1, 2).unwrap();
+        // ef_state_bits left at its 0 default (dist-sgd keeps no EF).
+        let (_, mut server) = AlgoSpec::parse("dist-sgd").unwrap().build(4, 2, 100);
+        let mut theta = vec![0.5f32; 4];
+        let mut ledger = CommLedger::new();
+        for r in 0..3 {
+            rt.run_round(&mut theta, server.as_mut(), r, 0.01, &mut ledger).unwrap();
+        }
+        assert_eq!(rt.dead_workers(), vec![1]);
+        assert_eq!(ledger.ef_resets, 0);
+        assert_eq!(ledger.ef_residual_lost_bits, 0);
     }
 
     #[test]

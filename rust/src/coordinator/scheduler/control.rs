@@ -149,6 +149,12 @@ pub fn job_to_json(job: &Job) -> Json {
                 ("framing_bits", Json::num(r.framing_bits as f64)),
                 ("stale_uplinks", Json::num(r.stale_uplinks as f64)),
                 ("dropped_uplinks", Json::num(r.dropped_uplinks as f64)),
+                ("rejoins", Json::num(r.rejoins as f64)),
+                ("ef_resets", Json::num(r.ef_resets as f64)),
+                (
+                    "ef_residual_lost_bits",
+                    Json::num(r.ef_residual_lost_bits as f64),
+                ),
                 (
                     "uplink_bits_by_worker",
                     Json::Arr(

@@ -38,9 +38,19 @@
 //! lines on stdout (flushed) as each listener binds — with ephemeral
 //! ports (`tcp:0`, the default) this is how tests and CI find it.
 //!
-//! Known v1 limitation: the fleet does not heal. A worker daemon that
-//! dies stays dead; jobs assigned onto its socket fail (the error is
-//! recorded on the job, the daemon keeps serving).
+//! The fleet heals between jobs. Every `assign` (and each idle tick of
+//! the scheduler loop) runs a liveness pass: dead sockets are probed
+//! out and evicted with their slot named on stderr, the supervisor —
+//! when the daemon spawned its own fleet — restarts crashed children
+//! under [`RestartPolicy`](super::super::supervisor::RestartPolicy)'s
+//! exponential backoff, and replacement `comp-ams worker` daemons that
+//! HELLO on the (still open) fleet listener are re-admitted up to the
+//! original fleet size. A job that wants more workers than are
+//! currently live fails fast with an error naming the evicted slots —
+//! it is never silently assigned onto a dead socket. (Mid-job deaths
+//! are the per-job runtime's domain: the pooled transport reports the
+//! worker dead and the round quorum shrinks; healing happens at the
+//! next job boundary.)
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
@@ -55,7 +65,7 @@ use crate::util::json::{parse, Json};
 
 use super::super::checkpoint::JobCheckpoint;
 use super::super::net::{assign_streams, write_frame, FrameKind, Tcp, TcpLeader};
-use super::super::supervisor::Supervisor;
+use super::super::supervisor::{RestartPolicy, Supervisor};
 use super::super::trainer::Trainer;
 use super::control::{job_to_json, parse_submit};
 use super::queue::{JobId, JobQueue, JobState};
@@ -122,21 +132,53 @@ fn announce(key: &str, value: impl std::fmt::Display) -> Result<()> {
 
 /// The resident worker fleet: one connected, idle socket per worker
 /// daemon (plus the supervisor when the daemon spawned them itself).
+/// The fleet listener stays open for the daemon's whole life so
+/// replacement workers can HELLO back in after a death.
 struct Fleet {
+    leader: TcpLeader,
     streams: Vec<TcpStream>,
+    /// The fleet size the daemon was asked for — the re-admission
+    /// ceiling (a late HELLO beyond it stays queued in the backlog).
+    target: usize,
+    /// Cumulative human-readable eviction log ("slot 1 (addr)"), so a
+    /// failed assign can always name who died even rounds later.
+    evicted: Vec<String>,
     supervisor: Option<Supervisor>,
+}
+
+/// Probe an **idle** fleet socket for liveness without consuming bytes.
+/// A worker daemon idle between jobs sends nothing, so: EOF (`Ok(0)`)
+/// or a hard error means the peer is gone; pending bytes or
+/// `WouldBlock` mean it is alive.
+fn stream_is_dead(stream: &TcpStream) -> bool {
+    if stream.set_nonblocking(true).is_err() {
+        return true;
+    }
+    let mut probe = [0u8; 1];
+    let dead = match stream.peek(&mut probe) {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => false,
+        Err(_) => true,
+    };
+    let _ = stream.set_nonblocking(false);
+    dead
 }
 
 impl Fleet {
     /// Bind the fleet listener, announce its address, and collect the
-    /// fleet's HELLOs (spawning the workers first if asked to).
+    /// fleet's HELLOs (spawning the workers first if asked to). A
+    /// spawned fleet is armed with the default restart-backoff policy
+    /// so a crashed child is relaunched automatically.
     fn form(opts: &ServeOpts) -> Result<Fleet> {
         ensure!(opts.workers >= 1, "serve needs a fleet of at least one worker");
         let leader = TcpLeader::bind(opts.fleet_port)?;
         let addr = leader.local_addr()?;
         announce("fleet-addr", addr)?;
         let supervisor = if opts.spawn_workers {
-            Some(Supervisor::spawn(opts.workers, &addr.to_string())?)
+            let mut sup = Supervisor::spawn(opts.workers, &addr.to_string())?;
+            sup.set_restart_policy(RestartPolicy::default());
+            Some(sup)
         } else {
             eprintln!(
                 "[serve] waiting for {} worker(s): comp-ams worker --leader {addr}",
@@ -146,18 +188,85 @@ impl Fleet {
         };
         let streams = leader.accept_hellos(opts.workers)?;
         eprintln!("[serve] fleet of {} worker(s) connected", streams.len());
-        Ok(Fleet { streams, supervisor })
+        Ok(Fleet {
+            leader,
+            streams,
+            target: opts.workers,
+            evicted: Vec::new(),
+            supervisor,
+        })
+    }
+
+    /// One healing pass: restart crashed spawned children (backoff
+    /// permitting), evict fleet sockets whose peer died, and re-admit
+    /// pending HELLOs up to the original fleet size. Never fails — a
+    /// sick fleet keeps serving whatever is still alive.
+    fn heal(&mut self) {
+        if let Some(sup) = self.supervisor.as_mut() {
+            match sup.tick() {
+                Ok(0) => {}
+                Ok(n) => eprintln!("[serve] supervisor respawned {n} worker process(es)"),
+                Err(e) => eprintln!("[serve] supervisor tick failed: {e:#}"),
+            }
+        }
+        let mut slot = 0;
+        while slot < self.streams.len() {
+            if stream_is_dead(&self.streams[slot]) {
+                let peer = self.streams[slot]
+                    .peer_addr()
+                    .map(|a| a.to_string())
+                    .unwrap_or_else(|_| "unknown peer".into());
+                eprintln!("[serve] evicting dead fleet worker slot {slot} ({peer})");
+                self.evicted.push(format!("slot {slot} ({peer})"));
+                let dead = self.streams.remove(slot);
+                let _ = dead.shutdown(Shutdown::Both);
+            } else {
+                slot += 1;
+            }
+        }
+        while self.streams.len() < self.target {
+            match self.leader.try_accept_hello() {
+                Ok(Some(stream)) => {
+                    let peer = stream
+                        .peer_addr()
+                        .map(|a| a.to_string())
+                        .unwrap_or_else(|_| "unknown peer".into());
+                    self.streams.push(stream);
+                    eprintln!(
+                        "[serve] fleet worker rejoined ({peer}); {}/{} live",
+                        self.streams.len(),
+                        self.target
+                    );
+                }
+                Ok(None) => break,
+                Err(e) => {
+                    eprintln!("[serve] fleet rejoin accept failed: {e:#}");
+                    break;
+                }
+            }
+        }
     }
 
     /// ASSIGN a job onto the first `cfg.workers` fleet members (pooled:
     /// end-of-job DETACHes them back to idle instead of closing them).
-    fn assign(&self, cfg: &TrainConfig, resume: Option<&[Vec<u8>]>) -> Result<Tcp> {
-        ensure!(
-            cfg.workers <= self.streams.len(),
-            "job wants {} workers but the fleet has {}",
-            cfg.workers,
-            self.streams.len()
-        );
+    /// Heals first, and fails fast — naming the evicted slots — rather
+    /// than assigning a job onto a socket whose worker is dead.
+    fn assign(&mut self, cfg: &TrainConfig, resume: Option<&[Vec<u8>]>) -> Result<Tcp> {
+        self.heal();
+        if cfg.workers > self.streams.len() {
+            let who = if self.evicted.is_empty() {
+                "none evicted".to_string()
+            } else {
+                self.evicted.join(", ")
+            };
+            bail!(
+                "job wants {} workers but the fleet has {} live (dead workers evicted: \
+                 {who}); launch replacement `comp-ams worker --leader <fleet-addr>` \
+                 daemons to heal the fleet",
+                cfg.workers,
+                self.streams.len()
+            );
+        }
         assign_streams(&self.streams[..cfg.workers], cfg, resume, true)
     }
 
@@ -171,7 +280,8 @@ impl Fleet {
             let _ = stream.shutdown(Shutdown::Both);
         }
         if let Some(sup) = self.supervisor.as_mut() {
-            let nonzero = sup.reap(Duration::from_secs(10))?;
+            let reports = sup.reap(Duration::from_secs(10))?;
+            let nonzero = reports.iter().filter(|r| !r.status.success()).count();
             if nonzero > 0 {
                 eprintln!(
                     "[serve] warning: {nonzero} worker process(es) exited non-zero"
@@ -260,27 +370,28 @@ impl Scheduler {
     /// or SIGINT arrives, then release the fleet.
     pub fn run(mut self) -> Result<()> {
         loop {
-            let next = {
+            let next = loop {
                 let mut st = self.shared.state.lock().unwrap();
-                loop {
-                    if st.shutdown || sigint_received() {
-                        st.shutdown = true;
-                        break None;
-                    }
-                    if let Some(id) = st.queue.next_runnable() {
-                        break Some(id);
-                    }
-                    if st.draining {
-                        break None;
-                    }
-                    // Timed wait so an idle daemon still notices SIGINT.
-                    let (guard, _) = self
-                        .shared
-                        .cvar
-                        .wait_timeout(st, Duration::from_millis(200))
-                        .unwrap();
-                    st = guard;
+                if st.shutdown || sigint_received() {
+                    st.shutdown = true;
+                    break None;
                 }
+                if let Some(id) = st.queue.next_runnable() {
+                    break Some(id);
+                }
+                if st.draining {
+                    break None;
+                }
+                // Timed wait so an idle daemon still notices SIGINT.
+                let (guard, _) = self
+                    .shared
+                    .cvar
+                    .wait_timeout(st, Duration::from_millis(200))
+                    .unwrap();
+                drop(guard);
+                // Heal between waits, outside the state lock: admitting
+                // a slow rejoiner must not stall control connections.
+                self.fleet.heal();
             };
             match next {
                 Some(id) => self.run_one(id),

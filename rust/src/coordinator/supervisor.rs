@@ -1,4 +1,4 @@
-//! Process supervisor: spawn, monitor, and reap worker daemons.
+//! Process supervisor: spawn, monitor, restart, and reap worker daemons.
 //!
 //! `--spawn-workers` turns the leader into a one-command cluster: the
 //! supervisor launches `cfg.workers` copies of this binary's `worker`
@@ -6,26 +6,34 @@
 //! connects back to the leader's TCP listener, handshakes, and runs the
 //! decode → `process` → encode loop ([`super::worker`]).
 //!
-//! Failure handling is deliberately thin, because the runtime already
-//! has the right machinery: a dead child's socket closes, the TCP reader
-//! surfaces [`Event::Exit`](super::transport::Event::Exit), and the
-//! [`ClusterRuntime`](super::runtime::ClusterRuntime) turns the worker
-//! into a *permanent straggler* — the quorum keeps stepping and the
-//! absence is accounted in `dropped_uplinks`. The supervisor's jobs are
-//! the process-table ones: spawn with the right argv, report exits
-//! ([`Supervisor::poll_exits`]), kill on demand (fault injection /
-//! abort), and reap everything at end of run so no zombies outlive the
-//! leader.
+//! Transport-level failure handling stays where it belongs: a dead
+//! child's socket closes, the TCP reader surfaces
+//! [`Event::Exit`](super::transport::Event::Exit), and the
+//! [`ClusterRuntime`](super::runtime::ClusterRuntime) sidelines the
+//! worker while the quorum keeps stepping. The supervisor owns the
+//! *process-table* half of fault tolerance: when a child exits nonzero
+//! and a [`RestartPolicy`] is armed, it respawns the child after an
+//! exponentially backed-off, jittered delay (capped attempts, capped
+//! delay) — the replacement connects back to the leader's listen socket
+//! and rejoins its wid through the normal HELLO → ASSIGN handshake
+//! ([`Transport::try_rejoin`](super::transport::Transport::try_rejoin)).
+//! Restarting is **polled**, not threaded: drive [`Supervisor::tick`]
+//! from the round loop. Clean (zero) exits are never restarted — that is
+//! how workers leave after a SHUTDOWN. Nonzero exit codes are recorded
+//! ([`Supervisor::nonzero_exits`]) and reported per child by
+//! [`Supervisor::reap`], so a crash is attributable after the run.
 //!
 //! Tests (whose `current_exe` is the test harness, not `comp-ams`) point
 //! the supervisor at the real launcher via the `COMP_AMS_WORKER_BIN`
 //! environment variable.
 
-use std::path::PathBuf;
-use std::process::{Child, Command, Stdio};
+use std::path::{Path, PathBuf};
+use std::process::{Child, Command, ExitStatus, Stdio};
 use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Context, Result};
+
+use crate::util::rng::Rng;
 
 /// Environment variable overriding the spawned worker binary (defaults
 /// to `current_exe`; needed by integration tests).
@@ -39,15 +47,82 @@ fn worker_program() -> Result<PathBuf> {
     }
 }
 
+/// Restart-with-backoff policy for crashed (nonzero-exit) children.
+/// Attempt k (0-based) is delayed `min(base_delay · 2^k, max_delay)`
+/// plus up to 25% deterministic jitter, so a crash-looping fleet does
+/// not hammer the leader's listen socket in lockstep.
+#[derive(Clone, Copy, Debug)]
+pub struct RestartPolicy {
+    /// Restart attempts per child slot before giving up on it.
+    pub max_restarts: u32,
+    /// Delay before the first restart attempt.
+    pub base_delay: Duration,
+    /// Ceiling on the exponential delay.
+    pub max_delay: Duration,
+}
+
+impl Default for RestartPolicy {
+    fn default() -> Self {
+        RestartPolicy {
+            max_restarts: 3,
+            base_delay: Duration::from_millis(250),
+            max_delay: Duration::from_secs(10),
+        }
+    }
+}
+
+impl RestartPolicy {
+    /// Backoff before restart attempt `prior_restarts` (0-based), before
+    /// jitter: `min(base · 2^k, max)`.
+    pub fn delay_for(&self, prior_restarts: u32) -> Duration {
+        let factor = 1u32.checked_shl(prior_restarts.min(31)).unwrap_or(u32::MAX);
+        self.base_delay
+            .checked_mul(factor)
+            .unwrap_or(self.max_delay)
+            .min(self.max_delay)
+    }
+}
+
+/// One child's final status, as returned by [`Supervisor::reap`]: the
+/// exit code travels with the slot index so a crash (e.g. a fault
+/// injection's status 17) is attributable after the run.
+#[derive(Debug)]
+pub struct ExitReport {
+    /// Spawn index (not necessarily the leader-assigned wid).
+    pub slot: usize,
+    pub status: ExitStatus,
+}
+
 struct Slot {
     child: Child,
     /// Set once the exit has been observed (by poll/kill/reap).
     exited: bool,
+    /// Extra argv this slot was originally spawned with.
+    extra: Vec<String>,
+    /// Replacement extra argv for restarts (lets tests drop a
+    /// fault-injection flag like `--exit-after` so the replacement does
+    /// not immediately re-crash). `None` = reuse `extra`.
+    restart_extra: Option<Vec<String>>,
+    /// Restart attempts consumed so far.
+    restarts: u32,
+    /// When the next restart attempt is due (`None` = none scheduled).
+    next_attempt: Option<Instant>,
 }
 
 /// Owns the worker child processes for one training run.
 pub struct Supervisor {
+    program: PathBuf,
+    leader: String,
     children: Vec<Slot>,
+    /// Armed restart policy; `None` (the default) = one-shot children,
+    /// exactly the pre-restart behaviour.
+    policy: Option<RestartPolicy>,
+    /// Every nonzero exit observed, as `(slot, exit code)` — kept across
+    /// restarts, so the history survives even when a slot's current
+    /// child later exits cleanly.
+    failures: Vec<(usize, Option<i32>)>,
+    /// Deterministic jitter source for restart delays.
+    rng: Rng,
 }
 
 impl Supervisor {
@@ -65,25 +140,55 @@ impl Supervisor {
         leader: &str,
         extra: impl Fn(usize) -> Vec<String>,
     ) -> Result<Supervisor> {
+        Self::spawn_inner(worker_program()?, n, leader, extra)
+    }
+
+    fn spawn_inner(
+        program: PathBuf,
+        n: usize,
+        leader: &str,
+        extra: impl Fn(usize) -> Vec<String>,
+    ) -> Result<Supervisor> {
         ensure!(n > 0, "supervisor needs at least one worker to spawn");
-        let program = worker_program()?;
         let mut children = Vec::with_capacity(n);
         for i in 0..n {
-            let child = Command::new(&program)
-                .arg("worker")
-                .arg("--leader")
-                .arg(leader)
-                .args(extra(i))
-                .stdin(Stdio::null())
-                .stdout(Stdio::null())
-                // stderr is inherited: worker panics/errors stay visible.
-                .spawn()
-                .with_context(|| {
-                    format!("spawning worker {i} from {}", program.display())
-                })?;
-            children.push(Slot { child, exited: false });
+            let argv = extra(i);
+            let child = spawn_child(&program, leader, &argv)
+                .with_context(|| format!("spawning worker {i} from {}", program.display()))?;
+            children.push(Slot {
+                child,
+                exited: false,
+                extra: argv,
+                restart_extra: None,
+                restarts: 0,
+                next_attempt: None,
+            });
         }
-        Ok(Supervisor { children })
+        Ok(Supervisor {
+            program,
+            leader: leader.to_string(),
+            children,
+            policy: None,
+            failures: Vec::new(),
+            rng: Rng::seed(0x5EED_0F_5EED),
+        })
+    }
+
+    /// Arm restart-with-backoff for children that exit nonzero. Without
+    /// a policy the supervisor is one-shot: a crashed child stays down.
+    pub fn set_restart_policy(&mut self, policy: RestartPolicy) {
+        self.policy = Some(policy);
+    }
+
+    /// Override the extra argv used when restarting slot `i` (e.g. drop
+    /// a `--exit-after` fault flag so the replacement runs clean).
+    pub fn set_restart_argv(&mut self, i: usize, extra: Vec<String>) -> Result<()> {
+        let slot = self
+            .children
+            .get_mut(i)
+            .with_context(|| format!("no child {i} to set restart argv for"))?;
+        slot.restart_extra = Some(extra);
+        Ok(())
     }
 
     pub fn len(&self) -> usize {
@@ -94,20 +199,97 @@ impl Supervisor {
         self.children.is_empty()
     }
 
+    /// Every nonzero child exit observed so far, as `(slot, exit code)`
+    /// (`None` = killed by signal). History — not reset by restarts.
+    pub fn nonzero_exits(&self) -> &[(usize, Option<i32>)] {
+        &self.failures
+    }
+
     /// Spawn indexes of children newly observed to have exited since the
-    /// last poll (crashed or finished).
+    /// last poll (crashed or finished). Nonzero exits are recorded in
+    /// [`Supervisor::nonzero_exits`] and — when a [`RestartPolicy`] is
+    /// armed — schedule a backed-off restart attempt (executed by
+    /// [`Supervisor::tick`]).
     pub fn poll_exits(&mut self) -> Result<Vec<usize>> {
         let mut out = Vec::new();
-        for (i, slot) in self.children.iter_mut().enumerate() {
-            if slot.exited {
+        for i in 0..self.children.len() {
+            if self.children[i].exited {
                 continue;
             }
-            if slot.child.try_wait()?.is_some() {
-                slot.exited = true;
-                out.push(i);
+            let Some(status) = self.children[i].child.try_wait()? else {
+                continue;
+            };
+            self.children[i].exited = true;
+            out.push(i);
+            if !status.success() {
+                self.failures.push((i, status.code()));
+                eprintln!(
+                    "[supervisor] worker slot {i} exited with {status}{}",
+                    if self.policy.is_some() { "" } else { " (no restart policy)" }
+                );
+                self.schedule_restart(i);
             }
         }
         Ok(out)
+    }
+
+    /// Schedule slot `i`'s next restart attempt under the armed policy
+    /// (no-op without one, or once the slot's attempts are exhausted).
+    fn schedule_restart(&mut self, i: usize) {
+        let Some(policy) = self.policy else { return };
+        let slot = &mut self.children[i];
+        if slot.restarts >= policy.max_restarts {
+            eprintln!(
+                "[supervisor] worker slot {i}: giving up after {} restart attempts",
+                slot.restarts
+            );
+            return;
+        }
+        let base = policy.delay_for(slot.restarts);
+        let jitter = base.mul_f64(0.25 * self.rng.next_f64());
+        slot.restarts += 1;
+        slot.next_attempt = Some(Instant::now() + base + jitter);
+    }
+
+    /// Drive the restart machinery one step: observe exits, then respawn
+    /// every slot whose backoff delay has elapsed. Call this from the
+    /// round loop (it is cheap — one `try_wait` per child). Returns how
+    /// many children were respawned. A failed respawn consumes the
+    /// attempt and schedules the next one rather than erroring: one bad
+    /// exec must not kill an otherwise healthy run.
+    pub fn tick(&mut self) -> Result<usize> {
+        self.poll_exits()?;
+        let mut respawned = 0usize;
+        for i in 0..self.children.len() {
+            let due = self.children[i]
+                .next_attempt
+                .is_some_and(|t| Instant::now() >= t);
+            if !due {
+                continue;
+            }
+            self.children[i].next_attempt = None;
+            let argv = self.children[i]
+                .restart_extra
+                .clone()
+                .unwrap_or_else(|| self.children[i].extra.clone());
+            match spawn_child(&self.program, &self.leader, &argv) {
+                Ok(child) => {
+                    let slot = &mut self.children[i];
+                    slot.child = child;
+                    slot.exited = false;
+                    eprintln!(
+                        "[supervisor] restarted worker slot {i} (attempt {})",
+                        slot.restarts
+                    );
+                    respawned += 1;
+                }
+                Err(e) => {
+                    eprintln!("[supervisor] restart of worker slot {i} failed: {e:#}");
+                    self.schedule_restart(i);
+                }
+            }
+        }
+        Ok(respawned)
     }
 
     /// Children not yet observed to have exited.
@@ -116,12 +298,15 @@ impl Supervisor {
         Ok(self.children.iter().filter(|s| !s.exited).count())
     }
 
-    /// Kill child `i` (fault injection, or aborting a hung worker).
+    /// Kill child `i` (fault injection, or aborting a hung worker). A
+    /// deliberate kill is not a crash: no restart is scheduled, and any
+    /// pending restart attempt for the slot is cancelled.
     pub fn kill(&mut self, i: usize) -> Result<()> {
         let slot = self
             .children
             .get_mut(i)
             .with_context(|| format!("no child {i} to kill"))?;
+        slot.next_attempt = None;
         if !slot.exited {
             slot.child.kill().ok(); // already-dead is fine
             slot.child.wait()?;
@@ -132,10 +317,16 @@ impl Supervisor {
 
     /// Wait up to `grace` for every child to exit on its own (they do,
     /// once the leader broadcasts SHUTDOWN), then kill and wait the
-    /// stragglers. Returns how many exited with a non-zero status (a
-    /// crashed-then-restarted-as-straggler worker is *expected* to be
-    /// non-zero; the caller decides whether that matters).
-    pub fn reap(&mut self, grace: Duration) -> Result<usize> {
+    /// stragglers. Restarts are disarmed first — end of run means no
+    /// more respawns. Returns one [`ExitReport`] per slot with the final
+    /// child's exit status, so callers can see exactly which workers
+    /// crashed and with what code (a fault-injected worker's status 17,
+    /// say) rather than a bare count.
+    pub fn reap(&mut self, grace: Duration) -> Result<Vec<ExitReport>> {
+        self.policy = None;
+        for slot in self.children.iter_mut() {
+            slot.next_attempt = None;
+        }
         let deadline = Instant::now() + grace;
         loop {
             self.poll_exits()?;
@@ -144,8 +335,8 @@ impl Supervisor {
             }
             std::thread::sleep(Duration::from_millis(20));
         }
-        let mut nonzero = 0usize;
-        for slot in self.children.iter_mut() {
+        let mut out = Vec::with_capacity(self.children.len());
+        for (i, slot) in self.children.iter_mut().enumerate() {
             if !slot.exited {
                 slot.child.kill().ok();
             }
@@ -153,12 +344,23 @@ impl Supervisor {
             // recorded status without blocking.
             let status = slot.child.wait()?;
             slot.exited = true;
-            if !status.success() {
-                nonzero += 1;
-            }
+            out.push(ExitReport { slot: i, status });
         }
-        Ok(nonzero)
+        Ok(out)
     }
+}
+
+/// Spawn one worker child: `<program> worker --leader <leader> <extra>`.
+fn spawn_child(program: &Path, leader: &str, extra: &[String]) -> Result<Child> {
+    Ok(Command::new(program)
+        .arg("worker")
+        .arg("--leader")
+        .arg(leader)
+        .args(extra)
+        .stdin(Stdio::null())
+        .stdout(Stdio::null())
+        // stderr is inherited: worker panics/errors stay visible.
+        .spawn()?)
 }
 
 impl Drop for Supervisor {
@@ -193,8 +395,87 @@ mod tests {
         let mut sup = Supervisor::spawn(2, "127.0.0.1:1").unwrap();
         assert_eq!(sup.len(), 2);
         sup.kill(0).unwrap();
-        let nonzero = sup.reap(Duration::from_secs(10)).unwrap();
-        assert!(nonzero <= 2);
+        let reports = sup.reap(Duration::from_secs(10)).unwrap();
+        assert_eq!(reports.len(), 2);
+        assert!(reports.iter().filter(|r| !r.status.success()).count() <= 2);
         assert_eq!(sup.alive().unwrap(), 0);
+    }
+
+    #[test]
+    fn backoff_delays_double_and_cap() {
+        let p = RestartPolicy {
+            max_restarts: 10,
+            base_delay: Duration::from_millis(100),
+            max_delay: Duration::from_secs(1),
+        };
+        assert_eq!(p.delay_for(0), Duration::from_millis(100));
+        assert_eq!(p.delay_for(1), Duration::from_millis(200));
+        assert_eq!(p.delay_for(2), Duration::from_millis(400));
+        // Capped at max_delay from attempt 4 on (1.6s → 1s)...
+        assert_eq!(p.delay_for(4), Duration::from_secs(1));
+        // ...including where 2^k itself would overflow.
+        assert_eq!(p.delay_for(40), Duration::from_secs(1));
+    }
+
+    #[test]
+    fn crashed_child_is_restarted_up_to_the_attempt_cap() {
+        // /bin/false ignores the worker argv and exits 1 immediately —
+        // a deterministic crash loop. With max_restarts = 2 the slot is
+        // respawned exactly twice and then given up on.
+        let mut sup = Supervisor::spawn_inner(
+            PathBuf::from("/bin/false"),
+            1,
+            "127.0.0.1:1",
+            |_| Vec::new(),
+        )
+        .unwrap();
+        sup.set_restart_policy(RestartPolicy {
+            max_restarts: 2,
+            base_delay: Duration::from_millis(1),
+            max_delay: Duration::from_millis(5),
+        });
+        let deadline = Instant::now() + Duration::from_secs(20);
+        let mut respawned = 0usize;
+        while Instant::now() < deadline {
+            respawned += sup.tick().unwrap();
+            if respawned >= 2 && sup.alive().unwrap() == 0 {
+                // Both restart attempts burned and the last child exited:
+                // make sure no further attempt is ever scheduled.
+                assert_eq!(sup.tick().unwrap(), 0);
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(respawned, 2, "expected exactly max_restarts respawns");
+        // Original + 2 restarts, every exit nonzero with code 1.
+        assert_eq!(sup.nonzero_exits().len(), 3);
+        assert!(sup.nonzero_exits().iter().all(|&(slot, code)| {
+            slot == 0 && code == Some(1)
+        }));
+        let reports = sup.reap(Duration::from_secs(5)).unwrap();
+        assert_eq!(reports.len(), 1);
+        assert_eq!(reports[0].status.code(), Some(1));
+    }
+
+    #[test]
+    fn clean_exit_is_not_restarted() {
+        // /bin/true exits 0: a clean departure (post-SHUTDOWN behaviour)
+        // must never trigger the restart path.
+        let mut sup = Supervisor::spawn_inner(
+            PathBuf::from("/bin/true"),
+            1,
+            "127.0.0.1:1",
+            |_| Vec::new(),
+        )
+        .unwrap();
+        sup.set_restart_policy(RestartPolicy::default());
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while sup.alive().unwrap() > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(sup.tick().unwrap(), 0);
+        assert!(sup.nonzero_exits().is_empty());
+        let reports = sup.reap(Duration::from_secs(5)).unwrap();
+        assert!(reports[0].status.success());
     }
 }

@@ -44,7 +44,7 @@ use super::comm::CommLedger;
 use super::metrics::{RoundMetric, RunResult};
 use super::net::{assign_streams, TcpLeader};
 use super::runtime::ClusterRuntime;
-use super::supervisor::Supervisor;
+use super::supervisor::{RestartPolicy, Supervisor};
 use super::transport::{Transport, TransportSpec};
 
 pub struct Trainer {
@@ -141,7 +141,11 @@ impl Trainer {
                 let leader = TcpLeader::bind(port)?;
                 let addr = leader.local_addr()?;
                 let sup = if cfg.spawn_workers {
-                    Some(Supervisor::spawn(cfg.workers, &addr.to_string())?)
+                    let mut sup = Supervisor::spawn(cfg.workers, &addr.to_string())?;
+                    // Spawned children are supervised: a crashed worker
+                    // is restarted with backoff and rejoins its wid.
+                    sup.set_restart_policy(RestartPolicy::default());
+                    Some(sup)
                 } else {
                     eprintln!(
                         "waiting for {} worker(s): comp-ams worker --leader {addr}",
@@ -150,8 +154,12 @@ impl Trainer {
                     None
                 };
                 let streams = leader.accept_hellos(cfg.workers)?;
-                let tcp =
+                let mut tcp =
                     assign_streams(&streams, cfg, ckpt.map(|c| c.workers.as_slice()), false)?;
+                // Keep the listen socket: a replacement worker (restarted
+                // by the supervisor, or launched by hand) can HELLO back
+                // into a dead wid mid-run.
+                tcp.adopt_listener(leader)?;
                 (Box::new(tcp), sup)
             }
             in_proc => {
@@ -189,7 +197,10 @@ impl Trainer {
                 (in_proc.build(pool)?, None)
             }
         };
-        let runtime = ClusterRuntime::new(transport, cfg.quorum, cfg.max_staleness)?;
+        let mut runtime = ClusterRuntime::new(transport, cfg.quorum, cfg.max_staleness)?;
+        // Size the per-worker EF accumulator so a worker death charges
+        // the lost residual to the ledger.
+        runtime.set_ef_state_bits(spec.ef_state_bits(theta.len()));
         let algo_name = server.name();
         Ok(Trainer {
             cfg: cfg.clone(),
@@ -256,7 +267,8 @@ impl Trainer {
                 .import_state(&ck.server)
                 .context("restoring the server optimizer state")?;
         }
-        let runtime = ClusterRuntime::new(transport, cfg.quorum, cfg.max_staleness)?;
+        let mut runtime = ClusterRuntime::new(transport, cfg.quorum, cfg.max_staleness)?;
+        runtime.set_ef_state_bits(spec.ef_state_bits(theta.len()));
         let algo_name = server.name();
         Ok(Trainer {
             cfg: cfg.clone(),
@@ -283,6 +295,13 @@ impl Trainer {
     pub fn step(&mut self, round: u64) -> Result<f32> {
         let sw = Stopwatch::start();
         let lr = self.cfg.schedule.lr_at(self.cfg.lr, round);
+
+        // Supervised children first: a crashed worker whose backoff has
+        // elapsed is respawned here, and its HELLO is picked up by the
+        // runtime's rejoin probe at dispatch.
+        if let Some(sup) = self.supervisor.as_mut() {
+            sup.tick()?;
+        }
 
         // The runtime runs the whole round state machine: downlink
         // dispatch, quorum collection, staleness classification, and the
@@ -406,12 +425,18 @@ impl Trainer {
         self.runtime.drain_in_flight(&mut self.ledger)?;
         self.runtime.shutdown()?;
         if let Some(sup) = self.supervisor.as_mut() {
-            let nonzero = sup.reap(Duration::from_secs(10))?;
+            let reports = sup.reap(Duration::from_secs(10))?;
+            let nonzero: Vec<String> = reports
+                .iter()
+                .filter(|r| !r.status.success())
+                .map(|r| format!("slot {} {}", r.slot, r.status))
+                .collect();
             let dead = self.runtime.dead_workers();
-            if nonzero > dead.len() {
+            if nonzero.len() > dead.len() {
                 eprintln!(
-                    "warning: {nonzero} worker process(es) exited non-zero \
+                    "warning: worker process(es) exited non-zero [{}] \
                      ({} accounted as dead mid-run)",
+                    nonzero.join(", "),
                     dead.len()
                 );
             }
@@ -457,6 +482,9 @@ impl Trainer {
             stale_uplinks: self.ledger.stale_uplinks,
             dropped_uplinks: self.ledger.dropped_uplinks,
             framing_bits: self.ledger.framing_bits,
+            rejoins: self.ledger.rejoins,
+            ef_resets: self.ledger.ef_resets,
+            ef_residual_lost_bits: self.ledger.ef_residual_lost_bits,
             uplink_bits_by_worker: self.ledger.uplink_bits_by_worker.clone(),
             uplink_bits_by_shard: self.ledger.uplink_bits_by_shard.clone(),
             server_ms_by_shard,

@@ -184,6 +184,18 @@ pub trait Transport {
     fn detach(&mut self, _want_state: bool) -> Result<Vec<Option<Vec<u8>>>> {
         bail!("transport does not support detach")
     }
+
+    /// Re-admit workers whose connection died: accept any late HELLOs
+    /// pending on the transport's listen socket and re-ASSIGN each onto a
+    /// dead worker id, fresh-state (a rejoiner's error-feedback
+    /// accumulator died with the old process; the runtime accounts that
+    /// loss — see [`CommLedger::ef_residual_lost_bits`]
+    /// (super::comm::CommLedger)). Returns the revived worker ids.
+    /// Never blocks: with no pending connection it returns immediately.
+    /// In-process workers cannot die, so the default revives nothing.
+    fn try_rejoin(&mut self) -> Result<Vec<usize>> {
+        Ok(Vec::new())
+    }
 }
 
 /// In-process transport: messages move as Rust values over the pool's

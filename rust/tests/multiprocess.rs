@@ -7,7 +7,12 @@
 //!    identical** in loss and θ trajectories to `InProc`, across all six
 //!    protocol strings;
 //! 2. killing one worker mid-run under `--quorum K < n` keeps the loss
-//!    descending, with the dead worker accounted in `dropped_uplinks`.
+//!    descending, with the dead worker accounted in `dropped_uplinks`;
+//! 3. a killed worker **rejoins**: whether relaunched by the
+//!    supervisor's restart-backoff policy or launched externally by
+//!    hand, the replacement HELLOs back into the dead wid, the quorum
+//!    target recovers, and the lost error-feedback accumulator is
+//!    zeroed and accounted (`ef_resets` / `ef_residual_lost_bits`).
 //!
 //! The spawned program is the real `comp-ams` launcher: integration
 //! tests run inside the test harness binary, so the supervisor is
@@ -19,7 +24,7 @@ use std::time::Duration;
 use comp_ams::algo::AlgoSpec;
 use comp_ams::config::TrainConfig;
 use comp_ams::coordinator::runtime::ClusterRuntime;
-use comp_ams::coordinator::supervisor::{Supervisor, WORKER_BIN_ENV};
+use comp_ams::coordinator::supervisor::{RestartPolicy, Supervisor, WORKER_BIN_ENV};
 use comp_ams::coordinator::trainer::Trainer;
 use comp_ams::coordinator::{CommLedger, TcpLeader};
 
@@ -144,9 +149,179 @@ fn killed_worker_becomes_permanent_straggler_under_partial_quorum() {
 
     // Reap: the injected crash exits non-zero, everyone else exits zero
     // on SHUTDOWN; nobody is left running.
-    let nonzero = sup.reap(Duration::from_secs(10)).unwrap();
+    let reports = sup.reap(Duration::from_secs(10)).unwrap();
+    let nonzero = reports.iter().filter(|r| !r.status.success()).count();
     assert_eq!(nonzero, 1, "exactly the fault-injected worker exits non-zero");
     assert_eq!(sup.alive().unwrap(), 0);
+}
+
+#[test]
+fn killed_worker_rejoins_after_supervised_restart() {
+    use_real_worker_bin();
+    let mut cfg = quad_cfg("comp-ams-topk:0.05");
+    cfg.workers = 4;
+    cfg.quorum = 3;
+    cfg.max_staleness = 2;
+    cfg.rounds = 60;
+    cfg.lr = 0.05;
+    cfg.transport = "tcp".into();
+
+    // Worker 0 crashes on the round-5 downlink (exit 17, owing an
+    // uplink). The armed restart policy relaunches its slot — with the
+    // fault injection stripped via `set_restart_argv`, so the
+    // replacement does not crash all over again — and the fresh daemon
+    // HELLOs back into wid 0 through the leader's retained listener.
+    let leader = TcpLeader::bind(0).unwrap();
+    let addr = leader.local_addr().unwrap().to_string();
+    let mut sup = Supervisor::spawn_with(cfg.workers, &addr, |i| {
+        if i == 0 {
+            vec!["--exit-after".into(), "5".into()]
+        } else {
+            Vec::new()
+        }
+    })
+    .unwrap();
+    sup.set_restart_policy(RestartPolicy {
+        max_restarts: 3,
+        base_delay: Duration::from_millis(50),
+        max_delay: Duration::from_secs(1),
+    });
+    sup.set_restart_argv(0, Vec::new()).unwrap();
+
+    let tcp = leader.accept_workers(&cfg).unwrap();
+    let mut rt = ClusterRuntime::new(Box::new(tcp), cfg.quorum, cfg.max_staleness).unwrap();
+    let spec = AlgoSpec::parse(&cfg.algo).unwrap();
+    rt.set_ef_state_bits(spec.ef_state_bits(256));
+    let (_, mut server) = spec.build(256, cfg.workers, cfg.rounds);
+    let mut theta = vec![0.0f32; 256];
+    let mut ledger = CommLedger::new();
+
+    let mut losses = Vec::new();
+    let mut seen_dead = false;
+    let mut dropped_after_rejoin = None;
+    for r in 0..cfg.rounds {
+        sup.tick().unwrap();
+        let out = rt
+            .run_round(&mut theta, server.as_mut(), r, cfg.lr, &mut ledger)
+            .unwrap_or_else(|e| panic!("round {r}: {e:#}"));
+        losses.push(out.train_loss);
+        if !rt.dead_workers().is_empty() {
+            seen_dead = true;
+            // Rounds are sub-millisecond; give the backoff timer and the
+            // replacement's HELLO a moment to land before re-dispatching.
+            std::thread::sleep(Duration::from_millis(25));
+        } else if seen_dead && dropped_after_rejoin.is_none() {
+            dropped_after_rejoin = Some(ledger.dropped_uplinks);
+        }
+    }
+    rt.drain_in_flight(&mut ledger).unwrap();
+    rt.shutdown().unwrap();
+
+    // The fleet healed: the crash was observed, the replacement was
+    // admitted back into wid 0, and the quorum target recovered.
+    assert!(seen_dead, "the fault injection never fired");
+    assert_eq!(rt.dead_workers(), Vec::<usize>::new(), "worker 0 never rejoined");
+    assert!(ledger.rejoins >= 1, "rejoin not recorded in the ledger");
+    // The dead incarnation's EF accumulator is gone: zeroed and
+    // accounted exactly once (32 bits x 256 dims), not silently hidden.
+    assert_eq!(ledger.ef_resets, 1);
+    assert_eq!(ledger.ef_residual_lost_bits, spec.ef_state_bits(256));
+    // The owed uplink was dropped at death, and after the rejoin the
+    // drop counter stops growing — dead-worker decay is over.
+    let after = dropped_after_rejoin.expect("no post-rejoin round observed");
+    assert!(after >= 1, "dead worker's owed uplink must be dropped");
+    assert_eq!(
+        ledger.dropped_uplinks, after,
+        "dropped_uplinks kept growing after the rejoin"
+    );
+    let first = losses[0];
+    let last = losses[losses.len() - 10..].iter().sum::<f32>() / 10.0;
+    assert!(last < first - 0.3, "no descent across the crash: {first:.3} -> {last:.3}");
+
+    // The supervisor saw exactly the injected status-17 crash; the
+    // replacement (and everyone else) exits zero on SHUTDOWN.
+    assert_eq!(sup.nonzero_exits(), &[(0, Some(17))]);
+    let reports = sup.reap(Duration::from_secs(10)).unwrap();
+    assert!(
+        reports.iter().all(|r| r.status.success()),
+        "a final fleet member exited non-zero: {reports:?}"
+    );
+    assert_eq!(sup.alive().unwrap(), 0);
+}
+
+#[test]
+fn externally_launched_replacement_rejoins_mid_run() {
+    // The two-terminal workflow under failure: no supervisor at all —
+    // when the fault-injected daemon dies, "the operator" launches a
+    // fresh `comp-ams worker` by hand and it rejoins the dead wid.
+    use_real_worker_bin();
+    let mut cfg = quad_cfg("comp-ams-topk:0.05");
+    cfg.workers = 3;
+    cfg.quorum = 2;
+    cfg.max_staleness = 2;
+    cfg.rounds = 50;
+    cfg.lr = 0.05;
+    cfg.transport = "tcp".into();
+
+    let leader = TcpLeader::bind(0).unwrap();
+    let addr = leader.local_addr().unwrap().to_string();
+    let spawn_worker = |extra: &[&str]| {
+        let mut args = vec!["worker", "--leader", addr.as_str()];
+        args.extend_from_slice(extra);
+        std::process::Command::new(env!("CARGO_BIN_EXE_comp-ams"))
+            .args(&args)
+            .stdin(std::process::Stdio::null())
+            .stdout(std::process::Stdio::null())
+            .spawn()
+            .unwrap()
+    };
+    let mut children = vec![spawn_worker(&["--exit-after", "4"])];
+    for _ in 1..cfg.workers {
+        children.push(spawn_worker(&[]));
+    }
+
+    let tcp = leader.accept_workers(&cfg).unwrap();
+    let mut rt = ClusterRuntime::new(Box::new(tcp), cfg.quorum, cfg.max_staleness).unwrap();
+    let spec = AlgoSpec::parse(&cfg.algo).unwrap();
+    rt.set_ef_state_bits(spec.ef_state_bits(256));
+    let (_, mut server) = spec.build(256, cfg.workers, cfg.rounds);
+    let mut theta = vec![0.0f32; 256];
+    let mut ledger = CommLedger::new();
+
+    let mut losses = Vec::new();
+    let mut replacement: Option<std::process::Child> = None;
+    for r in 0..cfg.rounds {
+        let out = rt
+            .run_round(&mut theta, server.as_mut(), r, cfg.lr, &mut ledger)
+            .unwrap_or_else(|e| panic!("round {r}: {e:#}"));
+        losses.push(out.train_loss);
+        if !rt.dead_workers().is_empty() {
+            if replacement.is_none() {
+                replacement = Some(spawn_worker(&[]));
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+    }
+    rt.drain_in_flight(&mut ledger).unwrap();
+    rt.shutdown().unwrap();
+
+    let mut replacement = replacement.expect("the fault injection never fired");
+    assert_eq!(rt.dead_workers(), Vec::<usize>::new(), "replacement never rejoined");
+    assert!(ledger.rejoins >= 1);
+    assert_eq!(ledger.ef_resets, 1);
+    let first = losses[0];
+    let last = losses[losses.len() - 10..].iter().sum::<f32>() / 10.0;
+    assert!(last < first - 0.3, "no descent across the crash: {first:.3} -> {last:.3}");
+
+    // Exit statuses: the injected crash is 17; the survivors and the
+    // replacement exit zero on SHUTDOWN.
+    let mut statuses = Vec::new();
+    for c in children.iter_mut() {
+        statuses.push(c.wait().unwrap());
+    }
+    assert_eq!(statuses[0].code(), Some(17), "fault-injected daemon status");
+    assert!(statuses[1..].iter().all(|s| s.success()));
+    assert!(replacement.wait().unwrap().success(), "replacement should exit 0");
 }
 
 #[test]

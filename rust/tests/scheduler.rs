@@ -13,7 +13,11 @@
 //!    identical to an uninterrupted run;
 //! 3. `cancel` stops a running job at a round boundary; `drain` lets the
 //!    daemon finish queued work and exit 0; SIGINT checkpoints the
-//!    active job and also exits 0 (fleet released, children reaped).
+//!    active job and also exits 0 (fleet released, children reaped);
+//! 4. the fleet **heals**: a worker daemon that dies is probed out and
+//!    evicted at the next assign, a job that no longer fits fails fast
+//!    with an error naming the evicted slot, and an externally launched
+//!    replacement is re-admitted so later jobs run (bitwise clean).
 //!
 //! The daemon's ephemeral fleet/control ports are discovered from its
 //! `fleet-addr` / `control-addr` stdout announcements — the same
@@ -29,16 +33,18 @@ use comp_ams::coordinator::scheduler::{request, theta_to_hex};
 use comp_ams::coordinator::trainer::Trainer;
 use comp_ams::util::json::Json;
 
-/// Launch `comp-ams serve` with an ephemeral control port and a spawned
-/// fleet; returns the child and its announced control address.
-fn start_daemon(workers: usize) -> (Child, String) {
+/// Launch `comp-ams serve` with an ephemeral control port; returns the
+/// child and its announced (fleet, control) addresses. With
+/// `spawn_workers` false the caller must launch the worker daemons
+/// itself against the returned fleet address.
+fn start_daemon_with(workers: usize, spawn_workers: bool) -> (Child, String, String) {
     let mut child = Command::new(env!("CARGO_BIN_EXE_comp-ams"))
         .args([
             "serve",
             "--workers",
             &workers.to_string(),
             "--spawn-workers",
-            "true",
+            if spawn_workers { "true" } else { "false" },
             "--transport",
             "tcp",
             "--control",
@@ -63,7 +69,14 @@ fn start_daemon(workers: usize) -> (Child, String) {
             control = Some(rest.to_string());
         }
     }
-    (child, control.unwrap())
+    (child, fleet.unwrap(), control.unwrap())
+}
+
+/// Launch `comp-ams serve` with a spawned fleet; returns the child and
+/// its announced control address.
+fn start_daemon(workers: usize) -> (Child, String) {
+    let (child, _fleet, control) = start_daemon_with(workers, true);
+    (child, control)
 }
 
 fn submit(addr: &str, name: &str, priority: i64, cfg: &TrainConfig) -> u64 {
@@ -279,6 +292,83 @@ fn preempted_job_resumes_bitwise_identical_to_uninterrupted() {
 
     request(&addr, &Json::obj(vec![("cmd", Json::str("drain"))])).unwrap();
     assert!(child.wait().unwrap().success());
+}
+
+#[test]
+fn fleet_heals_after_a_worker_death_and_names_the_dead_slot_meanwhile() {
+    // External fleet so the worker argv is ours: worker 0 carries the
+    // `--exit-after` fault injection and dies during job A.
+    let (mut child, fleet_addr, addr) = start_daemon_with(2, false);
+    let spawn_worker = |extra: &[&str]| {
+        let mut args = vec!["worker", "--leader", fleet_addr.as_str()];
+        args.extend_from_slice(extra);
+        Command::new(env!("CARGO_BIN_EXE_comp-ams"))
+            .args(&args)
+            .stdin(Stdio::null())
+            .stdout(Stdio::null())
+            .stderr(Stdio::null())
+            .spawn()
+            .unwrap()
+    };
+    let mut doomed = spawn_worker(&["--exit-after", "5"]);
+    let mut survivor = spawn_worker(&[]);
+
+    // Job A absorbs the mid-job crash: the per-job runtime marks the
+    // wid dead, keeps stepping on the survivor, and bills the decay —
+    // dropped uplinks plus the EF accumulator that died with the
+    // process. No mid-job rejoin on a pooled transport (the daemon
+    // heals at job boundaries), so rejoins stays 0 here.
+    let cfg_a = quad_cfg("comp-ams-topk:0.1", 2, 20, 42);
+    let id_a = submit(&addr, "job-a", 0, &cfg_a);
+    let job_a = wait_for_state(&addr, id_a, "done");
+    let result = job_a.req("result").unwrap();
+    assert!(result.req("dropped_uplinks").unwrap().as_f64().unwrap() >= 1.0);
+    assert_eq!(result.req("ef_resets").unwrap().as_f64().unwrap(), 1.0);
+    assert_eq!(
+        result.req("ef_residual_lost_bits").unwrap().as_f64().unwrap(),
+        f64::from(32u32 * 256),
+        "one EF reset = 32 bits x 256 dims"
+    );
+    assert_eq!(result.req("rejoins").unwrap().as_f64().unwrap(), 0.0);
+    assert_eq!(doomed.wait().unwrap().code(), Some(17), "fault injection status");
+
+    // Job B wants the full fleet while it is short one worker: the
+    // assign-time liveness probe evicts the dead socket and the job
+    // fails fast, naming the evicted slot — it is never silently
+    // assigned onto a dead socket.
+    let id_b = submit(&addr, "job-b", 0, &quad_cfg("dist-sgd", 2, 10, 7));
+    let start = Instant::now();
+    let job_b = loop {
+        let job = job_row(&addr, id_b);
+        if job.req("state").unwrap().as_str().unwrap() == "failed" {
+            break job;
+        }
+        assert!(start.elapsed() < Duration::from_secs(120), "job B never failed");
+        std::thread::sleep(Duration::from_millis(5));
+    };
+    let err = job_b.req("error").unwrap().as_str().unwrap().to_string();
+    assert!(
+        err.contains("wants 2 workers but the fleet has 1 live"),
+        "fail-fast error should count the live fleet: {err}"
+    );
+    assert!(err.contains("slot "), "fail-fast error should name the dead slot: {err}");
+
+    // Heal: launch a replacement by hand; the daemon re-admits its
+    // HELLO (idle tick or next assign) and job C runs on the restored
+    // fleet — bitwise identical to solo, nothing dropped.
+    let mut replacement = spawn_worker(&[]);
+    std::thread::sleep(Duration::from_millis(500));
+    let cfg_c = quad_cfg("comp-ams-topk:0.1", 2, 15, 9);
+    let (theta_c, run_c) = solo(&cfg_c);
+    let id_c = submit(&addr, "job-c", 0, &cfg_c);
+    let job_c = wait_for_state(&addr, id_c, "done");
+    assert_matches_solo(&job_c, &cfg_c, &theta_c, &run_c);
+
+    request(&addr, &Json::obj(vec![("cmd", Json::str("drain"))])).unwrap();
+    assert!(child.wait().unwrap().success());
+    // The survivors exit 0 on the fleet SHUTDOWN.
+    assert!(survivor.wait().unwrap().success());
+    assert!(replacement.wait().unwrap().success());
 }
 
 #[test]

@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Regenerate the committed bench snapshots (BENCH_wire.json /
+# BENCH_step.json, schema comp-ams-bench-v1) from a real run.
+#
+# Run on an otherwise-idle box from the repo root:
+#
+#   scripts/bench_snapshots.sh            # full iteration counts
+#   scripts/bench_snapshots.sh --fast     # CI-sized quick pass
+#
+# The bench harness overwrites each file in place, sets
+# `measured: true`, and fills `benches` with one row per bench
+# (name, iters, median_ns, mean_ns, p95_ns, per_sec). Commit the
+# refreshed files so the perf trajectory is visible across PRs.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+root=$(pwd)
+
+COMP_AMS_BENCH_JSON="$root/BENCH_wire.json" \
+    cargo bench --bench bench_wire -- "$@"
+COMP_AMS_BENCH_JSON="$root/BENCH_step.json" \
+    cargo bench --bench bench_step -- "$@"
+
+echo "wrote $root/BENCH_wire.json and $root/BENCH_step.json"
