@@ -169,6 +169,42 @@ fn main() {
         quorum_means[0] / quorum_means[2],
     ));
 
+    // Sim event-queue overhead: the seeded network simulator re-times
+    // every uplink through a barrier-collect queue on a virtual clock
+    // (no real sleeps), so the only cost is stamping + sorting the
+    // batch. Race the bare transport against the ideal wrapper (pure
+    // queue overhead) and the lossy-wan profile (adds the seeded delay
+    // draws and retransmit bookkeeping) on an otherwise identical round.
+    let mut sim_means = Vec::new();
+    for (transport, profile) in
+        [("inproc", "ideal"), ("sim:inproc", "ideal"), ("sim:inproc", "lossy-wan")]
+    {
+        let mut cfg = TrainConfig::preset("quadratic", "comp-ams-topk:0.01");
+        cfg.workers = 16;
+        cfg.rounds = 1_000_000;
+        cfg.eval_every = 0;
+        cfg.transport = transport.into();
+        cfg.sim_profile = profile.into();
+        cfg.sim_seed = 7;
+        let mut t = Trainer::new(&cfg).expect("trainer");
+        let mut round = 0u64;
+        let label = if transport == "inproc" {
+            "bare".to_string()
+        } else {
+            format!("sim:{profile}")
+        };
+        let r = b.bench(&format!("round quadratic n=16 comp-ams-topk:0.01 {label}"), || {
+            t.step(round).unwrap();
+            round += 1;
+        });
+        sim_means.push(r.mean.as_secs_f64());
+    }
+    b.note(&format!(
+        "  -> sim event-queue overhead vs bare inproc: ideal {:+.1}%, lossy-wan {:+.1}%",
+        (sim_means[1] / sim_means[0] - 1.0) * 100.0,
+        (sim_means[2] / sim_means[0] - 1.0) * 100.0,
+    ));
+
     // PJRT path (artifacts required): full grad + protocol round.
     if std::path::Path::new("artifacts/manifest.json").exists() {
         for algo in ["dist-ams", "comp-ams-topk:0.01"] {

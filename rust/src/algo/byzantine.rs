@@ -1,0 +1,232 @@
+//! Adversarial worker modes: deterministic byzantine fault injection at
+//! the [`WorkerAlgo`] boundary (`--byzantine wid:mode`).
+//!
+//! A byzantine worker runs the *same* gradient source and protocol half
+//! as an honest one — the attack is a pure function applied to the raw
+//! stochastic gradient just before `process()`, so compression, error
+//! feedback, and the wire accounting all see the corrupted gradient
+//! exactly as a real malicious node would present it:
+//!
+//! | mode           | uplink gradient                                    |
+//! |----------------|----------------------------------------------------|
+//! | `scale:<f>`    | `f · g` — amplified (or, with `f < 0`, an amplified sign-flip that can zero the batch mean) |
+//! | `signflip`     | `-g` — the classic sign-flipping attack            |
+//! | `stale`        | the *previous* round's honest gradient (round 0 passes through) — a replay adversary |
+//!
+//! Because the corruption is deterministic given the worker's seeded RNG
+//! stream, byzantine runs reproduce bit-for-bit — the point of the fault
+//! testbed. The robust server-side estimators ([`AggMode`](super::AggMode),
+//! `--robust-agg median|trimmed:<k>`) are the countermeasure the
+//! integration tests pit these attacks against.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::compress::Payload;
+use crate::util::bytes::{self, Cursor};
+
+use super::{RoundCtx, WorkerAlgo};
+
+/// The accepted `--byzantine` entry spellings (comma-separable),
+/// enumerated in every parse error.
+pub const BYZANTINE_CHOICES: &str = "<wid>:scale:<factor> | <wid>:signflip | <wid>:stale";
+
+/// One worker's corruption mode.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ByzMode {
+    /// Send `factor · g` (negative factors amplify-and-flip).
+    Scale(f32),
+    /// Send `-g`.
+    SignFlip,
+    /// Replay the previous round's honest gradient (pass-through on the
+    /// worker's first round).
+    StaleReplay,
+}
+
+/// A parsed `--byzantine` entry: which worker, corrupted how.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ByzSpec {
+    pub wid: usize,
+    pub mode: ByzMode,
+}
+
+/// Parse the `--byzantine` flag: comma-separated `wid:mode` entries
+/// (see [`BYZANTINE_CHOICES`]); the empty string means no adversaries.
+pub fn parse_byzantine(s: &str) -> Result<Vec<ByzSpec>> {
+    let mut out: Vec<ByzSpec> = Vec::new();
+    if s.trim().is_empty() {
+        return Ok(out);
+    }
+    for entry in s.split(',') {
+        let entry = entry.trim();
+        let (wid_str, mode_str) = entry.split_once(':').ok_or_else(|| {
+            anyhow!("bad byzantine entry '{entry}' (accepted forms: {BYZANTINE_CHOICES})")
+        })?;
+        let wid: usize = wid_str.parse().map_err(|_| {
+            anyhow!(
+                "bad worker id '{wid_str}' in byzantine entry '{entry}' \
+                 (accepted forms: {BYZANTINE_CHOICES})"
+            )
+        })?;
+        let mode = match mode_str {
+            "signflip" => ByzMode::SignFlip,
+            "stale" => ByzMode::StaleReplay,
+            other => match other.strip_prefix("scale:") {
+                Some(f_str) => ByzMode::Scale(f_str.parse().map_err(|_| {
+                    anyhow!(
+                        "bad scale factor '{f_str}' in byzantine entry '{entry}' \
+                         (accepted forms: {BYZANTINE_CHOICES})"
+                    )
+                })?),
+                None => bail!(
+                    "unknown byzantine mode '{other}' in entry '{entry}' \
+                     (accepted forms: {BYZANTINE_CHOICES})"
+                ),
+            },
+        };
+        if out.iter().any(|spec| spec.wid == wid) {
+            bail!("duplicate byzantine entry for worker {wid}");
+        }
+        out.push(ByzSpec { wid, mode });
+    }
+    Ok(out)
+}
+
+/// A [`WorkerAlgo`] decorator that corrupts the raw gradient before the
+/// wrapped protocol half sees it. Wraps any worker half of any protocol,
+/// so every attack composes with every compressor and EF setting.
+pub struct ByzantineWorker {
+    inner: Box<dyn WorkerAlgo>,
+    mode: ByzMode,
+    /// `StaleReplay` only: the previous round's honest gradient.
+    last: Vec<f32>,
+}
+
+impl ByzantineWorker {
+    pub fn wrap(inner: Box<dyn WorkerAlgo>, mode: ByzMode) -> Box<dyn WorkerAlgo> {
+        Box::new(ByzantineWorker { inner, mode, last: Vec::new() })
+    }
+}
+
+impl WorkerAlgo for ByzantineWorker {
+    fn process(&mut self, grad: &[f32], ctx: &RoundCtx) -> Result<Payload> {
+        let g: Vec<f32> = match self.mode {
+            ByzMode::Scale(f) => grad.iter().map(|x| f * x).collect(),
+            ByzMode::SignFlip => grad.iter().map(|x| -x).collect(),
+            ByzMode::StaleReplay => {
+                let replay = if self.last.is_empty() {
+                    grad.to_vec()
+                } else {
+                    std::mem::take(&mut self.last)
+                };
+                self.last = grad.to_vec();
+                replay
+            }
+        };
+        self.inner.process(&g, ctx)
+    }
+
+    fn state_bytes(&self) -> usize {
+        self.inner.state_bytes()
+    }
+
+    fn export_state(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        bytes::put_f32s(&mut out, &self.last);
+        bytes::put_bytes(&mut out, &self.inner.export_state());
+        out
+    }
+
+    fn import_state(&mut self, blob: &[u8]) -> Result<()> {
+        let mut c = Cursor::new(blob);
+        self.last = c.f32s()?;
+        let inner_blob = c.bytes()?.to_vec();
+        c.finish()?;
+        self.inner.import_state(&inner_blob)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Inner double that records the gradient it was handed and echoes it
+    /// back as a dense payload.
+    struct Echo {
+        seen: Vec<Vec<f32>>,
+    }
+
+    impl WorkerAlgo for Echo {
+        fn process(&mut self, grad: &[f32], _ctx: &RoundCtx) -> Result<Payload> {
+            self.seen.push(grad.to_vec());
+            Ok(Payload::Dense(grad.to_vec()))
+        }
+    }
+
+    fn wrapped(mode: ByzMode) -> Box<dyn WorkerAlgo> {
+        ByzantineWorker::wrap(Box::new(Echo { seen: Vec::new() }), mode)
+    }
+
+    #[test]
+    fn parse_all_forms_and_rejections() {
+        assert_eq!(parse_byzantine("").unwrap(), vec![]);
+        assert_eq!(parse_byzantine("  ").unwrap(), vec![]);
+        assert_eq!(
+            parse_byzantine("0:signflip").unwrap(),
+            vec![ByzSpec { wid: 0, mode: ByzMode::SignFlip }]
+        );
+        assert_eq!(
+            parse_byzantine("2:scale:-3, 1:stale").unwrap(),
+            vec![
+                ByzSpec { wid: 2, mode: ByzMode::Scale(-3.0) },
+                ByzSpec { wid: 1, mode: ByzMode::StaleReplay },
+            ]
+        );
+        for bad in ["nope", "0", "0:flip", "x:signflip", "0:scale:", "0:scale:x"] {
+            let err = parse_byzantine(bad).unwrap_err().to_string();
+            assert!(err.contains(BYZANTINE_CHOICES), "{bad}: {err}");
+        }
+        assert!(parse_byzantine("0:stale,0:signflip")
+            .unwrap_err()
+            .to_string()
+            .contains("duplicate"));
+    }
+
+    #[test]
+    fn scale_and_signflip_corrupt_pointwise() {
+        let ctx = RoundCtx::sync(0, 0.1);
+        let mut w = wrapped(ByzMode::Scale(-3.0));
+        let p = w.process(&[1.0, -2.0], &ctx).unwrap();
+        assert_eq!(p, Payload::Dense(vec![-3.0, 6.0]));
+        let mut w = wrapped(ByzMode::SignFlip);
+        let p = w.process(&[1.0, -2.0], &ctx).unwrap();
+        assert_eq!(p, Payload::Dense(vec![-1.0, 2.0]));
+    }
+
+    #[test]
+    fn stale_replay_lags_one_round_after_passthrough_start() {
+        let ctx = RoundCtx::sync(0, 0.1);
+        let mut w = wrapped(ByzMode::StaleReplay);
+        // Round 0: nothing buffered yet — the honest gradient goes out.
+        assert_eq!(w.process(&[1.0], &ctx).unwrap(), Payload::Dense(vec![1.0]));
+        // Round t > 0: always the previous round's gradient.
+        assert_eq!(w.process(&[2.0], &ctx).unwrap(), Payload::Dense(vec![1.0]));
+        assert_eq!(w.process(&[3.0], &ctx).unwrap(), Payload::Dense(vec![2.0]));
+    }
+
+    #[test]
+    fn state_roundtrip_preserves_replay_buffer() {
+        let ctx = RoundCtx::sync(0, 0.1);
+        let mut w = wrapped(ByzMode::StaleReplay);
+        w.process(&[1.0, 2.0], &ctx).unwrap();
+        w.process(&[5.0, 6.0], &ctx).unwrap();
+        let blob = w.export_state();
+        let mut resumed = wrapped(ByzMode::StaleReplay);
+        resumed.import_state(&blob).unwrap();
+        // Both continue by replaying [5, 6] next.
+        assert_eq!(
+            resumed.process(&[9.0, 9.0], &ctx).unwrap(),
+            w.process(&[9.0, 9.0], &ctx).unwrap()
+        );
+        assert!(w.import_state(&[1, 2, 3]).is_err());
+    }
+}

@@ -24,7 +24,9 @@ use crate::compress::{Compressor, CompressorSpec, ErrorFeedback, Payload};
 use crate::optim::{AmsGrad, ServerOpt};
 use crate::runtime::OptimizerExe;
 
-use super::{average_payloads, per_worker_spec, Protocol, RoundCtx, ServerAlgo, WorkerAlgo};
+use super::{
+    aggregate_payloads, per_worker_spec, AggMode, Protocol, RoundCtx, ServerAlgo, WorkerAlgo,
+};
 
 /// Worker half: compressor + error-feedback accumulator (no optimizer
 /// state — the paper's §3.2 memory argument vs. QAdam/1BitAdam).
@@ -79,20 +81,29 @@ pub struct CompAmsServer {
     comp_name: String,
     opt: AmsGrad,
     avg: Vec<f32>,
+    /// Batch estimator (`--robust-agg`): plain mean by default,
+    /// coordinate-wise median / trimmed mean for byzantine tolerance.
+    agg: AggMode,
 }
 
 impl CompAmsServer {
     pub fn new(dim: usize, comp_name: String, label: &'static str) -> Self {
-        CompAmsServer { label, comp_name, opt: AmsGrad::default_hp(dim), avg: Vec::new() }
+        CompAmsServer {
+            label,
+            comp_name,
+            opt: AmsGrad::default_hp(dim),
+            avg: Vec::new(),
+            agg: AggMode::Mean,
+        }
     }
 
-    /// Average the round's decoded payloads into the recycled `avg`
+    /// Aggregate the round's decoded payloads into the recycled `avg`
     /// buffer and hand it out; the caller returns it via `self.avg` when
     /// done. Shared by the pure-Rust and the fused-kernel step so the
     /// aggregation semantics cannot diverge between the two backends.
     fn averaged(&mut self, msgs: &[Payload], dim: usize) -> Result<Vec<f32>> {
         let mut avg = std::mem::take(&mut self.avg);
-        average_payloads(msgs, dim, &mut avg)?;
+        aggregate_payloads(msgs, dim, &mut avg, self.agg)?;
         Ok(avg)
     }
 }
@@ -115,6 +126,11 @@ impl ServerAlgo for CompAmsServer {
         let avg = self.averaged(msgs, theta.len())?;
         self.opt.step(theta, &avg, ctx.lr);
         self.avg = avg;
+        Ok(())
+    }
+
+    fn set_agg_mode(&mut self, mode: AggMode) -> Result<()> {
+        self.agg = mode;
         Ok(())
     }
 
@@ -182,6 +198,21 @@ impl ServerAlgo for FusedCompAmsServer {
         opt.vhat = vh2;
         self.inner.avg = avg;
         Ok(())
+    }
+
+    fn set_agg_mode(&mut self, mode: AggMode) -> Result<()> {
+        // The fused kernel computes θ ← AMSGrad(θ, mean ĝ) as one AOT
+        // artifact; robust estimators would change the math behind its
+        // back. `TrainConfig::validate` rejects the combo up front.
+        if mode == AggMode::Mean {
+            Ok(())
+        } else {
+            anyhow::bail!(
+                "fused-update server '{}' supports only mean aggregation \
+                 (drop --fused-update to use --robust-agg {mode})",
+                self.name()
+            )
+        }
     }
 
     fn export_state(&self) -> Result<Vec<u8>> {
@@ -266,6 +297,30 @@ mod tests {
             reference.step(&mut theta_b, &g, 0.01);
             assert_eq!(theta_a, theta_b, "round {r}");
         }
+    }
+
+    #[test]
+    fn robust_aggregation_suppresses_an_outlier_worker() {
+        // 3 honest workers at g = 1 plus one adversary at g = -3: the
+        // batch mean is exactly 0 (AMSGrad takes a null step), while
+        // trimmed:1 drops the extremes and keeps the honest direction.
+        let dim = 4;
+        let honest = Payload::Dense(vec![1.0; dim]);
+        let evil = Payload::Dense(vec![-3.0; dim]);
+        let msgs = vec![honest.clone(), honest.clone(), honest, evil];
+
+        let (_, mut mean_server) = build(dim, 4, CompressorSpec::Identity, false);
+        let mut theta = vec![1.0f32; dim];
+        mean_server.step(&mut theta, &msgs, &ctx(0)).unwrap();
+        assert_eq!(theta, vec![1.0; dim], "zero mean must take a null step");
+
+        let (_, mut trimmed) = build(dim, 4, CompressorSpec::Identity, false);
+        trimmed.set_agg_mode(AggMode::Trimmed(1)).unwrap();
+        trimmed.step(&mut theta, &msgs, &ctx(0)).unwrap();
+        assert!(
+            theta.iter().all(|&t| t < 1.0),
+            "trimmed mean must keep the honest descent direction: {theta:?}"
+        );
     }
 
     #[test]

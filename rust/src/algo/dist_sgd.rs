@@ -6,7 +6,7 @@ use anyhow::Result;
 use crate::compress::Payload;
 use crate::optim::{MomentumSgd, ServerOpt};
 
-use super::{average_payloads, Protocol, RoundCtx, ServerAlgo, WorkerAlgo};
+use super::{aggregate_payloads, AggMode, Protocol, RoundCtx, ServerAlgo, WorkerAlgo};
 
 /// Worker half: stateless dense uplink.
 pub struct DistSgdWorker;
@@ -23,11 +23,17 @@ impl WorkerAlgo for DistSgdWorker {
 pub struct DistSgdServer {
     opt: MomentumSgd,
     avg: Vec<f32>,
+    /// Batch estimator (`--robust-agg`), plain mean by default.
+    agg: AggMode,
 }
 
 impl DistSgdServer {
     pub fn new(dim: usize, momentum: f32) -> Self {
-        DistSgdServer { opt: MomentumSgd::new(dim, momentum), avg: Vec::new() }
+        DistSgdServer {
+            opt: MomentumSgd::new(dim, momentum),
+            avg: Vec::new(),
+            agg: AggMode::Mean,
+        }
     }
 }
 
@@ -43,9 +49,14 @@ impl ServerAlgo for DistSgdServer {
         ctx: &RoundCtx,
     ) -> Result<()> {
         let mut avg = std::mem::take(&mut self.avg);
-        average_payloads(msgs, theta.len(), &mut avg)?;
+        aggregate_payloads(msgs, theta.len(), &mut avg, self.agg)?;
         self.opt.step(theta, &avg, ctx.lr);
         self.avg = avg;
+        Ok(())
+    }
+
+    fn set_agg_mode(&mut self, mode: AggMode) -> Result<()> {
+        self.agg = mode;
         Ok(())
     }
 

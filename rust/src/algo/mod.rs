@@ -40,12 +40,14 @@
 //! [`ServerAlgo::step`], and `worker_state_bytes` became
 //! [`WorkerAlgo::state_bytes`] (still *per worker*).
 
+pub mod byzantine;
 pub mod comp_ams;
 pub mod dist_sgd;
 pub mod onebit_adam;
 pub mod qadam;
 pub mod sharded;
 
+pub use byzantine::{parse_byzantine, ByzMode, ByzSpec, ByzantineWorker};
 pub use comp_ams::{CompAmsServer, CompAmsWorker, FusedCompAmsServer};
 pub use dist_sgd::{DistSgdServer, DistSgdWorker};
 pub use onebit_adam::{OneBitAdamServer, OneBitAdamWorker};
@@ -54,7 +56,7 @@ pub use sharded::{ShardStats, ShardedServer};
 
 use std::rc::Rc;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use crate::compress::{CompressorSpec, Payload};
 use crate::runtime::OptimizerExe;
@@ -135,6 +137,26 @@ pub trait ServerAlgo {
     /// `None` for single-shard servers.
     fn shard_stats(&self) -> Option<&ShardStats> {
         None
+    }
+
+    /// Select the estimator this server applies to each round's batch of
+    /// uplink messages (`--robust-agg`): plain averaging (the default),
+    /// or a byzantine-tolerant composition — coordinate-wise median or
+    /// trimmed mean ([`AggMode`]). Servers whose update is not a
+    /// pluggable batch-aggregation (post-warmup 1BitAdam's frozen-v
+    /// momentum merge, the fused PJRT backend) accept only
+    /// [`AggMode::Mean`]; `TrainConfig::validate` rejects those combos
+    /// up front with a friendlier message, so this default is the
+    /// backstop.
+    fn set_agg_mode(&mut self, mode: AggMode) -> Result<()> {
+        if mode == AggMode::Mean {
+            Ok(())
+        } else {
+            bail!(
+                "server '{}' supports only mean aggregation (robust-agg: {AGG_CHOICES})",
+                self.name()
+            )
+        }
     }
 
     /// Serialize the server optimizer's trajectory state (moments,
@@ -347,6 +369,113 @@ pub fn average_payloads(msgs: &[Payload], dim: usize, out: &mut Vec<f32>) -> Res
     Ok(())
 }
 
+/// The accepted `--robust-agg` spellings, enumerated in every parse and
+/// validation error.
+pub const AGG_CHOICES: &str = "mean | median | trimmed:<k>";
+
+/// Batch-aggregation estimator applied by a [`ServerAlgo`] to each round's
+/// decoded uplink gradients (`--robust-agg`).
+///
+/// `Mean` is the paper's `(1/m) Σ_i C(g_i)`. `Median` and `Trimmed(k)`
+/// are the classical coordinate-wise byzantine-tolerant estimators: the
+/// per-coordinate median of the batch, and the per-coordinate mean after
+/// dropping the `k` smallest and `k` largest values. Both are pure
+/// functions of the sorted batch (ties broken by `f32::total_cmp`), so
+/// robust runs stay bit-for-bit reproducible.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggMode {
+    Mean,
+    Median,
+    /// Coordinate-wise trimmed mean dropping the `k` extremes per side.
+    Trimmed(usize),
+}
+
+impl AggMode {
+    /// Parse `mean`, `median`, or `trimmed:<k>` (k ≥ 1). The empty string
+    /// means `mean` (unset config field).
+    pub fn parse(s: &str) -> Result<AggMode> {
+        match s {
+            "" | "mean" => Ok(AggMode::Mean),
+            "median" => Ok(AggMode::Median),
+            other => {
+                if let Some(k_str) = other.strip_prefix("trimmed:") {
+                    let k: usize = k_str.parse().map_err(|_| {
+                        anyhow!(
+                            "bad trim count '{k_str}' in robust-agg '{other}' \
+                             (accepted forms: {AGG_CHOICES})"
+                        )
+                    })?;
+                    ensure!(
+                        k >= 1,
+                        "trimmed:<k> needs k >= 1 (trimmed:0 is just 'mean'; \
+                         accepted forms: {AGG_CHOICES})"
+                    );
+                    return Ok(AggMode::Trimmed(k));
+                }
+                bail!("unknown robust-agg '{other}' (accepted forms: {AGG_CHOICES})")
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for AggMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AggMode::Mean => write!(f, "mean"),
+            AggMode::Median => write!(f, "median"),
+            AggMode::Trimmed(k) => write!(f, "trimmed:{k}"),
+        }
+    }
+}
+
+/// Aggregate the decoded payloads into a dense gradient under `mode`.
+/// [`AggMode::Mean`] delegates to [`average_payloads`] (sparse payloads
+/// are accumulated without densifying); the robust estimators decode each
+/// message to dense and sort per coordinate. When the batch `m` is too
+/// small for `Trimmed(k)` to keep anything (`m ≤ 2k`), `k` is clamped to
+/// `(m - 1) / 2` — the estimator degrades toward the median rather than
+/// producing an empty mean. `TrainConfig::validate` rejects configs whose
+/// *quorum* batch would need the clamp, so it only engages on transient
+/// short batches (crashed workers below quorum).
+pub fn aggregate_payloads(
+    msgs: &[Payload],
+    dim: usize,
+    out: &mut Vec<f32>,
+    mode: AggMode,
+) -> Result<()> {
+    if mode == AggMode::Mean {
+        return average_payloads(msgs, dim, out);
+    }
+    ensure!(!msgs.is_empty(), "robust aggregation over an empty batch");
+    let dense: Vec<Vec<f32>> = msgs.iter().map(|m| m.to_dense(dim)).collect::<Result<_>>()?;
+    let m = dense.len();
+    out.clear();
+    out.resize(dim, 0.0);
+    let mut col = vec![0.0f32; m];
+    for j in 0..dim {
+        for (i, g) in dense.iter().enumerate() {
+            col[i] = g[j];
+        }
+        col.sort_by(|a, b| a.total_cmp(b));
+        out[j] = match mode {
+            AggMode::Mean => unreachable!("mean handled above"),
+            AggMode::Median => {
+                if m % 2 == 1 {
+                    col[m / 2]
+                } else {
+                    0.5 * (col[m / 2 - 1] + col[m / 2])
+                }
+            }
+            AggMode::Trimmed(k) => {
+                let k = k.min((m - 1) / 2);
+                let kept = &col[k..m - k];
+                kept.iter().sum::<f32>() / kept.len() as f32
+            }
+        };
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -404,6 +533,79 @@ mod tests {
         let mut out = Vec::new();
         average_payloads(&msgs, 3, &mut out).unwrap();
         assert_eq!(out, vec![1.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn agg_mode_parses_and_rejects() {
+        assert_eq!(AggMode::parse("").unwrap(), AggMode::Mean);
+        assert_eq!(AggMode::parse("mean").unwrap(), AggMode::Mean);
+        assert_eq!(AggMode::parse("median").unwrap(), AggMode::Median);
+        assert_eq!(AggMode::parse("trimmed:2").unwrap(), AggMode::Trimmed(2));
+        assert_eq!(AggMode::Trimmed(2).to_string(), "trimmed:2");
+        for bad in ["trim", "trimmed", "trimmed:", "trimmed:x", "trimmed:0", "avg"] {
+            let err = AggMode::parse(bad).unwrap_err().to_string();
+            assert!(err.contains(AGG_CHOICES), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn median_and_trimmed_mean_per_coordinate() {
+        // Three honest gradients plus one adversarial outlier.
+        let msgs = vec![
+            Payload::Dense(vec![1.0, -2.0]),
+            Payload::Dense(vec![1.2, -2.2]),
+            Payload::Dense(vec![0.8, -1.8]),
+            Payload::Dense(vec![-100.0, 100.0]),
+        ];
+        let mut out = Vec::new();
+        // Even batch: median is the mean of the middle two order stats.
+        aggregate_payloads(&msgs, 2, &mut out, AggMode::Median).unwrap();
+        assert_eq!(out, vec![0.5 * (0.8 + 1.0), 0.5 * (-2.2 + -2.0)]);
+        // Trimmed:1 drops the outlier (and one honest extreme) per side.
+        aggregate_payloads(&msgs, 2, &mut out, AggMode::Trimmed(1)).unwrap();
+        assert_eq!(out, vec![0.5 * (0.8 + 1.0), 0.5 * (-2.2 + -2.0)]);
+        // Odd batch: exact middle order statistic.
+        aggregate_payloads(&msgs[..3], 2, &mut out, AggMode::Median).unwrap();
+        assert_eq!(out, vec![1.0, -2.0]);
+        // Mean delegates to average_payloads (handles sparse unchanged).
+        aggregate_payloads(&msgs[..3], 2, &mut out, AggMode::Mean).unwrap();
+        let mut avg = Vec::new();
+        average_payloads(&msgs[..3], 2, &mut avg).unwrap();
+        assert_eq!(out, avg);
+    }
+
+    #[test]
+    fn trimmed_mean_clamps_on_short_batches() {
+        // m = 2 with k = 1 would keep nothing; the clamp degrades to
+        // (m-1)/2 = 0 trims, i.e. the plain mean of the short batch.
+        let msgs =
+            vec![Payload::Dense(vec![1.0]), Payload::Dense(vec![3.0])];
+        let mut out = Vec::new();
+        aggregate_payloads(&msgs, 1, &mut out, AggMode::Trimmed(1)).unwrap();
+        assert_eq!(out, vec![2.0]);
+        assert!(aggregate_payloads(&[], 1, &mut out, AggMode::Median).is_err());
+    }
+
+    #[test]
+    fn default_set_agg_mode_accepts_mean_only() {
+        struct Plain;
+        impl ServerAlgo for Plain {
+            fn name(&self) -> String {
+                "plain".into()
+            }
+            fn step(
+                &mut self,
+                _theta: &mut [f32],
+                _msgs: &[Payload],
+                _ctx: &RoundCtx,
+            ) -> Result<()> {
+                Ok(())
+            }
+        }
+        let mut s = Plain;
+        assert!(s.set_agg_mode(AggMode::Mean).is_ok());
+        let err = s.set_agg_mode(AggMode::Median).unwrap_err().to_string();
+        assert!(err.contains("plain") && err.contains(AGG_CHOICES), "{err}");
     }
 
     #[test]

@@ -12,7 +12,9 @@ use anyhow::Result;
 use crate::compress::{Compressor, CompressorSpec, ErrorFeedback, Payload};
 use crate::optim::{BETA1, BETA2, EPS};
 
-use super::{average_payloads, per_worker_spec, Protocol, RoundCtx, ServerAlgo, WorkerAlgo};
+use super::{
+    aggregate_payloads, per_worker_spec, AggMode, Protocol, RoundCtx, ServerAlgo, WorkerAlgo,
+};
 
 /// Worker half: local Adam moments + EF + compressor.
 pub struct QAdamWorker {
@@ -88,11 +90,13 @@ impl WorkerAlgo for QAdamWorker {
 pub struct QAdamServer {
     comp_name: String,
     avg: Vec<f32>,
+    /// Batch estimator over the decoded update ratios (`--robust-agg`).
+    agg: AggMode,
 }
 
 impl QAdamServer {
     pub fn new(comp_name: String) -> Self {
-        QAdamServer { comp_name, avg: Vec::new() }
+        QAdamServer { comp_name, avg: Vec::new(), agg: AggMode::Mean }
     }
 }
 
@@ -108,9 +112,14 @@ impl ServerAlgo for QAdamServer {
         ctx: &RoundCtx,
     ) -> Result<()> {
         let mut avg = std::mem::take(&mut self.avg);
-        average_payloads(msgs, theta.len(), &mut avg)?;
+        aggregate_payloads(msgs, theta.len(), &mut avg, self.agg)?;
         crate::util::math::axpy(-ctx.lr, &avg, theta);
         self.avg = avg;
+        Ok(())
+    }
+
+    fn set_agg_mode(&mut self, mode: AggMode) -> Result<()> {
+        self.agg = mode;
         Ok(())
     }
 }

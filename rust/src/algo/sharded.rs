@@ -36,7 +36,7 @@ use anyhow::{anyhow, ensure, Result};
 use crate::compress::Payload;
 use crate::util::timer::Stopwatch;
 
-use super::{AlgoSpec, RoundCtx, ServerAlgo};
+use super::{AggMode, AlgoSpec, RoundCtx, ServerAlgo};
 
 /// Fenceposts of a contiguous partition of `0..dim` into `shards` ranges
 /// whose lengths differ by at most one (the first `dim % shards` shards
@@ -82,6 +82,7 @@ enum Cmd {
     Step { theta: Vec<f32>, msgs: Vec<Payload>, ctx: RoundCtx },
     Export { reply: Sender<Result<Vec<u8>>> },
     Import { bytes: Vec<u8>, reply: Sender<Result<()>> },
+    SetAgg { mode: AggMode, reply: Sender<Result<()>> },
     Stop,
 }
 
@@ -122,6 +123,11 @@ fn spawn_shard(sid: usize, mut server: Box<dyn ServerAlgo + Send>) -> ShardHandl
                     }
                     Cmd::Import { bytes, reply } => {
                         if reply.send(server.import_state(&bytes)).is_err() {
+                            break;
+                        }
+                    }
+                    Cmd::SetAgg { mode, reply } => {
+                        if reply.send(server.set_agg_mode(mode)).is_err() {
                             break;
                         }
                     }
@@ -233,6 +239,34 @@ impl ServerAlgo for ShardedServer {
 
     fn shard_stats(&self) -> Option<&ShardStats> {
         Some(&self.stats)
+    }
+
+    /// Forward the estimator to every shard. Coordinate-wise median and
+    /// trimmed mean commute with the contiguous θ partition (each shard
+    /// sorts only its own coordinates), so a robust sharded server stays
+    /// bitwise identical to the robust unsharded one.
+    fn set_agg_mode(&mut self, mode: AggMode) -> Result<()> {
+        match &mut self.backend {
+            Backend::Sequential(servers) => {
+                for s in servers {
+                    s.set_agg_mode(mode)?;
+                }
+            }
+            Backend::Threaded(handles) => {
+                let mut rxs = Vec::with_capacity(handles.len());
+                for h in handles.iter() {
+                    let (tx, rx) = channel();
+                    h.tx
+                        .send(Cmd::SetAgg { mode, reply: tx })
+                        .map_err(|_| anyhow!("shard thread died"))?;
+                    rxs.push(rx);
+                }
+                for rx in rxs {
+                    rx.recv().map_err(|_| anyhow!("shard thread died"))??;
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Concatenate every shard's state blob (length-prefixed, in shard
@@ -462,6 +496,62 @@ mod tests {
             assert_sharded_matches_unsharded(spec_str, 4, false);
             assert_sharded_matches_unsharded(spec_str, 4, true);
             assert_sharded_matches_unsharded(spec_str, 3, true); // 37 % 3 != 0
+        }
+    }
+
+    #[test]
+    fn robust_agg_shards_bitwise_like_mean() {
+        // Median/trimmed are per-coordinate, so they must commute with
+        // the contiguous partition exactly like the mean does.
+        let dim = 23;
+        let n = 5;
+        let spec = AlgoSpec::parse("dist-ams").unwrap();
+        for mode in [AggMode::Median, AggMode::Trimmed(1)] {
+            for threaded in [false, true] {
+                let run = |shards: Option<usize>| -> Vec<f32> {
+                    let mut server: Box<dyn ServerAlgo> = match shards {
+                        None => {
+                            let (_, mut s) = spec.build(dim, n, 15);
+                            s.set_agg_mode(mode).unwrap();
+                            s
+                        }
+                        Some(s) => {
+                            let mut srv =
+                                ShardedServer::new(&spec, dim, 15, s, threaded).unwrap();
+                            srv.set_agg_mode(mode).unwrap();
+                            Box::new(srv)
+                        }
+                    };
+                    let mut theta: Vec<f32> =
+                        (0..dim).map(|i| (i as f32 * 0.41).sin()).collect();
+                    for r in 0..15 {
+                        let ctx = RoundCtx::sync(r, 0.02);
+                        let msgs: Vec<Payload> = (0..n)
+                            .map(|w| {
+                                Payload::Dense(
+                                    (0..dim)
+                                        .map(|i| {
+                                            ((r as usize * 31 + w * 7 + i) as f32 * 0.11)
+                                                .cos()
+                                        })
+                                        .collect(),
+                                )
+                            })
+                            .collect();
+                        server.step(&mut theta, &msgs, &ctx).unwrap();
+                    }
+                    theta
+                };
+                let a = run(None);
+                let b = run(Some(4));
+                for (i, (x, y)) in a.iter().zip(&b).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{mode} threaded={threaded}: θ[{i}] {x} vs {y}"
+                    );
+                }
+            }
         }
     }
 

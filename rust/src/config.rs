@@ -87,6 +87,21 @@ pub struct TrainConfig {
     /// Straggler uplinks older than this many rounds are dropped instead
     /// of applied as stale gradients (only meaningful with `quorum` < n).
     pub max_staleness: u64,
+    /// Seed for the network simulator's per-link delay/drop streams
+    /// (`--transport sim:<inner>` only). Runs with the same `sim_seed`
+    /// and `sim_profile` are bit-for-bit reproducible.
+    pub sim_seed: u64,
+    /// Simulator impairment profile: `ideal | lan | wan | lossy-wan`
+    /// (see [`crate::coordinator::sim::SimProfile`]).
+    pub sim_profile: String,
+    /// Adversarial worker modes: comma-separated `wid:mode` entries
+    /// (`0:scale:-3`, `1:signflip`, `2:stale`; empty = all honest). See
+    /// [`crate::algo::byzantine`].
+    pub byzantine: String,
+    /// Server batch-aggregation estimator: `mean` (the paper's average),
+    /// or the byzantine-tolerant `median` / `trimmed:<k>` (see
+    /// [`crate::algo::AggMode`]).
+    pub robust_agg: String,
     /// Console metric cadence (0 = silent).
     pub log_every: u64,
     /// Rounds per "epoch" for reporting (dataset_size / (batch * workers)).
@@ -115,6 +130,10 @@ impl TrainConfig {
             spawn_workers: false,
             quorum: 0,
             max_staleness: 2,
+            sim_seed: 0,
+            sim_profile: "ideal".into(),
+            byzantine: String::new(),
+            robust_agg: "mean".into(),
             log_every: 0,
             rounds_per_epoch: 100,
         };
@@ -209,7 +228,58 @@ impl TrainConfig {
                  tcp workers are separate processes — drop one of the two"
             );
         }
-        crate::algo::AlgoSpec::parse(&self.algo)?;
+        // Simulator knobs: the profile string must parse even when the
+        // transport is not sim:<inner> (a typo'd profile should fail fast,
+        // not silently ride along unused). sim-wrapping-tcp is rejected by
+        // TransportSpec::parse above.
+        crate::coordinator::sim::SimProfile::parse(&self.sim_profile)?;
+        let byz = crate::algo::parse_byzantine(&self.byzantine)?;
+        for spec in &byz {
+            if spec.wid >= self.workers {
+                bail!(
+                    "byzantine worker id {} is out of range for {} workers \
+                     (valid ids: 0..{}; accepted forms: {})",
+                    spec.wid,
+                    self.workers,
+                    self.workers,
+                    crate::algo::byzantine::BYZANTINE_CHOICES
+                );
+            }
+        }
+        let algo_spec = crate::algo::AlgoSpec::parse(&self.algo)?;
+        let agg = crate::algo::AggMode::parse(&self.robust_agg)?;
+        if agg != crate::algo::AggMode::Mean {
+            if matches!(algo_spec, crate::algo::AlgoSpec::OneBitAdam { .. }) {
+                bail!(
+                    "robust-agg '{}' is incompatible with 1bitadam: its \
+                     post-warmup server merges frozen-preconditioner momentum, \
+                     not a pluggable batch aggregate (accepted for 1bitadam: mean)",
+                    self.robust_agg
+                );
+            }
+            if self.fused_update {
+                bail!(
+                    "robust-agg '{}' is incompatible with --fused-update: the \
+                     Pallas artifact compiles mean-aggregation into the fused \
+                     step (drop --fused-update, or use robust-agg mean)",
+                    self.robust_agg
+                );
+            }
+            if let crate::algo::AggMode::Trimmed(k) = agg {
+                let batch = if self.quorum == 0 { self.workers } else { self.quorum };
+                if 2 * k >= batch {
+                    bail!(
+                        "trimmed:{k} discards {} of every {batch}-message batch \
+                         (quorum {} of {} workers) — need 2k < batch size \
+                         (accepted forms: {})",
+                        2 * k,
+                        self.quorum,
+                        self.workers,
+                        crate::algo::AGG_CHOICES
+                    );
+                }
+            }
+        }
         crate::data::shard::Sharding::parse(&self.sharding)?;
         Ok(())
     }
@@ -244,6 +314,10 @@ impl TrainConfig {
             ("spawn_workers", Json::Bool(self.spawn_workers)),
             ("quorum", Json::num(self.quorum as f64)),
             ("max_staleness", Json::num(self.max_staleness as f64)),
+            ("sim_seed", Json::num(self.sim_seed as f64)),
+            ("sim_profile", Json::str(&self.sim_profile)),
+            ("byzantine", Json::str(&self.byzantine)),
+            ("robust_agg", Json::str(&self.robust_agg)),
             ("log_every", Json::num(self.log_every as f64)),
             ("rounds_per_epoch", Json::num(self.rounds_per_epoch as f64)),
         ])
@@ -315,6 +389,18 @@ impl TrainConfig {
         }
         if let Some(v) = j.get("max_staleness") {
             cfg.max_staleness = v.as_usize()? as u64;
+        }
+        if let Some(v) = j.get("sim_seed") {
+            cfg.sim_seed = v.as_f64()? as u64;
+        }
+        if let Some(v) = j.get("sim_profile") {
+            cfg.sim_profile = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.get("byzantine") {
+            cfg.byzantine = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.get("robust_agg") {
+            cfg.robust_agg = v.as_str()?.to_string();
         }
         if let Some(v) = j.get("log_every") {
             cfg.log_every = v.as_usize()? as u64;
@@ -417,6 +503,86 @@ mod tests {
     }
 
     #[test]
+    fn validate_sim_combinations() {
+        let mut cfg = TrainConfig::preset("quadratic", "dist-ams");
+        cfg.transport = "sim:inproc".into();
+        cfg.sim_profile = "lossy-wan".into();
+        cfg.sim_seed = 7;
+        cfg.validate().unwrap();
+        cfg.transport = "sim:loopback".into();
+        cfg.validate().unwrap();
+        // sim cannot wrap a real multi-process transport.
+        cfg.transport = "sim:tcp".into();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("sim cannot wrap tcp"), "{err}");
+        assert!(
+            err.contains(crate::coordinator::transport::TRANSPORT_CHOICES),
+            "{err}"
+        );
+        // A typo'd profile fails fast even without a sim transport.
+        cfg.transport = "inproc".into();
+        cfg.sim_profile = "dsl".into();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("ideal | lan | wan | lossy-wan"), "{err}");
+    }
+
+    #[test]
+    fn validate_byzantine_ids_and_forms() {
+        let mut cfg = TrainConfig::preset("quadratic", "dist-ams");
+        cfg.workers = 4;
+        cfg.byzantine = "3:scale:-3,0:stale".into();
+        cfg.validate().unwrap();
+        // wid >= n is nonsense: there is no worker 4 in a 4-worker fleet.
+        cfg.byzantine = "4:signflip".into();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        assert!(err.contains("0..4"), "{err}");
+        // Malformed entries enumerate the accepted forms.
+        cfg.byzantine = "0:flip".into();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("scale") && err.contains("signflip"), "{err}");
+    }
+
+    #[test]
+    fn validate_robust_agg_combinations() {
+        let mut cfg = TrainConfig::preset("quadratic", "dist-ams");
+        cfg.workers = 4;
+        cfg.robust_agg = "median".into();
+        cfg.validate().unwrap();
+        cfg.robust_agg = "trimmed:1".into();
+        cfg.validate().unwrap();
+        // trimmed:k must leave something in the quorum batch: 2k < batch.
+        cfg.robust_agg = "trimmed:2".into();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("trimmed:2") && err.contains("batch"), "{err}");
+        // With quorum 3, trimmed:1 keeps one message; trimmed:2 would not.
+        cfg.quorum = 3;
+        cfg.robust_agg = "trimmed:1".into();
+        cfg.validate().unwrap();
+        cfg.quorum = 2;
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("2-message batch"), "{err}");
+        // 1bitadam's post-warmup merge is not a pluggable aggregate.
+        let mut cfg = TrainConfig::preset("quadratic", "1bitadam:10");
+        cfg.robust_agg = "median".into();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("1bitadam"), "{err}");
+        cfg.robust_agg = "mean".into();
+        cfg.validate().unwrap();
+        // The fused Pallas step bakes in mean aggregation.
+        let mut cfg = TrainConfig::preset("quadratic", "dist-ams");
+        cfg.fused_update = true;
+        cfg.robust_agg = "median".into();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("fused"), "{err}");
+        // Unknown estimators enumerate the accepted forms.
+        cfg.fused_update = false;
+        cfg.robust_agg = "krum".into();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("mean | median | trimmed:<k>"), "{err}");
+    }
+
+    #[test]
     fn json_roundtrip() {
         let mut cfg = TrainConfig::preset("cifar_lenet", "comp-ams-blocksign:4096");
         cfg.schedule = LrSchedule::StepDecay { at: vec![3880, 7760], factor: 10.0 };
@@ -428,6 +594,10 @@ mod tests {
         cfg.spawn_workers = true;
         cfg.quorum = 3;
         cfg.max_staleness = 5;
+        cfg.sim_seed = 99;
+        cfg.sim_profile = "lossy-wan".into();
+        cfg.byzantine = "1:scale:-3".into();
+        cfg.robust_agg = "trimmed:1".into();
         let j = cfg.to_json();
         let back = TrainConfig::from_json(&crate::util::json::parse(
             &j.to_string_pretty(),
@@ -444,5 +614,9 @@ mod tests {
         assert!(back.spawn_workers);
         assert_eq!(back.quorum, 3);
         assert_eq!(back.max_staleness, 5);
+        assert_eq!(back.sim_seed, 99);
+        assert_eq!(back.sim_profile, "lossy-wan");
+        assert_eq!(back.byzantine, "1:scale:-3");
+        assert_eq!(back.robust_agg, "trimmed:1");
     }
 }

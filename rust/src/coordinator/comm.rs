@@ -69,6 +69,14 @@ pub struct CommLedger {
     /// values are unknowable post-mortem, but its extent is not, so runs
     /// with deaths report the bias instead of hiding it.
     pub ef_residual_lost_bits: u64,
+    /// Per-link delivery statistics from the seeded network simulator
+    /// (`--transport sim:<inner>`), one entry per worker id: uplinks
+    /// delivered, seeded drops (resurfaced as retransmit delay),
+    /// reorderings, and cumulative virtual delay. Mirrored from
+    /// [`Sim`](crate::coordinator::sim::Sim) after every round, the way
+    /// `uplink_bits_by_shard` mirrors the sharded server; empty for real
+    /// transports.
+    pub sim_links: Vec<crate::coordinator::sim::LinkStats>,
 }
 
 impl CommLedger {
@@ -93,6 +101,14 @@ impl CommLedger {
     pub fn sync_shard_routing(&mut self, routed_bits: &[u64]) {
         self.uplink_bits_by_shard.clear();
         self.uplink_bits_by_shard.extend_from_slice(routed_bits);
+    }
+
+    /// Overwrite the per-link simulator snapshot (stats are cumulative
+    /// at the source — [`Sim`](crate::coordinator::sim::Sim) accumulates
+    /// them at the delivery site).
+    pub fn sync_sim_links(&mut self, links: &[crate::coordinator::sim::LinkStats]) {
+        self.sim_links.clear();
+        self.sim_links.extend_from_slice(links);
     }
 
     /// Record per-message transport framing overhead (see
@@ -148,6 +164,24 @@ mod tests {
         assert_eq!(l.uplink_bits_by_shard, vec![100, 200]);
         l.sync_shard_routing(&[150, 250]);
         assert_eq!(l.uplink_bits_by_shard, vec![150, 250]);
+    }
+
+    #[test]
+    fn sim_link_snapshot_is_overwritten_and_stays_out_of_bit_totals() {
+        use crate::coordinator::sim::LinkStats;
+        let mut l = CommLedger::new();
+        l.charge_uplink(0, 1000);
+        assert!(l.sim_links.is_empty());
+        let snap = vec![
+            LinkStats { delivered: 3, drops: 1, reordered: 0, delay_us: 900 },
+            LinkStats { delivered: 2, drops: 0, reordered: 1, delay_us: 400 },
+        ];
+        l.sync_sim_links(&snap);
+        assert_eq!(l.sim_links, snap);
+        l.sync_sim_links(&snap[..1]);
+        assert_eq!(l.sim_links.len(), 1);
+        // Virtual-clock stats never leak into the wire-bit accounting.
+        assert_eq!(l.total_bits(), 1000);
     }
 
     #[test]

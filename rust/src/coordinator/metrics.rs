@@ -3,6 +3,8 @@
 
 use crate::grad::EvalStats;
 
+use super::sim::LinkStats;
+
 #[derive(Clone, Debug)]
 pub struct RoundMetric {
     pub round: u64,
@@ -63,6 +65,11 @@ pub struct RunResult {
     /// Cumulative wall-clock ms spent inside each server shard's update
     /// (empty for an unsharded server).
     pub server_ms_by_shard: Vec<f64>,
+    /// Per-link delivery statistics from the seeded network simulator,
+    /// one entry per worker id (delivered / drops / reordered /
+    /// cumulative virtual delay). Deterministic from `--sim-seed` +
+    /// `--sim-profile`; empty for runs over real transports.
+    pub sim_links: Vec<LinkStats>,
 }
 
 impl RunResult {
@@ -142,6 +149,7 @@ mod tests {
             uplink_bits_by_worker: Vec::new(),
             uplink_bits_by_shard: Vec::new(),
             server_ms_by_shard: Vec::new(),
+            sim_links: Vec::new(),
         }
     }
 

@@ -20,7 +20,9 @@
 //! The leader↔worker plumbing is abstracted behind [`transport::Transport`]
 //! (`InProc` channels, the byte-framing `Loopback`, or real worker
 //! *processes* over sockets — [`net::Tcp`], spawned and reaped by the
-//! [`supervisor`], each running the [`worker`] daemon loop), and the
+//! [`supervisor`], each running the [`worker`] daemon loop; either
+//! in-process transport can additionally be wrapped in the seeded
+//! network simulator [`sim::Sim`], `--transport sim:<inner>`), and the
 //! round state machine — quorum collection, staleness classification,
 //! stale-gradient application, dead-worker exclusion — lives in
 //! [`runtime::ClusterRuntime`]. The whole per-worker pipeline
@@ -41,6 +43,7 @@ pub mod metrics;
 pub mod net;
 pub mod runtime;
 pub mod scheduler;
+pub mod sim;
 pub mod supervisor;
 pub mod trainer;
 pub mod transport;
@@ -53,6 +56,7 @@ pub use checkpoint::JobCheckpoint;
 pub use net::{Tcp, TcpLeader};
 pub use runtime::{ClusterRuntime, RoundOutcome};
 pub use scheduler::{Job, JobId, JobQueue, JobState, Scheduler};
+pub use sim::{LinkStats, Sim, SimProfile};
 pub use supervisor::Supervisor;
 pub use trainer::{train, Trainer};
 pub use transport::{Envelope, Event, InProc, Loopback, Transport, TransportSpec};

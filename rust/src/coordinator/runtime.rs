@@ -170,6 +170,15 @@ impl ClusterRuntime {
         self.transport.n_workers()
     }
 
+    /// Per-link delivery statistics from the transport — populated only
+    /// when the seeded network simulator is in the stack
+    /// ([`Sim`](super::sim::Sim)); empty otherwise. The trainer mirrors
+    /// these into [`CommLedger::sim_links`] after every round, the same
+    /// way sharded-server routing is mirrored.
+    pub fn link_stats(&self) -> Vec<super::sim::LinkStats> {
+        self.transport.link_stats()
+    }
+
     pub fn quorum(&self) -> usize {
         self.quorum
     }

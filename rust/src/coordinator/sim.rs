@@ -1,0 +1,582 @@
+//! Seeded network simulator: deterministic link impairments over any
+//! in-process [`Transport`].
+//!
+//! [`Sim`] wraps a transport and re-times its uplink arrivals on a
+//! **virtual clock** driven by a seeded model — per-link latency, jitter,
+//! a bandwidth term proportional to the frame size, and seeded "drops"
+//! that resurface as retransmit delay. No real time passes: unit tests
+//! and CI get WAN-shaped schedules that are bit-for-bit reproducible from
+//! `--sim-seed` alone, independent of thread scheduling and host load.
+//!
+//! ## Delivery model
+//!
+//! The wrapped transport owes exactly one uplink (or exit) per dispatched
+//! downlink — the cluster runtime's core invariant. `Sim` preserves it
+//! with a *barrier-collect* event queue:
+//!
+//! 1. [`Transport::send_downlink`] is forwarded and the virtual dispatch
+//!    time of that link is stamped.
+//! 2. The first [`Transport::recv_event`] of a batch physically drains
+//!    **every** outstanding uplink from the inner transport, stamping
+//!    each with `dispatch + latency + jitter + bits/bandwidth +
+//!    drops·retransmit` drawn from an RNG keyed on `(seed, wid, round)` —
+//!    never on physical arrival order.
+//! 3. Buffered events are then handed to the runtime ordered by
+//!    `(virtual arrival, wid)`, a total order that is a pure function of
+//!    the seed, the profile, and the trajectory.
+//!
+//! Under `--quorum K < n` the runtime stops consuming once K fresh
+//! uplinks are in, so the slowest links of a round stay buffered and are
+//! delivered *next* round with their original round tag — staleness and
+//! drop accounting then emerge from the existing runtime machinery
+//! instead of wall-clock luck. A seeded "drop" is deliberately modeled as
+//! a retransmit (large extra delay), never as message loss: every owed
+//! uplink still arrives exactly once, which is what keeps the runtime's
+//! collect/drain loops live.
+//!
+//! With the `ideal` profile every delay is zero, the delivery order
+//! degenerates to wid order, and a wrapped run is bitwise identical to
+//! the bare transport (property-tested across all protocol strings —
+//! the runtime sorts each round's batch by wid before aggregating, so
+//! within-batch delivery order never reaches the math).
+//!
+//! Per-link delivery counts, retransmits, reorderings, and cumulative
+//! virtual delay are surfaced as [`LinkStats`] through
+//! [`Transport::link_stats`], the [`CommLedger`](super::comm::CommLedger)
+//! and [`RunResult`](super::metrics::RunResult) — the same path
+//! `framing_bits` takes today.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::algo::RoundCtx;
+use crate::util::rng::Rng;
+
+use super::transport::{Event, Transport};
+
+/// Retransmits are capped so a pathological `drop_prob` (e.g. 1.0 in a
+/// stress test) still yields a finite delay instead of an unbounded loop.
+const MAX_RETRANSMITS: u64 = 8;
+
+/// Per-link (leader↔worker) delivery statistics, accumulated on the
+/// virtual clock across the whole run. One entry per worker id.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LinkStats {
+    /// Uplinks delivered to the runtime over this link.
+    pub delivered: u64,
+    /// Seeded drop events — each one resurfaced as one retransmit delay
+    /// ([`SimProfile::retransmit_us`]), never as a lost message.
+    pub drops: u64,
+    /// Uplinks delivered after an uplink of a higher wid within the same
+    /// collect batch — the link's share of cross-worker reordering.
+    pub reordered: u64,
+    /// Cumulative virtual one-way delay (µs) over delivered uplinks.
+    pub delay_us: u64,
+}
+
+/// The valid `--sim-profile` spellings, for every error message that has
+/// to enumerate them.
+pub const SIM_PROFILE_CHOICES: &str = "ideal | lan | wan | lossy-wan";
+
+/// A named set of link impairments (`--sim-profile`). All quantities are
+/// per uplink on the virtual clock; `ideal` (the default) is the
+/// all-zero profile under which [`Sim`] is a transparent wrapper.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SimProfile {
+    /// Base one-way latency (µs).
+    pub latency_us: u64,
+    /// Uniform extra delay in `[0, jitter_us]` (µs).
+    pub jitter_us: u64,
+    /// Link bandwidth in bits per virtual µs (1 bit/µs = 1 Mbit/s);
+    /// 0 means infinite (no serialization delay).
+    pub bandwidth_bits_per_us: u64,
+    /// Per-uplink probability of a seeded drop; each drop adds one
+    /// [`SimProfile::retransmit_us`] to the delivery delay (geometric,
+    /// capped at [`MAX_RETRANSMITS`]).
+    pub drop_prob: f32,
+    /// Timeout-and-resend penalty per seeded drop (µs).
+    pub retransmit_us: u64,
+}
+
+impl SimProfile {
+    /// Parse a named profile; the error enumerates the accepted forms.
+    pub fn parse(s: &str) -> Result<SimProfile> {
+        match s {
+            "ideal" => Ok(SimProfile {
+                latency_us: 0,
+                jitter_us: 0,
+                bandwidth_bits_per_us: 0,
+                drop_prob: 0.0,
+                retransmit_us: 0,
+            }),
+            // 10 Gb/s switch fabric: sub-ms latency, no loss.
+            "lan" => Ok(SimProfile {
+                latency_us: 100,
+                jitter_us: 50,
+                bandwidth_bits_per_us: 10_000,
+                drop_prob: 0.0,
+                retransmit_us: 1_000,
+            }),
+            // 100 Mb/s cross-region path: 40 ms base RTT share, rare loss.
+            "wan" => Ok(SimProfile {
+                latency_us: 40_000,
+                jitter_us: 10_000,
+                bandwidth_bits_per_us: 100,
+                drop_prob: 0.001,
+                retransmit_us: 200_000,
+            }),
+            // Degraded 50 Mb/s path: heavy jitter, 5% loss — the profile
+            // the straggler/staleness integration tests run under.
+            "lossy-wan" => Ok(SimProfile {
+                latency_us: 60_000,
+                jitter_us: 30_000,
+                bandwidth_bits_per_us: 50,
+                drop_prob: 0.05,
+                retransmit_us: 250_000,
+            }),
+            other => bail!(
+                "unknown sim profile '{other}' (valid profiles: {SIM_PROFILE_CHOICES})"
+            ),
+        }
+    }
+
+    /// True when every impairment is zero — [`Sim`] then adds no delay
+    /// and delivers each batch in wid order.
+    pub fn is_ideal(&self) -> bool {
+        self.latency_us == 0
+            && self.jitter_us == 0
+            && self.bandwidth_bits_per_us == 0
+            && self.drop_prob == 0.0
+            && self.retransmit_us == 0
+    }
+}
+
+/// One re-timed event waiting in the delivery queue.
+struct Delivery {
+    /// Virtual arrival time (µs).
+    at: u64,
+    wid: usize,
+    /// Physical pull order — the final tie-breaker so the sort is total.
+    seq: u64,
+    delay_us: u64,
+    drops: u64,
+    event: Event,
+}
+
+/// A [`Transport`] wrapper that injects seeded, deterministic link
+/// impairments (see the module docs for the delivery model).
+pub struct Sim<T: Transport> {
+    inner: T,
+    seed: u64,
+    profile: SimProfile,
+    /// Virtual clock: the arrival stamp of the last delivered event.
+    now_us: u64,
+    /// Virtual dispatch time of the last downlink per wid.
+    dispatch_us: Vec<u64>,
+    /// Links with a dispatched round the inner transport has not yet
+    /// physically answered.
+    owed: Vec<bool>,
+    outstanding: usize,
+    seq: u64,
+    /// Current batch, sorted descending so `pop()` yields the earliest
+    /// virtual arrival.
+    ready: Vec<Delivery>,
+    /// Highest wid delivered so far in the current batch (reorder stat).
+    batch_max_wid: Option<usize>,
+    links: Vec<LinkStats>,
+}
+
+impl<T: Transport> Sim<T> {
+    pub fn new(inner: T, seed: u64, profile: SimProfile) -> Self {
+        let n = inner.n_workers();
+        Sim {
+            inner,
+            seed,
+            profile,
+            now_us: 0,
+            dispatch_us: vec![0; n],
+            owed: vec![false; n],
+            outstanding: 0,
+            seq: 0,
+            ready: Vec::new(),
+            batch_max_wid: None,
+            links: vec![LinkStats::default(); n],
+        }
+    }
+
+    fn grow_to(&mut self, wid: usize) {
+        if wid >= self.links.len() {
+            self.links.resize(wid + 1, LinkStats::default());
+            self.dispatch_us.resize(wid + 1, 0);
+            self.owed.resize(wid + 1, false);
+        }
+    }
+
+    /// Delay and drop count for one uplink, drawn from an RNG keyed on
+    /// `(seed, wid, round)` — a pure function of the trajectory, never of
+    /// physical arrival order (which thread timing could perturb).
+    fn link_delay(&self, wid: usize, round: u64, bits: u64) -> (u64, u64) {
+        let p = &self.profile;
+        if p.is_ideal() {
+            return (0, 0);
+        }
+        let mut r = Rng::seed(
+            self.seed
+                ^ (wid as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ round.wrapping_mul(0xD1B5_4A32_D192_ED03),
+        );
+        let mut delay = p.latency_us;
+        if p.jitter_us > 0 {
+            delay += r.gen_range(p.jitter_us as usize + 1) as u64;
+        }
+        if p.bandwidth_bits_per_us > 0 {
+            delay += bits / p.bandwidth_bits_per_us;
+        }
+        let mut drops = 0u64;
+        while drops < MAX_RETRANSMITS && r.next_f32() < p.drop_prob {
+            drops += 1;
+        }
+        delay += drops * p.retransmit_us;
+        (delay, drops)
+    }
+
+    /// Barrier-collect: physically drain every outstanding event from the
+    /// inner transport and stamp each with its virtual arrival.
+    fn collect(&mut self) -> Result<()> {
+        while self.outstanding > 0 {
+            let event = self.inner.recv_event()?;
+            let (wid, delay_us, drops) = match &event {
+                Event::Uplink { wid, round, envelope } => {
+                    let (d, k) = self.link_delay(*wid, *round, envelope.wire_bits());
+                    (*wid, d, k)
+                }
+                // A death notice is control-plane: it surfaces at the
+                // dispatch stamp, ahead of any delayed gradient.
+                Event::Exit { wid } => (*wid, 0, 0),
+            };
+            self.grow_to(wid);
+            if self.owed[wid] {
+                self.owed[wid] = false;
+                self.outstanding -= 1;
+            }
+            self.seq += 1;
+            self.ready.push(Delivery {
+                at: self.dispatch_us[wid] + delay_us,
+                wid,
+                seq: self.seq,
+                delay_us,
+                drops,
+                event,
+            });
+        }
+        // Descending (virtual arrival, wid, pull order): `pop()` delivers
+        // the earliest, and the order is total and thread-independent.
+        self.ready
+            .sort_by(|a, b| (b.at, b.wid, b.seq).cmp(&(a.at, a.wid, a.seq)));
+        self.batch_max_wid = None;
+        Ok(())
+    }
+}
+
+impl<T: Transport> Transport for Sim<T> {
+    fn n_workers(&self) -> usize {
+        self.inner.n_workers()
+    }
+
+    fn send_downlink(
+        &mut self,
+        wid: usize,
+        theta: &Arc<Vec<f32>>,
+        ctx: &RoundCtx,
+    ) -> Result<bool> {
+        let ok = self.inner.send_downlink(wid, theta, ctx)?;
+        if ok {
+            self.grow_to(wid);
+            if !self.owed[wid] {
+                self.owed[wid] = true;
+                self.outstanding += 1;
+            }
+            self.dispatch_us[wid] = self.now_us;
+        }
+        Ok(ok)
+    }
+
+    fn recv_event(&mut self) -> Result<Event> {
+        if self.ready.is_empty() {
+            if self.outstanding == 0 {
+                bail!("sim: recv_event with no uplinks in flight");
+            }
+            self.collect()?;
+        }
+        let d = self.ready.pop().expect("collect left the queue empty");
+        self.now_us = self.now_us.max(d.at);
+        if matches!(d.event, Event::Uplink { .. }) {
+            self.grow_to(d.wid);
+            let reordered = self.batch_max_wid.is_some_and(|m| d.wid < m);
+            let link = &mut self.links[d.wid];
+            link.delivered += 1;
+            link.drops += d.drops;
+            link.delay_us += d.delay_us;
+            if reordered {
+                link.reordered += 1;
+            }
+            self.batch_max_wid =
+                Some(self.batch_max_wid.map_or(d.wid, |m| m.max(d.wid)));
+        }
+        Ok(d.event)
+    }
+
+    fn frame_overhead_bits(&self) -> u64 {
+        self.inner.frame_overhead_bits()
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        self.inner.shutdown()
+    }
+
+    fn detach(&mut self, want_state: bool) -> Result<Vec<Option<Vec<u8>>>> {
+        if !self.ready.is_empty() || self.outstanding > 0 {
+            bail!("sim: detach with uplinks still in flight");
+        }
+        self.inner.detach(want_state)
+    }
+
+    fn try_rejoin(&mut self) -> Result<Vec<usize>> {
+        self.inner.try_rejoin()
+    }
+
+    fn link_stats(&self) -> Vec<LinkStats> {
+        let mut v = self.links.clone();
+        if v.len() < self.inner.n_workers() {
+            v.resize(self.inner.n_workers(), LinkStats::default());
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::VecDeque;
+
+    use super::*;
+    use crate::compress::Payload;
+    use crate::coordinator::transport::Envelope;
+
+    /// Inner transport double: downlinks are recorded, uplinks come off a
+    /// scripted queue (in "physical" order the test chooses).
+    struct Scripted {
+        n: usize,
+        queue: VecDeque<Event>,
+        dispatched: Vec<(usize, u64)>,
+    }
+
+    impl Scripted {
+        fn new(n: usize) -> Self {
+            Scripted { n, queue: VecDeque::new(), dispatched: Vec::new() }
+        }
+
+        fn push_uplink(&mut self, wid: usize, round: u64, dim: usize) {
+            let envelope = Envelope {
+                wid: wid as u32,
+                round,
+                loss: 0.5,
+                payload: Payload::Dense(vec![0.25; dim]),
+            };
+            self.queue.push_back(Event::Uplink { wid, round, envelope });
+        }
+    }
+
+    impl Transport for Scripted {
+        fn n_workers(&self) -> usize {
+            self.n
+        }
+
+        fn send_downlink(
+            &mut self,
+            wid: usize,
+            _theta: &Arc<Vec<f32>>,
+            ctx: &RoundCtx,
+        ) -> Result<bool> {
+            self.dispatched.push((wid, ctx.round));
+            Ok(true)
+        }
+
+        fn recv_event(&mut self) -> Result<Event> {
+            match self.queue.pop_front() {
+                Some(e) => Ok(e),
+                None => bail!("scripted transport queue empty"),
+            }
+        }
+    }
+
+    fn dispatch_all(sim: &mut Sim<Scripted>, n: usize, round: u64) {
+        let theta = Arc::new(vec![0.0f32; 4]);
+        let ctx = RoundCtx::sync(round, 0.01);
+        for wid in 0..n {
+            assert!(sim.send_downlink(wid, &theta, &ctx).unwrap());
+        }
+    }
+
+    fn delivered_wids(sim: &mut Sim<Scripted>, n: usize) -> Vec<usize> {
+        (0..n)
+            .map(|_| match sim.recv_event().unwrap() {
+                Event::Uplink { wid, .. } => wid,
+                Event::Exit { wid } => panic!("unexpected exit for {wid}"),
+            })
+            .collect()
+    }
+
+    #[test]
+    fn ideal_profile_is_transparent_and_wid_ordered() {
+        let n = 4;
+        let mut inner = Scripted::new(n);
+        // Physical arrival order deliberately scrambled.
+        for wid in [2, 0, 3, 1] {
+            inner.push_uplink(wid, 0, 4);
+        }
+        let mut sim = Sim::new(inner, 7, SimProfile::parse("ideal").unwrap());
+        dispatch_all(&mut sim, n, 0);
+        // Zero delay everywhere → canonical wid order, regardless of the
+        // physical order threads would produce.
+        assert_eq!(delivered_wids(&mut sim, n), vec![0, 1, 2, 3]);
+        for l in sim.link_stats() {
+            assert_eq!(l, LinkStats { delivered: 1, ..LinkStats::default() });
+        }
+    }
+
+    #[test]
+    fn same_seed_reproduces_schedule_and_stats_bitwise() {
+        let run = |seed: u64| {
+            let n = 4;
+            let profile = SimProfile::parse("lossy-wan").unwrap();
+            let mut order = Vec::new();
+            let mut sim = {
+                let mut inner = Scripted::new(n);
+                for round in 0..6u64 {
+                    for wid in 0..n {
+                        inner.push_uplink(wid, round, 64);
+                    }
+                }
+                Sim::new(inner, seed, profile)
+            };
+            for round in 0..6u64 {
+                dispatch_all(&mut sim, n, round);
+                order.extend(delivered_wids(&mut sim, n));
+            }
+            (order, sim.link_stats())
+        };
+        let (order_a, stats_a) = run(41);
+        let (order_b, stats_b) = run(41);
+        assert_eq!(order_a, order_b);
+        assert_eq!(stats_a, stats_b);
+        // A different seed draws a different schedule: 24 delay draws
+        // agreeing by chance is ~impossible, and this is deterministic.
+        let (_, stats_c) = run(42);
+        let total = |s: &[LinkStats]| s.iter().map(|l| l.delay_us).sum::<u64>();
+        assert_ne!(total(&stats_a), total(&stats_c));
+    }
+
+    #[test]
+    fn drops_resurface_as_retransmit_delay_not_loss() {
+        let n = 3;
+        let mut profile = SimProfile::parse("lossy-wan").unwrap();
+        profile.drop_prob = 1.0; // every uplink "drops" MAX_RETRANSMITS times
+        let mut inner = Scripted::new(n);
+        for wid in 0..n {
+            inner.push_uplink(wid, 0, 8);
+        }
+        let mut sim = Sim::new(inner, 3, profile);
+        dispatch_all(&mut sim, n, 0);
+        let mut got = delivered_wids(&mut sim, n);
+        got.sort_unstable();
+        // Exactly-once delivery: nothing is ever truly lost.
+        assert_eq!(got, vec![0, 1, 2]);
+        for l in sim.link_stats() {
+            assert_eq!(l.delivered, 1);
+            assert_eq!(l.drops, MAX_RETRANSMITS);
+            assert!(
+                l.delay_us >= MAX_RETRANSMITS * profile.retransmit_us,
+                "delay {} missing the retransmit penalty",
+                l.delay_us
+            );
+        }
+    }
+
+    #[test]
+    fn bandwidth_term_charges_frame_bits() {
+        let profile = SimProfile {
+            latency_us: 10,
+            jitter_us: 0,
+            bandwidth_bits_per_us: 2,
+            drop_prob: 0.0,
+            retransmit_us: 0,
+        };
+        let mut inner = Scripted::new(1);
+        // Dense f32x16: (5 + 64)-byte payload + 16-byte header = 680 bits.
+        inner.push_uplink(0, 0, 16);
+        let mut sim = Sim::new(inner, 1, profile);
+        dispatch_all(&mut sim, 1, 0);
+        let _ = delivered_wids(&mut sim, 1);
+        let stats = sim.link_stats();
+        assert_eq!(stats[0].delay_us, 10 + 680 / 2);
+    }
+
+    #[test]
+    fn stragglers_stay_buffered_until_consumed() {
+        // Quorum-style consumption: take 2 of 4, leave 2 buffered, then
+        // drain them next "round" — they come back with their old tag.
+        let n = 4;
+        let mut inner = Scripted::new(n);
+        for wid in 0..n {
+            inner.push_uplink(wid, 0, 4);
+        }
+        let mut sim = Sim::new(inner, 11, SimProfile::parse("lossy-wan").unwrap());
+        dispatch_all(&mut sim, n, 0);
+        let first_two = delivered_wids(&mut sim, 2);
+        let rest: Vec<_> = (0..2)
+            .map(|_| match sim.recv_event().unwrap() {
+                Event::Uplink { wid, round, .. } => (wid, round),
+                Event::Exit { .. } => panic!("unexpected exit"),
+            })
+            .collect();
+        let mut all: Vec<_> =
+            first_two.into_iter().chain(rest.iter().map(|&(w, _)| w)).collect();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3]);
+        assert!(rest.iter().all(|&(_, r)| r == 0), "straggler kept round tag");
+    }
+
+    #[test]
+    fn exits_are_delivered_and_forwarded_promptly() {
+        let n = 2;
+        let mut inner = Scripted::new(n);
+        inner.push_uplink(0, 0, 4);
+        inner.queue.push_back(Event::Exit { wid: 1 });
+        let mut sim = Sim::new(inner, 5, SimProfile::parse("lossy-wan").unwrap());
+        dispatch_all(&mut sim, n, 0);
+        // The exit carries no gradient delay: it beats the delayed uplink.
+        assert!(matches!(sim.recv_event().unwrap(), Event::Exit { wid: 1 }));
+        assert!(matches!(sim.recv_event().unwrap(), Event::Uplink { wid: 0, .. }));
+        // Exits are control-plane: no delivery/drop accounting.
+        assert_eq!(sim.link_stats()[1], LinkStats::default());
+    }
+
+    #[test]
+    fn recv_without_dispatch_is_an_error() {
+        let mut sim =
+            Sim::new(Scripted::new(2), 1, SimProfile::parse("ideal").unwrap());
+        let err = sim.recv_event().unwrap_err().to_string();
+        assert!(err.contains("no uplinks in flight"), "{err}");
+    }
+
+    #[test]
+    fn profile_parse_enumerates_choices() {
+        assert!(SimProfile::parse("ideal").unwrap().is_ideal());
+        for name in ["lan", "wan", "lossy-wan"] {
+            assert!(!SimProfile::parse(name).unwrap().is_ideal(), "{name}");
+        }
+        let err = SimProfile::parse("carrier-pigeon").unwrap_err().to_string();
+        assert!(err.contains(SIM_PROFILE_CHOICES), "{err}");
+    }
+}

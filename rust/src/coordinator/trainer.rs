@@ -23,7 +23,10 @@ use std::time::Duration;
 
 use anyhow::{bail, ensure, Context, Result};
 
-use crate::algo::{AlgoSpec, ServerAlgo, ShardedServer, WorkerAlgo};
+use crate::algo::{
+    parse_byzantine, AggMode, AlgoSpec, ByzantineWorker, ServerAlgo, ShardedServer,
+    WorkerAlgo,
+};
 use crate::config::TrainConfig;
 use crate::data::{
     images::SyntheticImages, lm::ByteCorpus, shard::Sharding, text::SyntheticText,
@@ -44,6 +47,7 @@ use super::comm::CommLedger;
 use super::metrics::{RoundMetric, RunResult};
 use super::net::{assign_streams, TcpLeader};
 use super::runtime::ClusterRuntime;
+use super::sim::SimProfile;
 use super::supervisor::{RestartPolicy, Supervisor};
 use super::transport::{Transport, TransportSpec};
 
@@ -106,8 +110,9 @@ impl Trainer {
         let local_workers = if tspec.is_multiprocess() { 0 } else { cfg.workers };
         let (sources, evaluator, mut theta, fused) = build_workload(cfg, local_workers)?;
         let fused = if cfg.fused_update { fused } else { None };
-        let (mut workers, mut server) =
+        let (workers, mut server) =
             spec.build_fused(theta.len(), local_workers, cfg.rounds, fused);
+        let mut workers = apply_byzantine(&cfg.byzantine, workers)?;
         if cfg.server_shards > 1 {
             // Replace the full-θ server with S per-shard servers (the
             // validate() above already rejected the fused combination).
@@ -119,6 +124,7 @@ impl Trainer {
                 cfg.server_threaded,
             )?);
         }
+        server.set_agg_mode(AggMode::parse(&cfg.robust_agg)?)?;
         if let Some(ck) = ckpt {
             ensure!(
                 ck.theta.len() == theta.len(),
@@ -194,7 +200,15 @@ impl Trainer {
                         WorkerPool::sequential(s, workers)?
                     }
                 };
-                (in_proc.build(pool)?, None)
+                let transport = match in_proc {
+                    sim @ TransportSpec::Sim { .. } => sim.build_sim(
+                        pool,
+                        cfg.sim_seed,
+                        SimProfile::parse(&cfg.sim_profile)?,
+                    )?,
+                    bare => bare.build(pool)?,
+                };
+                (transport, None)
             }
         };
         let mut runtime = ClusterRuntime::new(transport, cfg.quorum, cfg.max_staleness)?;
@@ -249,6 +263,7 @@ impl Trainer {
                 cfg.server_threaded,
             )?);
         }
+        server.set_agg_mode(AggMode::parse(&cfg.robust_agg)?)?;
         if let Some(ck) = ckpt {
             ensure!(
                 ck.round <= cfg.rounds,
@@ -316,6 +331,10 @@ impl Trainer {
         self.worker_ms_total += out.worker_ms;
         if let Some(stats) = self.server.shard_stats() {
             self.ledger.sync_shard_routing(&stats.routed_bits);
+        }
+        let links = self.runtime.link_stats();
+        if !links.is_empty() {
+            self.ledger.sync_sim_links(&links);
         }
 
         let wall = sw.ms();
@@ -459,6 +478,11 @@ impl Trainer {
     /// result covers the whole job, not just its last segment.
     pub fn finalize(mut self) -> Result<RunResult> {
         self.finish()?;
+        // Capture the end-of-run straggler deliveries finish() drained.
+        let links = self.runtime.link_stats();
+        if !links.is_empty() {
+            self.ledger.sync_sim_links(&links);
+        }
         let final_eval = self.evaluator.eval(&self.theta)?;
         let server_ms_by_shard = self
             .server
@@ -488,6 +512,7 @@ impl Trainer {
             uplink_bits_by_worker: self.ledger.uplink_bits_by_worker.clone(),
             uplink_bits_by_shard: self.ledger.uplink_bits_by_shard.clone(),
             server_ms_by_shard,
+            sim_links: self.ledger.sim_links.clone(),
         })
     }
 
@@ -569,10 +594,37 @@ pub fn build_worker_parts(
     };
     // Build the full worker-half set and keep ours: stochastic
     // compressors are salted by worker index, so construction must go
-    // through the same path as the leader's.
+    // through the same path as the leader's. Byzantine wrapping happens
+    // here too, so a remote daemon corrupts exactly the gradients the
+    // leader's in-process pool would have.
     let spec = AlgoSpec::parse(&cfg.algo)?;
-    let mut workers = spec.build(src.dim(), cfg.workers, cfg.rounds).0;
+    let workers = spec.build(src.dim(), cfg.workers, cfg.rounds).0;
+    let mut workers = apply_byzantine(&cfg.byzantine, workers)?;
     Ok((src, workers.swap_remove(wid)))
+}
+
+/// Wrap the configured adversarial workers (`--byzantine`) around their
+/// honest protocol halves. Shared by the leader's in-process build and
+/// [`build_worker_parts`] so both sides of a TCP cluster agree on who is
+/// corrupted. Entries beyond `workers.len()` are ignored here (the leader
+/// builds zero local halves for a TCP run); `TrainConfig::validate`
+/// rejects genuinely out-of-range ids.
+fn apply_byzantine(
+    byzantine: &str,
+    workers: Vec<Box<dyn WorkerAlgo>>,
+) -> Result<Vec<Box<dyn WorkerAlgo>>> {
+    let specs = parse_byzantine(byzantine)?;
+    if specs.is_empty() {
+        return Ok(workers);
+    }
+    Ok(workers
+        .into_iter()
+        .enumerate()
+        .map(|(wid, algo)| match specs.iter().find(|s| s.wid == wid) {
+            Some(s) => ByzantineWorker::wrap(algo, s.mode),
+            None => algo,
+        })
+        .collect())
 }
 
 /// `n_sources` is how many *leader-side* gradient sources to build:

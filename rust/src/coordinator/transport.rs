@@ -27,6 +27,11 @@
 //!   whose connection drops surfaces as [`Event::Exit`] and becomes a
 //!   permanent straggler under partial participation.
 //!
+//! A fourth, composite spelling — `sim:inproc` / `sim:loopback` — wraps
+//! either in-process transport in the seeded network simulator
+//! ([`super::sim::Sim`]): per-link latency, jitter, bandwidth, and
+//! retransmit delay on a virtual clock, deterministic from `--sim-seed`.
+//!
 //! ## Envelope wire format
 //!
 //! An [`Envelope`] frames one message with a fixed 16-byte little-endian
@@ -59,6 +64,7 @@ use crate::algo::RoundCtx;
 use crate::compress::Payload;
 
 use super::cluster::WorkerPool;
+use super::sim::{LinkStats, Sim, SimProfile};
 
 /// Fixed frame header: `wid u32 | round u64 | loss f32`.
 pub const ENVELOPE_HEADER_BYTES: usize = 16;
@@ -196,6 +202,14 @@ pub trait Transport {
     fn try_rejoin(&mut self) -> Result<Vec<usize>> {
         Ok(Vec::new())
     }
+
+    /// Per-link delivery statistics (delivered / retransmitted /
+    /// reordered / cumulative virtual delay), one entry per worker id.
+    /// Only the seeded network simulator ([`super::sim::Sim`]) collects
+    /// these; every real transport reports none.
+    fn link_stats(&self) -> Vec<LinkStats> {
+        Vec::new()
+    }
 }
 
 /// In-process transport: messages move as Rust values over the pool's
@@ -330,7 +344,28 @@ impl Transport for Loopback {
 
 /// The valid `--transport` spellings, for every error message that has
 /// to enumerate them.
-pub const TRANSPORT_CHOICES: &str = "inproc | loopback | tcp[:port]";
+pub const TRANSPORT_CHOICES: &str =
+    "inproc | loopback | tcp[:port] | sim:inproc | sim:loopback";
+
+/// The transports the seeded network simulator can wrap: in-process
+/// only. `sim:tcp` is rejected at parse time — the simulator re-times
+/// arrivals on a virtual clock, which real sockets (with their own
+/// physical timing) would fight.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimInner {
+    InProc,
+    Loopback,
+}
+
+impl SimInner {
+    /// The plain spec of the wrapped transport.
+    pub fn spec(self) -> TransportSpec {
+        match self {
+            SimInner::InProc => TransportSpec::InProc,
+            SimInner::Loopback => TransportSpec::Loopback,
+        }
+    }
+}
 
 /// Parsed transport selector (`TrainConfig::transport` / `--transport`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -343,6 +378,9 @@ pub enum TransportSpec {
     /// address first). `port` 0 (the bare `tcp` spelling) binds an
     /// ephemeral port.
     Tcp { port: u16 },
+    /// An in-process transport wrapped in the seeded network simulator
+    /// ([`super::sim::Sim`], `--sim-seed` / `--sim-profile`).
+    Sim { inner: SimInner },
 }
 
 impl TransportSpec {
@@ -351,6 +389,8 @@ impl TransportSpec {
             "inproc" => Ok(TransportSpec::InProc),
             "loopback" => Ok(TransportSpec::Loopback),
             "tcp" => Ok(TransportSpec::Tcp { port: 0 }),
+            "sim:inproc" => Ok(TransportSpec::Sim { inner: SimInner::InProc }),
+            "sim:loopback" => Ok(TransportSpec::Sim { inner: SimInner::Loopback }),
             other => {
                 if let Some(port) = other.strip_prefix("tcp:") {
                     let port: u16 = port.parse().map_err(|_| {
@@ -360,6 +400,19 @@ impl TransportSpec {
                         )
                     })?;
                     return Ok(TransportSpec::Tcp { port });
+                }
+                if let Some(inner) = other.strip_prefix("sim:") {
+                    if inner == "tcp" || inner.starts_with("tcp:") {
+                        bail!(
+                            "sim cannot wrap tcp: the simulator re-times arrivals \
+                             on a virtual clock, which needs in-process workers \
+                             (valid transports: {TRANSPORT_CHOICES})"
+                        );
+                    }
+                    bail!(
+                        "unknown sim inner transport '{inner}' \
+                         (valid transports: {TRANSPORT_CHOICES})"
+                    );
                 }
                 bail!("unknown transport '{other}' (valid transports: {TRANSPORT_CHOICES})")
             }
@@ -383,6 +436,31 @@ impl TransportSpec {
             TransportSpec::Tcp { .. } => {
                 bail!("tcp transport is assembled by the trainer, not from a worker pool")
             }
+            TransportSpec::Sim { .. } => {
+                bail!(
+                    "sim transport needs its seed and profile — use \
+                     TransportSpec::build_sim (the trainer does)"
+                )
+            }
+        }
+    }
+
+    /// Wrap a worker pool in the seeded network simulator around this
+    /// spec's inner transport ([`Sim`]). Only valid for `sim:*` specs.
+    pub fn build_sim(
+        self,
+        pool: WorkerPool,
+        seed: u64,
+        profile: SimProfile,
+    ) -> Result<Box<dyn Transport>> {
+        match self {
+            TransportSpec::Sim { inner: SimInner::InProc } => {
+                Ok(Box::new(Sim::new(InProc::new(pool), seed, profile)))
+            }
+            TransportSpec::Sim { inner: SimInner::Loopback } => {
+                Ok(Box::new(Sim::new(Loopback::new(pool), seed, profile)))
+            }
+            other => bail!("build_sim on non-sim transport {other:?}"),
         }
     }
 }
@@ -459,12 +537,29 @@ mod tests {
             TransportSpec::parse("tcp:7001").unwrap(),
             TransportSpec::Tcp { port: 7001 }
         );
+        assert_eq!(
+            TransportSpec::parse("sim:inproc").unwrap(),
+            TransportSpec::Sim { inner: SimInner::InProc }
+        );
+        assert_eq!(
+            TransportSpec::parse("sim:loopback").unwrap(),
+            TransportSpec::Sim { inner: SimInner::Loopback }
+        );
+        assert_eq!(SimInner::Loopback.spec(), TransportSpec::Loopback);
         assert!(TransportSpec::Tcp { port: 0 }.is_multiprocess());
         assert!(!TransportSpec::InProc.is_multiprocess());
+        // The simulator runs in the leader process over a worker pool.
+        assert!(!TransportSpec::parse("sim:inproc").unwrap().is_multiprocess());
         // Unknown spellings and bad ports enumerate the valid choices.
-        for bad in ["udp", "tcp:notaport", "tcp:70000"] {
+        for bad in ["udp", "tcp:notaport", "tcp:70000", "sim:udp", "sim:"] {
             let err = TransportSpec::parse(bad).unwrap_err().to_string();
             assert!(err.contains("inproc | loopback | tcp[:port]"), "{bad}: {err}");
+        }
+        // Sim over real sockets is a parse-time contradiction.
+        for bad in ["sim:tcp", "sim:tcp:7000"] {
+            let err = TransportSpec::parse(bad).unwrap_err().to_string();
+            assert!(err.contains("sim cannot wrap tcp"), "{bad}: {err}");
+            assert!(err.contains(TRANSPORT_CHOICES), "{bad}: {err}");
         }
     }
 

@@ -74,7 +74,16 @@ commands:
            --transport T       inproc | loopback (byte-framed envelopes,
                                bitwise-identical trajectories) | tcp[:port]
                                (real worker processes over localhost
-                               sockets; port 0/omitted = ephemeral)
+                               sockets; port 0/omitted = ephemeral) |
+                               sim:inproc | sim:loopback (seeded network
+                               simulator wrapping the inner transport)
+           --sim-seed N        simulator RNG seed: same seed + profile =
+                               bit-for-bit identical schedules and stats
+           --sim-profile P     ideal | lan | wan | lossy-wan
+           --byzantine SPECS   adversarial workers, comma-separated
+                               wid:mode (0:scale:-3 | 1:signflip | 2:stale)
+           --robust-agg M      server batch estimator: mean | median |
+                               trimmed:<k> (byzantine-tolerant)
            --spawn-workers t   with tcp: spawn the worker daemons as child
                                processes (otherwise the leader waits for
                                `comp-ams worker` processes to connect)
@@ -117,8 +126,9 @@ const CFG_FLAGS: &[&str] = &[
     "model", "algo", "workers", "rounds", "lr", "seed", "sharding",
     "eval-every", "eval-batches", "log-every", "fused", "threaded",
     "server-shards", "server-threaded", "transport", "spawn-workers",
-    "quorum", "max-staleness", "artifacts", "config", "decay-at",
-    "decay-factor", "rounds-per-epoch",
+    "quorum", "max-staleness", "sim-seed", "sim-profile", "byzantine",
+    "robust-agg", "artifacts", "config", "decay-at", "decay-factor",
+    "rounds-per-epoch",
 ];
 
 /// Build a [`TrainConfig`] from `--config` (if given) plus flag
@@ -158,6 +168,10 @@ fn cfg_from_args(args: &Args) -> Result<TrainConfig> {
     cfg.spawn_workers = args.bool_or("spawn-workers", cfg.spawn_workers)?;
     cfg.quorum = args.usize_or("quorum", cfg.quorum)?;
     cfg.max_staleness = args.u64_or("max-staleness", cfg.max_staleness)?;
+    cfg.sim_seed = args.u64_or("sim-seed", cfg.sim_seed)?;
+    cfg.sim_profile = args.str_or("sim-profile", &cfg.sim_profile);
+    cfg.byzantine = args.str_or("byzantine", &cfg.byzantine);
+    cfg.robust_agg = args.str_or("robust-agg", &cfg.robust_agg);
     cfg.rounds_per_epoch = args.u64_or("rounds-per-epoch", cfg.rounds_per_epoch)?;
     cfg.artifacts = PathBuf::from(args.str_or("artifacts", &cfg.artifacts.to_string_lossy()));
     if let Some(at) = args.get("decay-at") {
@@ -206,6 +220,18 @@ fn cmd_train(args: &Args) -> Result<()> {
         eprintln!(
             "quorum: {} stale uplinks applied, {} dropped past --max-staleness",
             run.stale_uplinks, run.dropped_uplinks
+        );
+    }
+    if !run.sim_links.is_empty() {
+        let delivered: u64 = run.sim_links.iter().map(|l| l.delivered).sum();
+        let drops: u64 = run.sim_links.iter().map(|l| l.drops).sum();
+        let reordered: u64 = run.sim_links.iter().map(|l| l.reordered).sum();
+        let delay_ms: f64 =
+            run.sim_links.iter().map(|l| l.delay_us).sum::<u64>() as f64 / 1e3;
+        eprintln!(
+            "sim: {} uplinks delivered | {} drops (retransmitted) | {} reordered \
+             | {:.1} virtual-ms total link delay",
+            delivered, drops, reordered, delay_ms
         );
     }
     if !run.server_ms_by_shard.is_empty() {

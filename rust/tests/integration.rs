@@ -212,6 +212,96 @@ fn qadam_and_onebit_report_worker_memory_overhead() {
 }
 
 #[test]
+fn lossy_wan_speedup_sweep_holds_under_simulated_impairment() {
+    // Corollary 2 under adversarial networking: the n ∈ {1, 2, 4, 8}
+    // sweep with lr ∝ √n runs over the seeded lossy-WAN simulator and
+    // rounds-to-target must still improve monotonically (small slack for
+    // the discrete target crossing), ending at the ≥2× endpoint bar.
+    let run_for = |n: usize| {
+        let mut cfg = TrainConfig::preset("logistic", "comp-ams-topk:0.05");
+        cfg.workers = n;
+        cfg.rounds = 4000;
+        cfg.lr = 0.005 * (n as f32).sqrt();
+        cfg.eval_every = 0;
+        cfg.transport = "sim:inproc".into();
+        cfg.sim_profile = "lossy-wan".into();
+        cfg.sim_seed = 23;
+        train(&cfg).unwrap()
+    };
+    let mut rounds = Vec::new();
+    let mut drops = 0u64;
+    for n in [1usize, 2, 4, 8] {
+        let run = run_for(n);
+        drops += run.sim_links.iter().map(|l| l.drops).sum::<u64>();
+        rounds.push(run.rounds_to_loss(0.25, 25).unwrap_or_else(|| {
+            panic!("n={n} never hit the target loss under lossy-wan")
+        }));
+    }
+    for w in rounds.windows(2) {
+        assert!(
+            w[1] as f64 <= w[0] as f64 * 1.15 + 5.0,
+            "speedup not monotone under lossy-wan: {rounds:?}"
+        );
+    }
+    assert!(
+        rounds[3] * 2 <= rounds[0],
+        "no 2x speedup at n=8 under lossy-wan: {rounds:?}"
+    );
+    assert!(drops > 0, "lossy-wan sweep recorded no seeded drops");
+}
+
+#[test]
+fn trimmed_mean_survives_byzantine_worker_where_mean_stalls() {
+    // The adversarial acceptance bar. On the iid quadratic every honest
+    // worker's expected gradient is the same g, so one worker scaled by
+    // -3 makes the plain batch mean pure zero-mean noise — averaging
+    // provably cannot descend. Trimmed-mean (k=1) discards the outlier
+    // coordinate-wise and recovers honest descent on the same run.
+    let mut cfg = quad_cfg("dist-ams");
+    cfg.byzantine = "0:scale:-3".into();
+
+    let mean = train(&cfg).unwrap();
+    let first = mean.metrics[0].train_loss;
+    let mean_last = mean.final_train_loss(20);
+    assert!(
+        mean_last >= first - 0.2,
+        "plain averaging should stall under scale:-3: {first:.3} -> {mean_last:.3}"
+    );
+
+    cfg.robust_agg = "trimmed:1".into();
+    let robust = train(&cfg).unwrap();
+    let robust_last = robust.final_train_loss(20);
+    assert!(
+        robust_last < first - 0.4,
+        "trimmed:1 should descend under scale:-3: {first:.3} -> {robust_last:.3}"
+    );
+    assert!(
+        robust_last < mean_last - 0.2,
+        "trimmed:1 ({robust_last:.3}) should beat mean ({mean_last:.3})"
+    );
+}
+
+#[test]
+fn robust_estimators_descend_with_sign_flipped_worker() {
+    // Both robust estimators discard the extremes coordinate-wise; with
+    // one sign-flipped worker and three honest ones each reduces to a
+    // mean over the middle honest values wherever |g| dominates the
+    // noise — both runs must keep descending.
+    for robust in ["median", "trimmed:1"] {
+        let mut cfg = quad_cfg("dist-ams");
+        cfg.byzantine = "0:signflip".into();
+        cfg.robust_agg = robust.into();
+        let run = train(&cfg).unwrap();
+        let first = run.metrics[0].train_loss;
+        let last = run.final_train_loss(20);
+        assert!(
+            last < first - 0.4,
+            "{robust} stalled under signflip: {first:.3} -> {last:.3}"
+        );
+    }
+}
+
+#[test]
 fn per_worker_uplink_breakdown_reflects_compression() {
     // Figure-2-style reporting: the per-worker uplink breakdown must sum
     // to the total and be uniform for a deterministic same-ratio sparsifier.

@@ -1,0 +1,151 @@
+//! Seeded network-simulator properties through the full Trainer: the
+//! ideal profile is bitwise transparent over both in-process transports,
+//! impairments under full quorum change link statistics but never the
+//! math, and a fixed `--sim-seed` reproduces the whole impaired run —
+//! losses, staleness counters, and per-link stats — bit for bit.
+
+use comp_ams::config::TrainConfig;
+use comp_ams::coordinator::trainer::train;
+use comp_ams::coordinator::LinkStats;
+
+/// The acceptance-bar protocol list (ROADMAP tier 1).
+const PROTOCOLS: [&str; 6] = [
+    "dist-ams",
+    "comp-ams-topk:0.05",
+    "comp-ams-blocksign:64",
+    "qadam",
+    "1bitadam:10",
+    "dist-sgd",
+];
+
+fn sim_cfg(algo: &str, transport: &str, profile: &str) -> TrainConfig {
+    let mut cfg = TrainConfig::preset("quadratic", algo);
+    cfg.workers = 3;
+    cfg.rounds = 30;
+    cfg.lr = 0.01;
+    cfg.eval_every = 0;
+    cfg.transport = transport.into();
+    cfg.sim_profile = profile.into();
+    cfg
+}
+
+fn total_delay(links: &[LinkStats]) -> u64 {
+    links.iter().map(|l| l.delay_us).sum()
+}
+
+fn total_drops(links: &[LinkStats]) -> u64 {
+    links.iter().map(|l| l.drops).sum()
+}
+
+#[test]
+fn ideal_sim_is_bitwise_transparent_across_protocols() {
+    // Zero impairment ⇒ the wrapper must be invisible: per-round losses
+    // and uplink bits identical to the bare transport, for every protocol
+    // string and for both wrappable transports.
+    for algo in PROTOCOLS {
+        for (bare, wrapped) in [("inproc", "sim:inproc"), ("loopback", "sim:loopback")] {
+            let base = train(&sim_cfg(algo, bare, "ideal")).unwrap();
+            let sim = train(&sim_cfg(algo, wrapped, "ideal")).unwrap();
+            assert!(base.sim_links.is_empty(), "{algo}/{bare}: bare run has link stats");
+            assert_eq!(base.metrics.len(), sim.metrics.len(), "{algo}/{wrapped}");
+            for (ma, mb) in base.metrics.iter().zip(&sim.metrics) {
+                assert_eq!(
+                    ma.train_loss.to_bits(),
+                    mb.train_loss.to_bits(),
+                    "{algo}/{wrapped}: loss diverged at round {}",
+                    ma.round
+                );
+                assert_eq!(
+                    ma.uplink_bits, mb.uplink_bits,
+                    "{algo}/{wrapped}: uplink bits diverged at round {}",
+                    ma.round
+                );
+            }
+            // The ideal profile delivers every uplink with zero delay and
+            // zero drops — and the stats prove it.
+            assert_eq!(sim.sim_links.len(), 3, "{algo}/{wrapped}");
+            for (wid, l) in sim.sim_links.iter().enumerate() {
+                assert_eq!(
+                    *l,
+                    LinkStats { delivered: 30, ..LinkStats::default() },
+                    "{algo}/{wrapped}: link {wid}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn impairments_under_full_quorum_change_stats_not_math() {
+    // With K = n the runtime waits for the whole batch and sorts it by
+    // wid before aggregating, so WAN-shaped delays, jitter, and seeded
+    // retransmits may only show up in the link statistics — the loss
+    // trajectory stays bitwise identical to the bare transport.
+    for algo in ["dist-ams", "comp-ams-topk:0.05"] {
+        let mut base_cfg = sim_cfg(algo, "inproc", "ideal");
+        base_cfg.workers = 4;
+        base_cfg.rounds = 60;
+        let mut wan_cfg = sim_cfg(algo, "sim:inproc", "lossy-wan");
+        wan_cfg.workers = 4;
+        wan_cfg.rounds = 60;
+        wan_cfg.sim_seed = 17;
+        let base = train(&base_cfg).unwrap();
+        let wan = train(&wan_cfg).unwrap();
+        for (ma, mb) in base.metrics.iter().zip(&wan.metrics) {
+            assert_eq!(
+                ma.train_loss.to_bits(),
+                mb.train_loss.to_bits(),
+                "{algo}: lossy-wan sim perturbed the math at round {}",
+                ma.round
+            );
+        }
+        assert_eq!(wan.stale_uplinks, 0, "{algo}: staleness under full quorum");
+        assert_eq!(wan.dropped_uplinks, 0, "{algo}");
+        // 240 seeded uplinks at 5% drop probability and 60 ms base
+        // latency: the stats must show real impairment.
+        assert!(total_delay(&wan.sim_links) > 0, "{algo}: no link delay recorded");
+        assert!(total_drops(&wan.sim_links) > 0, "{algo}: no seeded drops recorded");
+        let delivered: u64 = wan.sim_links.iter().map(|l| l.delivered).sum();
+        assert_eq!(delivered, 4 * 60, "{algo}: exactly-once delivery");
+    }
+}
+
+fn lossy_quorum_cfg(sim_seed: u64) -> TrainConfig {
+    let mut cfg = sim_cfg("comp-ams-topk:0.05", "sim:inproc", "lossy-wan");
+    cfg.workers = 4;
+    cfg.quorum = 3;
+    cfg.max_staleness = 2;
+    cfg.rounds = 80;
+    cfg.sim_seed = sim_seed;
+    cfg
+}
+
+#[test]
+fn fixed_sim_seed_is_bit_for_bit_reproducible() {
+    // Under K < n the seeded schedule decides which link straggles each
+    // round, so staleness — and through error feedback, the trajectory
+    // itself — is a pure function of --sim-seed. Two runs with the same
+    // seed must agree on everything; a different seed must draw a
+    // different schedule.
+    let a = train(&lossy_quorum_cfg(7)).unwrap();
+    let b = train(&lossy_quorum_cfg(7)).unwrap();
+    assert_eq!(a.metrics.len(), b.metrics.len());
+    for (ma, mb) in a.metrics.iter().zip(&b.metrics) {
+        assert_eq!(ma.train_loss.to_bits(), mb.train_loss.to_bits());
+        assert_eq!(ma.uplink_bits, mb.uplink_bits);
+    }
+    assert_eq!(a.stale_uplinks, b.stale_uplinks);
+    assert_eq!(a.dropped_uplinks, b.dropped_uplinks);
+    assert_eq!(a.sim_links, b.sim_links);
+    // The whole point of the testbed: the impaired schedule actually
+    // produced stragglers, deterministically.
+    assert!(a.stale_uplinks > 0, "lossy-wan quorum run produced no stragglers");
+    assert!(total_drops(&a.sim_links) > 0);
+
+    let c = train(&lossy_quorum_cfg(8)).unwrap();
+    assert_ne!(
+        total_delay(&a.sim_links),
+        total_delay(&c.sim_links),
+        "different sim seeds drew identical schedules"
+    );
+}
