@@ -76,7 +76,7 @@ fn main() {
                 let ctx = RoundCtx::sync(round, 0.01);
                 let rounds = pool.run_round(&theta, &ctx).unwrap();
                 let msgs: Vec<_> = rounds.into_iter().map(|w| w.payload).collect();
-                server.step(&mut theta, &msgs, &ctx).unwrap();
+                server.step(&mut theta, &comp_ams::compress::as_views(&msgs), &ctx).unwrap();
                 round += 1;
             },
         );
@@ -121,7 +121,7 @@ fn main() {
             &format!("server-step d={dim} n={n} comp-ams-topk:0.01 S={shards} {label}"),
             || {
                 let ctx = RoundCtx::sync(round, 0.01);
-                server.step(&mut theta, &uplinks, &ctx).unwrap();
+                server.step(&mut theta, &comp_ams::compress::as_views(&uplinks), &ctx).unwrap();
                 round += 1;
             },
         );

@@ -1,8 +1,10 @@
 //! Wire codec micro-benches: encode/decode/add_into throughput for each
-//! payload kind, the server-side averaging hot loop, and the sharded
-//! server's slice-by-range routing primitive.
+//! payload kind, the zero-copy uplink path raced against the old
+//! copy-per-hop path, the server-side averaging hot loop, and the
+//! sharded server's slice-by-range routing primitive.
 
-use comp_ams::compress::{BlockSign, Compressor, Payload, TopK};
+use comp_ams::compress::{as_views, BlockSign, Compressor, Payload, PayloadView, TopK};
+use comp_ams::coordinator::transport::{encode_envelope_into, Envelope, EnvelopeView};
 use comp_ams::testing::bench::bench_main;
 use comp_ams::util::rng::Rng;
 
@@ -31,6 +33,12 @@ fn main() {
         });
         b.note(&format!("  -> {:.1} MB/s on-wire", r.mb_per_sec(bytes)));
 
+        // Borrowed decode: header validation only, no owned vectors.
+        let r = b.bench(&format!("decode-view {name}"), || {
+            std::hint::black_box(PayloadView::parse(&buf).unwrap());
+        });
+        b.note(&format!("  -> {:.1} MB/s on-wire", r.mb_per_sec(bytes)));
+
         let mut acc = vec![0.0f32; d];
         let r = b.bench(&format!("add_into {name}"), || {
             p.add_into(&mut acc).unwrap();
@@ -38,11 +46,41 @@ fn main() {
         b.note(&format!("  -> {:.1} M coord/s", d as f64 / r.mean.as_secs_f64() / 1e6));
     }
 
+    // Zero-copy uplink race (one envelope: 16-byte header + dense body).
+    // "before" re-enacts the pre-zero-copy hop: encode the payload into
+    // its own Vec, copy it into a fresh envelope buffer, decode back to
+    // an owned Vec<f32>, then consume. "after" is the only path the
+    // transports take now: serialize straight into a pooled scratch
+    // buffer and consume a borrowed EnvelopeView over it.
+    let dense = Payload::Dense(x.clone());
+    let env_bytes = 16 + dense.wire_bits() as usize / 8;
+    let mut acc = vec![0.0f32; d];
+    let r = b.bench("uplink d=500k dense before (copy/hop + owned decode)", || {
+        let body = dense.encode();
+        let mut buf = Vec::with_capacity(16 + body.len());
+        buf.extend_from_slice(&3u32.to_le_bytes());
+        buf.extend_from_slice(&7u64.to_le_bytes());
+        buf.extend_from_slice(&0.5f32.to_le_bytes());
+        buf.extend_from_slice(&body);
+        let env = Envelope::decode(&buf).unwrap();
+        env.payload.add_into(&mut acc).unwrap();
+    });
+    b.note(&format!("  -> {:.1} MB/s on-wire", r.mb_per_sec(env_bytes)));
+
+    let mut scratch: Vec<u8> = Vec::new();
+    let r = b.bench("uplink d=500k dense after (pooled scratch + view)", || {
+        scratch.clear();
+        encode_envelope_into(3, 7, 0.5, &dense.view(), &mut scratch);
+        let env = EnvelopeView::parse(&scratch).unwrap();
+        env.payload.add_into(&mut acc).unwrap();
+    });
+    b.note(&format!("  -> {:.1} MB/s on-wire", r.mb_per_sec(env_bytes)));
+
     // n-worker averaging (the leader aggregation loop, n=16).
     let msgs: Vec<Payload> = (0..16).map(|_| TopK::new(0.01).compress(&x)).collect();
     let mut out = Vec::new();
     let r = b.bench("average 16x sparse(1%) d=500k", || {
-        comp_ams::algo::average_payloads(&msgs, d, &mut out).unwrap();
+        comp_ams::algo::average_payloads(&as_views(&msgs), d, &mut out).unwrap();
     });
     b.note(&format!("  -> {:.2} ms/round", r.mean.as_secs_f64() * 1e3));
 

@@ -20,7 +20,7 @@ use std::rc::Rc;
 
 use anyhow::Result;
 
-use crate::compress::{Compressor, CompressorSpec, ErrorFeedback, Payload};
+use crate::compress::{Compressor, CompressorSpec, ErrorFeedback, Payload, PayloadView};
 use crate::optim::{AmsGrad, ServerOpt};
 use crate::runtime::OptimizerExe;
 
@@ -97,11 +97,11 @@ impl CompAmsServer {
         }
     }
 
-    /// Aggregate the round's decoded payloads into the recycled `avg`
+    /// Aggregate the round's payload views into the recycled `avg`
     /// buffer and hand it out; the caller returns it via `self.avg` when
     /// done. Shared by the pure-Rust and the fused-kernel step so the
     /// aggregation semantics cannot diverge between the two backends.
-    fn averaged(&mut self, msgs: &[Payload], dim: usize) -> Result<Vec<f32>> {
+    fn averaged(&mut self, msgs: &[PayloadView<'_>], dim: usize) -> Result<Vec<f32>> {
         let mut avg = std::mem::take(&mut self.avg);
         aggregate_payloads(msgs, dim, &mut avg, self.agg)?;
         Ok(avg)
@@ -120,7 +120,7 @@ impl ServerAlgo for CompAmsServer {
     fn step(
         &mut self,
         theta: &mut [f32],
-        msgs: &[Payload],
+        msgs: &[PayloadView<'_>],
         ctx: &RoundCtx,
     ) -> Result<()> {
         let avg = self.averaged(msgs, theta.len())?;
@@ -185,7 +185,7 @@ impl ServerAlgo for FusedCompAmsServer {
     fn step(
         &mut self,
         theta: &mut [f32],
-        msgs: &[Payload],
+        msgs: &[PayloadView<'_>],
         ctx: &RoundCtx,
     ) -> Result<()> {
         let avg = self.inner.averaged(msgs, theta.len())?;
@@ -260,6 +260,7 @@ pub fn server(dim: usize, compressor: &CompressorSpec, label: &'static str) -> C
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::as_views;
 
     fn ctx(round: u64) -> RoundCtx {
         RoundCtx::sync(round, 0.01)
@@ -293,7 +294,7 @@ mod tests {
                 .iter_mut()
                 .map(|w| w.process(&g, &ctx(r as u64)).unwrap())
                 .collect();
-            server.step(&mut theta_a, &msgs, &ctx(r as u64)).unwrap();
+            server.step(&mut theta_a, &as_views(&msgs), &ctx(r as u64)).unwrap();
             reference.step(&mut theta_b, &g, 0.01);
             assert_eq!(theta_a, theta_b, "round {r}");
         }
@@ -311,12 +312,12 @@ mod tests {
 
         let (_, mut mean_server) = build(dim, 4, CompressorSpec::Identity, false);
         let mut theta = vec![1.0f32; dim];
-        mean_server.step(&mut theta, &msgs, &ctx(0)).unwrap();
+        mean_server.step(&mut theta, &as_views(&msgs), &ctx(0)).unwrap();
         assert_eq!(theta, vec![1.0; dim], "zero mean must take a null step");
 
         let (_, mut trimmed) = build(dim, 4, CompressorSpec::Identity, false);
         trimmed.set_agg_mode(AggMode::Trimmed(1)).unwrap();
-        trimmed.step(&mut theta, &msgs, &ctx(0)).unwrap();
+        trimmed.step(&mut theta, &as_views(&msgs), &ctx(0)).unwrap();
         assert!(
             theta.iter().all(|&t| t < 1.0),
             "trimmed mean must keep the honest descent direction: {theta:?}"

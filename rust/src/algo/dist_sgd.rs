@@ -3,7 +3,7 @@
 
 use anyhow::Result;
 
-use crate::compress::Payload;
+use crate::compress::{Payload, PayloadView};
 use crate::optim::{MomentumSgd, ServerOpt};
 
 use super::{aggregate_payloads, AggMode, Protocol, RoundCtx, ServerAlgo, WorkerAlgo};
@@ -45,7 +45,7 @@ impl ServerAlgo for DistSgdServer {
     fn step(
         &mut self,
         theta: &mut [f32],
-        msgs: &[Payload],
+        msgs: &[PayloadView<'_>],
         ctx: &RoundCtx,
     ) -> Result<()> {
         let mut avg = std::mem::take(&mut self.avg);
@@ -101,7 +101,7 @@ mod tests {
             Payload::Dense(vec![1.0, 0.0, 2.0]),
             Payload::Dense(vec![3.0, 0.0, 0.0]),
         ];
-        server.step(&mut theta, &msgs, &ctx).unwrap();
+        server.step(&mut theta, &crate::compress::as_views(&msgs), &ctx).unwrap();
         assert_eq!(theta, vec![-2.0, 0.0, -1.0]);
     }
 

@@ -58,7 +58,7 @@ use std::rc::Rc;
 
 use anyhow::{anyhow, bail, ensure, Result};
 
-use crate::compress::{CompressorSpec, Payload};
+use crate::compress::{CompressorSpec, Payload, PayloadView};
 use crate::runtime::OptimizerExe;
 
 /// Per-round context handed to both sides of the protocol.
@@ -129,8 +129,17 @@ pub trait WorkerAlgo: Send {
 pub trait ServerAlgo {
     fn name(&self) -> String;
 
-    fn step(&mut self, theta: &mut [f32], msgs: &[Payload], ctx: &RoundCtx)
-        -> Result<()>;
+    /// Apply one aggregated update to `theta`. Uplinks arrive as borrowed
+    /// [`PayloadView`]s — for frame-backed messages these index straight
+    /// into the received bytes, so the server never materializes owned
+    /// index/value vectors (the zero-copy uplink path). Owned payloads
+    /// enter via [`Payload::view`] / [`crate::compress::as_views`].
+    fn step(
+        &mut self,
+        theta: &mut [f32],
+        msgs: &[PayloadView<'_>],
+        ctx: &RoundCtx,
+    ) -> Result<()>;
 
     /// Per-shard accounting when this server partitions θ across several
     /// shard optimizers ([`sharded::ShardedServer`] overrides this);
@@ -356,7 +365,11 @@ pub(crate) fn per_worker_spec(spec: &CompressorSpec, wid: usize) -> CompressorSp
 }
 
 /// Average the decoded payloads into a dense gradient (shared helper).
-pub fn average_payloads(msgs: &[Payload], dim: usize, out: &mut Vec<f32>) -> Result<()> {
+pub fn average_payloads(
+    msgs: &[PayloadView<'_>],
+    dim: usize,
+    out: &mut Vec<f32>,
+) -> Result<()> {
     out.clear();
     out.resize(dim, 0.0);
     for m in msgs {
@@ -438,7 +451,7 @@ impl std::fmt::Display for AggMode {
 /// *quorum* batch would need the clamp, so it only engages on transient
 /// short batches (crashed workers below quorum).
 pub fn aggregate_payloads(
-    msgs: &[Payload],
+    msgs: &[PayloadView<'_>],
     dim: usize,
     out: &mut Vec<f32>,
     mode: AggMode,
@@ -479,6 +492,7 @@ pub fn aggregate_payloads(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::as_views;
 
     #[test]
     fn parse_all_forms() {
@@ -531,7 +545,7 @@ mod tests {
             Payload::Sparse { dim: 3, idx: vec![1], val: vec![4.0] },
         ];
         let mut out = Vec::new();
-        average_payloads(&msgs, 3, &mut out).unwrap();
+        average_payloads(&as_views(&msgs), 3, &mut out).unwrap();
         assert_eq!(out, vec![1.0, 2.0, 0.0]);
     }
 
@@ -558,19 +572,20 @@ mod tests {
             Payload::Dense(vec![-100.0, 100.0]),
         ];
         let mut out = Vec::new();
+        let views = as_views(&msgs);
         // Even batch: median is the mean of the middle two order stats.
-        aggregate_payloads(&msgs, 2, &mut out, AggMode::Median).unwrap();
+        aggregate_payloads(&views, 2, &mut out, AggMode::Median).unwrap();
         assert_eq!(out, vec![0.5 * (0.8 + 1.0), 0.5 * (-2.2 + -2.0)]);
         // Trimmed:1 drops the outlier (and one honest extreme) per side.
-        aggregate_payloads(&msgs, 2, &mut out, AggMode::Trimmed(1)).unwrap();
+        aggregate_payloads(&views, 2, &mut out, AggMode::Trimmed(1)).unwrap();
         assert_eq!(out, vec![0.5 * (0.8 + 1.0), 0.5 * (-2.2 + -2.0)]);
         // Odd batch: exact middle order statistic.
-        aggregate_payloads(&msgs[..3], 2, &mut out, AggMode::Median).unwrap();
+        aggregate_payloads(&views[..3], 2, &mut out, AggMode::Median).unwrap();
         assert_eq!(out, vec![1.0, -2.0]);
         // Mean delegates to average_payloads (handles sparse unchanged).
-        aggregate_payloads(&msgs[..3], 2, &mut out, AggMode::Mean).unwrap();
+        aggregate_payloads(&views[..3], 2, &mut out, AggMode::Mean).unwrap();
         let mut avg = Vec::new();
-        average_payloads(&msgs[..3], 2, &mut avg).unwrap();
+        average_payloads(&views[..3], 2, &mut avg).unwrap();
         assert_eq!(out, avg);
     }
 
@@ -581,7 +596,7 @@ mod tests {
         let msgs =
             vec![Payload::Dense(vec![1.0]), Payload::Dense(vec![3.0])];
         let mut out = Vec::new();
-        aggregate_payloads(&msgs, 1, &mut out, AggMode::Trimmed(1)).unwrap();
+        aggregate_payloads(&as_views(&msgs), 1, &mut out, AggMode::Trimmed(1)).unwrap();
         assert_eq!(out, vec![2.0]);
         assert!(aggregate_payloads(&[], 1, &mut out, AggMode::Median).is_err());
     }
@@ -596,7 +611,7 @@ mod tests {
             fn step(
                 &mut self,
                 _theta: &mut [f32],
-                _msgs: &[Payload],
+                _msgs: &[PayloadView<'_>],
                 _ctx: &RoundCtx,
             ) -> Result<()> {
                 Ok(())

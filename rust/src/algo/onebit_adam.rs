@@ -21,7 +21,7 @@
 
 use anyhow::Result;
 
-use crate::compress::{BlockSign, ErrorFeedback, Payload};
+use crate::compress::{BlockSign, ErrorFeedback, Payload, PayloadView};
 use crate::optim::{Adam, ServerOpt, BETA1, EPS};
 
 use super::{average_payloads, Protocol, RoundCtx, ServerAlgo, WorkerAlgo};
@@ -134,7 +134,7 @@ impl ServerAlgo for OneBitAdamServer {
     fn step(
         &mut self,
         theta: &mut [f32],
-        msgs: &[Payload],
+        msgs: &[PayloadView<'_>],
         ctx: &RoundCtx,
     ) -> Result<()> {
         let mut avg = std::mem::take(&mut self.avg);
@@ -167,7 +167,7 @@ impl ServerAlgo for OneBitAdamServer {
             avg.resize(theta.len(), 0.0);
             let mut kept = 0usize;
             for m in msgs {
-                if matches!(m, Payload::Dense(_)) {
+                if matches!(m, PayloadView::Dense(_)) {
                     continue;
                 }
                 m.add_into(&mut avg)?;
@@ -243,6 +243,7 @@ pub fn protocol(dim: usize, n: usize, warmup_rounds: u64, block: usize) -> Proto
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::as_views;
 
     fn pair(dim: usize, warmup: u64, block: usize) -> (OneBitAdamWorker, OneBitAdamServer) {
         (OneBitAdamWorker::new(dim, warmup, block), OneBitAdamServer::new(dim, warmup))
@@ -258,7 +259,7 @@ mod tests {
             let mut theta = vec![0.0f32; 256];
             let dense = matches!(msg, Payload::Dense(_));
             assert_eq!(dense, r < 3, "round {r}");
-            s.step(&mut theta, &[msg], &ctx).unwrap();
+            s.step(&mut theta, &[msg.view()], &ctx).unwrap();
         }
     }
 
@@ -269,7 +270,7 @@ mod tests {
         for r in 0..2 {
             let ctx = RoundCtx::sync(r, 0.01);
             let msg = w.process(&theta.clone(), &ctx).unwrap();
-            s.step(&mut theta, &[msg], &ctx).unwrap();
+            s.step(&mut theta, &[msg.view()], &ctx).unwrap();
         }
         assert!(s.precond().is_some());
         let frozen = s.precond().unwrap().to_vec();
@@ -277,7 +278,7 @@ mod tests {
         for r in 2..10 {
             let ctx = RoundCtx::sync(r, 0.01);
             let msg = w.process(&theta.clone(), &ctx).unwrap();
-            s.step(&mut theta, &[msg], &ctx).unwrap();
+            s.step(&mut theta, &[msg.view()], &ctx).unwrap();
         }
         assert_eq!(s.precond().unwrap(), &frozen[..]);
     }
@@ -297,9 +298,9 @@ mod tests {
             let ctx = RoundCtx::sync(r, 0.01);
             let msg = w.process(&g, &ctx).unwrap();
             let mut t1 = vec![0.0f32; dim];
-            s1.step(&mut t1, &[msg.clone()], &ctx).unwrap();
+            s1.step(&mut t1, &[msg.view()], &ctx).unwrap();
             let mut t2 = vec![0.0f32; dim];
-            s2.step(&mut t2, &[msg], &ctx).unwrap();
+            s2.step(&mut t2, &[msg.view()], &ctx).unwrap();
         }
         // Round 2: compressed phase. s1 sees the sign payload alone; s2
         // additionally sees a dense warm-up straggler.
@@ -309,8 +310,8 @@ mod tests {
         let straggler = Payload::Dense(vec![100.0f32; dim]);
         let mut t1 = vec![0.5f32; dim];
         let mut t2 = vec![0.5f32; dim];
-        s1.step(&mut t1, &[signs.clone()], &ctx).unwrap();
-        s2.step(&mut t2, &[signs, straggler], &ctx).unwrap();
+        s1.step(&mut t1, &[signs.view()], &ctx).unwrap();
+        s2.step(&mut t2, &[signs.view(), straggler.view()], &ctx).unwrap();
         for (a, b) in t1.iter().zip(&t2) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
@@ -327,7 +328,7 @@ mod tests {
                 .iter_mut()
                 .map(|w| w.process(&g, &ctx).unwrap())
                 .collect();
-            server.step(&mut theta, &msgs, &ctx).unwrap();
+            server.step(&mut theta, &as_views(&msgs), &ctx).unwrap();
         }
         assert!(
             crate::util::math::norm2(&theta) < 0.5,

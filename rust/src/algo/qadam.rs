@@ -9,7 +9,7 @@
 
 use anyhow::Result;
 
-use crate::compress::{Compressor, CompressorSpec, ErrorFeedback, Payload};
+use crate::compress::{Compressor, CompressorSpec, ErrorFeedback, Payload, PayloadView};
 use crate::optim::{BETA1, BETA2, EPS};
 
 use super::{
@@ -108,7 +108,7 @@ impl ServerAlgo for QAdamServer {
     fn step(
         &mut self,
         theta: &mut [f32],
-        msgs: &[Payload],
+        msgs: &[PayloadView<'_>],
         ctx: &RoundCtx,
     ) -> Result<()> {
         let mut avg = std::mem::take(&mut self.avg);
@@ -168,7 +168,7 @@ mod tests {
                 .iter_mut()
                 .map(|w| w.process(&g, &ctx).unwrap())
                 .collect();
-            server.step(&mut theta, &msgs, &ctx).unwrap();
+            server.step(&mut theta, &crate::compress::as_views(&msgs), &ctx).unwrap();
         }
         assert!(crate::util::math::norm2(&theta) < 0.5);
     }

@@ -33,7 +33,7 @@ use std::thread::JoinHandle;
 
 use anyhow::{anyhow, ensure, Result};
 
-use crate::compress::Payload;
+use crate::compress::{as_views, Payload, PayloadView};
 use crate::util::timer::Stopwatch;
 
 use super::{AggMode, AlgoSpec, RoundCtx, ServerAlgo};
@@ -110,7 +110,7 @@ fn spawn_shard(sid: usize, mut server: Box<dyn ServerAlgo + Send>) -> ShardHandl
                 match cmd {
                     Cmd::Step { mut theta, msgs, ctx } => {
                         let sw = Stopwatch::start();
-                        let res = server.step(&mut theta, &msgs, &ctx);
+                        let res = server.step(&mut theta, &as_views(&msgs), &ctx);
                         let reply = res.map(|()| Reply { theta, ms: sw.ms() });
                         if rep_tx.send(reply).is_err() {
                             break;
@@ -223,7 +223,7 @@ impl ServerAlgo for ShardedServer {
     fn step(
         &mut self,
         theta: &mut [f32],
-        msgs: &[Payload],
+        msgs: &[PayloadView<'_>],
         ctx: &RoundCtx,
     ) -> Result<()> {
         ensure!(
@@ -341,7 +341,7 @@ impl ShardedServer {
     fn step_inner(
         &mut self,
         theta: &mut [f32],
-        msgs: &[Payload],
+        msgs: &[PayloadView<'_>],
         ctx: &RoundCtx,
     ) -> Result<()> {
         let bounds = self.stats.bounds.clone();
@@ -369,7 +369,7 @@ impl ShardedServer {
             Backend::Sequential(servers) => {
                 for (s, (server, sub)) in servers.iter_mut().zip(routed).enumerate() {
                     let sw = Stopwatch::start();
-                    server.step(&mut theta[bounds[s]..bounds[s + 1]], &sub, ctx)?;
+                    server.step(&mut theta[bounds[s]..bounds[s + 1]], &as_views(&sub), ctx)?;
                     self.stats.step_ms[s] += sw.ms();
                 }
             }
@@ -468,7 +468,7 @@ mod tests {
                         wk.process(&g, &ctx).unwrap()
                     })
                     .collect();
-                server.step(&mut theta, &msgs, &ctx).unwrap();
+                server.step(&mut theta, &as_views(&msgs), &ctx).unwrap();
             }
             theta
         };
@@ -538,7 +538,7 @@ mod tests {
                                 )
                             })
                             .collect();
-                        server.step(&mut theta, &msgs, &ctx).unwrap();
+                        server.step(&mut theta, &as_views(&msgs), &ctx).unwrap();
                     }
                     theta
                 };
@@ -568,7 +568,7 @@ mod tests {
             let g = vec![1.0f32; 16];
             let msgs: Vec<Payload> =
                 workers.iter_mut().map(|w| w.process(&g, &ctx).unwrap()).collect();
-            server.step(&mut theta, &msgs, &ctx).unwrap();
+            server.step(&mut theta, &as_views(&msgs), &ctx).unwrap();
         }
         let stats = ServerAlgo::shard_stats(&server).unwrap();
         assert_eq!(stats.bounds, vec![0, 4, 8, 12, 16]);
@@ -601,8 +601,8 @@ mod tests {
             let mut t_resume = t_solo.clone();
             for r in 0..10 {
                 let ctx = RoundCtx::sync(r, 0.02);
-                solo.step(&mut t_solo, &msgs_at(r), &ctx).unwrap();
-                first.step(&mut t_resume, &msgs_at(r), &ctx).unwrap();
+                solo.step(&mut t_solo, &as_views(&msgs_at(r)), &ctx).unwrap();
+                first.step(&mut t_resume, &as_views(&msgs_at(r)), &ctx).unwrap();
             }
             let blob = first.export_state().unwrap();
             drop(first);
@@ -610,8 +610,8 @@ mod tests {
             second.import_state(&blob).unwrap();
             for r in 10..20 {
                 let ctx = RoundCtx::sync(r, 0.02);
-                solo.step(&mut t_solo, &msgs_at(r), &ctx).unwrap();
-                second.step(&mut t_resume, &msgs_at(r), &ctx).unwrap();
+                solo.step(&mut t_solo, &as_views(&msgs_at(r)), &ctx).unwrap();
+                second.step(&mut t_resume, &as_views(&msgs_at(r)), &ctx).unwrap();
             }
             for (x, y) in t_solo.iter().zip(&t_resume) {
                 assert_eq!(x.to_bits(), y.to_bits(), "threaded={threaded}");
@@ -626,12 +626,12 @@ mod tests {
         let ctx = RoundCtx::sync(0, 0.01);
         let msgs = vec![Payload::Dense(vec![0.0; 8])];
         let mut theta = vec![0.0f32; 7];
-        assert!(server.step(&mut theta, &msgs, &ctx).is_err());
+        assert!(server.step(&mut theta, &as_views(&msgs), &ctx).is_err());
         // Any step error poisons the server: a partial threaded step
         // could have left shard replies queued, so later steps must
         // refuse instead of pairing them with fresh dispatches.
         let mut theta = vec![0.0f32; 8];
-        let err = server.step(&mut theta, &msgs, &ctx).unwrap_err();
+        let err = server.step(&mut theta, &as_views(&msgs), &ctx).unwrap_err();
         assert!(err.to_string().contains("poisoned"), "{err}");
     }
 }

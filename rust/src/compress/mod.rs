@@ -19,7 +19,7 @@ pub use error_feedback::ErrorFeedback;
 pub use qsgd::Qsgd;
 pub use randomk::RandomK;
 pub use topk::TopK;
-pub use wire::Payload;
+pub use wire::{as_views, Payload, PayloadView, Scalars};
 
 use anyhow::{bail, Result};
 

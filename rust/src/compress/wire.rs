@@ -50,6 +50,29 @@
 //! optimizers. Decoding a slice is bitwise identical to slicing the full
 //! decode (the slicing property test), so sharded and unsharded servers
 //! produce identical trajectories.
+//!
+//! ## Zero-copy path
+//!
+//! [`Payload::encode_into`] **appends** the exact [`Payload::encode`]
+//! bytes to a caller-owned scratch buffer. The ownership contract for
+//! pooled scratch buffers is: the link owns the buffer, the caller
+//! `clear()`s it at the start of each frame (capacity is retained, so
+//! steady-state encoding never allocates), and the buffer's contents are
+//! only valid until the next `clear()`.
+//!
+//! [`PayloadView::parse`] is the borrowed inverse: it runs exactly the
+//! validations of [`Payload::decode`] but keeps every index/value field
+//! as a [`Scalars`] view over the frame bytes, decoding little-endian
+//! scalars on demand (`chunks_exact` + `from_le_bytes` — no unsafe, no
+//! alignment requirements). The lifetime contract: a `PayloadView<'a>`
+//! borrows the frame buffer it was parsed from (or the owned payload it
+//! was taken from via [`Payload::view`]); it is `Copy`, must not outlive
+//! that buffer, and [`PayloadView::to_owned`] rematerializes an owned
+//! [`Payload`]. Every consumer hot path (`to_dense`, `add_into`,
+//! `slice_range`, `slice_into_shards`, the server aggregation loops)
+//! runs off the view; the owned `Payload` methods delegate through
+//! [`Payload::view`], so both representations walk the same loops and
+//! stay bitwise identical by construction.
 
 use anyhow::{bail, Result};
 
@@ -138,54 +161,407 @@ pub fn f16_to_f32(h: u16) -> f32 {
     f32::from_bits(bits)
 }
 
-impl Payload {
-    pub fn dim(&self) -> usize {
-        match self {
-            Payload::Dense(v) => v.len(),
-            Payload::Sparse { dim, .. } => *dim as usize,
-            Payload::Signs { dim, .. } => *dim as usize,
-            Payload::LayeredSigns { dim, .. } => *dim as usize,
-            Payload::Quantized { dim, .. } => *dim as usize,
-            Payload::SparseF16 { dim, .. } => *dim as usize,
+/// A scalar that can be read from / written to the little-endian wire.
+pub trait WireScalar: Copy {
+    /// Encoded size in bytes.
+    const SIZE: usize;
+    /// Decode one scalar from exactly `SIZE` little-endian bytes.
+    fn from_le(bytes: &[u8]) -> Self;
+    /// Append this scalar's little-endian bytes.
+    fn put_le(self, out: &mut Vec<u8>);
+}
+
+impl WireScalar for f32 {
+    const SIZE: usize = 4;
+    fn from_le(bytes: &[u8]) -> f32 {
+        f32::from_le_bytes(bytes.try_into().unwrap())
+    }
+    fn put_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+}
+
+impl WireScalar for u32 {
+    const SIZE: usize = 4;
+    fn from_le(bytes: &[u8]) -> u32 {
+        u32::from_le_bytes(bytes.try_into().unwrap())
+    }
+    fn put_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+}
+
+impl WireScalar for u16 {
+    const SIZE: usize = 2;
+    fn from_le(bytes: &[u8]) -> u16 {
+        u16::from_le_bytes(bytes.try_into().unwrap())
+    }
+    fn put_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+}
+
+impl WireScalar for i8 {
+    const SIZE: usize = 1;
+    fn from_le(bytes: &[u8]) -> i8 {
+        bytes[0] as i8
+    }
+    fn put_le(self, out: &mut Vec<u8>) {
+        out.push(self as u8);
+    }
+}
+
+/// A borrowed scalar sequence with two representations: a typed slice
+/// (when viewing an owned [`Payload`]) or raw little-endian wire bytes
+/// (when viewing a received frame via [`PayloadView::parse`]). Hot loops
+/// match on the representation once and run a tight loop per arm, so the
+/// wire representation never materializes an owned `Vec`.
+#[derive(Clone, Copy, Debug)]
+pub enum Scalars<'a, T: WireScalar> {
+    Slice(&'a [T]),
+    Wire(&'a [u8]),
+}
+
+impl<'a, T: WireScalar> Scalars<'a, T> {
+    pub fn len(&self) -> usize {
+        match *self {
+            Scalars::Slice(s) => s.len(),
+            Scalars::Wire(b) => b.len() / T::SIZE,
         }
     }
 
-    /// Dense reconstruction (the server-side decode).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Decode the `i`-th scalar (random access; panics out of range).
+    pub fn get(&self, i: usize) -> T {
+        match *self {
+            Scalars::Slice(s) => s[i],
+            Scalars::Wire(b) => T::from_le(&b[i * T::SIZE..(i + 1) * T::SIZE]),
+        }
+    }
+
+    pub fn iter(&self) -> ScalarsIter<'a, T> {
+        match *self {
+            Scalars::Slice(s) => ScalarsIter::Slice(s.iter()),
+            Scalars::Wire(b) => ScalarsIter::Wire(b.chunks_exact(T::SIZE)),
+        }
+    }
+
+    pub fn to_vec(self) -> Vec<T> {
+        self.iter().collect()
+    }
+
+    /// Decode the subrange `[start, end)` into an owned `Vec`.
+    pub fn slice_to_vec(self, start: usize, end: usize) -> Vec<T> {
+        match self {
+            Scalars::Slice(s) => s[start..end].to_vec(),
+            Scalars::Wire(b) => b[start * T::SIZE..end * T::SIZE]
+                .chunks_exact(T::SIZE)
+                .map(T::from_le)
+                .collect(),
+        }
+    }
+
+    /// Append this sequence's wire bytes (memcpy for the wire repr).
+    pub fn encode_into(self, out: &mut Vec<u8>) {
+        match self {
+            Scalars::Slice(s) => {
+                out.reserve(s.len() * T::SIZE);
+                for &x in s {
+                    x.put_le(out);
+                }
+            }
+            Scalars::Wire(b) => out.extend_from_slice(b),
+        }
+    }
+}
+
+pub enum ScalarsIter<'a, T: WireScalar> {
+    Slice(std::slice::Iter<'a, T>),
+    Wire(std::slice::ChunksExact<'a, u8>),
+}
+
+impl<T: WireScalar> Iterator for ScalarsIter<'_, T> {
+    type Item = T;
+
+    fn next(&mut self) -> Option<T> {
+        match self {
+            ScalarsIter::Slice(it) => it.next().copied(),
+            ScalarsIter::Wire(it) => it.next().map(T::from_le),
+        }
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        match self {
+            ScalarsIter::Slice(it) => it.size_hint(),
+            ScalarsIter::Wire(it) => it.size_hint(),
+        }
+    }
+}
+
+impl<T: WireScalar> ExactSizeIterator for ScalarsIter<'_, T> {}
+
+/// Borrowed decode of a [`Payload`]: same variants, but index/value
+/// fields are [`Scalars`] views over the source bytes (or owned slices,
+/// via [`Payload::view`]). See the module docs for the lifetime
+/// contract. All the owned `Payload` consumer methods delegate here, so
+/// view and owned paths are the same code.
+#[derive(Clone, Copy, Debug)]
+pub enum PayloadView<'a> {
+    Dense(Scalars<'a, f32>),
+    Sparse { dim: u32, idx: Scalars<'a, u32>, val: Scalars<'a, f32> },
+    Signs { dim: u32, block: u32, scales: Scalars<'a, f32>, bits: &'a [u8] },
+    LayeredSigns {
+        dim: u32,
+        sizes: Scalars<'a, u32>,
+        scales: Scalars<'a, f32>,
+        bits: &'a [u8],
+    },
+    Quantized { dim: u32, norm: f32, levels: u8, q: Scalars<'a, i8> },
+    SparseF16 { dim: u32, idx: Scalars<'a, u32>, val: Scalars<'a, u16> },
+}
+
+/// Borrow every payload as a [`PayloadView`] (the shape
+/// [`crate::algo::ServerAlgo::step`] consumes; test/bench convenience).
+pub fn as_views(msgs: &[Payload]) -> Vec<PayloadView<'_>> {
+    msgs.iter().map(|m| m.view()).collect()
+}
+
+impl<'a> PayloadView<'a> {
+    /// Parse a payload without copying its body: runs exactly the
+    /// validations of [`Payload::decode`] (tag, length, index-range,
+    /// block/size consistency, trailing bytes) but keeps every field as
+    /// a view over `buf`.
+    pub fn parse(buf: &'a [u8]) -> Result<PayloadView<'a>> {
+        let mut r = Reader { b: buf, i: 0 };
+        let tag = r.u8()?;
+        let dim = r.u32()?;
+        let p = match tag {
+            TAG_DENSE => PayloadView::Dense(Scalars::Wire(r.take(4 * dim as usize)?)),
+            TAG_SPARSE => {
+                let k = r.u32()? as usize;
+                if k > dim as usize {
+                    bail!("sparse k {k} > dim {dim}");
+                }
+                let idx: Scalars<'a, u32> = Scalars::Wire(r.take(4 * k)?);
+                if idx.iter().any(|i| i >= dim) {
+                    bail!("sparse index out of range");
+                }
+                let val = Scalars::Wire(r.take(4 * k)?);
+                PayloadView::Sparse { dim, idx, val }
+            }
+            TAG_SIGNS => {
+                let block = r.u32()?;
+                if block == 0 {
+                    bail!("signs block=0");
+                }
+                let nb = r.u32()? as usize;
+                let expect_nb = (dim as usize).div_ceil(block as usize);
+                if nb != expect_nb {
+                    bail!("signs nb {nb} != ceil(d/b) {expect_nb}");
+                }
+                let scales = Scalars::Wire(r.take(4 * nb)?);
+                let bits = r.take((dim as usize).div_ceil(8))?;
+                PayloadView::Signs { dim, block, scales, bits }
+            }
+            TAG_LAYERED => {
+                let nb = r.u32()? as usize;
+                let sizes: Scalars<'a, u32> = Scalars::Wire(r.take(4 * nb)?);
+                if sizes.iter().map(|s| s as u64).sum::<u64>() != dim as u64 {
+                    bail!("layered sizes do not sum to dim");
+                }
+                let scales = Scalars::Wire(r.take(4 * nb)?);
+                let bits = r.take((dim as usize).div_ceil(8))?;
+                PayloadView::LayeredSigns { dim, sizes, scales, bits }
+            }
+            TAG_QUANTIZED => {
+                let norm = f32::from_le_bytes(r.take(4)?.try_into().unwrap());
+                let levels = r.u8()?;
+                if levels == 0 {
+                    bail!("quantized levels=0");
+                }
+                let q = Scalars::Wire(r.take(dim as usize)?);
+                PayloadView::Quantized { dim, norm, levels, q }
+            }
+            TAG_SPARSE16 => {
+                let k = r.u32()? as usize;
+                if k > dim as usize {
+                    bail!("sparse16 k {k} > dim {dim}");
+                }
+                let idx: Scalars<'a, u32> = Scalars::Wire(r.take(4 * k)?);
+                if idx.iter().any(|i| i >= dim) {
+                    bail!("sparse16 index out of range");
+                }
+                let val = Scalars::Wire(r.take(2 * k)?);
+                PayloadView::SparseF16 { dim, idx, val }
+            }
+            t => bail!("bad payload tag {t}"),
+        };
+        if r.i != buf.len() {
+            bail!("trailing bytes in payload");
+        }
+        Ok(p)
+    }
+
+    /// Rematerialize an owned [`Payload`] (the thin `decode` layer).
+    pub fn to_owned(self) -> Payload {
+        match self {
+            PayloadView::Dense(v) => Payload::Dense(v.to_vec()),
+            PayloadView::Sparse { dim, idx, val } => {
+                Payload::Sparse { dim, idx: idx.to_vec(), val: val.to_vec() }
+            }
+            PayloadView::Signs { dim, block, scales, bits } => Payload::Signs {
+                dim,
+                block,
+                scales: scales.to_vec(),
+                bits: bits.to_vec(),
+            },
+            PayloadView::LayeredSigns { dim, sizes, scales, bits } => {
+                Payload::LayeredSigns {
+                    dim,
+                    sizes: sizes.to_vec(),
+                    scales: scales.to_vec(),
+                    bits: bits.to_vec(),
+                }
+            }
+            PayloadView::Quantized { dim, norm, levels, q } => {
+                Payload::Quantized { dim, norm, levels, q: q.to_vec() }
+            }
+            PayloadView::SparseF16 { dim, idx, val } => {
+                Payload::SparseF16 { dim, idx: idx.to_vec(), val: val.to_vec() }
+            }
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        match *self {
+            PayloadView::Dense(v) => v.len(),
+            PayloadView::Sparse { dim, .. } => dim as usize,
+            PayloadView::Signs { dim, .. } => dim as usize,
+            PayloadView::LayeredSigns { dim, .. } => dim as usize,
+            PayloadView::Quantized { dim, .. } => dim as usize,
+            PayloadView::SparseF16 { dim, .. } => dim as usize,
+        }
+    }
+
+    /// Exact message size in bits (same formulas as
+    /// [`Payload::wire_bits`]; `wire_bits() == 8 * encode().len()`).
+    pub fn wire_bits(&self) -> u64 {
+        let body = match *self {
+            PayloadView::Dense(v) => 4 * v.len(),
+            PayloadView::Sparse { idx, val, .. } => 4 + 4 * idx.len() + 4 * val.len(),
+            PayloadView::Signs { scales, bits, .. } => {
+                4 + 4 + 4 * scales.len() + bits.len()
+            }
+            PayloadView::LayeredSigns { sizes, scales, bits, .. } => {
+                4 + 4 * sizes.len() + 4 * scales.len() + bits.len()
+            }
+            PayloadView::Quantized { q, .. } => 4 + 1 + q.len(),
+            PayloadView::SparseF16 { idx, val, .. } => {
+                4 + 4 * idx.len() + 2 * val.len()
+            }
+        };
+        ((5 + body) as u64) * 8
+    }
+
+    /// Append this payload's exact `encode()` bytes (header + body) to
+    /// `out`. Wire-backed views memcpy their body.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        match *self {
+            PayloadView::Dense(v) => {
+                out.push(TAG_DENSE);
+                out.extend_from_slice(&(v.len() as u32).to_le_bytes());
+                v.encode_into(out);
+            }
+            PayloadView::Sparse { dim, idx, val } => {
+                out.push(TAG_SPARSE);
+                out.extend_from_slice(&dim.to_le_bytes());
+                out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+                idx.encode_into(out);
+                val.encode_into(out);
+            }
+            PayloadView::Signs { dim, block, scales, bits } => {
+                out.push(TAG_SIGNS);
+                out.extend_from_slice(&dim.to_le_bytes());
+                out.extend_from_slice(&block.to_le_bytes());
+                out.extend_from_slice(&(scales.len() as u32).to_le_bytes());
+                scales.encode_into(out);
+                out.extend_from_slice(bits);
+            }
+            PayloadView::LayeredSigns { dim, sizes, scales, bits } => {
+                out.push(TAG_LAYERED);
+                out.extend_from_slice(&dim.to_le_bytes());
+                out.extend_from_slice(&(sizes.len() as u32).to_le_bytes());
+                sizes.encode_into(out);
+                scales.encode_into(out);
+                out.extend_from_slice(bits);
+            }
+            PayloadView::Quantized { dim, norm, levels, q } => {
+                out.push(TAG_QUANTIZED);
+                out.extend_from_slice(&dim.to_le_bytes());
+                out.extend_from_slice(&norm.to_le_bytes());
+                out.push(levels);
+                q.encode_into(out);
+            }
+            PayloadView::SparseF16 { dim, idx, val } => {
+                out.push(TAG_SPARSE16);
+                out.extend_from_slice(&dim.to_le_bytes());
+                out.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+                idx.encode_into(out);
+                val.encode_into(out);
+            }
+        }
+    }
+
+    /// Dense reconstruction (see [`Payload::to_dense`]).
     pub fn to_dense(&self, d: usize) -> Result<Vec<f32>> {
         if self.dim() != d {
             bail!("payload dim {} != expected {d}", self.dim());
         }
-        Ok(match self {
-            Payload::Dense(v) => v.clone(),
-            Payload::Sparse { idx, val, .. } => {
+        Ok(match *self {
+            PayloadView::Dense(v) => match v {
+                Scalars::Slice(s) => s.to_vec(),
+                Scalars::Wire(b) => b
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect(),
+            },
+            PayloadView::Sparse { idx, val, .. } => {
                 let mut out = vec![0.0f32; d];
-                for (&i, &v) in idx.iter().zip(val) {
+                for (i, v) in idx.iter().zip(val.iter()) {
                     out[i as usize] = v;
                 }
                 out
             }
-            Payload::Signs { block, scales, bits, .. } => {
+            PayloadView::Signs { block, scales, bits, .. } => {
                 let mut out = vec![0.0f32; d];
-                decode_signs_into(&mut out, *block as usize, scales, bits);
+                decode_signs_into(&mut out, block as usize, scales, bits);
                 out
             }
-            Payload::LayeredSigns { sizes, scales, bits, .. } => {
+            PayloadView::LayeredSigns { sizes, scales, bits, .. } => {
                 let mut out = vec![0.0f32; d];
                 let mut off = 0usize;
-                for (&sz, &scale) in sizes.iter().zip(scales) {
+                for (sz, scale) in sizes.iter().zip(scales.iter()) {
                     let end = off + sz as usize;
                     write_signs_range(&mut out[off..end], off, scale, bits);
                     off = end;
                 }
                 out
             }
-            Payload::Quantized { norm, levels, q, .. } => {
-                let scale = norm / *levels as f32;
-                q.iter().map(|&qi| qi as f32 * scale).collect()
+            PayloadView::Quantized { norm, levels, q, .. } => {
+                let scale = norm / levels as f32;
+                match q {
+                    Scalars::Slice(s) => s.iter().map(|&qi| qi as f32 * scale).collect(),
+                    Scalars::Wire(bytes) => {
+                        bytes.iter().map(|&b| (b as i8) as f32 * scale).collect()
+                    }
+                }
             }
-            Payload::SparseF16 { idx, val, .. } => {
+            PayloadView::SparseF16 { idx, val, .. } => {
                 let mut out = vec![0.0f32; d];
-                for (&i, &v) in idx.iter().zip(val) {
+                for (i, v) in idx.iter().zip(val.iter()) {
                     out[i as usize] = f16_to_f32(v);
                 }
                 out
@@ -193,47 +569,62 @@ impl Payload {
         })
     }
 
-    /// Accumulate decode into `acc` (server averaging hot path — avoids
-    /// allocating a dense temp per worker).
+    /// Accumulate decode into `acc` (see [`Payload::add_into`]).
     pub fn add_into(&self, acc: &mut [f32]) -> Result<()> {
         if self.dim() != acc.len() {
             bail!("payload dim {} != acc {}", self.dim(), acc.len());
         }
-        match self {
-            Payload::Dense(v) => {
-                for (a, &x) in acc.iter_mut().zip(v) {
-                    *a += x;
+        match *self {
+            PayloadView::Dense(v) => match v {
+                Scalars::Slice(s) => {
+                    for (a, &x) in acc.iter_mut().zip(s) {
+                        *a += x;
+                    }
                 }
-            }
-            Payload::Sparse { idx, val, .. } => {
-                for (&i, &v) in idx.iter().zip(val) {
+                Scalars::Wire(b) => {
+                    for (a, c) in acc.iter_mut().zip(b.chunks_exact(4)) {
+                        *a += f32::from_le_bytes(c.try_into().unwrap());
+                    }
+                }
+            },
+            PayloadView::Sparse { idx, val, .. } => {
+                for (i, v) in idx.iter().zip(val.iter()) {
                     acc[i as usize] += v;
                 }
             }
-            Payload::Signs { block, scales, bits, .. } => {
-                let b = *block as usize;
-                for (bi, &scale) in scales.iter().enumerate() {
+            PayloadView::Signs { block, scales, bits, .. } => {
+                let b = block as usize;
+                for (bi, scale) in scales.iter().enumerate() {
                     let start = bi * b;
                     let end = (start + b).min(acc.len());
                     add_signs_range(&mut acc[start..end], start, scale, bits);
                 }
             }
-            Payload::LayeredSigns { sizes, scales, bits, .. } => {
+            PayloadView::LayeredSigns { sizes, scales, bits, .. } => {
                 let mut off = 0usize;
-                for (&sz, &scale) in sizes.iter().zip(scales) {
+                for (sz, scale) in sizes.iter().zip(scales.iter()) {
                     let end = off + sz as usize;
                     add_signs_range(&mut acc[off..end], off, scale, bits);
                     off = end;
                 }
             }
-            Payload::Quantized { norm, levels, q, .. } => {
-                let scale = norm / *levels as f32;
-                for (a, &qi) in acc.iter_mut().zip(q) {
-                    *a += qi as f32 * scale;
+            PayloadView::Quantized { norm, levels, q, .. } => {
+                let scale = norm / levels as f32;
+                match q {
+                    Scalars::Slice(s) => {
+                        for (a, &qi) in acc.iter_mut().zip(s) {
+                            *a += qi as f32 * scale;
+                        }
+                    }
+                    Scalars::Wire(bytes) => {
+                        for (a, &b) in acc.iter_mut().zip(bytes) {
+                            *a += (b as i8) as f32 * scale;
+                        }
+                    }
                 }
             }
-            Payload::SparseF16 { idx, val, .. } => {
-                for (&i, &v) in idx.iter().zip(val) {
+            PayloadView::SparseF16 { idx, val, .. } => {
+                for (i, v) in idx.iter().zip(val.iter()) {
                     acc[i as usize] += f16_to_f32(v);
                 }
             }
@@ -241,46 +632,33 @@ impl Payload {
         Ok(())
     }
 
-    /// Restrict this payload to the contiguous coordinate range
-    /// `[start, end)` without decoding it, yielding a payload over
-    /// `end - start` local coordinates (index 0 = global `start`).
-    ///
-    /// Decoding the slice is **bitwise identical** to slicing the full
-    /// decode: sparse indices are filtered and rebased, sign bitmaps are
-    /// repacked from bit `start`, and per-block/per-layer scales keep
-    /// their original f32 values (a [`Payload::Signs`] slice becomes a
-    /// [`Payload::LayeredSigns`] whose segments are the block overlaps,
-    /// so a range may start or end mid-block). `Quantized` keeps the
-    /// *full-vector* norm so the reconstruction scale is unchanged.
-    ///
-    /// This is the routing primitive of the sharded server
-    /// ([`crate::algo::sharded::ShardedServer`]): each worker uplink is
-    /// sliced once per shard and handed to that shard's optimizer.
+    /// Restrict to `[start, end)` without materializing the full decode
+    /// (see [`Payload::slice_range`] for the exact semantics).
     pub fn slice_range(&self, start: usize, end: usize) -> Result<Payload> {
         let d = self.dim();
         if start >= end || end > d {
             bail!("bad payload slice [{start}, {end}) of dim {d}");
         }
         let len = (end - start) as u32;
-        Ok(match self {
-            Payload::Dense(v) => Payload::Dense(v[start..end].to_vec()),
-            Payload::Sparse { idx, val, .. } => {
+        Ok(match *self {
+            PayloadView::Dense(v) => Payload::Dense(v.slice_to_vec(start, end)),
+            PayloadView::Sparse { idx, val, .. } => {
                 let (si, sv) = slice_sparse(idx, val, start, end);
                 Payload::Sparse { dim: len, idx: si, val: sv }
             }
-            Payload::SparseF16 { idx, val, .. } => {
+            PayloadView::SparseF16 { idx, val, .. } => {
                 let (si, sv) = slice_sparse(idx, val, start, end);
                 Payload::SparseF16 { dim: len, idx: si, val: sv }
             }
-            Payload::Signs { block, scales, bits, .. } => {
-                let b = *block as usize;
+            PayloadView::Signs { block, scales, bits, .. } => {
+                let b = block as usize;
                 let mut sizes = Vec::new();
                 let mut ss = Vec::new();
                 for bi in start / b..=(end - 1) / b {
                     let lo = (bi * b).max(start);
                     let hi = ((bi + 1) * b).min(end);
                     sizes.push((hi - lo) as u32);
-                    ss.push(scales[bi]);
+                    ss.push(scales.get(bi));
                 }
                 Payload::LayeredSigns {
                     dim: len,
@@ -289,11 +667,11 @@ impl Payload {
                     bits: slice_sign_bits(bits, start, end - start),
                 }
             }
-            Payload::LayeredSigns { sizes, scales, bits, .. } => {
+            PayloadView::LayeredSigns { sizes, scales, bits, .. } => {
                 let mut out_sizes = Vec::new();
                 let mut out_scales = Vec::new();
                 let mut off = 0usize;
-                for (&sz, &sc) in sizes.iter().zip(scales) {
+                for (sz, sc) in sizes.iter().zip(scales.iter()) {
                     let seg_end = off + sz as usize;
                     let lo = off.max(start);
                     let hi = seg_end.min(end);
@@ -310,27 +688,16 @@ impl Payload {
                     bits: slice_sign_bits(bits, start, end - start),
                 }
             }
-            Payload::Quantized { norm, levels, q, .. } => Payload::Quantized {
+            PayloadView::Quantized { norm, levels, q, .. } => Payload::Quantized {
                 dim: len,
-                norm: *norm,
-                levels: *levels,
-                q: q[start..end].to_vec(),
+                norm,
+                levels,
+                q: q.slice_to_vec(start, end),
             },
         })
     }
 
-    /// Split this payload across the contiguous partition described by
-    /// `bounds` (S + 1 strictly ascending fenceposts, `bounds[s]..
-    /// bounds[s+1]` per shard; `bounds.last()` ≤ dim) — the sharded
-    /// server's per-uplink routing step, done in **one pass**.
-    ///
-    /// Equivalent to calling [`Payload::slice_range`] once per shard
-    /// (bitwise — asserted by the slicing property test), but sparse
-    /// payloads walk their k indices once for all S shards instead of
-    /// rescanning per shard (the O(S·k) routing cost this replaces). The
-    /// single pass needs ascending indices, which Top-k/Random-k emit by
-    /// construction; a guarded sortedness check routes hand-built
-    /// unsorted `Sparse` payloads through the per-shard fallback.
+    /// One-pass split across `bounds` (see [`Payload::slice_into_shards`]).
     pub fn slice_into_shards(&self, bounds: &[usize]) -> Result<Vec<Payload>> {
         let d = self.dim();
         if bounds.len() < 2
@@ -339,8 +706,8 @@ impl Payload {
         {
             bail!("bad shard bounds {bounds:?} for payload dim {d}");
         }
-        match self {
-            Payload::Sparse { idx, val, .. } if is_strictly_ascending(idx) => {
+        match *self {
+            PayloadView::Sparse { idx, val, .. } if is_strictly_ascending(idx) => {
                 Ok(split_sorted_sparse(idx, val, bounds)
                     .into_iter()
                     .zip(bounds.windows(2))
@@ -351,7 +718,7 @@ impl Payload {
                     })
                     .collect())
             }
-            Payload::SparseF16 { idx, val, .. } if is_strictly_ascending(idx) => {
+            PayloadView::SparseF16 { idx, val, .. } if is_strictly_ascending(idx) => {
                 Ok(split_sorted_sparse(idx, val, bounds)
                     .into_iter()
                     .zip(bounds.windows(2))
@@ -370,6 +737,104 @@ impl Payload {
                 .map(|w| self.slice_range(w[0], w[1]))
                 .collect(),
         }
+    }
+}
+
+impl Payload {
+    pub fn dim(&self) -> usize {
+        match self {
+            Payload::Dense(v) => v.len(),
+            Payload::Sparse { dim, .. } => *dim as usize,
+            Payload::Signs { dim, .. } => *dim as usize,
+            Payload::LayeredSigns { dim, .. } => *dim as usize,
+            Payload::Quantized { dim, .. } => *dim as usize,
+            Payload::SparseF16 { dim, .. } => *dim as usize,
+        }
+    }
+
+    /// Borrow this payload as a [`PayloadView`] (slice-backed). All
+    /// consumer methods below delegate through this, so owned and
+    /// frame-backed payloads run identical loops.
+    pub fn view(&self) -> PayloadView<'_> {
+        match self {
+            Payload::Dense(v) => PayloadView::Dense(Scalars::Slice(v)),
+            Payload::Sparse { dim, idx, val } => PayloadView::Sparse {
+                dim: *dim,
+                idx: Scalars::Slice(idx),
+                val: Scalars::Slice(val),
+            },
+            Payload::Signs { dim, block, scales, bits } => PayloadView::Signs {
+                dim: *dim,
+                block: *block,
+                scales: Scalars::Slice(scales),
+                bits,
+            },
+            Payload::LayeredSigns { dim, sizes, scales, bits } => {
+                PayloadView::LayeredSigns {
+                    dim: *dim,
+                    sizes: Scalars::Slice(sizes),
+                    scales: Scalars::Slice(scales),
+                    bits,
+                }
+            }
+            Payload::Quantized { dim, norm, levels, q } => PayloadView::Quantized {
+                dim: *dim,
+                norm: *norm,
+                levels: *levels,
+                q: Scalars::Slice(q),
+            },
+            Payload::SparseF16 { dim, idx, val } => PayloadView::SparseF16 {
+                dim: *dim,
+                idx: Scalars::Slice(idx),
+                val: Scalars::Slice(val),
+            },
+        }
+    }
+
+    /// Dense reconstruction (the server-side decode).
+    pub fn to_dense(&self, d: usize) -> Result<Vec<f32>> {
+        self.view().to_dense(d)
+    }
+
+    /// Accumulate decode into `acc` (server averaging hot path — avoids
+    /// allocating a dense temp per worker).
+    pub fn add_into(&self, acc: &mut [f32]) -> Result<()> {
+        self.view().add_into(acc)
+    }
+
+    /// Restrict this payload to the contiguous coordinate range
+    /// `[start, end)` without decoding it, yielding a payload over
+    /// `end - start` local coordinates (index 0 = global `start`).
+    ///
+    /// Decoding the slice is **bitwise identical** to slicing the full
+    /// decode: sparse indices are filtered and rebased, sign bitmaps are
+    /// repacked from bit `start`, and per-block/per-layer scales keep
+    /// their original f32 values (a [`Payload::Signs`] slice becomes a
+    /// [`Payload::LayeredSigns`] whose segments are the block overlaps,
+    /// so a range may start or end mid-block). `Quantized` keeps the
+    /// *full-vector* norm so the reconstruction scale is unchanged.
+    ///
+    /// This is the routing primitive of the sharded server
+    /// ([`crate::algo::sharded::ShardedServer`]): each worker uplink is
+    /// sliced once per shard and handed to that shard's optimizer.
+    pub fn slice_range(&self, start: usize, end: usize) -> Result<Payload> {
+        self.view().slice_range(start, end)
+    }
+
+    /// Split this payload across the contiguous partition described by
+    /// `bounds` (S + 1 strictly ascending fenceposts, `bounds[s]..
+    /// bounds[s+1]` per shard; `bounds.last()` ≤ dim) — the sharded
+    /// server's per-uplink routing step, done in **one pass**.
+    ///
+    /// Equivalent to calling [`Payload::slice_range`] once per shard
+    /// (bitwise — asserted by the slicing property test), but sparse
+    /// payloads walk their k indices once for all S shards instead of
+    /// rescanning per shard (the O(S·k) routing cost this replaces). The
+    /// single pass needs ascending indices, which Top-k/Random-k emit by
+    /// construction; a guarded sortedness check routes hand-built
+    /// unsorted `Sparse` payloads through the per-shard fallback.
+    pub fn slice_into_shards(&self, bounds: &[usize]) -> Result<Vec<Payload>> {
+        self.view().slice_into_shards(bounds)
     }
 
     /// Exact message size in bits (== 8 * encode().len()).
@@ -391,150 +856,27 @@ impl Payload {
 
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.wire_bits() as usize / 8);
-        match self {
-            Payload::Dense(v) => {
-                out.push(TAG_DENSE);
-                out.extend((v.len() as u32).to_le_bytes());
-                for &x in v {
-                    out.extend(x.to_le_bytes());
-                }
-            }
-            Payload::Sparse { dim, idx, val } => {
-                out.push(TAG_SPARSE);
-                out.extend(dim.to_le_bytes());
-                out.extend((idx.len() as u32).to_le_bytes());
-                for &i in idx {
-                    out.extend(i.to_le_bytes());
-                }
-                for &v in val {
-                    out.extend(v.to_le_bytes());
-                }
-            }
-            Payload::Signs { dim, block, scales, bits } => {
-                out.push(TAG_SIGNS);
-                out.extend(dim.to_le_bytes());
-                out.extend(block.to_le_bytes());
-                out.extend((scales.len() as u32).to_le_bytes());
-                for &s in scales {
-                    out.extend(s.to_le_bytes());
-                }
-                out.extend_from_slice(bits);
-            }
-            Payload::LayeredSigns { dim, sizes, scales, bits } => {
-                out.push(TAG_LAYERED);
-                out.extend(dim.to_le_bytes());
-                out.extend((sizes.len() as u32).to_le_bytes());
-                for &s in sizes {
-                    out.extend(s.to_le_bytes());
-                }
-                for &s in scales {
-                    out.extend(s.to_le_bytes());
-                }
-                out.extend_from_slice(bits);
-            }
-            Payload::Quantized { dim, norm, levels, q } => {
-                out.push(TAG_QUANTIZED);
-                out.extend(dim.to_le_bytes());
-                out.extend(norm.to_le_bytes());
-                out.push(*levels);
-                out.extend(q.iter().map(|&v| v as u8));
-            }
-            Payload::SparseF16 { dim, idx, val } => {
-                out.push(TAG_SPARSE16);
-                out.extend(dim.to_le_bytes());
-                out.extend((idx.len() as u32).to_le_bytes());
-                for &i in idx {
-                    out.extend(i.to_le_bytes());
-                }
-                for &v in val {
-                    out.extend(v.to_le_bytes());
-                }
-            }
-        }
+        self.encode_into(&mut out);
         out
     }
 
+    /// Append the exact [`Payload::encode`] bytes to a caller-owned
+    /// scratch buffer (see the module docs for the buffer-reuse
+    /// contract). This is the allocation-free encode: with a warm
+    /// buffer, no heap traffic happens at all.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        self.view().encode_into(out);
+    }
+
+    /// Owned decode: [`PayloadView::parse`] + [`PayloadView::to_owned`]
+    /// (all validation lives in the borrowed parse).
     pub fn decode(buf: &[u8]) -> Result<Payload> {
-        let mut r = Reader { b: buf, i: 0 };
-        let tag = r.u8()?;
-        let dim = r.u32()?;
-        let p = match tag {
-            TAG_DENSE => {
-                let v = r.f32s(dim as usize)?;
-                Payload::Dense(v)
-            }
-            TAG_SPARSE => {
-                let k = r.u32()? as usize;
-                if k > dim as usize {
-                    bail!("sparse k {k} > dim {dim}");
-                }
-                let idx = r.u32s(k)?;
-                if idx.iter().any(|&i| i >= dim) {
-                    bail!("sparse index out of range");
-                }
-                let val = r.f32s(k)?;
-                Payload::Sparse { dim, idx, val }
-            }
-            TAG_SIGNS => {
-                let block = r.u32()?;
-                if block == 0 {
-                    bail!("signs block=0");
-                }
-                let nb = r.u32()? as usize;
-                let expect_nb = (dim as usize).div_ceil(block as usize);
-                if nb != expect_nb {
-                    bail!("signs nb {nb} != ceil(d/b) {expect_nb}");
-                }
-                let scales = r.f32s(nb)?;
-                let bits = r.bytes((dim as usize).div_ceil(8))?;
-                Payload::Signs { dim, block, scales, bits }
-            }
-            TAG_LAYERED => {
-                let nb = r.u32()? as usize;
-                let sizes = r.u32s(nb)?;
-                if sizes.iter().map(|&s| s as u64).sum::<u64>() != dim as u64 {
-                    bail!("layered sizes do not sum to dim");
-                }
-                let scales = r.f32s(nb)?;
-                let bits = r.bytes((dim as usize).div_ceil(8))?;
-                Payload::LayeredSigns { dim, sizes, scales, bits }
-            }
-            TAG_QUANTIZED => {
-                let norm = f32::from_le_bytes(r.take(4)?.try_into().unwrap());
-                let levels = r.u8()?;
-                if levels == 0 {
-                    bail!("quantized levels=0");
-                }
-                let q = r.bytes(dim as usize)?.iter().map(|&b| b as i8).collect();
-                Payload::Quantized { dim, norm, levels, q }
-            }
-            TAG_SPARSE16 => {
-                let k = r.u32()? as usize;
-                if k > dim as usize {
-                    bail!("sparse16 k {k} > dim {dim}");
-                }
-                let idx = r.u32s(k)?;
-                if idx.iter().any(|&i| i >= dim) {
-                    bail!("sparse16 index out of range");
-                }
-                let raw = r.take(2 * k)?;
-                let val = raw
-                    .chunks_exact(2)
-                    .map(|c| u16::from_le_bytes(c.try_into().unwrap()))
-                    .collect();
-                Payload::SparseF16 { dim, idx, val }
-            }
-            t => bail!("bad payload tag {t}"),
-        };
-        if r.i != buf.len() {
-            bail!("trailing bytes in payload");
-        }
-        Ok(p)
+        Ok(PayloadView::parse(buf)?.to_owned())
     }
 }
 
-fn decode_signs_into(out: &mut [f32], block: usize, scales: &[f32], bits: &[u8]) {
-    for (bi, &scale) in scales.iter().enumerate() {
+fn decode_signs_into(out: &mut [f32], block: usize, scales: Scalars<'_, f32>, bits: &[u8]) {
+    for (bi, scale) in scales.iter().enumerate() {
         let start = bi * block;
         let end = (start + block).min(out.len());
         write_signs_range(&mut out[start..end], start, scale, bits);
@@ -546,54 +888,124 @@ fn decode_signs_into(out: &mut [f32], block: usize, scales: &[f32], bits: &[u8])
 /// from the bitmap is OR-ed straight into the f32 sign position (scales
 /// are non-negative by construction), which is ~15x faster than the
 /// naive branch per coordinate (EXPERIMENTS.md §Perf, L3 iteration 1).
+/// Word-at-a-time: after a scalar head reaches byte alignment, one
+/// bitmap byte load feeds 8 outputs (and LLVM unrolls the inner
+/// fixed-trip loop), instead of one byte load + shift per coordinate.
 #[inline]
 fn add_signs_range(acc: &mut [f32], global_start: usize, scale: f32, bits: &[u8]) {
     let sbits = scale.to_bits();
-    for (j, a) in acc.iter_mut().enumerate() {
+    // Scalar head until the global coordinate is byte-aligned.
+    let head = ((8 - (global_start & 7)) & 7).min(acc.len());
+    for (j, a) in acc[..head].iter_mut().enumerate() {
         let i = global_start + j;
+        let bit = ((bits[i >> 3] >> (i & 7)) & 1) as u32;
+        *a += f32::from_bits(sbits | (bit << 31));
+    }
+    // Byte-at-a-time body: bitmap byte `base + k` feeds outputs
+    // `head + 8k ..= head + 8k + 7`.
+    let base = (global_start + head) >> 3;
+    let done = head + (acc.len() - head) / 8 * 8;
+    let mut chunks = acc[head..].chunks_exact_mut(8);
+    for (k, chunk) in (&mut chunks).enumerate() {
+        let byte = bits[base + k];
+        for (j, a) in chunk.iter_mut().enumerate() {
+            let bit = ((byte >> j) & 1) as u32;
+            *a += f32::from_bits(sbits | (bit << 31));
+        }
+    }
+    // Scalar tail (fewer than 8 coordinates left).
+    for (j, a) in chunks.into_remainder().iter_mut().enumerate() {
+        let i = global_start + done + j;
         let bit = ((bits[i >> 3] >> (i & 7)) & 1) as u32;
         *a += f32::from_bits(sbits | (bit << 31));
     }
 }
 
-/// `out[j] = ±scale` variant of [`add_signs_range`].
+/// `out[j] = ±scale` variant of [`add_signs_range`] (same word-at-a-time
+/// structure — this is the sign-unpack kernel behind `decode_signs_into`).
 #[inline]
 fn write_signs_range(out: &mut [f32], global_start: usize, scale: f32, bits: &[u8]) {
     let sbits = scale.to_bits();
-    for (j, o) in out.iter_mut().enumerate() {
+    let head = ((8 - (global_start & 7)) & 7).min(out.len());
+    for (j, o) in out[..head].iter_mut().enumerate() {
         let i = global_start + j;
+        let bit = ((bits[i >> 3] >> (i & 7)) & 1) as u32;
+        *o = f32::from_bits(sbits | (bit << 31));
+    }
+    let base = (global_start + head) >> 3;
+    let done = head + (out.len() - head) / 8 * 8;
+    let mut chunks = out[head..].chunks_exact_mut(8);
+    for (k, chunk) in (&mut chunks).enumerate() {
+        let byte = bits[base + k];
+        for (j, o) in chunk.iter_mut().enumerate() {
+            let bit = ((byte >> j) & 1) as u32;
+            *o = f32::from_bits(sbits | (bit << 31));
+        }
+    }
+    for (j, o) in chunks.into_remainder().iter_mut().enumerate() {
+        let i = global_start + done + j;
         let bit = ((bits[i >> 3] >> (i & 7)) & 1) as u32;
         *o = f32::from_bits(sbits | (bit << 31));
     }
 }
 
 /// Strictly ascending (therefore duplicate-free) index stream? The
-/// sortedness guard for the `partition_point`/single-pass sparse slicing
+/// sortedness guard for the binary-search/single-pass sparse slicing
 /// paths — Top-k and Random-k emit ascending indices by construction,
 /// but hand-built `Sparse` payloads are not required to.
-fn is_strictly_ascending(idx: &[u32]) -> bool {
-    idx.windows(2).all(|w| w[0] < w[1])
+fn is_strictly_ascending(idx: Scalars<'_, u32>) -> bool {
+    let mut it = idx.iter();
+    let Some(mut prev) = it.next() else {
+        return true;
+    };
+    for x in it {
+        if prev >= x {
+            return false;
+        }
+        prev = x;
+    }
+    true
+}
+
+/// First position in `idx[from..]` whose index is >= `bound` (the
+/// `partition_point` equivalent over a [`Scalars`] stream, which has no
+/// slice to binary-search directly).
+fn lower_bound(idx: Scalars<'_, u32>, from: usize, bound: usize) -> usize {
+    let (mut lo, mut hi) = (from, idx.len());
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if (idx.get(mid) as usize) < bound {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
 }
 
 /// Restrict a sparse (index, value) stream to `[start, end)`, rebasing
 /// indices. Ascending streams locate the kept run with two binary
-/// searches ([`slice::partition_point`]) and copy it; unsorted streams
-/// fall back to the full scan.
-fn slice_sparse<V: Copy>(
-    idx: &[u32],
-    val: &[V],
+/// searches and copy it; unsorted streams fall back to the full scan.
+fn slice_sparse<V: WireScalar>(
+    idx: Scalars<'_, u32>,
+    val: Scalars<'_, V>,
     start: usize,
     end: usize,
 ) -> (Vec<u32>, Vec<V>) {
     if is_strictly_ascending(idx) {
-        let lo = idx.partition_point(|&i| (i as usize) < start);
-        let hi = lo + idx[lo..].partition_point(|&i| (i as usize) < end);
-        let si = idx[lo..hi].iter().map(|&i| (i as usize - start) as u32).collect();
-        (si, val[lo..hi].to_vec())
+        let lo = lower_bound(idx, 0, start);
+        let hi = lower_bound(idx, lo, end);
+        let mut si = Vec::with_capacity(hi - lo);
+        let mut sv = Vec::with_capacity(hi - lo);
+        for j in lo..hi {
+            si.push((idx.get(j) as usize - start) as u32);
+            sv.push(val.get(j));
+        }
+        (si, sv)
     } else {
         let mut si = Vec::new();
         let mut sv = Vec::new();
-        for (&i, &v) in idx.iter().zip(val) {
+        for (i, v) in idx.iter().zip(val.iter()) {
             let i = i as usize;
             if (start..end).contains(&i) {
                 si.push((i - start) as u32);
@@ -607,15 +1019,16 @@ fn slice_sparse<V: Copy>(
 /// One-pass split of an **ascending** sparse stream across the partition
 /// `bounds`: each index is visited exactly once, the shard cursor only
 /// moves forward. Returns one rebased (idx, val) pair per shard.
-fn split_sorted_sparse<V: Copy>(
-    idx: &[u32],
-    val: &[V],
+fn split_sorted_sparse<V: WireScalar>(
+    idx: Scalars<'_, u32>,
+    val: Scalars<'_, V>,
     bounds: &[usize],
 ) -> Vec<(Vec<u32>, Vec<V>)> {
     let shards = bounds.len() - 1;
-    let mut out: Vec<(Vec<u32>, Vec<V>)> = (0..shards).map(|_| (Vec::new(), Vec::new())).collect();
+    let mut out: Vec<(Vec<u32>, Vec<V>)> =
+        (0..shards).map(|_| (Vec::new(), Vec::new())).collect();
     let mut s = 0usize;
-    for (&i, &v) in idx.iter().zip(val) {
+    for (i, v) in idx.iter().zip(val.iter()) {
         let i = i as usize;
         if i < bounds[0] {
             continue;
@@ -635,25 +1048,52 @@ fn split_sorted_sparse<V: Copy>(
 /// Repack the sign bits of global coordinates `[start, start + len)`
 /// into a fresh bitmap whose bit 0 is global coordinate `start` (the
 /// [`Payload::slice_range`] helper for the sign-based payloads).
+/// Byte-aligned starts are a straight `copy_from_slice`; misaligned
+/// starts shift-merge two adjacent source bytes per output byte. Either
+/// way the tail byte is masked to `len` bits, so stray source bits past
+/// the range never leak into the slice.
 fn slice_sign_bits(bits: &[u8], start: usize, len: usize) -> Vec<u8> {
-    let mut out = vec![0u8; len.div_ceil(8)];
-    for j in 0..len {
-        let i = start + j;
-        if (bits[i >> 3] >> (i & 7)) & 1 == 1 {
-            out[j >> 3] |= 1 << (j & 7);
+    let nb = len.div_ceil(8);
+    let mut out = vec![0u8; nb];
+    let base = start >> 3;
+    let r = start & 7;
+    if r == 0 {
+        out.copy_from_slice(&bits[base..base + nb]);
+    } else {
+        for (k, o) in out.iter_mut().enumerate() {
+            let lo = bits[base + k] >> r;
+            let hi = bits.get(base + k + 1).map_or(0, |&b| b << (8 - r));
+            *o = lo | hi;
         }
+    }
+    if len & 7 != 0 {
+        out[nb - 1] &= (1u8 << (len & 7)) - 1;
     }
     out
 }
 
 /// Pack sign bits: bit set == negative. `sign(0) := +1` (bit clear), the
-/// convention the Pallas blocksign kernel and the paper's Definition 2 use.
+/// convention the Pallas blocksign kernel and the paper's Definition 2
+/// use — note this is the `v < 0.0` comparison, NOT the raw IEEE sign
+/// bit, so `-0.0` (and negative NaN) pack as positive. Word-at-a-time:
+/// 8 floats fold branchlessly into one byte.
 pub fn pack_signs(x: &[f32]) -> Vec<u8> {
     let mut bits = vec![0u8; x.len().div_ceil(8)];
-    for (i, &v) in x.iter().enumerate() {
-        if v < 0.0 {
-            bits[i >> 3] |= 1 << (i & 7);
+    let chunks = x.chunks_exact(8);
+    let rem = chunks.remainder();
+    for (b, chunk) in bits.iter_mut().zip(chunks) {
+        let mut byte = 0u8;
+        for (j, &v) in chunk.iter().enumerate() {
+            byte |= u8::from(v < 0.0) << j;
         }
+        *b = byte;
+    }
+    if !rem.is_empty() {
+        let mut byte = 0u8;
+        for (j, &v) in rem.iter().enumerate() {
+            byte |= u8::from(v < 0.0) << j;
+        }
+        *bits.last_mut().unwrap() = byte;
     }
     bits
 }
@@ -679,20 +1119,6 @@ impl<'a> Reader<'a> {
 
     fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
-    }
-
-    fn u32s(&mut self, n: usize) -> Result<Vec<u32>> {
-        let raw = self.take(4 * n)?;
-        Ok(raw.chunks_exact(4).map(|c| u32::from_le_bytes(c.try_into().unwrap())).collect())
-    }
-
-    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
-        let raw = self.take(4 * n)?;
-        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
-    }
-
-    fn bytes(&mut self, n: usize) -> Result<Vec<u8>> {
-        Ok(self.take(n)?.to_vec())
     }
 }
 
@@ -1061,5 +1487,194 @@ mod tests {
         // note: -0.0 < 0.0 is false in IEEE, so -0.0 also encodes positive.
         assert_eq!(bits[0] >> 1 & 1, 0);
         assert_eq!(bits[0] >> 2 & 1, 1);
+    }
+
+    #[test]
+    fn pack_signs_word_path_matches_naive_per_bit() {
+        // Cover every length mod 8 (head/body/tail of the word-at-a-time
+        // loop) and the edge values whose sign convention is subtle.
+        for d in 0..40usize {
+            let x: Vec<f32> = (0..d)
+                .map(|i| match i % 5 {
+                    0 => (i as f32 - 7.5) * 0.3,
+                    1 => -0.0,
+                    2 => 0.0,
+                    3 => f32::NAN,
+                    _ => -(i as f32) - 0.25,
+                })
+                .collect();
+            let fast = pack_signs(&x);
+            let mut naive = vec![0u8; d.div_ceil(8)];
+            for (i, &v) in x.iter().enumerate() {
+                if v < 0.0 {
+                    naive[i >> 3] |= 1 << (i & 7);
+                }
+            }
+            assert_eq!(fast, naive, "d={d}");
+        }
+    }
+
+    fn naive_slice_sign_bits(bits: &[u8], start: usize, len: usize) -> Vec<u8> {
+        let mut out = vec![0u8; len.div_ceil(8)];
+        for j in 0..len {
+            let i = start + j;
+            if (bits[i >> 3] >> (i & 7)) & 1 == 1 {
+                out[j >> 3] |= 1 << (j & 7);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn slice_sign_bits_matches_naive_over_all_offsets() {
+        // Exhaustive (start, len) sweep over pseudo-random bitmaps: hits
+        // the aligned copy_from_slice path, every misaligned shift, and
+        // every tail-mask width.
+        for d in [1usize, 7, 8, 9, 15, 16, 17, 31, 40, 65] {
+            let bits: Vec<u8> =
+                (0..d.div_ceil(8)).map(|i| ((i * 131 + 89) % 251) as u8).collect();
+            for start in 0..d {
+                for len in 1..=(d - start) {
+                    assert_eq!(
+                        slice_sign_bits(&bits, start, len),
+                        naive_slice_sign_bits(&bits, start, len),
+                        "d={d} start={start} len={len}"
+                    );
+                }
+            }
+        }
+    }
+
+    fn sample_payloads() -> Vec<Payload> {
+        let x: Vec<f32> = (0..21).map(|i| (i as f32 - 9.5) * 0.7).collect();
+        vec![
+            Payload::Dense(x.clone()),
+            Payload::Sparse { dim: 21, idx: vec![0, 3, 9, 20], val: vec![1.0, -2.0, 3.5, 0.25] },
+            Payload::Signs { dim: 21, block: 6, scales: vec![2.0, 0.5, 1.5, 0.75], bits: pack_signs(&x) },
+            Payload::LayeredSigns {
+                dim: 21,
+                sizes: vec![4, 11, 6],
+                scales: vec![1.0, 0.75, 4.0],
+                bits: pack_signs(&x),
+            },
+            Payload::Quantized {
+                dim: 21,
+                norm: 8.0,
+                levels: 4,
+                q: (0..21).map(|i| (i % 9) as i8 - 4).collect(),
+            },
+            Payload::SparseF16 {
+                dim: 21,
+                idx: vec![2, 7, 8, 13],
+                val: vec![f32_to_f16(0.5), f32_to_f16(-3.0), f32_to_f16(1.25), f32_to_f16(9.0)],
+            },
+        ]
+    }
+
+    #[test]
+    fn encode_into_is_byte_identical_to_encode_and_appends() {
+        for p in sample_payloads() {
+            let owned = p.encode();
+            // Appends after existing content, does not clear.
+            let mut buf = vec![0xAA, 0xBB, 0xCC];
+            p.encode_into(&mut buf);
+            assert_eq!(&buf[..3], &[0xAA, 0xBB, 0xCC]);
+            assert_eq!(&buf[3..], &owned[..], "{p:?}");
+            // Scratch reuse: clear + re-encode reproduces exactly encode().
+            buf.clear();
+            p.encode_into(&mut buf);
+            assert_eq!(buf, owned);
+        }
+    }
+
+    #[test]
+    fn view_parse_matches_owned_decode_for_every_kind() {
+        for p in sample_payloads() {
+            let bytes = p.encode();
+            let view = PayloadView::parse(&bytes).unwrap();
+            assert_eq!(view.to_owned(), p, "to_owned roundtrip");
+            assert_eq!(view.dim(), p.dim());
+            assert_eq!(view.wire_bits(), p.wire_bits());
+            // Wire-backed encode_into reproduces the bytes by memcpy.
+            let mut re = Vec::new();
+            view.encode_into(&mut re);
+            assert_eq!(re, bytes);
+        }
+    }
+
+    #[test]
+    fn view_ops_match_owned_ops_bitwise() {
+        for p in sample_payloads() {
+            let d = p.dim();
+            let bytes = p.encode();
+            let view = PayloadView::parse(&bytes).unwrap();
+            // to_dense parity.
+            let a = p.to_dense(d).unwrap();
+            let b = view.to_dense(d).unwrap();
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{p:?}");
+            }
+            // add_into parity.
+            let mut acc_a = vec![0.125f32; d];
+            let mut acc_b = vec![0.125f32; d];
+            p.add_into(&mut acc_a).unwrap();
+            view.add_into(&mut acc_b).unwrap();
+            for (x, y) in acc_a.iter().zip(&acc_b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+            // slice_range on the view equals slice_range on the owned
+            // payload (same Payload output, compared structurally), and
+            // bad ranges fail on both.
+            for (lo, hi) in [(0, d), (0, 5), (3, 11), (7, 8), (d - 1, d)] {
+                assert_eq!(view.slice_range(lo, hi).unwrap(), p.slice_range(lo, hi).unwrap());
+            }
+            assert!(view.slice_range(3, 3).is_err());
+            assert!(view.slice_range(0, d + 1).is_err());
+            // slice_into_shards parity.
+            let bounds = [0usize, 5, 11, d];
+            assert_eq!(
+                view.slice_into_shards(&bounds).unwrap(),
+                p.slice_into_shards(&bounds).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn view_parse_rejects_exactly_what_decode_rejects() {
+        // Corruption parity: the borrowed parse and the owned decode must
+        // accept/reject identical byte strings.
+        let mut cases: Vec<Vec<u8>> = Vec::new();
+        for p in sample_payloads() {
+            let good = p.encode();
+            cases.push(good.clone()); // accepted
+            let mut bad_tag = good.clone();
+            bad_tag[0] = 99;
+            cases.push(bad_tag);
+            cases.push(good[..good.len() - 1].to_vec()); // truncated
+            let mut trailing = good.clone();
+            trailing.push(0);
+            cases.push(trailing);
+            let mut flip = good.clone();
+            flip[5] ^= 0xFF; // corrupt first body byte (k / block / norm...)
+            cases.push(flip);
+        }
+        // Out-of-range sparse index and zero quantizer levels.
+        cases.push(Payload::Sparse { dim: 4, idx: vec![9], val: vec![1.0] }.encode());
+        let q = Payload::Quantized { dim: 3, norm: 1.0, levels: 2, q: vec![0, 1, -1] };
+        let mut zl = q.encode();
+        zl[9] = 0; // levels byte
+        cases.push(zl);
+        for bytes in cases {
+            let owned = Payload::decode(&bytes);
+            let view = PayloadView::parse(&bytes);
+            assert_eq!(
+                owned.is_ok(),
+                view.is_ok(),
+                "decode/parse disagree on {bytes:?}"
+            );
+            if let (Ok(o), Ok(v)) = (owned, view) {
+                assert_eq!(o, v.to_owned());
+            }
+        }
     }
 }

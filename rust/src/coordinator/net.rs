@@ -2,7 +2,8 @@
 //!
 //! This is the socket step the ROADMAP promised after PR 4: the protocol
 //! and runtime layers are untouched — the leader still dispatches
-//! [`Envelope`] downlinks and consumes [`Event::Uplink`] arrivals — but
+//! [`Envelope`](super::transport::Envelope) downlinks and consumes
+//! [`Event::Uplink`] arrivals — but
 //! the workers now live in **other OS processes** (spawned by the
 //! [`supervisor`](super::supervisor), or launched by hand with
 //! `comp-ams worker --leader ADDR`).
@@ -23,8 +24,8 @@
 //! |------------|-----------------|---------------------------------------------|
 //! | `HELLO`    | worker → leader | empty (the magic carries the version)       |
 //! | `ASSIGN`   | leader → worker | `wid u32 \| resume_len u32 \| resume bytes \| TrainConfig JSON` |
-//! | `DOWNLINK` | leader → worker | [`Envelope`] bytes (dense θ, lr slot)       |
-//! | `UPLINK`   | worker → leader | [`Envelope`] bytes (payload, loss slot)     |
+//! | `DOWNLINK` | leader → worker | envelope bytes (dense θ, lr slot)           |
+//! | `UPLINK`   | worker → leader | envelope bytes (payload, loss slot)         |
 //! | `SHUTDOWN` | leader → worker | empty                                       |
 //! | `DETACH`   | leader → worker | `want_state u8` (job over; daemon stays)    |
 //! | `STATE`    | worker → leader | worker suspend blob (empty unless wanted)   |
@@ -89,10 +90,12 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::algo::RoundCtx;
-use crate::compress::Payload;
+use crate::compress::{PayloadView, Scalars};
 use crate::config::TrainConfig;
 
-use super::transport::{Envelope, Event, Transport, ENVELOPE_HEADER_BYTES};
+use super::transport::{
+    encode_envelope_into, Event, Transport, UplinkMsg, ENVELOPE_HEADER_BYTES,
+};
 
 /// Wire magic, doubling as the protocol version ("CAM1").
 pub const FRAME_MAGIC: u32 = u32::from_le_bytes(*b"CAM1");
@@ -165,6 +168,35 @@ pub fn write_frame(w: &mut impl Write, kind: FrameKind, body: &[u8]) -> Result<(
     w.write_all(&hdr)?;
     w.write_all(body)?;
     w.flush()?;
+    Ok(())
+}
+
+/// Start a frame in a caller-owned scratch buffer: append the 9-byte
+/// header with a zero length placeholder. The caller then appends the
+/// body straight into the same buffer (e.g. via [`encode_envelope_into`])
+/// and calls [`finish_frame`]; the result is one contiguous frame ready
+/// for a single `write_all`. Appends — clear the buffer first to start a
+/// fresh frame (capacity is retained, the zero-copy scratch contract).
+pub fn begin_frame(buf: &mut Vec<u8>, kind: FrameKind) {
+    buf.extend_from_slice(&FRAME_MAGIC.to_le_bytes());
+    buf.push(kind as u8);
+    buf.extend_from_slice(&0u32.to_le_bytes());
+}
+
+/// Patch the length field of a frame started with [`begin_frame`], after
+/// the body has been appended. Byte-identical to what [`write_frame`]
+/// would have produced for the same kind and body.
+pub fn finish_frame(buf: &mut Vec<u8>) -> Result<()> {
+    ensure!(
+        buf.len() >= FRAME_HEADER_BYTES,
+        "finish_frame on a buffer without a frame header"
+    );
+    let len = buf.len() - FRAME_HEADER_BYTES;
+    ensure!(
+        len as u64 <= MAX_FRAME_BYTES as u64,
+        "frame length {len} exceeds the 1 GiB cap"
+    );
+    buf[5..9].copy_from_slice(&(len as u32).to_le_bytes());
     Ok(())
 }
 
@@ -361,7 +393,8 @@ pub fn assign_streams(
         shut_down: false,
         pooled,
         detached: false,
-        downlink_cache: None,
+        downlink_frame: Vec::new(),
+        downlink_key: None,
     })
 }
 
@@ -400,9 +433,12 @@ fn spawn_reader(
         .name(format!("tcp-reader-{wid}"))
         .spawn(move || loop {
             match read_frame(&mut stream) {
-                Ok(Some((FrameKind::Uplink, body))) => match Envelope::decode(&body) {
-                    Ok(envelope) => {
-                        let ev = Event::Uplink { wid, round: envelope.round, envelope };
+                // The frame body is handed to UplinkMsg whole: validated
+                // once here, then served to the server step as a borrowed
+                // PayloadView — no owned index/value vectors.
+                Ok(Some((FrameKind::Uplink, body))) => match UplinkMsg::from_frame(body) {
+                    Ok(msg) => {
+                        let ev = Event::Uplink { wid, round: msg.round(), msg };
                         if tx.send((wid, gen, Ok(ev))).is_err() {
                             return None; // leader gone
                         }
@@ -482,11 +518,16 @@ pub struct Tcp {
     pooled: bool,
     /// Set once the workers have been DETACHed (the transport is spent).
     detached: bool,
-    /// Encoded downlink envelope for the current `(round, lr)`, reused
-    /// across the round's dispatch fan-out: the n per-worker frames
-    /// differ only in the 4-byte wid header, so θ is cloned + encoded
-    /// once per round instead of once per worker.
-    downlink_cache: Option<(u64, u32, Vec<u8>)>,
+    /// Pooled downlink scratch: the **full** socket frame (9-byte frame
+    /// header + 16-byte envelope header + θ body) for the current
+    /// `(round, lr)`, encoded once per round straight off the live θ
+    /// slice — no owned `Payload`, no intermediate body `Vec` — and
+    /// reused across the dispatch fan-out. Per worker only the 4-byte
+    /// wid field is re-patched and the send is a single `write_all`.
+    /// Capacity is retained across rounds, so steady-state downlinks
+    /// allocate nothing.
+    downlink_frame: Vec<u8>,
+    downlink_key: Option<(u64, u32)>,
 }
 
 impl Tcp {
@@ -552,28 +593,30 @@ impl Transport for Tcp {
             return Ok(false);
         }
         let lr_bits = ctx.lr.to_bits();
-        let cached = matches!(
-            &self.downlink_cache,
-            Some((r, l, _)) if *r == ctx.round && *l == lr_bits
-        );
-        if !cached {
-            let frame = Envelope {
-                wid: 0,
-                round: ctx.round,
-                loss: ctx.lr,
-                payload: Payload::Dense(theta.as_ref().clone()),
-            }
-            .encode();
-            self.downlink_cache = Some((ctx.round, lr_bits, frame));
+        if self.downlink_key != Some((ctx.round, lr_bits)) {
+            self.downlink_frame.clear();
+            begin_frame(&mut self.downlink_frame, FrameKind::Downlink);
+            encode_envelope_into(
+                wid as u32,
+                ctx.round,
+                ctx.lr,
+                &PayloadView::Dense(Scalars::Slice(theta.as_slice())),
+                &mut self.downlink_frame,
+            );
+            finish_frame(&mut self.downlink_frame)?;
+            self.downlink_key = Some((ctx.round, lr_bits));
+        } else {
+            // Per-worker patch: wid is the first envelope field, right
+            // after the socket frame header.
+            self.downlink_frame[FRAME_HEADER_BYTES..FRAME_HEADER_BYTES + 4]
+                .copy_from_slice(&(wid as u32).to_le_bytes());
         }
-        let frame = {
-            let (_, _, f) = self.downlink_cache.as_mut().unwrap();
-            // Per-worker patch: wid is the first 4 bytes of the envelope.
-            f[0..4].copy_from_slice(&(wid as u32).to_le_bytes());
-            &*f
-        };
         let link = &mut self.links[wid];
-        match write_frame(&mut link.stream, FrameKind::Downlink, frame) {
+        let sent = link
+            .stream
+            .write_all(&self.downlink_frame)
+            .and_then(|()| link.stream.flush());
+        match sent {
             Ok(()) => Ok(true),
             // A write failure means the worker process died under us; its
             // Event::Exit is already in (or on its way into) the channel.
@@ -742,6 +785,25 @@ mod tests {
         let mut bad = buf;
         bad[5..9].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(read_frame(&mut &bad[..]).is_err());
+    }
+
+    #[test]
+    fn begin_finish_frame_matches_write_frame() {
+        let mut whole = Vec::new();
+        write_frame(&mut whole, FrameKind::Downlink, b"theta-bytes").unwrap();
+        let mut scratch = Vec::new();
+        for _ in 0..2 {
+            // Twice: the second pass reuses the cleared buffer, proving
+            // the scratch contract reproduces identical bytes.
+            scratch.clear();
+            begin_frame(&mut scratch, FrameKind::Downlink);
+            scratch.extend_from_slice(b"theta-bytes");
+            finish_frame(&mut scratch).unwrap();
+            assert_eq!(scratch, whole);
+        }
+        // A header-less buffer is rejected.
+        let mut empty = Vec::new();
+        assert!(finish_frame(&mut empty).is_err());
     }
 
     #[test]

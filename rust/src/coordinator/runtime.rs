@@ -10,9 +10,9 @@
 //!   round t:
 //!     dispatch  θ_t → every idle worker          (downlink, charged per
 //!                                                 dispatched worker)
-//!     collect   Event::Uplink{wid, round, env}   (arrival order) until
+//!     collect   Event::Uplink{wid, round, msg}   (arrival order) until
 //!               K uplinks tagged `round == t` have arrived
-//!     classify  each arrival by staleness s = t − env.round:
+//!     classify  each arrival by staleness s = t − msg.round():
 //!                 s == 0                 fresh   → applied
 //!                 0 < s ≤ max_staleness  stale   → applied, counted
 //!                 s > max_staleness      dropped → counted, not applied
@@ -68,11 +68,11 @@ use std::sync::Arc;
 use anyhow::{ensure, Result};
 
 use crate::algo::{RoundCtx, ServerAlgo};
-use crate::compress::Payload;
+use crate::compress::PayloadView;
 use crate::util::timer::Stopwatch;
 
 use super::comm::CommLedger;
-use super::transport::{Event, Transport};
+use super::transport::{Event, Transport, UplinkMsg};
 
 /// What one runtime round produced, for the metrics stream.
 #[derive(Clone, Copy, Debug)]
@@ -296,14 +296,14 @@ impl ClusterRuntime {
         let mut fresh = 0usize;
         while fresh < target && pending > 0 {
             match self.transport.recv_event()? {
-                Event::Uplink { wid, round: observed, envelope } => {
+                Event::Uplink { wid, round: observed, msg } => {
                     ensure!(wid < n, "uplink from unknown worker {wid}");
                     ensure!(
-                        envelope.wid as usize == wid && envelope.round == observed,
+                        msg.wid() as usize == wid && msg.round() == observed,
                         "transport event (wid {wid}, round {observed}) disagrees with its \
                          envelope header (wid {}, round {})",
-                        envelope.wid,
-                        envelope.round
+                        msg.wid(),
+                        msg.round()
                     );
                     ensure!(
                         self.in_flight[wid] == Some(observed),
@@ -316,12 +316,7 @@ impl ClusterRuntime {
                         pending -= 1;
                     }
                     ledger.charge_framing(self.transport.frame_overhead_bits());
-                    arrivals.push(Arrival {
-                        wid,
-                        observed,
-                        loss: envelope.loss,
-                        payload: envelope.payload,
-                    });
+                    arrivals.push(Arrival { wid, observed, loss: msg.loss(), msg });
                 }
                 Event::Exit { wid } => {
                     ensure!(wid < n, "exit event from unknown worker {wid}");
@@ -350,20 +345,20 @@ impl ClusterRuntime {
         arrivals.sort_by_key(|a| a.wid);
         let count = arrivals.len() as f32;
         let mut train_loss = 0.0f32;
-        let mut msgs: Vec<Payload> = Vec::with_capacity(arrivals.len());
+        let mut applied: Vec<UplinkMsg> = Vec::with_capacity(arrivals.len());
         let mut observed_round = round;
         let mut stale = 0usize;
         let mut dropped = 0usize;
         for a in arrivals {
             train_loss += a.loss / count;
-            ledger.charge_uplink(a.wid, a.payload.wire_bits());
+            ledger.charge_uplink(a.wid, a.msg.payload_wire_bits());
             let staleness = round - a.observed;
             if staleness == 0 {
-                msgs.push(a.payload);
+                applied.push(a.msg);
             } else if staleness <= self.max_staleness {
                 stale += 1;
                 observed_round = observed_round.min(a.observed);
-                msgs.push(a.payload);
+                applied.push(a.msg);
             } else {
                 dropped += 1;
             }
@@ -375,10 +370,13 @@ impl ClusterRuntime {
         // the batch's staleness through ctx.observed_round. The batch can
         // be empty when worker deaths left only past-staleness arrivals
         // this round — then θ simply doesn't move (a 0-message "average"
-        // would be 0/0).
-        if !msgs.is_empty() {
+        // would be 0/0). Frame-backed uplinks reach the server as
+        // borrowed views straight into the received bytes (zero-copy).
+        if !applied.is_empty() {
             let step_ctx = RoundCtx { round, observed_round, lr };
-            server.step(theta, &msgs, &step_ctx)?;
+            let views: Vec<PayloadView<'_>> =
+                applied.iter().map(|m| m.payload()).collect();
+            server.step(theta, &views, &step_ctx)?;
         }
 
         Ok(RoundOutcome {
@@ -417,7 +415,7 @@ impl ClusterRuntime {
         let mut drained = 0usize;
         while self.in_flight.iter().any(Option::is_some) {
             match self.transport.recv_event()? {
-                Event::Uplink { wid, round: observed, envelope } => {
+                Event::Uplink { wid, round: observed, msg } => {
                     ensure!(
                         wid < self.in_flight.len(),
                         "uplink from unknown worker {wid}"
@@ -428,7 +426,7 @@ impl ClusterRuntime {
                         self.in_flight[wid]
                     );
                     self.in_flight[wid] = None;
-                    ledger.charge_uplink(wid, envelope.payload.wire_bits());
+                    ledger.charge_uplink(wid, msg.payload_wire_bits());
                     ledger.charge_framing(self.transport.frame_overhead_bits());
                     drained += 1;
                 }
@@ -476,13 +474,14 @@ struct Arrival {
     wid: usize,
     observed: u64,
     loss: f32,
-    payload: Payload,
+    msg: UplinkMsg,
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::algo::AlgoSpec;
+    use crate::compress::Payload;
     use crate::coordinator::cluster::WorkerPool;
     use crate::coordinator::transport::{InProc, Loopback};
     use crate::grad::quadratic::QuadraticProblem;
@@ -702,12 +701,12 @@ mod tests {
             self.queue.push_back(Event::Uplink {
                 wid,
                 round: ctx.round,
-                envelope: super::super::transport::Envelope {
-                    wid: wid as u32,
-                    round: ctx.round,
-                    loss: 1.0,
-                    payload: Payload::Dense(vec![0.1f32; theta.len()]),
-                },
+                msg: UplinkMsg::from_payload(
+                    wid as u32,
+                    ctx.round,
+                    1.0,
+                    Payload::Dense(vec![0.1f32; theta.len()]),
+                ),
             });
             Ok(true)
         }

@@ -247,8 +247,8 @@ impl<T: Transport> Sim<T> {
         while self.outstanding > 0 {
             let event = self.inner.recv_event()?;
             let (wid, delay_us, drops) = match &event {
-                Event::Uplink { wid, round, envelope } => {
-                    let (d, k) = self.link_delay(*wid, *round, envelope.wire_bits());
+                Event::Uplink { wid, round, msg } => {
+                    let (d, k) = self.link_delay(*wid, *round, msg.wire_bits());
                     (*wid, d, k)
                 }
                 // A death notice is control-plane: it surfaces at the
@@ -361,7 +361,7 @@ mod tests {
 
     use super::*;
     use crate::compress::Payload;
-    use crate::coordinator::transport::Envelope;
+    use crate::coordinator::transport::UplinkMsg;
 
     /// Inner transport double: downlinks are recorded, uplinks come off a
     /// scripted queue (in "physical" order the test chooses).
@@ -377,13 +377,13 @@ mod tests {
         }
 
         fn push_uplink(&mut self, wid: usize, round: u64, dim: usize) {
-            let envelope = Envelope {
-                wid: wid as u32,
+            let msg = UplinkMsg::from_payload(
+                wid as u32,
                 round,
-                loss: 0.5,
-                payload: Payload::Dense(vec![0.25; dim]),
-            };
-            self.queue.push_back(Event::Uplink { wid, round, envelope });
+                0.5,
+                Payload::Dense(vec![0.25; dim]),
+            );
+            self.queue.push_back(Event::Uplink { wid, round, msg });
         }
     }
 

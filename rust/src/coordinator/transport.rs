@@ -61,13 +61,76 @@ use std::sync::Arc;
 use anyhow::{bail, ensure, Result};
 
 use crate::algo::RoundCtx;
-use crate::compress::Payload;
+use crate::compress::{Payload, PayloadView, Scalars};
 
 use super::cluster::WorkerPool;
 use super::sim::{LinkStats, Sim, SimProfile};
 
 /// Fixed frame header: `wid u32 | round u64 | loss f32`.
 pub const ENVELOPE_HEADER_BYTES: usize = 16;
+
+/// Serialize one envelope frame — header plus payload body — straight
+/// into `out`, appending (the zero-copy fast path; see the scratch-buffer
+/// contract in [`crate::compress::wire`]). Byte-identical to
+/// [`Envelope::encode`] for the same fields, but takes a borrowed
+/// [`PayloadView`] so the caller never has to own the payload: the TCP
+/// leader encodes its θ downlink directly from the live `&[f32]` slice.
+pub fn encode_envelope_into(
+    wid: u32,
+    round: u64,
+    loss: f32,
+    payload: &PayloadView<'_>,
+    out: &mut Vec<u8>,
+) {
+    out.reserve(ENVELOPE_HEADER_BYTES + (payload.wire_bits() / 8) as usize);
+    out.extend_from_slice(&wid.to_le_bytes());
+    out.extend_from_slice(&round.to_le_bytes());
+    out.extend_from_slice(&loss.to_le_bytes());
+    payload.encode_into(out);
+}
+
+/// A borrowed decode of one envelope frame: header fields by value,
+/// payload as a [`PayloadView`] into the frame bytes. Validates exactly
+/// what [`Envelope::decode`] validates (which is now a thin
+/// `parse().to_owned()` over this), but materializes nothing.
+#[derive(Clone, Copy, Debug)]
+pub struct EnvelopeView<'a> {
+    pub wid: u32,
+    pub round: u64,
+    pub loss: f32,
+    pub payload: PayloadView<'a>,
+}
+
+impl<'a> EnvelopeView<'a> {
+    /// Borrowed decode of a wire frame; rejects exactly the byte strings
+    /// [`Envelope::decode`] rejects.
+    pub fn parse(buf: &'a [u8]) -> Result<EnvelopeView<'a>> {
+        if buf.len() < ENVELOPE_HEADER_BYTES {
+            bail!("envelope truncated: {} bytes", buf.len());
+        }
+        let wid = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+        let round = u64::from_le_bytes(buf[4..12].try_into().unwrap());
+        let loss = f32::from_le_bytes(buf[12..16].try_into().unwrap());
+        let payload = PayloadView::parse(&buf[ENVELOPE_HEADER_BYTES..])?;
+        Ok(EnvelopeView { wid, round, loss, payload })
+    }
+
+    /// Materialize an owned [`Envelope`] (copies the payload fields out of
+    /// the frame bytes).
+    pub fn to_owned(self) -> Envelope {
+        Envelope {
+            wid: self.wid,
+            round: self.round,
+            loss: self.loss,
+            payload: self.payload.to_owned(),
+        }
+    }
+
+    /// Exact frame size in bits, header included.
+    pub fn wire_bits(&self) -> u64 {
+        (ENVELOPE_HEADER_BYTES as u64) * 8 + self.payload.wire_bits()
+    }
+}
 
 /// One framed leader↔worker message (see the module docs for the byte
 /// layout).
@@ -88,26 +151,22 @@ pub struct Envelope {
 impl Envelope {
     /// Serialize to the wire frame: 16-byte header + payload bytes.
     pub fn encode(&self) -> Vec<u8> {
-        let body = self.payload.encode();
-        let mut out = Vec::with_capacity(ENVELOPE_HEADER_BYTES + body.len());
-        out.extend(self.wid.to_le_bytes());
-        out.extend(self.round.to_le_bytes());
-        out.extend(self.loss.to_le_bytes());
-        out.extend_from_slice(&body);
+        let mut out = Vec::with_capacity((self.wire_bits() / 8) as usize);
+        self.encode_into(&mut out);
         out
     }
 
+    /// Append the wire frame to `out` — byte-identical to
+    /// [`Envelope::encode`], but reusing the caller's buffer.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        encode_envelope_into(self.wid, self.round, self.loss, &self.payload.view(), out);
+    }
+
     /// Decode a wire frame; exact inverse of [`Envelope::encode`]
-    /// (bitwise, including the loss and every payload kind).
+    /// (bitwise, including the loss and every payload kind). A thin
+    /// `.to_owned()` over [`EnvelopeView::parse`].
     pub fn decode(buf: &[u8]) -> Result<Envelope> {
-        if buf.len() < ENVELOPE_HEADER_BYTES {
-            bail!("envelope truncated: {} bytes", buf.len());
-        }
-        let wid = u32::from_le_bytes(buf[0..4].try_into().unwrap());
-        let round = u64::from_le_bytes(buf[4..12].try_into().unwrap());
-        let loss = f32::from_le_bytes(buf[12..16].try_into().unwrap());
-        let payload = Payload::decode(&buf[ENVELOPE_HEADER_BYTES..])?;
-        Ok(Envelope { wid, round, loss, payload })
+        Ok(EnvelopeView::parse(buf)?.to_owned())
     }
 
     /// Exact frame size in bits: the 16-byte header plus the payload's
@@ -117,15 +176,91 @@ impl Envelope {
     }
 }
 
+/// One received uplink, holding either the worker's payload as a Rust
+/// value (in-process transports) or the raw envelope frame bytes exactly
+/// as they crossed the wire (byte transports). Either way the server
+/// consumes it through [`UplinkMsg::payload`] as a borrowed
+/// [`PayloadView`] — the frame case never materializes owned index/value
+/// vectors, which is the zero-copy uplink path.
+#[derive(Clone, Debug)]
+pub struct UplinkMsg {
+    wid: u32,
+    round: u64,
+    loss: f32,
+    body: UplinkBody,
+}
+
+#[derive(Clone, Debug)]
+enum UplinkBody {
+    /// In-process: the payload as a value, no serialization happened.
+    Value(Payload),
+    /// Byte transports: the full envelope frame (16-byte header +
+    /// payload body), validated once at construction.
+    Frame(Vec<u8>),
+}
+
+impl UplinkMsg {
+    /// Wrap an in-process payload (no bytes involved).
+    pub fn from_payload(wid: u32, round: u64, loss: f32, payload: Payload) -> UplinkMsg {
+        UplinkMsg { wid, round, loss, body: UplinkBody::Value(payload) }
+    }
+
+    /// Take ownership of a received envelope frame. Parses (and so
+    /// validates) the frame exactly once; every later
+    /// [`payload`](UplinkMsg::payload) re-borrows the already-validated
+    /// bytes.
+    pub fn from_frame(frame: Vec<u8>) -> Result<UplinkMsg> {
+        let v = EnvelopeView::parse(&frame)?;
+        let (wid, round, loss) = (v.wid, v.round, v.loss);
+        Ok(UplinkMsg { wid, round, loss, body: UplinkBody::Frame(frame) })
+    }
+
+    pub fn wid(&self) -> u32 {
+        self.wid
+    }
+
+    pub fn round(&self) -> u64 {
+        self.round
+    }
+
+    pub fn loss(&self) -> f32 {
+        self.loss
+    }
+
+    /// Borrow the gradient payload. For a frame-backed uplink this is a
+    /// view straight into the received bytes — no owned vectors.
+    pub fn payload(&self) -> PayloadView<'_> {
+        match &self.body {
+            UplinkBody::Value(p) => p.view(),
+            UplinkBody::Frame(f) => PayloadView::parse(&f[ENVELOPE_HEADER_BYTES..])
+                .expect("uplink frame validated at construction"),
+        }
+    }
+
+    /// The payload's wire size in bits (what the comm ledger charges —
+    /// framing is billed separately).
+    pub fn payload_wire_bits(&self) -> u64 {
+        match &self.body {
+            UplinkBody::Value(p) => p.wire_bits(),
+            UplinkBody::Frame(f) => ((f.len() - ENVELOPE_HEADER_BYTES) as u64) * 8,
+        }
+    }
+
+    /// Full frame size in bits, envelope header included.
+    pub fn wire_bits(&self) -> u64 {
+        (ENVELOPE_HEADER_BYTES as u64) * 8 + self.payload_wire_bits()
+    }
+}
+
 /// One transport arrival, as the runtime's event loop consumes it.
 #[derive(Debug)]
 pub enum Event {
     Uplink {
         /// Sending worker.
         wid: usize,
-        /// The round the worker computed at (== `envelope.round`).
+        /// The round the worker computed at (== `msg.round()`).
         round: u64,
-        envelope: Envelope,
+        msg: UplinkMsg,
     },
     /// Worker `wid`'s connection is gone (process crashed or socket
     /// dropped). Only process-boundary transports emit this; the runtime
@@ -242,13 +377,8 @@ impl Transport for InProc {
 
     fn recv_event(&mut self) -> Result<Event> {
         let (wid, round, wr) = self.pool.recv()?;
-        let envelope = Envelope {
-            wid: wid as u32,
-            round,
-            loss: wr.loss,
-            payload: wr.payload,
-        };
-        Ok(Event::Uplink { wid, round, envelope })
+        let msg = UplinkMsg::from_payload(wid as u32, round, wr.loss, wr.payload);
+        Ok(Event::Uplink { wid, round, msg })
     }
 
     fn detach(&mut self, want_state: bool) -> Result<Vec<Option<Vec<u8>>>> {
@@ -273,11 +403,17 @@ fn detach_pool(pool: &mut WorkerPool, want_state: bool) -> Result<Vec<Option<Vec
 /// little-endian round trip exactly).
 pub struct Loopback {
     pool: WorkerPool,
+    /// Pooled downlink scratch: the θ envelope frame is encoded **once**
+    /// per `(round, lr)` and reused for every worker — only the 4-byte
+    /// wid header field is re-patched. Capacity is retained across
+    /// rounds, so steady-state downlinks allocate nothing here.
+    scratch: Vec<u8>,
+    scratch_key: Option<(u64, u32)>,
 }
 
 impl Loopback {
     pub fn new(pool: WorkerPool) -> Self {
-        Loopback { pool }
+        Loopback { pool, scratch: Vec::new(), scratch_key: None }
     }
 }
 
@@ -292,20 +428,29 @@ impl Transport for Loopback {
         theta: &Arc<Vec<f32>>,
         ctx: &RoundCtx,
     ) -> Result<bool> {
-        let frame = Envelope {
-            wid: wid as u32,
-            round: ctx.round,
-            loss: ctx.lr,
-            payload: Payload::Dense(theta.as_ref().clone()),
+        // θ is serialized straight off the live slice (no owned Payload,
+        // no body Vec); repeat sends within a round just re-patch the wid.
+        let key = (ctx.round, ctx.lr.to_bits());
+        if self.scratch_key == Some(key) {
+            self.scratch[0..4].copy_from_slice(&(wid as u32).to_le_bytes());
+        } else {
+            self.scratch.clear();
+            encode_envelope_into(
+                wid as u32,
+                ctx.round,
+                ctx.lr,
+                &PayloadView::Dense(Scalars::Slice(theta.as_slice())),
+                &mut self.scratch,
+            );
+            self.scratch_key = Some(key);
         }
-        .encode();
-        let dec = Envelope::decode(&frame)?;
+        let dec = EnvelopeView::parse(&self.scratch)?;
         ensure!(
             dec.wid as usize == wid && dec.round == ctx.round,
             "loopback downlink header corrupted"
         );
         let theta = match dec.payload {
-            Payload::Dense(v) => Arc::new(v),
+            PayloadView::Dense(s) => Arc::new(s.to_vec()),
             other => bail!("loopback downlink decoded to {other:?}, expected dense θ"),
         };
         // The worker-side RoundCtx comes entirely off the wire: a
@@ -318,19 +463,15 @@ impl Transport for Loopback {
 
     fn recv_event(&mut self) -> Result<Event> {
         let (wid, round, wr) = self.pool.recv()?;
-        let frame = Envelope {
-            wid: wid as u32,
-            round,
-            loss: wr.loss,
-            payload: wr.payload,
-        }
-        .encode();
-        let envelope = Envelope::decode(&frame)?;
+        let mut frame =
+            Vec::with_capacity(ENVELOPE_HEADER_BYTES + (wr.payload.wire_bits() / 8) as usize);
+        encode_envelope_into(wid as u32, round, wr.loss, &wr.payload.view(), &mut frame);
+        let msg = UplinkMsg::from_frame(frame)?;
         ensure!(
-            envelope.wid as usize == wid && envelope.round == round,
+            msg.wid() as usize == wid && msg.round() == round,
             "loopback uplink header corrupted"
         );
-        Ok(Event::Uplink { wid, round, envelope })
+        Ok(Event::Uplink { wid, round, msg })
     }
 
     fn frame_overhead_bits(&self) -> u64 {
@@ -504,7 +645,44 @@ mod tests {
             let back = Envelope::decode(&bytes).unwrap();
             assert_eq!(back, env, "kind {i}");
             assert_eq!(back.loss.to_bits(), env.loss.to_bits());
+            // encode_into appends byte-identically, and the borrowed
+            // parse agrees with the owned decode.
+            let mut buf = vec![0xEE];
+            env.encode_into(&mut buf);
+            assert_eq!(&buf[1..], &bytes[..]);
+            let view = EnvelopeView::parse(&bytes).unwrap();
+            assert_eq!(view.wire_bits(), env.wire_bits());
+            assert_eq!(view.to_owned(), env);
         }
+    }
+
+    #[test]
+    fn uplink_msg_frame_and_value_agree() {
+        for (i, p) in sample_payloads().into_iter().enumerate() {
+            let env =
+                Envelope { wid: 7 + i as u32, round: 100 + i as u64, loss: 0.5, payload: p };
+            let by_frame = UplinkMsg::from_frame(env.encode()).unwrap();
+            let by_value =
+                UplinkMsg::from_payload(env.wid, env.round, env.loss, env.payload.clone());
+            assert_eq!(by_frame.wid(), by_value.wid());
+            assert_eq!(by_frame.round(), by_value.round());
+            assert_eq!(by_frame.loss().to_bits(), by_value.loss().to_bits());
+            assert_eq!(by_frame.payload().to_owned(), env.payload);
+            assert_eq!(by_value.payload().to_owned(), env.payload);
+            assert_eq!(by_frame.payload_wire_bits(), env.payload.wire_bits());
+            assert_eq!(by_value.payload_wire_bits(), env.payload.wire_bits());
+            assert_eq!(by_frame.wire_bits(), env.wire_bits());
+        }
+        // A corrupt frame is rejected at construction, not at use.
+        let mut bad = Envelope {
+            wid: 0,
+            round: 0,
+            loss: 0.0,
+            payload: Payload::Dense(vec![1.0]),
+        }
+        .encode();
+        bad[ENVELOPE_HEADER_BYTES] = 99;
+        assert!(UplinkMsg::from_frame(bad).is_err());
     }
 
     #[test]
@@ -587,19 +765,19 @@ mod tests {
             loopback.send_downlink(wid, &theta, &ctx).unwrap();
         }
         for _ in 0..n {
-            let Event::Uplink { wid: wa, round: ra, envelope: ea } =
-                inproc.recv_event().unwrap()
+            let Event::Uplink { wid: wa, round: ra, msg: ma } = inproc.recv_event().unwrap()
             else {
                 panic!("inproc emitted a non-uplink event")
             };
-            let Event::Uplink { wid: wb, round: rb, envelope: eb } =
-                loopback.recv_event().unwrap()
+            let Event::Uplink { wid: wb, round: rb, msg: mb } = loopback.recv_event().unwrap()
             else {
                 panic!("loopback emitted a non-uplink event")
             };
             assert_eq!((wa, ra), (wb, rb));
-            assert_eq!(ea, eb);
-            assert_eq!(ea.loss.to_bits(), eb.loss.to_bits());
+            assert_eq!((ma.wid(), ma.round()), (mb.wid(), mb.round()));
+            assert_eq!(ma.loss().to_bits(), mb.loss().to_bits());
+            assert_eq!(ma.payload().to_owned(), mb.payload().to_owned());
+            assert_eq!(ma.payload_wire_bits(), mb.payload_wire_bits());
         }
         // Framing overhead: none in-process, the envelope header when
         // every message crosses the byte framing.

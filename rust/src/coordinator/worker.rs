@@ -35,7 +35,7 @@
 //! uplinking — dying with an uplink in flight, exactly the permanent-
 //! straggler case the supervisor/runtime pair must absorb.
 
-use std::io::ErrorKind;
+use std::io::{ErrorKind, Write};
 use std::net::TcpStream;
 use std::time::{Duration, Instant};
 
@@ -46,8 +46,8 @@ use crate::compress::Payload;
 use crate::config::TrainConfig;
 
 use super::cluster::{export_worker_blob, import_worker_blob};
-use super::net::{read_frame, write_frame, FrameKind};
-use super::transport::Envelope;
+use super::net::{begin_frame, finish_frame, read_frame, write_frame, FrameKind};
+use super::transport::{encode_envelope_into, Envelope};
 use super::trainer::build_worker_parts;
 
 /// Exit status of an `--exit-after` fault-injected death (distinguishes
@@ -134,6 +134,11 @@ fn serve_job(
         src.dim(),
         if resume.is_empty() { "" } else { " (resumed)" }
     );
+    // Pooled uplink scratch: frame header + envelope + payload body are
+    // serialized into this one buffer and sent with a single write_all;
+    // capacity is reused across rounds (zero steady-state allocations on
+    // the dense path).
+    let mut frame: Vec<u8> = Vec::new();
     loop {
         match read_frame(stream)? {
             Some((FrameKind::Downlink, body)) => {
@@ -157,8 +162,12 @@ fn serve_job(
                 let ctx = RoundCtx::sync(env.round, env.loss);
                 let (loss, grad) = src.grad(&theta, ctx.round)?;
                 let payload = algo.process(&grad, &ctx)?;
-                let up = Envelope { wid, round: env.round, loss, payload };
-                write_frame(stream, FrameKind::Uplink, &up.encode())?;
+                frame.clear();
+                begin_frame(&mut frame, FrameKind::Uplink);
+                encode_envelope_into(wid, env.round, loss, &payload.view(), &mut frame);
+                finish_frame(&mut frame)?;
+                stream.write_all(&frame)?;
+                stream.flush()?;
             }
             Some((FrameKind::Detach, body)) => {
                 let want_state = body.first().copied().unwrap_or(0) != 0;

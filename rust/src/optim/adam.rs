@@ -50,19 +50,26 @@ impl ServerOpt for Adam {
     }
 
     fn step(&mut self, theta: &mut [f32], grad: &[f32], lr: f32) {
+        let dim = self.m.len();
+        assert_eq!(theta.len(), dim, "adam θ length mismatch");
+        assert_eq!(grad.len(), dim, "adam gradient length mismatch");
         self.t += 1;
         let (b1, b2, eps) = (self.beta1, self.beta2, self.eps);
         let bc1 = 1.0 - b1.powi(self.t as i32);
         let bc2 = 1.0 - b2.powi(self.t as i32);
-        for i in 0..theta.len() {
-            let g = grad[i];
-            let m = b1 * self.m[i] + (1.0 - b1) * g;
-            let v = b2 * self.v[i] + (1.0 - b2) * g * g;
-            self.m[i] = m;
-            self.v[i] = v;
-            let mhat = m / bc1;
-            let vhat = v / bc2;
-            theta[i] -= lr * mhat / (vhat.sqrt() + eps);
+        // Exact-length zips (no bounds checks, autovectorizable); the
+        // per-coordinate expression order matches the indexed form, so
+        // trajectories stay bitwise identical.
+        let iter =
+            theta.iter_mut().zip(&grad[..dim]).zip(&mut self.m[..dim]).zip(&mut self.v[..dim]);
+        for (((t, &g), m), v) in iter {
+            let mn = b1 * *m + (1.0 - b1) * g;
+            let vn = b2 * *v + (1.0 - b2) * g * g;
+            *m = mn;
+            *v = vn;
+            let mhat = mn / bc1;
+            let vhat = vn / bc2;
+            *t -= lr * mhat / (vhat.sqrt() + eps);
         }
     }
 }

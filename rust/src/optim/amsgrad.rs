@@ -48,18 +48,28 @@ impl ServerOpt for AmsGrad {
     }
 
     fn step(&mut self, theta: &mut [f32], grad: &[f32], lr: f32) {
-        debug_assert_eq!(theta.len(), self.m.len());
-        debug_assert_eq!(grad.len(), self.m.len());
+        let dim = self.m.len();
+        assert_eq!(theta.len(), dim, "amsgrad θ length mismatch");
+        assert_eq!(grad.len(), dim, "amsgrad gradient length mismatch");
         let (b1, b2, eps) = (self.beta1, self.beta2, self.eps);
-        for i in 0..theta.len() {
-            let g = grad[i];
-            let m = b1 * self.m[i] + (1.0 - b1) * g;
-            let v = b2 * self.v[i] + (1.0 - b2) * g * g;
-            let vhat = self.vhat[i].max(v);
-            self.m[i] = m;
-            self.v[i] = v;
-            self.vhat[i] = vhat;
-            theta[i] -= lr * m / (vhat + eps).sqrt();
+        // Exact-length zips let LLVM elide every bounds check and
+        // autovectorize the loop; the per-coordinate expression order is
+        // unchanged, so trajectories stay bitwise identical to the
+        // indexed form.
+        let iter = theta
+            .iter_mut()
+            .zip(&grad[..dim])
+            .zip(&mut self.m[..dim])
+            .zip(&mut self.v[..dim])
+            .zip(&mut self.vhat[..dim]);
+        for ((((t, &g), m), v), vh) in iter {
+            let mn = b1 * *m + (1.0 - b1) * g;
+            let vn = b2 * *v + (1.0 - b2) * g * g;
+            let vhn = vh.max(vn);
+            *m = mn;
+            *v = vn;
+            *vh = vhn;
+            *t -= lr * mn / (vhn + eps).sqrt();
         }
     }
 }

@@ -6,7 +6,7 @@
 
 use comp_ams::algo::average_payloads;
 use comp_ams::compress::{
-    BlockSign, Compressor, ErrorFeedback, Identity, Payload, RandomK, TopK,
+    as_views, BlockSign, Compressor, ErrorFeedback, Identity, Payload, RandomK, TopK,
 };
 use comp_ams::optim::{AmsGrad, ServerOpt};
 use comp_ams::testing::prop::{check, Gen};
@@ -108,7 +108,7 @@ fn prop_average_payloads_matches_dense_mean() {
             msgs.push(p);
         }
         let mut avg = Vec::new();
-        average_payloads(&msgs, d, &mut avg).unwrap();
+        average_payloads(&as_views(&msgs), d, &mut avg).unwrap();
         for i in 0..d {
             let want: f32 = dense.iter().map(|v| v[i]).sum::<f32>() / n as f32;
             assert!((avg[i] - want).abs() <= 1e-4 * want.abs().max(1.0));

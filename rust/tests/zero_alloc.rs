@@ -1,0 +1,139 @@
+//! Counting-allocator proof of the zero-copy wire contract: once a
+//! warm-up round has grown every pooled buffer, a steady-state dense
+//! round — worker-side envelope encode into pooled scratch, leader-side
+//! borrowed-view decode, server AMSGrad step, and the θ downlink encoded
+//! once with per-worker wid re-patching — performs **zero** heap
+//! allocations.
+//!
+//! The counter is armed only on the test thread and only inside the
+//! measured window, so allocator traffic from the libtest harness or
+//! concurrently running test threads cannot leak into the assertion.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering::Relaxed};
+
+use comp_ams::algo::{AlgoSpec, RoundCtx, ServerAlgo};
+use comp_ams::compress::{PayloadView, Scalars};
+use comp_ams::coordinator::transport::{encode_envelope_into, EnvelopeView};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static ARMED: Cell<bool> = const { Cell::new(false) };
+}
+
+fn bump() {
+    // try_with: an allocation during TLS teardown must not abort.
+    let _ = ARMED.try_with(|a| {
+        if a.get() {
+            ALLOCS.fetch_add(1, Relaxed);
+        }
+    });
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        bump();
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        bump();
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+const N: usize = 4;
+const DIM: usize = 4096;
+
+/// One full dense round over the zero-copy path: deterministic in-place
+/// gradient refresh, per-worker envelope encode into pooled scratch,
+/// borrowed-view decode into a stack-held batch, server step, and the
+/// fan-out downlink (encode θ once, re-patch only the wid per worker).
+fn round(
+    r: u64,
+    grads: &mut [Vec<f32>; N],
+    uplink_scratch: &mut [Vec<u8>; N],
+    downlink_scratch: &mut Vec<u8>,
+    theta: &mut Vec<f32>,
+    server: &mut dyn ServerAlgo,
+) {
+    let lr = 0.01f32;
+    let ctx = RoundCtx::sync(r, lr);
+    for (w, g) in grads.iter_mut().enumerate() {
+        for (i, gi) in g.iter_mut().enumerate() {
+            *gi = ((r as usize * 31 + w * 7 + i) as f32 * 0.001).sin();
+        }
+    }
+    for (w, buf) in uplink_scratch.iter_mut().enumerate() {
+        buf.clear();
+        encode_envelope_into(
+            w as u32,
+            r,
+            0.5,
+            &PayloadView::Dense(Scalars::Slice(&grads[w])),
+            buf,
+        );
+    }
+    let views: [PayloadView<'_>; N] =
+        std::array::from_fn(|w| EnvelopeView::parse(&uplink_scratch[w]).unwrap().payload);
+    server.step(theta, &views, &ctx).unwrap();
+    downlink_scratch.clear();
+    encode_envelope_into(
+        0,
+        r,
+        lr,
+        &PayloadView::Dense(Scalars::Slice(theta)),
+        downlink_scratch,
+    );
+    for w in 0..N as u32 {
+        downlink_scratch[0..4].copy_from_slice(&w.to_le_bytes());
+        let env = EnvelopeView::parse(downlink_scratch).unwrap();
+        assert_eq!(env.wid, w);
+        assert_eq!(env.payload.dim(), DIM);
+    }
+}
+
+#[test]
+fn dense_steady_state_round_makes_zero_heap_allocations() {
+    let spec = AlgoSpec::parse("dist-ams").unwrap();
+    let (_, mut server) = spec.build(DIM, N, 1_000_000);
+    let mut theta = vec![0.2f32; DIM];
+    let mut grads: [Vec<f32>; N] = std::array::from_fn(|_| vec![0.0f32; DIM]);
+    let mut uplink: [Vec<u8>; N] = std::array::from_fn(|_| Vec::new());
+    let mut downlink: Vec<u8> = Vec::new();
+
+    // Warm-up: grow every pooled buffer (the per-link scratch vectors and
+    // the server's recycled averaging buffer; the moments are pre-sized).
+    for r in 0..3 {
+        round(r, &mut grads, &mut uplink, &mut downlink, &mut theta, server.as_mut());
+    }
+
+    let before = ALLOCS.load(Relaxed);
+    ARMED.with(|a| a.set(true));
+    for r in 3..13 {
+        round(r, &mut grads, &mut uplink, &mut downlink, &mut theta, server.as_mut());
+    }
+    ARMED.with(|a| a.set(false));
+    let delta = ALLOCS.load(Relaxed) - before;
+    assert_eq!(
+        delta, 0,
+        "steady-state dense rounds must not touch the heap \
+         ({delta} allocations across 10 rounds)"
+    );
+}

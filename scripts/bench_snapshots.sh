@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # Regenerate the committed bench snapshots (BENCH_wire.json /
-# BENCH_step.json, schema comp-ams-bench-v1) from a real run.
+# BENCH_step.json / BENCH_compress.json / BENCH_optim.json, schema
+# comp-ams-bench-v1) from a real run.
 #
 # Run on an otherwise-idle box from the repo root:
 #
@@ -10,14 +11,16 @@
 # The bench harness overwrites each file in place, sets
 # `measured: true`, and fills `benches` with one row per bench
 # (name, iters, median_ns, mean_ns, p95_ns, per_sec). Commit the
-# refreshed files so the perf trajectory is visible across PRs.
+# refreshed files so the perf trajectory is visible across PRs —
+# bench_wire's "uplink ... before/after" rows are the zero-copy
+# wire-path speedup.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 root=$(pwd)
 
-COMP_AMS_BENCH_JSON="$root/BENCH_wire.json" \
-    cargo bench --bench bench_wire -- "$@"
-COMP_AMS_BENCH_JSON="$root/BENCH_step.json" \
-    cargo bench --bench bench_step -- "$@"
+for suite in wire step compress optim; do
+    COMP_AMS_BENCH_JSON="$root/BENCH_${suite}.json" \
+        cargo bench --bench "bench_${suite}" -- "$@"
+done
 
-echo "wrote $root/BENCH_wire.json and $root/BENCH_step.json"
+echo "wrote $root/BENCH_{wire,step,compress,optim}.json"
