@@ -33,6 +33,33 @@ fn main() {
         b.note(&format!("  -> {:.1} MB/s", r.mb_per_sec(bytes)));
     }
 
+    // Partial select vs a full-sort reference: the O(d) claim behind
+    // topk's `select_nth_unstable_by` path, on the Fig-2 shape.
+    {
+        let d = 1_000_000;
+        let k = 10_000; // ratio 0.01
+        let x = rng.normal_vec(d);
+        let mut topk = TopK::new(0.01);
+        let r = b.bench("topk partial-select d=1000000", || {
+            std::hint::black_box(topk.compress(&x));
+        });
+        b.note(&format!("  -> {:.1} MB/s", r.mb_per_sec(d * 4)));
+        let r = b.bench("topk full-sort reference d=1000000", || {
+            let mut order: Vec<u32> = (0..d as u32).collect();
+            order.sort_unstable_by(|&a, &b| {
+                x[b as usize]
+                    .abs()
+                    .total_cmp(&x[a as usize].abs())
+                    .then(a.cmp(&b))
+            });
+            let mut idx = order[..k].to_vec();
+            idx.sort_unstable();
+            let val: Vec<f32> = idx.iter().map(|&i| x[i as usize]).collect();
+            std::hint::black_box((idx, val));
+        });
+        b.note(&format!("  -> {:.1} MB/s", r.mb_per_sec(d * 4)));
+    }
+
     // Error-feedback overhead on top of compression.
     let d = 1_000_000;
     let x = rng.normal_vec(d);

@@ -205,6 +205,36 @@ fn main() {
         (sim_means[2] / sim_means[0] - 1.0) * 100.0,
     ));
 
+    // Topology race: the flat star's root consumes all n uplinks per
+    // round; at degree 4 it consumes n/4 forwarded group aggregates
+    // instead (the group rounds run synchronously inside each dispatch,
+    // so total work is conserved — this measures the tree layer's
+    // coordination overhead; the bit savings live in the ledger's
+    // by-level split, see tests/tree.rs).
+    let mut topo_means = Vec::new();
+    for topology in ["flat", "tree:4", "tree:4:topk:0.05"] {
+        let mut cfg = TrainConfig::preset("quadratic", "comp-ams-topk:0.01");
+        cfg.workers = 16;
+        cfg.rounds = 1_000_000;
+        cfg.eval_every = 0;
+        cfg.topology = topology.into();
+        let mut t = Trainer::new(&cfg).expect("trainer");
+        let mut round = 0u64;
+        let r = b.bench(
+            &format!("round quadratic n=16 comp-ams-topk:0.01 topo={topology}"),
+            || {
+                t.step(round).unwrap();
+                round += 1;
+            },
+        );
+        topo_means.push(r.mean.as_secs_f64());
+    }
+    b.note(&format!(
+        "  -> tree overhead vs flat: tree:4 {:+.1}%, tree:4:topk:0.05 {:+.1}%",
+        (topo_means[1] / topo_means[0] - 1.0) * 100.0,
+        (topo_means[2] / topo_means[0] - 1.0) * 100.0,
+    ));
+
     // PJRT path (artifacts required): full grad + protocol round.
     if std::path::Path::new("artifacts/manifest.json").exists() {
         for algo in ["dist-ams", "comp-ams-topk:0.01"] {

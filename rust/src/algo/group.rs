@@ -1,0 +1,212 @@
+//! The aggregate-and-forward half of the tree topology
+//! ([`crate::coordinator::tree`]).
+//!
+//! A sub-leader is a [`crate::coordinator::runtime::ClusterRuntime`] whose
+//! "server step" does not touch θ at all: [`GroupForwardServer`] aggregates
+//! its group's uplinks with the same estimator the root uses
+//! ([`aggregate_payloads`], so `--robust-agg` applies at *both* levels),
+//! re-compresses the group aggregate through its **own error-feedback
+//! accumulator** (Wang et al. 2111.00705: EF at every compression point
+//! preserves the convergence guarantees), and parks the resulting payload
+//! for the tree transport to forward upward as one uplink.
+//!
+//! Bitwise contract: with the identity group compressor, the forwarded
+//! payload is exactly the dense group mean — op-for-op the flat server's
+//! aggregation over the same messages in the same order — which is what
+//! makes the degenerate tree (one group spanning all workers, no downlink
+//! compression) bit-identical to the flat star in loss and θ.
+
+use anyhow::{ensure, Result};
+
+use crate::compress::{Compressor, CompressorSpec, ErrorFeedback, Payload, PayloadView};
+
+use super::{aggregate_payloads, AggMode, RoundCtx, ServerAlgo};
+
+/// Sub-leader server half: aggregate the group's uplinks, re-compress the
+/// aggregate with error feedback, park it for forwarding. Never mutates θ.
+pub struct GroupForwardServer {
+    dim: usize,
+    compressor: Box<dyn Compressor>,
+    comp_name: String,
+    /// Sub-leader's own EF accumulator over the *group aggregate* —
+    /// disabled (zero residual) for the identity compressor, so the
+    /// degenerate tree forwards the exact mean.
+    ef: ErrorFeedback,
+    agg: AggMode,
+    avg: Vec<f32>,
+    forwarded: Option<Payload>,
+}
+
+impl GroupForwardServer {
+    pub fn new(dim: usize, spec: &CompressorSpec) -> Self {
+        let has_ef = *spec != CompressorSpec::Identity;
+        GroupForwardServer {
+            dim,
+            compressor: spec.build(),
+            comp_name: spec.build().name(),
+            ef: ErrorFeedback::new(dim, has_ef),
+            agg: AggMode::Mean,
+            avg: Vec::new(),
+            forwarded: None,
+        }
+    }
+
+    /// Take the payload parked by the last [`ServerAlgo::step`] (the
+    /// compressed group aggregate the tree transport forwards to the
+    /// root). `None` if no step has run since the last take.
+    pub fn take_forwarded(&mut self) -> Option<Payload> {
+        self.forwarded.take()
+    }
+
+    /// This sub-leader's EF residual norm (diagnostics / tests).
+    pub fn residual_norm(&self) -> f64 {
+        self.ef.residual_norm()
+    }
+}
+
+impl ServerAlgo for GroupForwardServer {
+    fn name(&self) -> String {
+        format!("group-forward[{}]", self.comp_name)
+    }
+
+    fn step(
+        &mut self,
+        theta: &mut [f32],
+        msgs: &[PayloadView<'_>],
+        _ctx: &RoundCtx,
+    ) -> Result<()> {
+        // θ is advanced only at the root; the sub-leader's "step" is
+        // aggregate → EF-compress → park.
+        ensure!(
+            theta.len() == self.dim,
+            "group-forward dim mismatch: θ is {} but server was built for {}",
+            theta.len(),
+            self.dim
+        );
+        let mut avg = std::mem::take(&mut self.avg);
+        aggregate_payloads(msgs, self.dim, &mut avg, self.agg)?;
+        let payload = self.ef.compress(&avg, self.compressor.as_mut())?;
+        self.avg = avg;
+        self.forwarded = Some(payload);
+        Ok(())
+    }
+
+    fn set_agg_mode(&mut self, mode: AggMode) -> Result<()> {
+        self.agg = mode;
+        Ok(())
+    }
+
+    fn export_state(&self) -> Result<Vec<u8>> {
+        let mut out = Vec::new();
+        crate::util::bytes::put_bytes(&mut out, &self.compressor.export_state());
+        crate::util::bytes::put_bytes(&mut out, &self.ef.export_state());
+        Ok(out)
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> Result<()> {
+        let mut c = crate::util::bytes::Cursor::new(bytes);
+        let comp = c.bytes()?.to_vec();
+        let ef = c.bytes()?.to_vec();
+        c.finish()?;
+        self.compressor.import_state(&comp)?;
+        self.ef.import_state(&ef)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::average_payloads;
+    use crate::compress::as_views;
+
+    fn ctx(round: u64) -> RoundCtx {
+        RoundCtx::sync(round, 0.01)
+    }
+
+    #[test]
+    fn identity_forwards_the_exact_group_mean() {
+        let dim = 8;
+        let mut s = GroupForwardServer::new(dim, &CompressorSpec::Identity);
+        let msgs = vec![
+            Payload::Dense(vec![1.0; dim]),
+            Payload::Sparse { dim: dim as u32, idx: vec![0, 3], val: vec![2.0, -4.0] },
+            Payload::Dense(vec![-0.5; dim]),
+        ];
+        let views = as_views(&msgs);
+        let mut theta = vec![0.7f32; dim];
+        let before = theta.clone();
+        s.step(&mut theta, &views, &ctx(0)).unwrap();
+        assert_eq!(theta, before, "sub-leaders must never touch θ");
+        let fwd = s.take_forwarded().unwrap();
+        let mut want = Vec::new();
+        average_payloads(&views, dim, &mut want).unwrap();
+        match fwd {
+            Payload::Dense(got) => {
+                for (a, b) in got.iter().zip(&want) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("identity forward must be dense, got {other:?}"),
+        }
+        // Identity keeps no residual: the forward is lossless.
+        assert_eq!(s.residual_norm(), 0.0);
+        assert!(s.take_forwarded().is_none(), "take is one-shot");
+    }
+
+    #[test]
+    fn compressing_group_aggregate_accumulates_residual() {
+        let dim = 128;
+        let spec = CompressorSpec::TopK { ratio: 0.1 };
+        let mut s = GroupForwardServer::new(dim, &spec);
+        let mut rng = crate::util::rng::Rng::seed(9);
+        let mut theta = vec![0.0f32; dim];
+        for r in 0..5 {
+            let msgs = vec![
+                Payload::Dense(rng.normal_vec(dim)),
+                Payload::Dense(rng.normal_vec(dim)),
+            ];
+            s.step(&mut theta, &as_views(&msgs), &ctx(r)).unwrap();
+            let fwd = s.take_forwarded().unwrap();
+            assert!(fwd.wire_bits() < Payload::Dense(vec![0.0; dim]).wire_bits());
+        }
+        assert!(s.residual_norm() > 0.0, "top-k must leave a residual");
+    }
+
+    #[test]
+    fn robust_agg_applies_at_the_group_level() {
+        // 3 honest messages plus one scaled adversary inside the group:
+        // trimmed:1 must forward the honest direction, not the zero mean.
+        let dim = 4;
+        let honest = Payload::Dense(vec![1.0; dim]);
+        let evil = Payload::Dense(vec![-3.0; dim]);
+        let msgs = vec![honest.clone(), honest.clone(), honest, evil];
+        let mut s = GroupForwardServer::new(dim, &CompressorSpec::Identity);
+        s.set_agg_mode(AggMode::Trimmed(1)).unwrap();
+        let mut theta = vec![0.0f32; dim];
+        s.step(&mut theta, &as_views(&msgs), &ctx(0)).unwrap();
+        let fwd = s.take_forwarded().unwrap().to_dense(dim).unwrap();
+        assert!(fwd.iter().all(|&x| x == 1.0), "{fwd:?}");
+    }
+
+    #[test]
+    fn state_roundtrip_restores_residual() {
+        let dim = 64;
+        let spec = CompressorSpec::TopK { ratio: 0.1 };
+        let mut a = GroupForwardServer::new(dim, &spec);
+        let mut rng = crate::util::rng::Rng::seed(11);
+        let mut theta = vec![0.0f32; dim];
+        for r in 0..3 {
+            let msgs = vec![Payload::Dense(rng.normal_vec(dim))];
+            a.step(&mut theta, &as_views(&msgs), &ctx(r)).unwrap();
+            a.take_forwarded();
+        }
+        let blob = a.export_state().unwrap();
+        let mut b = GroupForwardServer::new(dim, &spec);
+        b.import_state(&blob).unwrap();
+        let g = rng.normal_vec(dim);
+        let msgs = vec![Payload::Dense(g)];
+        a.step(&mut theta, &as_views(&msgs), &ctx(3)).unwrap();
+        b.step(&mut theta, &as_views(&msgs), &ctx(3)).unwrap();
+        assert_eq!(a.take_forwarded(), b.take_forwarded());
+    }
+}

@@ -43,12 +43,14 @@
 pub mod byzantine;
 pub mod comp_ams;
 pub mod dist_sgd;
+pub mod group;
 pub mod onebit_adam;
 pub mod qadam;
 pub mod sharded;
 
 pub use byzantine::{parse_byzantine, ByzMode, ByzSpec, ByzantineWorker};
 pub use comp_ams::{CompAmsServer, CompAmsWorker, FusedCompAmsServer};
+pub use group::GroupForwardServer;
 pub use dist_sgd::{DistSgdServer, DistSgdWorker};
 pub use onebit_adam::{OneBitAdamServer, OneBitAdamWorker};
 pub use qadam::{QAdamServer, QAdamWorker};
@@ -167,6 +169,17 @@ pub trait ServerAlgo {
             )
         }
     }
+
+    /// Tell this server its uplinks are **pre-aggregated group means**
+    /// rather than raw worker messages (the tree topology's root —
+    /// [`crate::coordinator::tree`] — where each message is a
+    /// sub-leader's forwarded aggregate). Averaging servers need no
+    /// change (the mean of group means is the tree's estimator), so the
+    /// default is a no-op; servers that *classify* messages by payload
+    /// kind (post-warmup 1BitAdam treats dense uplinks as cross-phase
+    /// stragglers to discard) override this to disable that filtering.
+    /// [`sharded::ShardedServer`] forwards the flag to every shard.
+    fn set_pre_aggregated(&mut self, _pre: bool) {}
 
     /// Serialize the server optimizer's trajectory state (moments,
     /// preconditioners, step counters) for suspend/resume. Stateless

@@ -100,6 +100,12 @@ pub struct OneBitAdamServer {
     /// Frozen 1/(√v+ε) preconditioner (None during warm-up).
     precond: Option<Vec<f32>>,
     avg: Vec<f32>,
+    /// Set at a tree-topology root ([`ServerAlgo::set_pre_aggregated`]):
+    /// uplinks are sub-leaders' forwarded group means, where a *dense*
+    /// payload is a legitimate identity-compressed aggregate of sign
+    /// momenta — not a cross-phase straggler — so the dense-discard
+    /// filter below must not run.
+    pre_aggregated: bool,
 }
 
 impl OneBitAdamServer {
@@ -109,6 +115,7 @@ impl OneBitAdamServer {
             adam: Adam::default_hp(dim),
             precond: None,
             avg: Vec::new(),
+            pre_aggregated: false,
         }
     }
 
@@ -167,7 +174,7 @@ impl ServerAlgo for OneBitAdamServer {
             avg.resize(theta.len(), 0.0);
             let mut kept = 0usize;
             for m in msgs {
-                if matches!(m, PayloadView::Dense(_)) {
+                if !self.pre_aggregated && matches!(m, PayloadView::Dense(_)) {
                     continue;
                 }
                 m.add_into(&mut avg)?;
@@ -186,6 +193,10 @@ impl ServerAlgo for OneBitAdamServer {
         }
         self.avg = avg;
         Ok(())
+    }
+
+    fn set_pre_aggregated(&mut self, pre: bool) {
+        self.pre_aggregated = pre;
     }
 
     fn export_state(&self) -> Result<Vec<u8>> {
@@ -315,6 +326,44 @@ mod tests {
         for (a, b) in t1.iter().zip(&t2) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn pre_aggregated_root_applies_dense_group_means() {
+        // At a tree root every uplink is a sub-leader's forwarded group
+        // mean; under the identity group compressor that payload is
+        // *dense* and must be applied, not discarded as a straggler. A
+        // pre-aggregated server fed the dense mean of sign payloads must
+        // step θ exactly like a plain server fed the raw sign payloads.
+        let dim = 8;
+        let (mut w, mut plain) = pair(dim, 2, 8);
+        let mut root = OneBitAdamServer::new(dim, 2);
+        root.set_pre_aggregated(true);
+        let g = vec![1.0f32; dim];
+        for r in 0..2 {
+            let ctx = RoundCtx::sync(r, 0.01);
+            let msg = w.process(&g, &ctx).unwrap();
+            let mut t = vec![0.0f32; dim];
+            plain.step(&mut t, &[msg.view()], &ctx).unwrap();
+            let mut t = vec![0.0f32; dim];
+            root.step(&mut t, &[msg.view()], &ctx).unwrap();
+        }
+        let ctx = RoundCtx::sync(2, 0.01);
+        let signs = w.process(&g, &ctx).unwrap();
+        let mean = Payload::Dense(signs.to_dense(dim).unwrap());
+        let mut t_plain = vec![0.5f32; dim];
+        let mut t_root = vec![0.5f32; dim];
+        plain.step(&mut t_plain, &[signs.view()], &ctx).unwrap();
+        root.step(&mut t_root, &[mean.view()], &ctx).unwrap();
+        for (a, b) in t_plain.iter().zip(&t_root) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // Without the flag the same dense mean is discarded (θ frozen).
+        let mut off = OneBitAdamServer::new(dim, 0);
+        let before = vec![0.5f32; dim];
+        let mut t = before.clone();
+        off.step(&mut t, &[mean.view()], &RoundCtx::sync(0, 0.01)).unwrap();
+        assert_eq!(t, before);
     }
 
     #[test]

@@ -83,6 +83,7 @@ enum Cmd {
     Export { reply: Sender<Result<Vec<u8>>> },
     Import { bytes: Vec<u8>, reply: Sender<Result<()>> },
     SetAgg { mode: AggMode, reply: Sender<Result<()>> },
+    SetPre { pre: bool, reply: Sender<()> },
     Stop,
 }
 
@@ -128,6 +129,12 @@ fn spawn_shard(sid: usize, mut server: Box<dyn ServerAlgo + Send>) -> ShardHandl
                     }
                     Cmd::SetAgg { mode, reply } => {
                         if reply.send(server.set_agg_mode(mode)).is_err() {
+                            break;
+                        }
+                    }
+                    Cmd::SetPre { pre, reply } => {
+                        server.set_pre_aggregated(pre);
+                        if reply.send(()).is_err() {
                             break;
                         }
                     }
@@ -267,6 +274,31 @@ impl ServerAlgo for ShardedServer {
             }
         }
         Ok(())
+    }
+
+    /// Forward the pre-aggregated flag to every shard (each shard sees
+    /// the same forwarded group means, sliced to its θ range).
+    fn set_pre_aggregated(&mut self, pre: bool) {
+        match &mut self.backend {
+            Backend::Sequential(servers) => {
+                for s in servers {
+                    s.set_pre_aggregated(pre);
+                }
+            }
+            Backend::Threaded(handles) => {
+                let mut rxs = Vec::with_capacity(handles.len());
+                for h in handles.iter() {
+                    let (tx, rx) = channel();
+                    if h.tx.send(Cmd::SetPre { pre, reply: tx }).is_err() {
+                        continue;
+                    }
+                    rxs.push(rx);
+                }
+                for rx in rxs {
+                    let _ = rx.recv();
+                }
+            }
+        }
     }
 
     /// Concatenate every shard's state blob (length-prefixed, in shard

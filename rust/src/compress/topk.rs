@@ -52,10 +52,15 @@ impl Compressor for TopK {
         self.scratch.extend(0..d as u32);
         if k < d {
             // Partition so the k largest-|x| indices occupy the prefix.
+            // `total_cmp` + index tie-break make the comparator a total
+            // order, so the selected *set* is exactly the first k of the
+            // fully sorted (|x| desc, index asc) order — canonical even
+            // with duplicated magnitudes or NaNs, where a partial_cmp
+            // fallback would let the pivot choice pick the tied winners.
             self.scratch.select_nth_unstable_by(k - 1, |&a, &b| {
                 let ma = x[a as usize].abs();
                 let mb = x[b as usize].abs();
-                mb.partial_cmp(&ma).unwrap_or(std::cmp::Ordering::Equal)
+                mb.total_cmp(&ma).then_with(|| a.cmp(&b))
             });
         }
         let mut idx: Vec<u32> = self.scratch[..k].to_vec();
@@ -133,6 +138,21 @@ mod tests {
                     "ratio={ratio} d={d} err={err}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn tied_magnitudes_select_lowest_indices() {
+        // Four coordinates share |x| = 2.0; k = 3 must keep the two
+        // strictly larger ones plus the lowest-indexed tie.
+        let x = vec![2.0f32, -3.0, -2.0, 2.0, 5.0, -2.0];
+        let p = TopK::new(0.5).compress(&x);
+        match &p {
+            Payload::Sparse { idx, val, .. } => {
+                assert_eq!(idx, &vec![0, 1, 4]);
+                assert_eq!(val, &vec![2.0, -3.0, 5.0]);
+            }
+            _ => panic!("expected sparse"),
         }
     }
 

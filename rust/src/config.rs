@@ -102,6 +102,20 @@ pub struct TrainConfig {
     /// or the byzantine-tolerant `median` / `trimmed:<k>` (see
     /// [`crate::algo::AggMode`]).
     pub robust_agg: String,
+    /// Aggregation topology: `flat` (single-leader star) or
+    /// `tree:<degree>[:<group-compressor>]` — sub-leaders own contiguous
+    /// groups of `degree` workers, aggregate each group's uplinks, and
+    /// forward one (optionally re-compressed) uplink to the root. See
+    /// [`crate::coordinator::tree`].
+    pub topology: String,
+    /// Compress the root's θ broadcast as a θ-delta payload (tree
+    /// topology only): any [`crate::compress::CompressorSpec`] string,
+    /// e.g. `topk:0.1`. Empty = dense θ downlinks.
+    pub downlink_compress: String,
+    /// Fault injection (tree topology only): `gid:round` kills sub-leader
+    /// `gid` right before its round-`round` dispatch, degrading the run
+    /// to the surviving groups. Empty = no kill.
+    pub tree_kill: String,
     /// Console metric cadence (0 = silent).
     pub log_every: u64,
     /// Rounds per "epoch" for reporting (dataset_size / (batch * workers)).
@@ -134,6 +148,9 @@ impl TrainConfig {
             sim_profile: "ideal".into(),
             byzantine: String::new(),
             robust_agg: "mean".into(),
+            topology: "flat".into(),
+            downlink_compress: String::new(),
+            tree_kill: String::new(),
             log_every: 0,
             rounds_per_epoch: 100,
         };
@@ -233,6 +250,62 @@ impl TrainConfig {
         // not silently ride along unused). sim-wrapping-tcp is rejected by
         // TransportSpec::parse above.
         crate::coordinator::sim::SimProfile::parse(&self.sim_profile)?;
+        let topo = crate::coordinator::tree::Topology::parse(&self.topology)?;
+        if let Some(groups) = topo.group_count(self.workers) {
+            if self.fused_update {
+                bail!(
+                    "--topology tree feeds the root forwarded group aggregates \
+                     and cannot be combined with --fused-update (the Pallas \
+                     artifact is a flat-star full-θ step)"
+                );
+            }
+            if tspec.is_multiprocess() {
+                bail!(
+                    "--topology tree runs sub-leaders inside the leader process \
+                     and supports inproc | loopback | sim:inproc | sim:loopback, \
+                     not '{}'",
+                    self.transport
+                );
+            }
+            if self.quorum > groups {
+                bail!(
+                    "quorum {} exceeds the tree's {groups} sub-leader groups \
+                     (with --topology {} the root collects one uplink per \
+                     group; 0 = full participation)",
+                    self.quorum,
+                    self.topology
+                );
+            }
+            if !self.downlink_compress.is_empty() {
+                crate::compress::CompressorSpec::parse(&self.downlink_compress)?;
+            }
+            if let Some((gid, _)) =
+                crate::coordinator::tree::parse_tree_kill(&self.tree_kill)?
+            {
+                if gid >= groups {
+                    bail!(
+                        "tree-kill group id {gid} is out of range for {groups} \
+                         groups (valid ids: 0..{groups})"
+                    );
+                }
+            }
+        } else {
+            if !self.downlink_compress.is_empty() {
+                bail!(
+                    "--downlink-compress shapes the tree root's broadcast; with \
+                     --topology flat the downlink is the dense θ (accepted \
+                     topologies: {})",
+                    crate::coordinator::tree::TOPOLOGY_CHOICES
+                );
+            }
+            if !self.tree_kill.is_empty() {
+                bail!(
+                    "--tree-kill injects a sub-leader death and needs --topology \
+                     tree:<degree> (accepted topologies: {})",
+                    crate::coordinator::tree::TOPOLOGY_CHOICES
+                );
+            }
+        }
         let byz = crate::algo::parse_byzantine(&self.byzantine)?;
         for spec in &byz {
             if spec.wid >= self.workers {
@@ -266,7 +339,22 @@ impl TrainConfig {
                 );
             }
             if let crate::algo::AggMode::Trimmed(k) = agg {
-                let batch = if self.quorum == 0 { self.workers } else { self.quorum };
+                // Smallest batch the estimator will see: the (quorum-capped)
+                // root batch in the flat star; in a tree, also the smallest
+                // group a sub-leader aggregates (the last group can run
+                // short when degree does not divide n).
+                let batch = match &topo {
+                    crate::coordinator::tree::Topology::Flat => {
+                        if self.quorum == 0 { self.workers } else { self.quorum }
+                    }
+                    crate::coordinator::tree::Topology::Tree { degree, .. } => {
+                        let groups = topo.group_count(self.workers).unwrap();
+                        let root_batch =
+                            if self.quorum == 0 { groups } else { self.quorum };
+                        let min_group = self.workers - (groups - 1) * degree;
+                        root_batch.min(min_group)
+                    }
+                };
                 if 2 * k >= batch {
                     bail!(
                         "trimmed:{k} discards {} of every {batch}-message batch \
@@ -318,6 +406,9 @@ impl TrainConfig {
             ("sim_profile", Json::str(&self.sim_profile)),
             ("byzantine", Json::str(&self.byzantine)),
             ("robust_agg", Json::str(&self.robust_agg)),
+            ("topology", Json::str(&self.topology)),
+            ("downlink_compress", Json::str(&self.downlink_compress)),
+            ("tree_kill", Json::str(&self.tree_kill)),
             ("log_every", Json::num(self.log_every as f64)),
             ("rounds_per_epoch", Json::num(self.rounds_per_epoch as f64)),
         ])
@@ -401,6 +492,15 @@ impl TrainConfig {
         }
         if let Some(v) = j.get("robust_agg") {
             cfg.robust_agg = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.get("topology") {
+            cfg.topology = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.get("downlink_compress") {
+            cfg.downlink_compress = v.as_str()?.to_string();
+        }
+        if let Some(v) = j.get("tree_kill") {
+            cfg.tree_kill = v.as_str()?.to_string();
         }
         if let Some(v) = j.get("log_every") {
             cfg.log_every = v.as_usize()? as u64;
@@ -583,6 +683,80 @@ mod tests {
     }
 
     #[test]
+    fn validate_tree_combinations() {
+        let mut cfg = TrainConfig::preset("quadratic", "comp-ams-topk:0.05");
+        cfg.workers = 8;
+        cfg.topology = "tree:2".into();
+        cfg.validate().unwrap();
+        cfg.topology = "tree:4:topk:0.1".into();
+        cfg.downlink_compress = "topk:0.1".into();
+        cfg.tree_kill = "1:40".into();
+        cfg.validate().unwrap();
+        // Bad topology strings enumerate the accepted forms.
+        cfg.topology = "ring".into();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("flat | tree:<degree>"), "{err}");
+        // The fused artifact is a flat-star full-θ step.
+        let mut cfg = TrainConfig::preset("quadratic", "dist-ams");
+        cfg.topology = "tree:4".into();
+        cfg.fused_update = true;
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("fused"), "{err}");
+        // Sub-leaders live in the leader process: no tcp.
+        let mut cfg = TrainConfig::preset("quadratic", "dist-ams");
+        cfg.topology = "tree:4".into();
+        cfg.transport = "tcp".into();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("sub-leaders"), "{err}");
+        cfg.transport = "sim:loopback".into();
+        cfg.validate().unwrap();
+        // Root quorum counts sub-leader groups, not workers: 8 workers at
+        // degree 4 is 2 groups.
+        let mut cfg = TrainConfig::preset("quadratic", "dist-ams");
+        cfg.workers = 8;
+        cfg.topology = "tree:4".into();
+        cfg.quorum = 2;
+        cfg.validate().unwrap();
+        cfg.quorum = 3;
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("sub-leader groups"), "{err}");
+        // Downlink compression / tree-kill without a tree are nonsense.
+        let mut cfg = TrainConfig::preset("quadratic", "dist-ams");
+        cfg.downlink_compress = "topk:0.1".into();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("flat | tree:<degree>"), "{err}");
+        let mut cfg = TrainConfig::preset("quadratic", "dist-ams");
+        cfg.tree_kill = "0:10".into();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("flat | tree:<degree>"), "{err}");
+        // Kill target must name an existing group (8 workers / degree 4).
+        let mut cfg = TrainConfig::preset("quadratic", "dist-ams");
+        cfg.workers = 8;
+        cfg.topology = "tree:4".into();
+        cfg.tree_kill = "2:10".into();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        // A bad downlink compressor spec fails fast.
+        let mut cfg = TrainConfig::preset("quadratic", "dist-ams");
+        cfg.topology = "tree:4".into();
+        cfg.downlink_compress = "gzip".into();
+        assert!(cfg.validate().is_err());
+        // trimmed:k must fit the smallest batch anywhere in the tree: 5
+        // workers at degree 2 leave a 1-worker last group, which trimmed:1
+        // would empty; 9 workers at degree 3 give 3-message batches at
+        // both levels, which it survives.
+        let mut cfg = TrainConfig::preset("quadratic", "dist-ams");
+        cfg.workers = 5;
+        cfg.topology = "tree:2".into();
+        cfg.robust_agg = "trimmed:1".into();
+        let err = cfg.validate().unwrap_err().to_string();
+        assert!(err.contains("batch"), "{err}");
+        cfg.workers = 9;
+        cfg.topology = "tree:3".into();
+        cfg.validate().unwrap();
+    }
+
+    #[test]
     fn json_roundtrip() {
         let mut cfg = TrainConfig::preset("cifar_lenet", "comp-ams-blocksign:4096");
         cfg.schedule = LrSchedule::StepDecay { at: vec![3880, 7760], factor: 10.0 };
@@ -598,6 +772,9 @@ mod tests {
         cfg.sim_profile = "lossy-wan".into();
         cfg.byzantine = "1:scale:-3".into();
         cfg.robust_agg = "trimmed:1".into();
+        cfg.topology = "tree:2:blocksign:64".into();
+        cfg.downlink_compress = "topk:0.25".into();
+        cfg.tree_kill = "1:30".into();
         let j = cfg.to_json();
         let back = TrainConfig::from_json(&crate::util::json::parse(
             &j.to_string_pretty(),
@@ -618,5 +795,8 @@ mod tests {
         assert_eq!(back.sim_profile, "lossy-wan");
         assert_eq!(back.byzantine, "1:scale:-3");
         assert_eq!(back.robust_agg, "trimmed:1");
+        assert_eq!(back.topology, "tree:2:blocksign:64");
+        assert_eq!(back.downlink_compress, "topk:0.25");
+        assert_eq!(back.tree_kill, "1:30");
     }
 }

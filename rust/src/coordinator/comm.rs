@@ -23,12 +23,31 @@
 //! Partial participation adds two counters: `stale_uplinks` (straggler
 //! gradients applied late) and `dropped_uplinks` (stragglers past the
 //! staleness bound, transmitted — and charged — but never applied).
+//!
+//! The tree topology ([`crate::coordinator::tree`]) adds a **level**
+//! dimension: level 0 is the hop into the root (sub-leader → root, or
+//! worker → leader in the flat star), level 1 the worker → sub-leader
+//! hops inside the groups. The root runtime charges level 0 directly;
+//! each group runtime charges its own private ledger, which the trainer
+//! absorbs via [`CommLedger::absorb_child`] — so
+//! `Σ uplink_bits_by_level == uplink_bits` holds exactly (same for
+//! downlink and framing), and "root-ingress bits" is just
+//! `uplink_bits_by_level[0]`.
 
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct CommLedger {
     pub uplink_bits: u64,
     pub downlink_bits: u64,
     pub uplink_msgs: u64,
+    /// Uplink bits by tree level: `[0]` is the hop into the root (the
+    /// only level in the flat star), `[1]` the worker → sub-leader hops.
+    /// Always sums to `uplink_bits`; at most one entry for flat runs.
+    pub uplink_bits_by_level: Vec<u64>,
+    /// Downlink bits by tree level (root → sub-leader, sub-leader →
+    /// worker). Always sums to `downlink_bits`.
+    pub downlink_bits_by_level: Vec<u64>,
+    /// Framing bits by tree level. Always sums to `framing_bits`.
+    pub framing_bits_by_level: Vec<u64>,
     /// Cumulative uplink bits per worker id (grows on first charge).
     pub uplink_bits_by_worker: Vec<u64>,
     /// Cumulative uplink bits as routed to each server shard after
@@ -79,6 +98,18 @@ pub struct CommLedger {
     pub sim_links: Vec<crate::coordinator::sim::LinkStats>,
 }
 
+/// Add `bits` to a grow-on-demand per-level counter (zero charges do not
+/// materialize a level entry).
+fn charge_level(levels: &mut Vec<u64>, level: usize, bits: u64) {
+    if bits == 0 {
+        return;
+    }
+    if level >= levels.len() {
+        levels.resize(level + 1, 0);
+    }
+    levels[level] += bits;
+}
+
 impl CommLedger {
     pub fn new() -> Self {
         Self::default()
@@ -91,6 +122,7 @@ impl CommLedger {
         }
         self.uplink_bits_by_worker[wid] += bits;
         self.uplink_bits += bits;
+        charge_level(&mut self.uplink_bits_by_level, 0, bits);
         self.uplink_msgs += 1;
     }
 
@@ -115,11 +147,47 @@ impl CommLedger {
     /// [`CommLedger::framing_bits`]).
     pub fn charge_framing(&mut self, bits: u64) {
         self.framing_bits += bits;
+        charge_level(&mut self.framing_bits_by_level, 0, bits);
+    }
+
+    /// Downlink broadcast of `bits_per_msg` wire bits to each of `n`
+    /// dispatched workers. The per-message bill comes from
+    /// [`Transport::downlink_wire_bits`](crate::coordinator::transport::Transport::downlink_wire_bits)
+    /// — the dense-θ payload on the flat star, the compressed θ-delta
+    /// payload under `--downlink-compress`.
+    pub fn charge_downlink(&mut self, bits_per_msg: u64, n: usize) {
+        let bits = (n as u64) * bits_per_msg;
+        self.downlink_bits += bits;
+        charge_level(&mut self.downlink_bits_by_level, 0, bits);
     }
 
     /// Dense f32 broadcast of a d-vector to `n` workers.
     pub fn charge_downlink_dense(&mut self, d: usize, n: usize) {
-        self.downlink_bits += (n as u64) * 8 * (5 + 4 * d as u64);
+        self.charge_downlink(8 * (5 + 4 * d as u64), n);
+    }
+
+    /// Fold a child (sub-leader group) ledger into this one at tree
+    /// `level`: bit totals land in both the headline fields and the
+    /// per-level breakdowns, event counters (messages, staleness,
+    /// rejoins, EF losses) are added directly. Per-worker/per-shard/
+    /// sim-link snapshots are *not* merged — at the root those are keyed
+    /// by group id and stay level-0-only. The caller passes each child's
+    /// *delta* since the last absorb (the trainer `mem::take`s the group
+    /// ledger), so the invariant `Σ by_level == headline` holds after
+    /// every call.
+    pub fn absorb_child(&mut self, level: usize, child: &CommLedger) {
+        self.uplink_bits += child.uplink_bits;
+        charge_level(&mut self.uplink_bits_by_level, level, child.uplink_bits);
+        self.downlink_bits += child.downlink_bits;
+        charge_level(&mut self.downlink_bits_by_level, level, child.downlink_bits);
+        self.framing_bits += child.framing_bits;
+        charge_level(&mut self.framing_bits_by_level, level, child.framing_bits);
+        self.uplink_msgs += child.uplink_msgs;
+        self.stale_uplinks += child.stale_uplinks;
+        self.dropped_uplinks += child.dropped_uplinks;
+        self.rejoins += child.rejoins;
+        self.ef_resets += child.ef_resets;
+        self.ef_residual_lost_bits += child.ef_residual_lost_bits;
     }
 
     pub fn total_bits(&self) -> u64 {
@@ -173,8 +241,20 @@ mod tests {
         l.charge_uplink(0, 1000);
         assert!(l.sim_links.is_empty());
         let snap = vec![
-            LinkStats { delivered: 3, drops: 1, reordered: 0, delay_us: 900 },
-            LinkStats { delivered: 2, drops: 0, reordered: 1, delay_us: 400 },
+            LinkStats {
+                delivered: 3,
+                drops: 1,
+                reordered: 0,
+                delay_us: 900,
+                downlink_delay_us: 300,
+            },
+            LinkStats {
+                delivered: 2,
+                drops: 0,
+                reordered: 1,
+                delay_us: 400,
+                downlink_delay_us: 100,
+            },
         ];
         l.sync_sim_links(&snap);
         assert_eq!(l.sim_links, snap);
@@ -204,6 +284,52 @@ mod tests {
         assert_eq!(l.total_bits(), 1000);
         assert_eq!(l.uplink_bits, 1000);
         assert_eq!(l.ef_residual_lost_bits, 8192);
+    }
+
+    #[test]
+    fn per_level_breakdowns_sum_to_headline_totals() {
+        let mut root = CommLedger::new();
+        root.charge_uplink(0, 1000);
+        root.charge_downlink(600, 2);
+        root.charge_framing(128);
+        assert_eq!(root.uplink_bits_by_level, vec![1000]);
+        assert_eq!(root.downlink_bits_by_level, vec![1200]);
+        assert_eq!(root.framing_bits_by_level, vec![128]);
+
+        let mut group = CommLedger::new();
+        group.charge_uplink(0, 400);
+        group.charge_uplink(1, 400);
+        group.charge_downlink_dense(10, 2);
+        group.stale_uplinks = 1;
+        group.ef_resets = 2;
+        group.ef_residual_lost_bits = 64;
+        root.absorb_child(1, &group);
+
+        assert_eq!(root.uplink_bits_by_level, vec![1000, 800]);
+        assert_eq!(
+            root.uplink_bits_by_level.iter().sum::<u64>(),
+            root.uplink_bits
+        );
+        assert_eq!(
+            root.downlink_bits_by_level.iter().sum::<u64>(),
+            root.downlink_bits
+        );
+        assert_eq!(
+            root.framing_bits_by_level.iter().sum::<u64>(),
+            root.framing_bits
+        );
+        assert_eq!(root.uplink_msgs, 3);
+        assert_eq!(root.stale_uplinks, 1);
+        assert_eq!(root.ef_resets, 2);
+        assert_eq!(root.ef_residual_lost_bits, 64);
+        // Child per-worker breakdowns are keyed by group-local wids and
+        // deliberately not merged into the root's level-0 snapshot.
+        assert_eq!(root.uplink_bits_by_worker, vec![1000]);
+
+        // Absorbing a drained (default) child is a no-op.
+        let before = root.clone();
+        root.absorb_child(1, &CommLedger::new());
+        assert_eq!(root, before);
     }
 
     #[test]

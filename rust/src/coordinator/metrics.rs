@@ -62,6 +62,17 @@ pub struct RunResult {
     /// Cumulative uplink bits routed to each server shard after payload
     /// slicing (empty for an unsharded server).
     pub uplink_bits_by_shard: Vec<u64>,
+    /// Cumulative uplink bits per topology level: index 0 is the hop
+    /// into the leader (root), index 1 the worker ↔ sub-leader hop of a
+    /// `--topology tree` run. Entries sum exactly to the headline
+    /// `uplink_bits`; a flat run has only index 0.
+    pub uplink_bits_by_level: Vec<u64>,
+    /// Cumulative downlink bits per topology level (see
+    /// `uplink_bits_by_level`).
+    pub downlink_bits_by_level: Vec<u64>,
+    /// Cumulative framing bits per topology level (see
+    /// `uplink_bits_by_level`).
+    pub framing_bits_by_level: Vec<u64>,
     /// Cumulative wall-clock ms spent inside each server shard's update
     /// (empty for an unsharded server).
     pub server_ms_by_shard: Vec<f64>,
@@ -148,6 +159,9 @@ mod tests {
             ef_residual_lost_bits: 0,
             uplink_bits_by_worker: Vec::new(),
             uplink_bits_by_shard: Vec::new(),
+            uplink_bits_by_level: Vec::new(),
+            downlink_bits_by_level: Vec::new(),
+            framing_bits_by_level: Vec::new(),
             server_ms_by_shard: Vec::new(),
             sim_links: Vec::new(),
         }

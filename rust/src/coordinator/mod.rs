@@ -47,6 +47,7 @@ pub mod sim;
 pub mod supervisor;
 pub mod trainer;
 pub mod transport;
+pub mod tree;
 pub mod worker;
 
 pub use cluster::{WorkerPool, WorkerRound};
@@ -60,3 +61,4 @@ pub use sim::{LinkStats, Sim, SimProfile};
 pub use supervisor::Supervisor;
 pub use trainer::{train, Trainer};
 pub use transport::{Envelope, Event, InProc, Loopback, Transport, TransportSpec};
+pub use tree::{parse_tree_kill, Topology, TreeHandle, TreeTransport, TOPOLOGY_CHOICES};

@@ -282,7 +282,10 @@ impl ClusterRuntime {
             "round {round}: no live idle worker to dispatch ({} of {n} workers dead)",
             self.dead.iter().filter(|&&d| d).count()
         );
-        ledger.charge_downlink_dense(theta.len(), dispatched);
+        ledger.charge_downlink(
+            self.transport.downlink_wire_bits(theta.len()),
+            dispatched,
+        );
         ledger.charge_framing(dispatched as u64 * self.transport.frame_overhead_bits());
 
         // Collect: consume arrivals until K uplinks for *this* round are

@@ -15,7 +15,10 @@
 //! with a *barrier-collect* event queue:
 //!
 //! 1. [`Transport::send_downlink`] is forwarded and the virtual dispatch
-//!    time of that link is stamped.
+//!    time of that link is stamped — shifted by a per-link **downlink
+//!    delay** (latency + jitter + downlink-frame serialization, drawn
+//!    from a downlink-salted stream), so the θ broadcast is not free on
+//!    the virtual clock: the uplink leg starts only once θ arrived.
 //! 2. The first [`Transport::recv_event`] of a batch physically drains
 //!    **every** outstanding uplink from the inner transport, stamping
 //!    each with `dispatch + latency + jitter + bits/bandwidth +
@@ -73,6 +76,12 @@ pub struct LinkStats {
     pub reordered: u64,
     /// Cumulative virtual one-way delay (µs) over delivered uplinks.
     pub delay_us: u64,
+    /// Cumulative virtual one-way delay (µs) over dispatched downlinks —
+    /// the θ broadcast is no longer instantaneous on the virtual clock:
+    /// each dispatch is stamped `now + latency + jitter + bits/bandwidth`
+    /// (drawn from a downlink-salted RNG stream), which pushes the whole
+    /// round-trip of that link later. Zero under the `ideal` profile.
+    pub downlink_delay_us: u64,
 }
 
 /// The valid `--sim-profile` spellings, for every error message that has
@@ -241,6 +250,33 @@ impl<T: Transport> Sim<T> {
         (delay, drops)
     }
 
+    /// Downlink (θ broadcast) delay for one dispatch: latency + jitter +
+    /// serialization of the downlink frame. Drawn from a stream salted
+    /// away from the uplink draw so the two directions are independent;
+    /// seeded drops stay an uplink-side concept (the broadcast is modeled
+    /// as delay-only, keeping the one-uplink-per-dispatch invariant
+    /// untouched).
+    fn downlink_delay(&self, wid: usize, round: u64, bits: u64) -> u64 {
+        let p = &self.profile;
+        if p.is_ideal() {
+            return 0;
+        }
+        let mut r = Rng::seed(
+            self.seed
+                ^ 0xA5A5_5A5A_C3C3_3C3C
+                ^ (wid as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+                ^ round.wrapping_mul(0xD1B5_4A32_D192_ED03),
+        );
+        let mut delay = p.latency_us;
+        if p.jitter_us > 0 {
+            delay += r.gen_range(p.jitter_us as usize + 1) as u64;
+        }
+        if p.bandwidth_bits_per_us > 0 {
+            delay += bits / p.bandwidth_bits_per_us;
+        }
+        delay
+    }
+
     /// Barrier-collect: physically drain every outstanding event from the
     /// inner transport and stamp each with its virtual arrival.
     fn collect(&mut self) -> Result<()> {
@@ -297,7 +333,16 @@ impl<T: Transport> Transport for Sim<T> {
                 self.owed[wid] = true;
                 self.outstanding += 1;
             }
-            self.dispatch_us[wid] = self.now_us;
+            // Per-link downlink impairment: the worker sees θ only after
+            // the broadcast crosses its link, so the uplink leg starts
+            // from the delayed stamp. Queried after the forward so a
+            // per-round downlink cache (compressed tree broadcasts) is
+            // already populated.
+            let bits = self.inner.downlink_wire_bits(theta.len())
+                + self.inner.frame_overhead_bits();
+            let delay = self.downlink_delay(wid, ctx.round, bits);
+            self.dispatch_us[wid] = self.now_us + delay;
+            self.links[wid].downlink_delay_us += delay;
         }
         Ok(ok)
     }
@@ -329,6 +374,12 @@ impl<T: Transport> Transport for Sim<T> {
 
     fn frame_overhead_bits(&self) -> u64 {
         self.inner.frame_overhead_bits()
+    }
+
+    fn downlink_wire_bits(&self, dim: usize) -> u64 {
+        // The wrapped transport may compress its downlinks (tree root);
+        // the simulator re-times, never re-prices.
+        self.inner.downlink_wire_bits(dim)
     }
 
     fn shutdown(&mut self) -> Result<()> {
@@ -558,8 +609,45 @@ mod tests {
         // The exit carries no gradient delay: it beats the delayed uplink.
         assert!(matches!(sim.recv_event().unwrap(), Event::Exit { wid: 1 }));
         assert!(matches!(sim.recv_event().unwrap(), Event::Uplink { wid: 0, .. }));
-        // Exits are control-plane: no delivery/drop accounting.
-        assert_eq!(sim.link_stats()[1], LinkStats::default());
+        // Exits are control-plane: no delivery/drop accounting (the
+        // downlink that was dispatched to the dying worker still crossed
+        // its link, so only the downlink leg is billed).
+        let l = &sim.link_stats()[1];
+        assert_eq!((l.delivered, l.drops, l.reordered, l.delay_us), (0, 0, 0, 0));
+        assert!(l.downlink_delay_us > 0, "lossy-wan downlink must be delayed");
+    }
+
+    #[test]
+    fn downlink_delay_shifts_arrivals_and_is_seeded() {
+        // Same uplink schedule, downlink leg on vs off (ideal): the
+        // impaired run's arrivals happen strictly later, by exactly the
+        // per-link downlink delay, and the draw reproduces bitwise.
+        let run = |profile: SimProfile| {
+            let n = 3;
+            let mut inner = Scripted::new(n);
+            for wid in 0..n {
+                inner.push_uplink(wid, 0, 4);
+            }
+            let mut sim = Sim::new(inner, 13, profile);
+            dispatch_all(&mut sim, n, 0);
+            let _ = delivered_wids(&mut sim, n);
+            (sim.now_us, sim.link_stats())
+        };
+        let mut profile = SimProfile::parse("wan").unwrap();
+        profile.drop_prob = 0.0; // isolate the delay terms
+        let (clock_a, stats_a) = run(profile);
+        let (clock_b, stats_b) = run(profile);
+        assert_eq!(clock_a, clock_b);
+        assert_eq!(stats_a, stats_b);
+        for l in &stats_a {
+            assert!(l.downlink_delay_us >= profile.latency_us);
+        }
+        // Ideal: downlink leg free, and the whole schedule collapses to
+        // zero — the transparency the bitwise gate relies on.
+        let (clock_ideal, stats_ideal) = run(SimProfile::parse("ideal").unwrap());
+        assert_eq!(clock_ideal, 0);
+        assert!(stats_ideal.iter().all(|l| l.downlink_delay_us == 0));
+        assert!(clock_a > clock_ideal);
     }
 
     #[test]

@@ -24,9 +24,10 @@ use std::time::Duration;
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::algo::{
-    parse_byzantine, AggMode, AlgoSpec, ByzantineWorker, ServerAlgo, ShardedServer,
-    WorkerAlgo,
+    parse_byzantine, AggMode, AlgoSpec, ByzantineWorker, GroupForwardServer, ServerAlgo,
+    ShardedServer, WorkerAlgo,
 };
+use crate::compress::CompressorSpec;
 use crate::config::TrainConfig;
 use crate::data::{
     images::SyntheticImages, lm::ByteCorpus, shard::Sharding, text::SyntheticText,
@@ -47,9 +48,10 @@ use super::comm::CommLedger;
 use super::metrics::{RoundMetric, RunResult};
 use super::net::{assign_streams, TcpLeader};
 use super::runtime::ClusterRuntime;
-use super::sim::SimProfile;
+use super::sim::{Sim, SimProfile};
 use super::supervisor::{RestartPolicy, Supervisor};
 use super::transport::{Transport, TransportSpec};
+use super::tree::{parse_tree_kill, Topology, TreeHandle, TreeTransport};
 
 pub struct Trainer {
     cfg: TrainConfig,
@@ -68,6 +70,10 @@ pub struct Trainer {
     /// Child worker processes when `--spawn-workers` assembled the
     /// cluster; reaped at end of run (and killed on any error unwind).
     supervisor: Option<Supervisor>,
+    /// Shared handle onto the tree transport's sub-leader state when
+    /// `--topology tree:<degree>` assembled a two-level cluster: the
+    /// per-round level-1 ledger absorption and group introspection.
+    tree: Option<TreeHandle>,
 }
 
 impl Trainer {
@@ -103,6 +109,7 @@ impl Trainer {
         }
         let spec = AlgoSpec::parse(&cfg.algo)?;
         let tspec = TransportSpec::parse(&cfg.transport)?;
+        let topo = Topology::parse(&cfg.topology)?;
         // Remote (tcp) workers rebuild their own gradient sources and
         // protocol halves from the ASSIGN config (build_worker_parts),
         // so don't construct n unused local pipelines for them. Server
@@ -137,7 +144,14 @@ impl Trainer {
                 .import_state(&ck.server)
                 .context("restoring the server optimizer state")?;
         }
-        let (transport, supervisor): (Box<dyn Transport>, Option<Supervisor>) = match tspec {
+        // In tree mode the root's "workers" are sub-leaders, whose EF
+        // accumulator is the group compressor's (set inside the branch).
+        let mut root_ef_bits = spec.ef_state_bits(theta.len());
+        let (transport, supervisor, tree): (
+            Box<dyn Transport>,
+            Option<Supervisor>,
+            Option<TreeHandle>,
+        ) = match tspec {
             TransportSpec::Tcp { port } => {
                 // Workers are remote processes (local_workers == 0: the
                 // pool pieces above are empty). Any resume blobs ride
@@ -166,7 +180,94 @@ impl Trainer {
                 // by the supervisor, or launched by hand) can HELLO back
                 // into a dead wid mid-run.
                 tcp.adopt_listener(leader)?;
-                (Box::new(tcp), sup)
+                (Box::new(tcp), sup, None)
+            }
+            in_proc if matches!(topo, Topology::Tree { .. }) => {
+                let Topology::Tree { degree, ref group_compressor } = topo else {
+                    unreachable!("guard matched Tree");
+                };
+                // Suspend would have to detach through two runtime
+                // layers and reconcile the sub-leaders' EF state — the
+                // tree transport rejects detach, so a tree checkpoint
+                // cannot exist; refuse a hand-crafted one symmetrically.
+                ensure!(
+                    ckpt.is_none(),
+                    "tree topology does not support checkpoint resume"
+                );
+                let dim = theta.len();
+                let downlink = match cfg.downlink_compress.as_str() {
+                    "" => None,
+                    s => Some(CompressorSpec::parse(s)?),
+                };
+                let kill = parse_tree_kill(&cfg.tree_kill)?;
+                let agg = AggMode::parse(&cfg.robust_agg)?;
+                root_ef_bits = if *group_compressor == CompressorSpec::Identity {
+                    0
+                } else {
+                    32 * dim as u64
+                };
+                // Split the flat worker list into contiguous
+                // degree-sized groups. The (source, algo) pairs went
+                // through the same per-wid constructors as the flat
+                // star, so per-worker compressor salting (and byzantine
+                // wrapping) is unchanged — only who collects differs.
+                let sizes: Vec<usize> = (0..cfg.workers.div_ceil(degree))
+                    .map(|g| degree.min(cfg.workers - g * degree))
+                    .collect();
+                let pools: Vec<WorkerPool> = match sources {
+                    Sources::Threadable(s) => chunk(s, degree)
+                        .into_iter()
+                        .zip(chunk(workers, degree))
+                        .map(|(src, alg)| {
+                            if cfg.threaded {
+                                WorkerPool::threaded(src, alg)
+                            } else {
+                                WorkerPool::sequential(
+                                    src.into_iter()
+                                        .map(|b| b as Box<dyn GradSource>)
+                                        .collect(),
+                                    alg,
+                                )
+                            }
+                        })
+                        .collect::<Result<_>>()?,
+                    Sources::LeaderOnly(s) => chunk(s, degree)
+                        .into_iter()
+                        .zip(chunk(workers, degree))
+                        .map(|(src, alg)| WorkerPool::sequential(src, alg))
+                        .collect::<Result<_>>()?,
+                };
+                // Each group rides the bare in-process transport; the
+                // simulator (if configured) wraps the whole tree so its
+                // virtual clock times the sub-leader ↔ root links.
+                let bare = match in_proc {
+                    TransportSpec::Sim { inner } => inner.spec(),
+                    other => other,
+                };
+                let mut groups = Vec::with_capacity(pools.len());
+                for (pool, &size) in pools.into_iter().zip(&sizes) {
+                    let mut rt = ClusterRuntime::new(bare.build(pool)?, 0, 0)?;
+                    rt.set_ef_state_bits(spec.ef_state_bits(dim));
+                    let mut srv = GroupForwardServer::new(dim, group_compressor);
+                    srv.set_agg_mode(agg)?;
+                    groups.push((rt, srv, size));
+                }
+                let (tree_t, handle) = TreeTransport::new(
+                    groups,
+                    dim,
+                    downlink.as_ref(),
+                    kill,
+                    spec.ef_state_bits(dim),
+                )?;
+                let transport: Box<dyn Transport> = match in_proc {
+                    TransportSpec::Sim { .. } => Box::new(Sim::new(
+                        tree_t,
+                        cfg.sim_seed,
+                        SimProfile::parse(&cfg.sim_profile)?,
+                    )),
+                    _ => Box::new(tree_t),
+                };
+                (transport, None, Some(handle))
             }
             in_proc => {
                 // On resume, worker state goes back into the freshly
@@ -208,13 +309,19 @@ impl Trainer {
                     )?,
                     bare => bare.build(pool)?,
                 };
-                (transport, None)
+                (transport, None, None)
             }
         };
         let mut runtime = ClusterRuntime::new(transport, cfg.quorum, cfg.max_staleness)?;
         // Size the per-worker EF accumulator so a worker death charges
         // the lost residual to the ledger.
-        runtime.set_ef_state_bits(spec.ef_state_bits(theta.len()));
+        runtime.set_ef_state_bits(root_ef_bits);
+        if tree.is_some() {
+            // Forwarded group aggregates arrive at the root as ordinary
+            // Dense payloads; phase-filtering servers (1-bit Adam) must
+            // treat them as pre-averaged means, not raw worker uplinks.
+            server.set_pre_aggregated(true);
+        }
         let algo_name = server.name();
         Ok(Trainer {
             cfg: cfg.clone(),
@@ -229,6 +336,7 @@ impl Trainer {
             round_ms_total: ckpt.map_or(0.0, |c| c.round_ms_total),
             next_round: ckpt.map_or(0, |c| c.round),
             supervisor,
+            tree,
         })
     }
 
@@ -250,6 +358,11 @@ impl Trainer {
             cfg.is_analytic(),
             "with_transport serves the analytic substrates, not '{}'",
             cfg.model
+        );
+        ensure!(
+            Topology::parse(&cfg.topology)? == Topology::Flat,
+            "with_transport drives the flat star; tree topology assembles \
+             its own transport"
         );
         let spec = AlgoSpec::parse(&cfg.algo)?;
         let (_sources, evaluator, mut theta, _fused) = build_workload(cfg, 0)?;
@@ -298,6 +411,7 @@ impl Trainer {
             round_ms_total: ckpt.map_or(0.0, |c| c.round_ms_total),
             next_round: ckpt.map_or(0, |c| c.round),
             supervisor: None,
+            tree: None,
         })
     }
 
@@ -329,6 +443,11 @@ impl Trainer {
             &mut self.ledger,
         )?;
         self.worker_ms_total += out.worker_ms;
+        // Fold the sub-leaders' private ledgers into the run ledger at
+        // level 1 before the round metric snapshots the cumulative bits.
+        if let Some(h) = &self.tree {
+            h.absorb_level1(&mut self.ledger);
+        }
         if let Some(stats) = self.server.shard_stats() {
             self.ledger.sync_shard_routing(&stats.routed_bits);
         }
@@ -478,6 +597,10 @@ impl Trainer {
     /// result covers the whole job, not just its last segment.
     pub fn finalize(mut self) -> Result<RunResult> {
         self.finish()?;
+        // Absorb any group-side charges the drain above produced.
+        if let Some(h) = &self.tree {
+            h.absorb_level1(&mut self.ledger);
+        }
         // Capture the end-of-run straggler deliveries finish() drained.
         let links = self.runtime.link_stats();
         if !links.is_empty() {
@@ -511,6 +634,9 @@ impl Trainer {
             ef_residual_lost_bits: self.ledger.ef_residual_lost_bits,
             uplink_bits_by_worker: self.ledger.uplink_bits_by_worker.clone(),
             uplink_bits_by_shard: self.ledger.uplink_bits_by_shard.clone(),
+            uplink_bits_by_level: self.ledger.uplink_bits_by_level.clone(),
+            downlink_bits_by_level: self.ledger.downlink_bits_by_level.clone(),
+            framing_bits_by_level: self.ledger.framing_bits_by_level.clone(),
             server_ms_by_shard,
             sim_links: self.ledger.sim_links.clone(),
         })
@@ -528,6 +654,19 @@ impl Trainer {
 /// One-call convenience: build + run.
 pub fn train(cfg: &TrainConfig) -> Result<RunResult> {
     Trainer::new(cfg)?.run()
+}
+
+/// Split `v` into contiguous chunks of at most `size` (the last one may
+/// be smaller). `slice::chunks` borrows; the per-group worker pools need
+/// ownership.
+fn chunk<T>(mut v: Vec<T>, size: usize) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    while v.len() > size {
+        let rest = v.split_off(size);
+        out.push(std::mem::replace(&mut v, rest));
+    }
+    out.push(v);
+    out
 }
 
 // ---------------------------------------------------------------------------

@@ -306,6 +306,18 @@ pub trait Transport {
         0
     }
 
+    /// Wire bits of one downlink message this round, billed per
+    /// dispatched worker. The default is the dense θ payload codec
+    /// (`8 × (5 + 4·dim)`, tag byte + dim word + f32s) every flat-star
+    /// transport ships; the tree transport overrides this with the
+    /// compressed θ-delta payload's real encoded length when
+    /// `--downlink-compress` is active. The runtime reads this *after*
+    /// the dispatch loop, so transports that encode the broadcast once
+    /// per round can report the cached encoding's exact size.
+    fn downlink_wire_bits(&self, dim: usize) -> u64 {
+        8 * (5 + 4 * dim as u64)
+    }
+
     /// Tell every live worker the run is over (a SHUTDOWN broadcast for
     /// socket transports; no-op in process). Called once after the final
     /// drain; must be idempotent.

@@ -1,0 +1,506 @@
+//! Tree aggregation topology: sub-leaders between the workers and the
+//! root (`--topology tree:<degree>[:<group-compressor>]`).
+//!
+//! The flat star dispatches θ to all n workers and collects n uplinks at
+//! one leader — a fan-in that caps scale well before the paper's
+//! "millions of users" regime. The tree splits the fleet into
+//! ⌈n/degree⌉ contiguous **groups**, each owned by a sub-leader:
+//!
+//! ```text
+//!                         root ClusterRuntime
+//!                    θ̂ ↓ (compressed downlink)  ↑ C(ḡ_g + e_g)  (1 per group)
+//!          ┌────────────────┬────────────────┐
+//!     sub-leader 0     sub-leader 1     sub-leader 2        (TreeTransport)
+//!      θ̂ ↓   ↑ ĝ_i      θ̂ ↓   ↑ ĝ_i      θ̂ ↓   ↑ ĝ_i
+//!     w0 w1 w2 w3      w4 w5 w6 w7      w8 w9 ...           (group runtimes)
+//! ```
+//!
+//! A sub-leader **is a [`ClusterRuntime`]** whose "server step" is the
+//! aggregate-and-forward half
+//! ([`GroupForwardServer`](crate::algo::group::GroupForwardServer)): it
+//! runs its group at full participation, aggregates the group's uplinks
+//! with the same estimator the root uses, re-compresses the aggregate
+//! through its own error-feedback accumulator, and forwards exactly one
+//! uplink to the root. The root additionally compresses **downlinks**
+//! (`--downlink-compress <compressor>`): θ is sent as a compressed
+//! θ-delta against the workers' reconstruction θ̂, whose un-transmitted
+//! remainder `θ − θ̂` is next round's delta — the downlink direction's
+//! error-feedback memory (Wang et al. 2111.00705's two-way compression).
+//! Both directions ride the existing Envelope/frame protocol with no new
+//! frame kinds: a forwarded group aggregate is an ordinary
+//! [`UplinkMsg`], a compressed downlink an ordinary payload.
+//!
+//! ## Per-level bit accounting
+//!
+//! Every hop is billed exactly, by level:
+//!
+//! - **level 0** (sub-leader ↔ root): the root runtime charges each
+//!   forwarded aggregate's payload bits as uplink, the (possibly
+//!   compressed) θ-delta payload per dispatched group as downlink
+//!   ([`Transport::downlink_wire_bits`]), and an envelope header per
+//!   message as framing.
+//! - **level 1** (worker ↔ sub-leader): each group runtime charges its
+//!   own [`CommLedger`]; the trainer absorbs those deltas into the run
+//!   ledger after every round ([`TreeHandle::absorb_level1`]), so
+//!   `uplink_bits_by_level[0] + uplink_bits_by_level[1] == uplink_bits`
+//!   holds exactly (same for downlink and framing).
+//!
+//! A killed sub-leader (`--tree-kill gid:round`, the fault-injection
+//! hook) degrades the run to the surviving groups — the root's quorum
+//! floor shrinks exactly like a dead worker in the flat star — and its
+//! group's worker-side EF accumulators are charged to
+//! `ef_resets`/`ef_residual_lost_bits` (they lived in the dead subtree),
+//! on top of the sub-leader's own EF residual which the root runtime
+//! charges via [`ClusterRuntime::set_ef_state_bits`].
+//!
+//! ## Bitwise contract
+//!
+//! The degenerate tree — `degree ≥ n` (one group spanning every worker),
+//! identity group compressor, no downlink compression — reproduces the
+//! flat star **bitwise in loss and θ**: the single group aggregates the
+//! same payloads in the same wid order with the same estimator, the
+//! identity forward is the exact dense mean, and the root's mean over
+//! one message is the identity. (Transmitted *bits* differ by
+//! construction: the forwarded hop is a real extra message.) The
+//! property suite gates this across all six protocol strings ×
+//! inproc/loopback, like every prior abstraction layer. Note the group
+//! loss/gradient forward is the *group mean*, so with several groups the
+//! root computes a mean of group means — identical to the flat mean when
+//! `degree` divides n, the usual deployment shape.
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::algo::group::GroupForwardServer;
+use crate::algo::RoundCtx;
+use crate::compress::{Compressor, CompressorSpec};
+
+use super::comm::CommLedger;
+use super::runtime::ClusterRuntime;
+use super::sim::LinkStats;
+use super::transport::{Event, Transport, UplinkMsg, ENVELOPE_HEADER_BYTES};
+
+/// The accepted `--topology` spellings, enumerated in every parse and
+/// validation error.
+pub const TOPOLOGY_CHOICES: &str = "flat | tree:<degree>[:<group-compressor>]";
+
+/// Parsed topology selector (`TrainConfig::topology` / `--topology`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Topology {
+    /// The single-leader star every prior layer ran.
+    Flat,
+    /// Two-level tree: ⌈n/degree⌉ sub-leaders over contiguous groups of
+    /// `degree` workers, each re-compressing its group aggregate with
+    /// `group_compressor` (identity = forward the exact mean).
+    Tree { degree: usize, group_compressor: CompressorSpec },
+}
+
+impl Topology {
+    /// Parse `flat` (or empty) and `tree:<degree>[:<group-compressor>]`,
+    /// e.g. `tree:8`, `tree:8:topk:0.05`.
+    pub fn parse(s: &str) -> Result<Topology> {
+        if s.is_empty() || s == "flat" {
+            return Ok(Topology::Flat);
+        }
+        if let Some(rest) = s.strip_prefix("tree:") {
+            let (deg_str, comp_str) = match rest.split_once(':') {
+                Some((d, c)) => (d, Some(c)),
+                None => (rest, None),
+            };
+            let degree: usize = deg_str.parse().map_err(|_| {
+                anyhow!(
+                    "bad tree degree '{deg_str}' in topology '{s}' \
+                     (accepted forms: {TOPOLOGY_CHOICES})"
+                )
+            })?;
+            ensure!(
+                degree >= 2,
+                "tree degree must be >= 2 — a 1-ary sub-leader aggregates nothing \
+                 (accepted forms: {TOPOLOGY_CHOICES})"
+            );
+            let group_compressor = match comp_str {
+                Some(c) => CompressorSpec::parse(c)?,
+                None => CompressorSpec::Identity,
+            };
+            return Ok(Topology::Tree { degree, group_compressor });
+        }
+        bail!("unknown topology '{s}' (accepted forms: {TOPOLOGY_CHOICES})")
+    }
+
+    /// Number of sub-leader groups a tree over `n` workers builds
+    /// (`None` for the flat star).
+    pub fn group_count(&self, n: usize) -> Option<usize> {
+        match self {
+            Topology::Flat => None,
+            Topology::Tree { degree, .. } => Some(n.div_ceil(*degree)),
+        }
+    }
+}
+
+/// Parse the `--tree-kill gid:round` fault-injection spec: sub-leader
+/// `gid`'s process "dies" right before its round-`round` dispatch (its
+/// whole group drops out; the run degrades to the survivors). Empty =
+/// no kill.
+pub fn parse_tree_kill(s: &str) -> Result<Option<(usize, u64)>> {
+    if s.is_empty() {
+        return Ok(None);
+    }
+    let (gid, round) = s
+        .split_once(':')
+        .ok_or_else(|| anyhow!("bad tree-kill '{s}' (accepted form: <gid>:<round>)"))?;
+    Ok(Some((
+        gid.parse()
+            .map_err(|_| anyhow!("bad tree-kill group id '{gid}' (accepted form: <gid>:<round>)"))?,
+        round
+            .parse()
+            .map_err(|_| anyhow!("bad tree-kill round '{round}' (accepted form: <gid>:<round>)"))?,
+    )))
+}
+
+/// Downlink compressor state: θ is shipped as `C(θ − θ̂)` where θ̂ is the
+/// workers' reconstruction, advanced only by decoded payloads — the
+/// un-transmitted remainder is automatically next round's delta, so no
+/// separate EF accumulator is needed in this direction.
+struct DownlinkCodec {
+    comp: Box<dyn Compressor>,
+    theta_hat: Vec<f32>,
+    delta: Vec<f32>,
+}
+
+impl DownlinkCodec {
+    fn new(spec: &CompressorSpec, dim: usize) -> Self {
+        DownlinkCodec {
+            comp: spec.build(),
+            theta_hat: vec![0.0; dim],
+            delta: vec![0.0; dim],
+        }
+    }
+
+    /// Encode this round's broadcast: compress the delta, advance θ̂ by
+    /// the decoded payload, return the payload's wire bits (what one
+    /// downlink message costs this round).
+    fn encode_round(&mut self, theta: &[f32]) -> Result<u64> {
+        for ((d, &t), &h) in self.delta.iter_mut().zip(theta).zip(&self.theta_hat) {
+            *d = t - h;
+        }
+        let payload = self.comp.compress(&self.delta);
+        let bits = payload.wire_bits();
+        payload.view().add_into(&mut self.theta_hat)?;
+        Ok(bits)
+    }
+}
+
+/// One sub-leader: its group's runtime, forward server, private ledger,
+/// and θ̂ scratch.
+struct Group {
+    runtime: ClusterRuntime,
+    server: GroupForwardServer,
+    ledger: CommLedger,
+    scratch: Vec<f32>,
+    size: usize,
+    dead: bool,
+}
+
+struct TreeInner {
+    groups: Vec<Group>,
+    queue: VecDeque<Event>,
+    down: Option<DownlinkCodec>,
+    /// `(round, lr bits)` of the cached downlink encode — the broadcast
+    /// is encoded once per round and shared by every group, exactly like
+    /// the loopback/TCP downlink scratch.
+    round_key: Option<(u64, u32)>,
+    /// Wire bits of one downlink message under the cached encode (the
+    /// dense-θ formula when no downlink compressor is configured).
+    downlink_bits: u64,
+    dim: usize,
+    kill: Option<(usize, u64)>,
+    /// Per-worker EF accumulator bits inside the groups (charged for a
+    /// whole group when its sub-leader is killed); 0 for EF-free
+    /// protocols.
+    worker_ef_bits: u64,
+}
+
+/// The root's [`Transport`] over the sub-leaders: "worker id" at this
+/// level is a group id, a downlink dispatch drives one full group round
+/// synchronously, and the uplink is the group's forwarded compressed
+/// aggregate. Shares state with a [`TreeHandle`] via `Rc<RefCell<…>>`
+/// (legal: [`Transport`] is deliberately not `Send`-bound).
+pub struct TreeTransport {
+    inner: Rc<RefCell<TreeInner>>,
+}
+
+/// The trainer's handle onto the tree's shared state: per-round level-1
+/// ledger absorption and group introspection.
+#[derive(Clone)]
+pub struct TreeHandle {
+    inner: Rc<RefCell<TreeInner>>,
+}
+
+impl TreeTransport {
+    /// Assemble the tree from per-group `(runtime, forward server, group
+    /// size)` triples. `downlink` enables compressed θ-delta broadcasts;
+    /// `kill` is the `--tree-kill` fault-injection spec; `worker_ef_bits`
+    /// sizes the per-worker EF residual charged when a sub-leader dies.
+    pub fn new(
+        groups: Vec<(ClusterRuntime, GroupForwardServer, usize)>,
+        dim: usize,
+        downlink: Option<&CompressorSpec>,
+        kill: Option<(usize, u64)>,
+        worker_ef_bits: u64,
+    ) -> Result<(TreeTransport, TreeHandle)> {
+        ensure!(!groups.is_empty(), "tree topology needs at least one group");
+        if let Some((gid, _)) = kill {
+            ensure!(
+                gid < groups.len(),
+                "tree-kill group id {gid} is out of range for {} groups (valid ids: 0..{})",
+                groups.len(),
+                groups.len()
+            );
+        }
+        let inner = TreeInner {
+            groups: groups
+                .into_iter()
+                .map(|(runtime, server, size)| Group {
+                    runtime,
+                    server,
+                    ledger: CommLedger::new(),
+                    scratch: Vec::with_capacity(dim),
+                    size,
+                    dead: false,
+                })
+                .collect(),
+            queue: VecDeque::new(),
+            down: downlink.map(|spec| DownlinkCodec::new(spec, dim)),
+            round_key: None,
+            downlink_bits: 0,
+            dim,
+            kill,
+            worker_ef_bits,
+        };
+        let inner = Rc::new(RefCell::new(inner));
+        Ok((TreeTransport { inner: inner.clone() }, TreeHandle { inner }))
+    }
+}
+
+impl Transport for TreeTransport {
+    fn n_workers(&self) -> usize {
+        self.inner.borrow().groups.len()
+    }
+
+    fn send_downlink(
+        &mut self,
+        gid: usize,
+        theta: &Arc<Vec<f32>>,
+        ctx: &RoundCtx,
+    ) -> Result<bool> {
+        let mut borrow = self.inner.borrow_mut();
+        let inner = &mut *borrow;
+        ensure!(gid < inner.groups.len(), "downlink to unknown group {gid}");
+        if inner.groups[gid].dead {
+            return Ok(false);
+        }
+        if inner.kill.is_some_and(|(g, r)| g == gid && ctx.round >= r) {
+            // Fault injection: the sub-leader process dies before this
+            // dispatch. Its workers' EF residuals die with the subtree;
+            // charge them to the group ledger (absorbed at level 1). The
+            // sub-leader's *own* EF residual is charged by the root
+            // runtime's mark_dead, like any dead worker's.
+            let g = &mut inner.groups[gid];
+            g.dead = true;
+            if inner.worker_ef_bits > 0 {
+                g.ledger.ef_resets += g.size as u64;
+                g.ledger.ef_residual_lost_bits += inner.worker_ef_bits * g.size as u64;
+            }
+            return Ok(false);
+        }
+        // Once-per-round downlink encode, shared across groups: θ̂ (and
+        // the per-message bill) depends only on (round, lr), not on gid.
+        let key = (ctx.round, ctx.lr.to_bits());
+        if inner.round_key != Some(key) {
+            inner.downlink_bits = match &mut inner.down {
+                Some(codec) => codec.encode_round(theta)?,
+                None => 8 * (5 + 4 * inner.dim as u64),
+            };
+            inner.round_key = Some(key);
+        }
+        let g = &mut inner.groups[gid];
+        g.scratch.clear();
+        match &inner.down {
+            Some(codec) => g.scratch.extend_from_slice(&codec.theta_hat),
+            None => g.scratch.extend_from_slice(theta.as_slice()),
+        }
+        // Drive the whole group round synchronously: dispatch θ̂ to the
+        // group, collect at full participation, aggregate-and-forward.
+        let outcome = g.runtime.run_round(
+            &mut g.scratch,
+            &mut g.server,
+            ctx.round,
+            ctx.lr,
+            &mut g.ledger,
+        )?;
+        let payload = g
+            .server
+            .take_forwarded()
+            .context("group round stepped but parked no forward payload")?;
+        let msg =
+            UplinkMsg::from_payload(gid as u32, ctx.round, outcome.train_loss, payload);
+        inner.queue.push_back(Event::Uplink { wid: gid, round: ctx.round, msg });
+        Ok(true)
+    }
+
+    fn recv_event(&mut self) -> Result<Event> {
+        self.inner
+            .borrow_mut()
+            .queue
+            .pop_front()
+            .ok_or_else(|| anyhow!("tree transport has no queued sub-leader uplink"))
+    }
+
+    fn frame_overhead_bits(&self) -> u64 {
+        // The sub-leader ↔ root hop carries ordinary envelope frames.
+        (ENVELOPE_HEADER_BYTES as u64) * 8
+    }
+
+    fn downlink_wire_bits(&self, dim: usize) -> u64 {
+        let inner = self.inner.borrow();
+        if inner.round_key.is_some() {
+            inner.downlink_bits
+        } else {
+            8 * (5 + 4 * dim as u64)
+        }
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        for g in self.inner.borrow_mut().groups.iter_mut() {
+            g.runtime.shutdown()?;
+        }
+        Ok(())
+    }
+
+    fn link_stats(&self) -> Vec<LinkStats> {
+        Vec::new()
+    }
+}
+
+impl TreeHandle {
+    pub fn group_count(&self) -> usize {
+        self.inner.borrow().groups.len()
+    }
+
+    /// Group ids whose sub-leader has died (via `--tree-kill`).
+    pub fn dead_groups(&self) -> Vec<usize> {
+        let inner = self.inner.borrow();
+        (0..inner.groups.len()).filter(|&g| inner.groups[g].dead).collect()
+    }
+
+    /// Fold each group's private ledger into the run ledger at level 1
+    /// and reset it, so repeated calls absorb only new deltas. Called by
+    /// the trainer after every root round; the invariant
+    /// `Σ *_bits_by_level == *_bits` holds after each call.
+    pub fn absorb_level1(&self, root: &mut CommLedger) {
+        let mut inner = self.inner.borrow_mut();
+        for g in inner.groups.iter_mut() {
+            let child = std::mem::take(&mut g.ledger);
+            root.absorb_child(1, &child);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topology_parses_and_rejects() {
+        assert_eq!(Topology::parse("").unwrap(), Topology::Flat);
+        assert_eq!(Topology::parse("flat").unwrap(), Topology::Flat);
+        assert_eq!(
+            Topology::parse("tree:8").unwrap(),
+            Topology::Tree { degree: 8, group_compressor: CompressorSpec::Identity }
+        );
+        assert_eq!(
+            Topology::parse("tree:4:topk:0.05").unwrap(),
+            Topology::Tree {
+                degree: 4,
+                group_compressor: CompressorSpec::TopK { ratio: 0.05 }
+            }
+        );
+        assert_eq!(
+            Topology::parse("tree:2:blocksign:64").unwrap(),
+            Topology::Tree {
+                degree: 2,
+                group_compressor: CompressorSpec::BlockSign { block: 64 }
+            }
+        );
+        for bad in ["star", "tree", "tree:", "tree:x", "tree:1", "tree:0", "tree:4:bogus"] {
+            let err = Topology::parse(bad).unwrap_err().to_string();
+            assert!(
+                err.contains(TOPOLOGY_CHOICES) || err.contains("compressor"),
+                "{bad}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn group_count_rounds_up() {
+        let t = Topology::parse("tree:3").unwrap();
+        assert_eq!(t.group_count(9), Some(3));
+        assert_eq!(t.group_count(10), Some(4));
+        assert_eq!(t.group_count(2), Some(1));
+        assert_eq!(Topology::Flat.group_count(8), None);
+    }
+
+    #[test]
+    fn tree_kill_parses_and_rejects() {
+        assert_eq!(parse_tree_kill("").unwrap(), None);
+        assert_eq!(parse_tree_kill("1:40").unwrap(), Some((1, 40)));
+        for bad in ["1", "x:4", "1:y", ":4"] {
+            assert!(parse_tree_kill(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn downlink_codec_theta_hat_converges_under_identity() {
+        // Identity downlink "compression": θ̂ tracks θ exactly after one
+        // round, and each broadcast costs the dense payload.
+        let mut c = DownlinkCodec::new(&CompressorSpec::Identity, 4);
+        let theta = vec![1.0f32, -2.0, 0.5, 3.0];
+        let bits = c.encode_round(&theta).unwrap();
+        assert_eq!(bits, 8 * (5 + 4 * 4));
+        assert_eq!(c.theta_hat, theta);
+        // Second round with unchanged θ: the delta is exactly zero.
+        c.encode_round(&theta).unwrap();
+        assert_eq!(c.theta_hat, theta);
+    }
+
+    #[test]
+    fn downlink_codec_residual_carries_over() {
+        // Top-k delta: whatever a round leaves untransmitted reappears in
+        // the next delta (θ̂ only advances by decoded payloads).
+        let dim = 32;
+        let mut c = DownlinkCodec::new(&CompressorSpec::TopK { ratio: 0.25 }, dim);
+        let mut rng = crate::util::rng::Rng::seed(3);
+        let theta: Vec<f32> = rng.normal_vec(dim);
+        c.encode_round(&theta).unwrap();
+        let err1: f32 = theta
+            .iter()
+            .zip(&c.theta_hat)
+            .map(|(t, h)| (t - h).abs())
+            .sum();
+        assert!(err1 > 0.0, "top-k must leave reconstruction error");
+        // Re-broadcasting the same θ shrinks the reconstruction error.
+        for _ in 0..8 {
+            c.encode_round(&theta).unwrap();
+        }
+        let err2: f32 = theta
+            .iter()
+            .zip(&c.theta_hat)
+            .map(|(t, h)| (t - h).abs())
+            .sum();
+        assert!(err2 < err1 * 0.1, "θ̂ must converge to θ: {err1} -> {err2}");
+    }
+}

@@ -84,6 +84,15 @@ commands:
                                wid:mode (0:scale:-3 | 1:signflip | 2:stale)
            --robust-agg M      server batch estimator: mean | median |
                                trimmed:<k> (byzantine-tolerant)
+           --topology T        flat | tree:<degree>[:<group-compressor>]
+                               (sub-leaders aggregate groups of <degree>
+                               workers and forward one re-compressed
+                               uplink to the root)
+           --downlink-compress C  compress the tree root's θ broadcast as
+                               a θ-delta payload (any compressor spec,
+                               e.g. topk:0.1; tree topology only)
+           --tree-kill G:R     fault injection: kill sub-leader G before
+                               its round-R dispatch (tree topology only)
            --spawn-workers t   with tcp: spawn the worker daemons as child
                                processes (otherwise the leader waits for
                                `comp-ams worker` processes to connect)
@@ -127,7 +136,8 @@ const CFG_FLAGS: &[&str] = &[
     "eval-every", "eval-batches", "log-every", "fused", "threaded",
     "server-shards", "server-threaded", "transport", "spawn-workers",
     "quorum", "max-staleness", "sim-seed", "sim-profile", "byzantine",
-    "robust-agg", "artifacts", "config", "decay-at", "decay-factor",
+    "robust-agg", "topology", "downlink-compress", "tree-kill",
+    "artifacts", "config", "decay-at", "decay-factor",
     "rounds-per-epoch",
 ];
 
@@ -172,6 +182,9 @@ fn cfg_from_args(args: &Args) -> Result<TrainConfig> {
     cfg.sim_profile = args.str_or("sim-profile", &cfg.sim_profile);
     cfg.byzantine = args.str_or("byzantine", &cfg.byzantine);
     cfg.robust_agg = args.str_or("robust-agg", &cfg.robust_agg);
+    cfg.topology = args.str_or("topology", &cfg.topology);
+    cfg.downlink_compress = args.str_or("downlink-compress", &cfg.downlink_compress);
+    cfg.tree_kill = args.str_or("tree-kill", &cfg.tree_kill);
     cfg.rounds_per_epoch = args.u64_or("rounds-per-epoch", cfg.rounds_per_epoch)?;
     cfg.artifacts = PathBuf::from(args.str_or("artifacts", &cfg.artifacts.to_string_lossy()));
     if let Some(at) = args.get("decay-at") {
@@ -228,10 +241,30 @@ fn cmd_train(args: &Args) -> Result<()> {
         let reordered: u64 = run.sim_links.iter().map(|l| l.reordered).sum();
         let delay_ms: f64 =
             run.sim_links.iter().map(|l| l.delay_us).sum::<u64>() as f64 / 1e3;
+        let down_ms: f64 = run
+            .sim_links
+            .iter()
+            .map(|l| l.downlink_delay_us)
+            .sum::<u64>() as f64
+            / 1e3;
         eprintln!(
             "sim: {} uplinks delivered | {} drops (retransmitted) | {} reordered \
-             | {:.1} virtual-ms total link delay",
-            delivered, drops, reordered, delay_ms
+             | {:.1} virtual-ms uplink + {:.1} virtual-ms downlink delay",
+            delivered, drops, reordered, delay_ms, down_ms
+        );
+    }
+    if run.uplink_bits_by_level.len() > 1 {
+        let fmt = |v: &[u64]| {
+            v.iter()
+                .map(|b| format!("{:.2}", *b as f64 / 8e6))
+                .collect::<Vec<_>>()
+                .join(" / ")
+        };
+        eprintln!(
+            "tree: uplink MB by level [{}] | downlink MB by level [{}] \
+             (level 0 = into the root)",
+            fmt(&run.uplink_bits_by_level),
+            fmt(&run.downlink_bits_by_level)
         );
     }
     if !run.server_ms_by_shard.is_empty() {

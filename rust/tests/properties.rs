@@ -142,6 +142,44 @@ fn prop_amsgrad_vhat_monotone_and_step_bounded() {
 }
 
 #[test]
+fn prop_topk_selection_matches_sorted_reference() {
+    // The partial select (`select_nth_unstable_by`) must pick exactly the
+    // set a full sort by (|x| desc, index asc) would — including under
+    // heavy magnitude ties, where a non-total comparator would let the
+    // pivot choice decide which tied coordinate survives.
+    check("topk_selection", 150, |g| {
+        let d = g.size(1, 3000);
+        // Quantized magnitudes force duplicate |x| values.
+        let x: Vec<f32> =
+            (0..d).map(|_| (g.rng.normal() * 4.0).round() / 4.0).collect();
+        let ratio = g.f32_range(0.005, 1.0);
+        let mut c = TopK::new(ratio);
+        let k = c.k_for(d);
+        let (idx, val) = match c.compress(&x) {
+            Payload::Sparse { idx, val, .. } => (idx, val),
+            other => panic!("topk emitted {other:?}"),
+        };
+        let mut order: Vec<u32> = (0..d as u32).collect();
+        order.sort_by(|&a, &b| {
+            x[b as usize]
+                .abs()
+                .total_cmp(&x[a as usize].abs())
+                .then(a.cmp(&b))
+        });
+        let mut want = order[..k].to_vec();
+        want.sort_unstable();
+        assert_eq!(idx, want, "d={d} ratio={ratio}");
+        for (i, &ix) in idx.iter().enumerate() {
+            assert_eq!(
+                val[i].to_bits(),
+                x[ix as usize].to_bits(),
+                "value at selected index {ix}"
+            );
+        }
+    });
+}
+
+#[test]
 fn prop_topk_payload_is_best_k_approximation() {
     // Top-k minimizes ||C(x) - x|| over all k-sparse selections: its error
     // must be <= Random-k's error on the same vector and same k.
@@ -508,6 +546,63 @@ fn prop_full_quorum_is_invariant_across_transports_and_backends() {
                 assert_eq!(a.to_bits(), b.to_bits(), "{label}: loss at round {r}");
             }
             for (i, (a, b)) in base_theta.iter().zip(&theta).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{label}: θ[{i}]");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_degenerate_tree_is_bitwise_identical_to_flat_star() {
+    // The tree-topology acceptance bar: a degenerate tree — degree >= n
+    // (one group spanning every worker), identity group compressor, no
+    // downlink compression — reproduces the flat star bitwise in loss
+    // and θ for every protocol string, across inproc/loopback. The
+    // single sub-leader aggregates the same payloads in the same wid
+    // order with the same estimator, forwards the exact dense mean, and
+    // the root's mean over one message is the identity.
+    //
+    // Deliberately NOT compared: transmitted bits. The forwarded
+    // sub-leader → root hop is a real extra message, so the tree run
+    // legitimately bills more — the per-level ledger invariants for
+    // that live in tests/tree.rs.
+    use comp_ams::config::TrainConfig;
+    use comp_ams::coordinator::trainer::Trainer;
+
+    fn run(cfg: &TrainConfig) -> (Vec<f32>, Vec<f32>) {
+        let mut t = Trainer::new(cfg).unwrap();
+        let mut losses = Vec::new();
+        for r in 0..cfg.rounds {
+            losses.push(t.step(r).unwrap());
+        }
+        (losses, t.theta)
+    }
+
+    for algo in [
+        "dist-ams",
+        "comp-ams-topk:0.05",
+        "comp-ams-blocksign:64",
+        "qadam",
+        "1bitadam:10",
+        "dist-sgd",
+    ] {
+        for transport in ["inproc", "loopback"] {
+            let mut cfg = TrainConfig::preset("quadratic", algo);
+            cfg.workers = 3;
+            cfg.rounds = 30;
+            cfg.lr = 0.01;
+            cfg.eval_every = 0;
+            cfg.transport = transport.into();
+            let (flat_loss, flat_theta) = run(&cfg);
+            // degree 8 >= 3 workers: one group holds the whole fleet.
+            cfg.topology = "tree:8".into();
+            let (tree_loss, tree_theta) = run(&cfg);
+            let label = format!("{algo} transport={transport}");
+            assert_eq!(flat_loss.len(), tree_loss.len(), "{label}");
+            for (r, (a, b)) in flat_loss.iter().zip(&tree_loss).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{label}: loss at round {r}");
+            }
+            for (i, (a, b)) in flat_theta.iter().zip(&tree_theta).enumerate() {
                 assert_eq!(a.to_bits(), b.to_bits(), "{label}: θ[{i}]");
             }
         }

@@ -1,0 +1,149 @@
+//! Tree-topology integration tests: fault-injected sub-leader death
+//! under a root quorum, the two-way compression bit claims (root ingress
+//! and root broadcast both shrink versus the flat star at equal rounds),
+//! exact per-level ledger sums, and descent with a compressed downlink
+//! on both analytic substrates. The degenerate-tree bitwise gate lives
+//! in tests/properties.rs.
+
+use comp_ams::config::TrainConfig;
+use comp_ams::coordinator::trainer::train;
+
+fn tree_cfg(algo: &str, topology: &str) -> TrainConfig {
+    let mut cfg = TrainConfig::preset("quadratic", algo);
+    cfg.workers = 8;
+    cfg.rounds = 800;
+    cfg.lr = 0.02;
+    cfg.eval_every = 0;
+    cfg.topology = topology.into();
+    cfg
+}
+
+#[test]
+fn killed_subleader_degrades_to_surviving_groups_under_quorum() {
+    // 8 workers at degree 2 = 4 sub-leader groups; the root waits for 3
+    // of them. Killing sub-leader 1 at round 100 must not end the run:
+    // the root's quorum floor shrinks to the survivors (exactly like a
+    // dead worker in the flat star), the dead group's two worker-side EF
+    // accumulators are charged to the ledger, and the remaining 6
+    // workers still descend the quadratic.
+    let mut cfg = tree_cfg("comp-ams-topk:0.05", "tree:2");
+    cfg.quorum = 3;
+    cfg.max_staleness = 2;
+    cfg.tree_kill = "1:100".into();
+    let run = train(&cfg).unwrap();
+
+    assert_eq!(run.metrics.len(), 800, "run ended early after the kill");
+    let first = run.metrics[0].train_loss;
+    let last = run.final_train_loss(20);
+    assert!(last < first - 0.3, "degraded run stalled: {first:.3} -> {last:.3}");
+
+    // The kill charges the group's worker-side EF residuals (2 workers
+    // at degree 2); the sub-leader's own EF state is 0 bits here (the
+    // identity group compressor forwards without error feedback), so
+    // nothing else is charged.
+    assert_eq!(run.ef_resets, 2, "expected one EF reset per killed group worker");
+    assert!(run.ef_residual_lost_bits > 0);
+    assert_eq!(run.ef_residual_lost_bits % 2, 0);
+
+    // K < n over the synchronous tree: one group uplink is left over
+    // each pre-kill round and consumed next round as a 1-round straggler
+    // — within max_staleness, so nothing is dropped.
+    assert!(run.stale_uplinks > 0, "quorum 3-of-4 produced no stragglers");
+    assert_eq!(run.dropped_uplinks, 0);
+}
+
+#[test]
+fn group_recompression_shrinks_root_ingress_and_levels_sum_exactly() {
+    // Two-way compression claim, uplink side: with dense (dist-ams)
+    // workers and Top-k re-compression at the sub-leaders, the bits
+    // entering the root (level 0) must be a small fraction of the flat
+    // star's uplink total at equal rounds — the whole point of the
+    // aggregate-and-forward layer. And the per-level split must be an
+    // exact partition of the headline ledger, not an estimate.
+    let mut flat_cfg = tree_cfg("dist-ams", "flat");
+    flat_cfg.rounds = 60;
+    let mut deep_cfg = tree_cfg("dist-ams", "tree:4:topk:0.05");
+    deep_cfg.rounds = 60;
+    let flat = train(&flat_cfg).unwrap();
+    let tree = train(&deep_cfg).unwrap();
+
+    // Flat runs report the single root level only.
+    assert_eq!(flat.uplink_bits_by_level.len(), 1);
+    assert_eq!(flat.uplink_bits_by_level[0], flat.uplink_bits());
+
+    // Tree runs report [root hop, worker hop], summing exactly to the
+    // headline totals (full participation: nothing left in flight).
+    assert_eq!(tree.uplink_bits_by_level.len(), 2);
+    assert_eq!(
+        tree.uplink_bits_by_level.iter().sum::<u64>(),
+        tree.uplink_bits(),
+        "per-level uplink bits must partition the total"
+    );
+    assert_eq!(
+        tree.downlink_bits_by_level.iter().sum::<u64>(),
+        tree.metrics.last().unwrap().downlink_bits,
+        "per-level downlink bits must partition the total"
+    );
+    assert_eq!(
+        tree.framing_bits_by_level.iter().sum::<u64>(),
+        tree.framing_bits,
+        "per-level framing bits must partition the total"
+    );
+
+    // 2 sparse forwarded aggregates per round vs 8 dense worker uplinks:
+    // root ingress shrinks by far more than the 8x asserted here.
+    assert!(
+        tree.uplink_bits_by_level[0] * 8 < flat.uplink_bits(),
+        "root ingress {} bits not << flat uplink {} bits",
+        tree.uplink_bits_by_level[0],
+        flat.uplink_bits()
+    );
+    // The worker hop still exists and is billed — level 1 carries the
+    // same dense uplinks the flat star did.
+    assert!(tree.uplink_bits_by_level[1] > tree.uplink_bits_by_level[0]);
+}
+
+#[test]
+fn compressed_downlink_descends_on_quadratic_and_shrinks_root_broadcast() {
+    // Two-way compression claim, downlink side (Wang et al. two-way
+    // setup): the root broadcasts C(θ − θ̂) instead of dense θ. The
+    // θ̂-reconstruction workers see is approximate, but the remainder
+    // is next round's delta, so the quadratic still descends — and the
+    // root's broadcast (level 0) is far below the flat star's dense
+    // rounds × workers × θ bill.
+    let mut cfg = tree_cfg("comp-ams-topk:0.05", "tree:4");
+    cfg.downlink_compress = "topk:0.25".into();
+    let run = train(&cfg).unwrap();
+    let first = run.metrics[0].train_loss;
+    let last = run.final_train_loss(20);
+    assert!(last < first - 0.3, "compressed downlink stalled: {first:.3} -> {last:.3}");
+
+    let flat = train(&tree_cfg("comp-ams-topk:0.05", "flat")).unwrap();
+    let flat_down = flat.metrics.last().unwrap().downlink_bits;
+    assert!(
+        run.downlink_bits_by_level[0] * 2 < flat_down,
+        "root broadcast {} bits not below flat downlink {} bits",
+        run.downlink_bits_by_level[0],
+        flat_down
+    );
+}
+
+#[test]
+fn compressed_downlink_descends_on_logistic() {
+    // Same contract on the non-convex-ish substrate: logistic regression
+    // under a Top-k θ-delta broadcast must still reach a useful loss.
+    let mut cfg = TrainConfig::preset("logistic", "comp-ams-topk:0.05");
+    cfg.workers = 8;
+    cfg.rounds = 3000;
+    cfg.lr = 0.01;
+    cfg.eval_every = 0;
+    cfg.topology = "tree:4".into();
+    cfg.downlink_compress = "topk:0.25".into();
+    let run = train(&cfg).unwrap();
+    let first = run.metrics[0].train_loss;
+    let last = run.final_train_loss(25);
+    assert!(
+        last < first - 0.3,
+        "logistic under compressed downlink stalled: {first:.3} -> {last:.3}"
+    );
+}
